@@ -1,0 +1,34 @@
+//! Quickstart: train SAC on Pendulum-v0 until solved (eval return >= -200)
+//! with the full Spreeze topology — async sampler pool, shared-memory
+//! replay, PJRT-compiled update artifacts, SSD weight sync, eval worker.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Solves in well under two minutes on a modest desktop; the run is logged
+//! in EXPERIMENTS.md (E2E validation).
+
+use spreeze::config::presets;
+use spreeze::coordinator::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = presets::preset("pendulum");
+    cfg.seed = 0;
+    cfg.max_seconds = 300.0;
+    cfg.target_return = Some(-200.0);
+    cfg.verbose = true;
+    cfg.run_dir = "results/quickstart".into();
+    println!("training SAC on pendulum until eval return >= -200 ...\n");
+    let s = Coordinator::new(cfg).run()?;
+    println!("\n=== quickstart summary ===");
+    println!("updates            : {}", s.updates);
+    println!("env frames sampled : {}", s.sampled_frames);
+    println!("sampling rate      : {:.0} Hz", s.sampling_hz);
+    println!("update frame rate  : {:.0} Hz", s.update_frame_hz);
+    println!("final eval return  : {:.1}", s.final_return);
+    match s.solved_s {
+        Some(t) => println!("SOLVED in {t:.1}s wall clock"),
+        None => println!("not solved within budget (final {:.1})", s.final_return),
+    }
+    println!("curve: results/quickstart/curve.csv");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Fig. 8-style robustness demo: run the same walker training under three
+//! simulated hardware profiles (desktop / server / laptop) and two
+//! algorithms (SAC / TD3), letting the adaptation controller pick (BS, SP)
+//! per device — the paper's §4.2.4.
+//!
+//!     cargo run --release --example robustness -- [seconds-per-run]
+
+use spreeze::config::{presets, Algo, HardwareProfile};
+use spreeze::coordinator::Coordinator;
+use spreeze::util::sysinfo;
+
+fn main() -> anyhow::Result<()> {
+    let secs: f64 = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(45.0);
+    let cores = sysinfo::num_cpus();
+
+    println!("== device robustness (walker, SAC, {secs:.0}s each) ==");
+    for (label, core_frac, throttle) in
+        [("desktop", 1.0, 1.0), ("server", 1.0, 1.0), ("laptop", 4.0 / cores as f64, 0.35)]
+    {
+        let mut cfg = presets::preset("walker");
+        cfg.max_seconds = secs;
+        cfg.target_return = None;
+        cfg.hardware = HardwareProfile {
+            cpu_cores: ((cores as f64 * core_frac).round() as usize).max(2),
+            gpus: 1,
+            gpu_throttle: throttle,
+        };
+        cfg.run_dir = format!("results/robustness_{label}");
+        let s = Coordinator::new(cfg).run()?;
+        println!(
+            "  {label:8} adapted bs={:5} sp={:2}  upd_frame {:10.0}/s  final {:8.1}",
+            s.batch_size, s.n_samplers, s.update_frame_hz, s.final_return
+        );
+    }
+
+    println!("\n== algorithm robustness (walker, {secs:.0}s each) ==");
+    for algo in [Algo::Sac, Algo::Td3] {
+        let mut cfg = presets::preset("walker");
+        cfg.algo = algo;
+        cfg.max_seconds = secs;
+        cfg.target_return = None;
+        cfg.batch_size = 8192;
+        cfg.adapt = false;
+        cfg.run_dir = format!("results/robustness_{}", algo.name());
+        let s = Coordinator::new(cfg).run()?;
+        println!(
+            "  {:8} upd {:6.1}/s  final {:8.1} (best {:8.1})",
+            algo.name(),
+            s.update_hz,
+            s.final_return,
+            s.best_return
+        );
+    }
+    Ok(())
+}

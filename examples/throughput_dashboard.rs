@@ -1,0 +1,42 @@
+//! Live Table-2-style throughput dashboard: runs Spreeze on any env for a
+//! fixed window, printing one metrics row per second (CPU%, sampling Hz,
+//! executor%, update frame rate, update frequency, transmission loss), then
+//! a Table 2/3-format summary line.
+//!
+//!     cargo run --release --example throughput_dashboard -- [env] [seconds]
+
+use spreeze::config::presets;
+use spreeze::coordinator::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let env = args.first().cloned().unwrap_or_else(|| "walker".to_string());
+    let secs: f64 = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(30.0);
+
+    let mut cfg = presets::preset(&env);
+    cfg.seed = 0;
+    cfg.max_seconds = secs;
+    cfg.target_return = None;
+    cfg.verbose = true; // per-second rows
+    cfg.run_dir = format!("results/dashboard_{env}");
+    println!("spreeze throughput dashboard — env={env}, {secs:.0}s\n");
+    let s = Coordinator::new(cfg).run()?;
+
+    println!("\n{:-^78}", " steady-state (Table 2 row format) ");
+    println!(
+        "{:<14} {:>6} {:>12} {:>6} {:>14} {:>10} {:>7}",
+        "framework", "CPU%", "Sample Hz", "GPU%", "UpdFrame Hz", "Upd Hz", "Loss%"
+    );
+    println!(
+        "{:<14} {:>5.0}% {:>12.0} {:>5.0}% {:>14.3e} {:>10.1} {:>6.1}%",
+        "spreeze",
+        s.cpu_usage * 100.0,
+        s.sampling_hz,
+        s.gpu_usage * 100.0,
+        s.update_frame_hz,
+        s.update_hz,
+        s.loss_fraction * 100.0
+    );
+    println!("metrics timeline: results/dashboard_{env}/metrics.csv");
+    Ok(())
+}

@@ -1,0 +1,180 @@
+"""AOT entrypoint: lower every (env, algo, function, batch-size) step module
+to HLO **text** under ``artifacts/`` and write ``artifacts/manifest.json``.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos and NOT
+``.serialize()`` — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids that the Rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Python never appears on the training path.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--env walker ...] [--bs 128,8192]
+With no flags, builds the default matrix from DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .layout import ENV_PRESETS, build_layout
+
+# Default artifact matrix (DESIGN.md §5): (env, algo, func, batch sizes)
+DEFAULT_MATRIX = [
+    ("pendulum", "sac", "full", [128, 256, 512, 2048, 8192]),
+    ("pendulum", "sac", "act", [8]),
+    ("walker", "sac", "full", [128, 512, 2048, 8192, 32768]),
+    ("walker", "sac", "actor", [8192]),
+    ("walker", "sac", "critic", [8192]),
+    ("walker", "td3", "full", [8192]),
+    ("walker", "sac", "act", [8]),
+    ("cheetah", "sac", "full", [2048]),
+    ("cheetah", "sac", "act", [8]),
+    ("ant", "sac", "full", [2048]),
+    ("ant", "sac", "act", [8]),
+    ("humanoid", "sac", "full", [2048]),
+    ("humanoid", "sac", "act", [8]),
+    ("humanoid_flagrun", "sac", "full", [2048]),
+    ("humanoid_flagrun", "sac", "act", [8]),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def artifact_signature(lay, func: str, bs: int):
+    """Returns (fn, input specs, input names, output names) for one module."""
+    P, Pa, Pc, T = lay.param_size, lay.actor_size, lay.critic_size, lay.target_size
+    O, A = lay.obs_dim, lay.act_dim
+    if func == "full" and lay.algo == "sac":
+        fn = model.sac_full_step(lay)
+        specs = [f32(P), f32(T), f32(P), f32(P), f32(),
+                 f32(bs, O), f32(bs, A), f32(bs), f32(bs), f32(bs, O),
+                 f32(bs, A), f32(bs, A), f32(model.N_HYPER)]
+        ins = ["params", "targets", "m", "v", "step",
+               "s", "a", "r", "d", "s2", "noise1", "noise2", "hyper"]
+        outs = ["params", "targets", "m", "v", "metrics"]
+    elif func == "full" and lay.algo == "td3":
+        fn = model.td3_full_step(lay)
+        specs = [f32(P), f32(T), f32(P), f32(P), f32(),
+                 f32(bs, O), f32(bs, A), f32(bs), f32(bs), f32(bs, O),
+                 f32(bs, A), f32(), f32(model.N_HYPER)]
+        ins = ["params", "targets", "m", "v", "step",
+               "s", "a", "r", "d", "s2", "noise2", "update_actor", "hyper"]
+        outs = ["params", "targets", "m", "v", "metrics"]
+    elif func == "critic":
+        if lay.algo != "sac":
+            raise ValueError("model-parallel split steps are SAC-only (paper Fig. 3)")
+        fn = model.sac_critic_step(lay)
+        specs = [f32(Pa), f32(Pc), f32(T), f32(Pc), f32(Pc), f32(),
+                 f32(bs, O), f32(bs, A), f32(bs), f32(bs), f32(bs, O),
+                 f32(bs, A), f32(model.N_HYPER)]
+        ins = ["actor_params", "critic_params", "targets", "m", "v", "step",
+               "s", "a", "r", "d", "s2", "noise2", "hyper"]
+        outs = ["critic_params", "targets", "m", "v", "metrics"]
+    elif func == "actor":
+        if lay.algo != "sac":
+            raise ValueError("model-parallel split steps are SAC-only (paper Fig. 3)")
+        fn = model.sac_actor_step(lay)
+        specs = [f32(Pa), f32(Pc), f32(Pa), f32(Pa), f32(),
+                 f32(bs, O), f32(bs, A), f32(model.N_HYPER)]
+        ins = ["actor_params", "critic_params", "m", "v", "step",
+               "s", "noise1", "hyper"]
+        outs = ["actor_params", "m", "v", "metrics"]
+    elif func == "act":
+        def fn(actor_params, s, noise, deterministic):
+            return (model.policy_act(lay, actor_params, s, noise, deterministic),)
+        specs = [f32(Pa), f32(bs, O), f32(bs, A), f32()]
+        ins = ["actor_params", "s", "noise", "deterministic"]
+        outs = ["a"]
+    else:
+        raise ValueError(f"unknown func {func!r} for algo {lay.algo!r}")
+    return fn, specs, ins, outs
+
+
+def build_one(lay, func: str, bs: int, out_dir: str, force: bool):
+    name = f"{lay.algo}_{func}_bs{bs}"
+    env_dir = os.path.join(out_dir, lay.env)
+    os.makedirs(env_dir, exist_ok=True)
+    path = os.path.join(env_dir, name + ".hlo.txt")
+    fn, specs, ins, outs = artifact_signature(lay, func, bs)
+    entry = {
+        "file": os.path.relpath(path, out_dir),
+        "env": lay.env, "algo": lay.algo, "func": func, "bs": bs,
+        "inputs": [{"name": n, "shape": list(s.shape)} for n, s in zip(ins, specs)],
+        "outputs": outs,
+    }
+    if os.path.exists(path) and not force:
+        return entry, False
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+    print(f"  {entry['file']:48s} {len(text)/1e6:6.2f} MB  {time.time()-t0:5.1f}s")
+    return entry, True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--env", action="append", help="restrict to these envs")
+    ap.add_argument("--bs", help="comma list; overrides matrix batch sizes")
+    ap.add_argument("--func", action="append", help="restrict to these funcs")
+    ap.add_argument("--force", action="store_true", help="rebuild even if file exists")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"layouts": {}, "artifacts": {}, "hyper": list(model.HYPER),
+                "metrics": list(model.METRICS)}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest.update(json.load(f))
+
+    matrix = DEFAULT_MATRIX
+    if args.env:
+        matrix = [m for m in matrix if m[0] in args.env]
+    if args.func:
+        matrix = [m for m in matrix if m[2] in args.func]
+
+    built = 0
+    for env, algo, func, bss in matrix:
+        lay = build_layout(env, algo)
+        manifest["layouts"][f"{env}/{algo}"] = lay.to_json()
+        if args.bs:
+            bss = [int(x) for x in args.bs.split(",")]
+        for bs in bss:
+            entry, fresh = build_one(lay, func, bs, out_dir, args.force)
+            manifest["artifacts"][entry["file"]] = entry
+            built += fresh
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {manifest_path} ({len(manifest['artifacts'])} artifacts, "
+          f"{built} rebuilt)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""L1 hot-spot kernel: fused ``act(x @ w + b)`` with a custom VJP whose
+backward passes are Pallas matmul kernels too.
+
+TPU adaptation of the paper's GPU large-batch update (DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks + shared memory we tile
+the ``[B,K] x [K,N]`` product into MXU-shaped blocks staged through VMEM by
+``BlockSpec``; bias-add and activation are fused into the epilogue so the
+pre-activation tensor never round-trips to HBM; accumulation is f32.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO that
+the Rust runtime executes. Block shapes are still chosen as they would be on
+real TPU hardware; §Perf in EXPERIMENTS.md carries the VMEM/MXU analysis.
+
+Block-shape policy: dims < 128 are taken whole (RL nets have tiny obs/act
+dims); dims >= 128 here are multiples of 128 by construction (hidden sizes
+64/256, batch sizes powers of two), so every grid divides exactly and no
+masking is needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Preferred tile edges. Lane dim stays MXU-friendly (multiples of 128); the
+# batch (sublane) dim uses much taller tiles: VMEM comfortably holds
+# bm*K + K*bn + bm*bn f32 at (1024, 256, 256) = ~2.3 MB << 16 MB, and taller
+# tiles shrink the grid loop, which dominates both the interpret-mode HLO
+# (sequential while-loop iterations) and real-TPU grid dispatch.
+# §Perf iteration 1 in EXPERIMENTS.md: (128,128) -> (1024,256) tiles.
+BM_PREF = 2048
+BN_PREF = 256
+
+
+def pick_block(dim: int, pref: int = BN_PREF) -> int:
+    """Whole dim when small, else the largest preferred tile that divides."""
+    if dim < pref:
+        return dim
+    for cand in (pref, 1024, 512, 256, 128, 64, 32, 16, 8):
+        if cand <= pref and dim % cand == 0:
+            return cand
+    return 1
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    x = x_ref[...]  # (bm, K) in VMEM
+    w = w_ref[...]  # (K, bn) in VMEM
+    b = b_ref[...]  # (bn,)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    o_ref[...] = ref.apply_act(y, act)
+
+
+def _linear_impl(x, w, b, act: str):
+    bsz, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    bm, bn = pick_block(bsz, BM_PREF), pick_block(n, BN_PREF)
+    grid = (bsz // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul(a, b):
+    """Plain Pallas tiled matmul — used by the fused_linear backward pass."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn = pick_block(m, BM_PREF), pick_block(n, BN_PREF)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, act: str = "none"):
+    """act(x @ w + b). Differentiable via Pallas backward kernels."""
+    return _linear_impl(x, w, b, act)
+
+
+def _fused_linear_fwd(x, w, b, act: str):
+    y = _linear_impl(x, w, b, act)
+    # For relu/tanh the activation derivative is recoverable from y itself,
+    # so we never materialize the pre-activation.
+    return y, (x, w, y)
+
+
+def _act_bwd(dy, y, act: str):
+    if act == "none":
+        return dy
+    if act == "relu":
+        return dy * (y > 0.0).astype(dy.dtype)
+    if act == "tanh":
+        return dy * (1.0 - y * y)
+    raise ValueError(act)
+
+
+def _fused_linear_bwd(act, res, dy):
+    x, w, y = res
+    dpre = _act_bwd(dy, y, act)
+    dx = matmul(dpre, w.T)
+    dw = matmul(x.T, dpre)
+    db = jnp.sum(dpre, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

@@ -1,0 +1,54 @@
+"""L1 kernel: fused tanh-squashed gaussian policy head.
+
+Computes the action AND its log-probability in one VMEM-resident pass:
+
+    u    = mu + exp(clip(log_std)) * noise
+    a    = tanh(u)
+    logp = sum_j [ -0.5*noise^2 - log_std - 0.5*log(2pi) - log(1 - a^2 + eps) ]
+
+Used in the ``policy_act`` artifact (inference path — no gradient needed;
+the differentiable training path uses the jnp oracle ``ref.gaussian_head``
+whose numerics these kernels are tested to match exactly).
+
+Grid is over batch rows only; the action dim (1..17 for our envs) stays
+whole inside the block, so the row-sum reduction for logp happens entirely
+in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .fused_linear import pick_block, BM_PREF
+
+
+def _head_kernel(mu_ref, ls_ref, n_ref, a_ref, lp_ref):
+    mu = mu_ref[...]
+    ls = jnp.clip(ls_ref[...], ref.LOG_STD_MIN, ref.LOG_STD_MAX)
+    noise = n_ref[...]
+    u = mu + jnp.exp(ls) * noise
+    a = jnp.tanh(u)
+    half_log_2pi = 0.5 * jnp.log(2.0 * jnp.pi).astype(jnp.float32)
+    per = -0.5 * noise * noise - ls - half_log_2pi - jnp.log(1.0 - a * a + ref.SQUASH_EPS)
+    a_ref[...] = a
+    lp_ref[...] = jnp.sum(per, axis=-1)
+
+
+def gaussian_head(mu, log_std, noise):
+    """Fused squash + log-prob. Returns (a [B,A], logp [B])."""
+    bsz, adim = mu.shape
+    assert log_std.shape == mu.shape and noise.shape == mu.shape
+    bm = pick_block(bsz, BM_PREF)
+    mat = pl.BlockSpec((bm, adim), lambda i: (i, 0))
+    return pl.pallas_call(
+        _head_kernel,
+        grid=(bsz // bm,),
+        in_specs=[mat, mat, mat],
+        out_specs=[mat, pl.BlockSpec((bm,), lambda i: (i,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, adim), jnp.float32),
+            jax.ShapeDtypeStruct((bsz,), jnp.float32),
+        ],
+        interpret=True,
+    )(mu, log_std, noise)

@@ -1,0 +1,160 @@
+"""Flat parameter layout shared between the JAX compile path and the Rust runtime.
+
+Every network parameter lives in ONE flat f32 vector. The layout (segment
+name, shape, offset) is computed here, embedded into ``artifacts/manifest.json``
+by ``aot.py``, and parsed by ``rust/src/nn/layout.rs`` — so the Rust sampler's
+native MLP forward and the JAX update artifacts agree on byte-for-byte
+parameter placement, and checkpoints ("SSD weight transmission" in the paper)
+are just the flat vector on disk.
+
+Layout (SAC):
+    actor segment : actor MLP (obs -> h -> h -> 2*act) + log_alpha + pad
+    critic segment: q1 MLP + q2 MLP (obs+act -> h -> h -> 1)   + pad
+    full params   : concat(actor_seg, critic_seg)
+    targets       : critic segment structure (q1t + q2t)       + pad
+
+Layout (TD3): actor outputs ``act`` (deterministic), no log_alpha.
+
+Segments are padded to CHUNK so the fused Adam/Polyak Pallas kernels get an
+exactly-divisible grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+# Elementwise-kernel block size; every flat segment is padded to a multiple.
+# 16384 f32 = 64 KiB per operand block (Adam streams 4 of them = 256 KiB of
+# VMEM) — big enough that the grid loop stops dominating the optimizer
+# kernels (§Perf iteration 1), small enough to stay far inside VMEM.
+CHUNK = 16384
+
+ENV_PRESETS = {
+    # name: (obs_dim, act_dim, hidden)
+    "pendulum": (3, 1, 64),
+    "walker": (22, 6, 256),
+    "cheetah": (26, 6, 256),
+    "ant": (28, 8, 256),
+    "humanoid": (44, 17, 256),
+    "humanoid_flagrun": (46, 17, 256),
+}
+
+
+@dataclasses.dataclass
+class Segment:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int  # element offset within its flat vector
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+    def to_json(self):
+        return {"name": self.name, "shape": list(self.shape), "offset": self.offset}
+
+
+def mlp_shapes(in_dim: int, hidden: int, out_dim: int) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Two-hidden-layer MLP: in -> h -> h -> out (weights stored (in, out))."""
+    return [
+        ("w0", (in_dim, hidden)),
+        ("b0", (hidden,)),
+        ("w1", (hidden, hidden)),
+        ("b1", (hidden,)),
+        ("w2", (hidden, out_dim)),
+        ("b2", (out_dim,)),
+    ]
+
+
+def _pad_to_chunk(n: int) -> int:
+    return ((n + CHUNK - 1) // CHUNK) * CHUNK
+
+
+@dataclasses.dataclass
+class Layout:
+    """Full parameter/target layout for one (env, algo) pair."""
+
+    env: str
+    algo: str  # "sac" | "td3"
+    obs_dim: int
+    act_dim: int
+    hidden: int
+    actor_segments: List[Segment]
+    critic_segments: List[Segment]
+    target_segments: List[Segment]
+    actor_size: int  # padded
+    critic_size: int  # padded
+    target_size: int  # padded
+
+    @property
+    def param_size(self) -> int:
+        return self.actor_size + self.critic_size
+
+    def segment(self, name: str) -> Segment:
+        for seg in self.actor_segments + self.critic_segments + self.target_segments:
+            if seg.name == name:
+                return seg
+        raise KeyError(name)
+
+    def to_json(self):
+        return {
+            "env": self.env,
+            "algo": self.algo,
+            "obs_dim": self.obs_dim,
+            "act_dim": self.act_dim,
+            "hidden": self.hidden,
+            "actor_size": self.actor_size,
+            "critic_size": self.critic_size,
+            "target_size": self.target_size,
+            "param_size": self.param_size,
+            "chunk": CHUNK,
+            "actor_segments": [s.to_json() for s in self.actor_segments],
+            "critic_segments": [s.to_json() for s in self.critic_segments],
+            "target_segments": [s.to_json() for s in self.target_segments],
+        }
+
+
+def build_layout(env: str, algo: str = "sac") -> Layout:
+    obs_dim, act_dim, hidden = ENV_PRESETS[env]
+    actor_out = 2 * act_dim if algo == "sac" else act_dim
+
+    actor_segments: List[Segment] = []
+    off = 0
+    for name, shape in mlp_shapes(obs_dim, hidden, actor_out):
+        actor_segments.append(Segment(f"actor/{name}", shape, off))
+        off += actor_segments[-1].size
+    if algo == "sac":
+        actor_segments.append(Segment("actor/log_alpha", (1,), off))
+        off += 1
+    actor_size = _pad_to_chunk(off)
+
+    critic_segments: List[Segment] = []
+    off = 0
+    for q in ("q1", "q2"):
+        for name, shape in mlp_shapes(obs_dim + act_dim, hidden, 1):
+            critic_segments.append(Segment(f"{q}/{name}", shape, off))
+            off += critic_segments[-1].size
+    critic_size = _pad_to_chunk(off)
+
+    target_segments = [
+        Segment(f"target_{s.name}", s.shape, s.offset) for s in critic_segments
+    ]
+    target_size = critic_size
+
+    return Layout(
+        env=env,
+        algo=algo,
+        obs_dim=obs_dim,
+        act_dim=act_dim,
+        hidden=hidden,
+        actor_segments=actor_segments,
+        critic_segments=critic_segments,
+        target_segments=target_segments,
+        actor_size=actor_size,
+        critic_size=critic_size,
+        target_size=target_size,
+    )

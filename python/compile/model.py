@@ -1,0 +1,275 @@
+"""L2: SAC / TD3 forward+backward over a single flat parameter vector.
+
+Everything here is a pure function of flat f32 vectors so the Rust runtime
+(which only speaks buffers) can drive it: ``full_step`` consumes
+(params, targets, adam m/v, step, batch, noise, hyper) and returns the new
+state plus a metrics vector. ``actor_step``/``critic_step`` split the same
+computation along the paper's Fig. 3 device boundary for the dual-"GPU"
+Actor-Critic model parallelism.
+
+MLP layers call the L1 Pallas ``fused_linear`` kernel (with its Pallas
+backward), optimizer/targets use the fused ``adam_update``/``polyak``
+kernels, and the inference head uses the ``gaussian_head`` kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layout import Layout
+from .kernels import ref
+from .kernels.fused_linear import fused_linear
+from .kernels.elementwise import adam_update, polyak
+from .kernels.gaussian_head import gaussian_head
+
+# hyper vector layout (runtime-tunable scalars, shared by all artifacts)
+HYPER = ("lr", "gamma", "tau", "target_entropy", "reward_scale", "policy_noise")
+N_HYPER = len(HYPER)
+
+# metrics vector layout (what the Rust metrics hub logs per update)
+METRICS = (
+    "q_loss", "actor_loss", "alpha", "q1_mean",
+    "logp_mean", "target_q_mean", "reward_mean", "entropy_term",
+)
+N_METRICS = len(METRICS)
+
+
+# ---------------------------------------------------------------- unflatten
+
+def view(flat, segments, prefix):
+    """Slice the named MLP (w0,b0,w1,b1,w2,b2) out of a flat vector."""
+    names = [prefix + n for n in ("w0", "b0", "w1", "b1", "w2", "b2")]
+    by_name = {seg.name: seg for seg in segments}
+    out = []
+    for n in names:
+        seg = by_name[n]
+        out.append(flat[seg.offset: seg.offset + seg.size].reshape(seg.shape))
+    return out
+
+
+def scalar_view(flat, segments, name):
+    for seg in segments:
+        if seg.name == name:
+            return flat[seg.offset]
+    raise KeyError(name)
+
+
+def mlp(x, layers, final_act="none"):
+    w0, b0, w1, b1, w2, b2 = layers
+    h = fused_linear(x, w0, b0, "relu")
+    h = fused_linear(h, w1, b1, "relu")
+    return fused_linear(h, w2, b2, final_act)
+
+
+# ---------------------------------------------------------------- networks
+
+def actor_forward(lay: Layout, actor_flat, s):
+    """Returns (mu, log_std) for SAC or (mu, None) for TD3."""
+    layers = view(actor_flat, lay.actor_segments, "actor/")
+    out = mlp(s, layers)
+    if lay.algo == "sac":
+        mu, log_std = jnp.split(out, 2, axis=-1)
+        return mu, jnp.clip(log_std, ref.LOG_STD_MIN, ref.LOG_STD_MAX)
+    return out, None
+
+
+def q_forward(lay: Layout, critic_flat, s, a):
+    sa = jnp.concatenate([s, a], axis=-1)
+    q1 = mlp(sa, view(critic_flat, lay.critic_segments, "q1/"))
+    q2 = mlp(sa, view(critic_flat, lay.critic_segments, "q2/"))
+    return q1[:, 0], q2[:, 0]
+
+
+def policy_act(lay: Layout, actor_flat, s, noise, deterministic):
+    """Inference-path action (uses the fused gaussian_head kernel).
+
+    ``deterministic``: f32 scalar 0/1 — 1 zeroes the exploration noise
+    (used by the paper's test/visualization processes).
+    """
+    mu, log_std = actor_forward(lay, actor_flat, s)
+    if lay.algo == "td3":
+        return jnp.tanh(mu) + noise * (1.0 - deterministic)
+    a, _ = gaussian_head(mu, log_std, noise * (1.0 - deterministic))
+    return a
+
+
+# ---------------------------------------------------------------- SAC losses
+
+def _sac_losses(lay: Layout, actor_flat, critic_flat, targets, batch, hyper):
+    """Shared by full/actor/critic steps. Gradient isolation follows the
+    paper's Fig. 3: the actor loss sees stop_gradient critic params; the
+    critic TD target sees stop_gradient actor outputs."""
+    s, a, r, d, s2, noise1, noise2 = batch
+    gamma, tau = hyper[1], hyper[2]
+    target_entropy, reward_scale = hyper[3], hyper[4]
+    log_alpha = scalar_view(actor_flat, lay.actor_segments, "actor/log_alpha")
+    alpha = jnp.exp(log_alpha)
+
+    # --- critic loss (TD with double-Q and entropy bonus)
+    mu2, ls2 = actor_forward(lay, jax.lax.stop_gradient(actor_flat), s2)
+    a2, logp2 = ref.gaussian_head(mu2, ls2, noise2)
+    q1t, q2t = q_forward(lay, targets, s2, a2)
+    target_q = r * reward_scale + gamma * (1.0 - d) * (
+        jnp.minimum(q1t, q2t) - jax.lax.stop_gradient(alpha) * logp2
+    )
+    target_q = jax.lax.stop_gradient(target_q)
+    q1, q2 = q_forward(lay, critic_flat, s, a)
+    q_loss = jnp.mean((q1 - target_q) ** 2) + jnp.mean((q2 - target_q) ** 2)
+
+    # --- actor loss (critic frozen)
+    mu1, ls1 = actor_forward(lay, actor_flat, s)
+    a1, logp1 = ref.gaussian_head(mu1, ls1, noise1)
+    q1pi, q2pi = q_forward(lay, jax.lax.stop_gradient(critic_flat), s, a1)
+    actor_loss = jnp.mean(
+        jax.lax.stop_gradient(alpha) * logp1 - jnp.minimum(q1pi, q2pi)
+    )
+
+    # --- temperature loss
+    alpha_loss = -jnp.mean(
+        log_alpha * (jax.lax.stop_gradient(logp1) + target_entropy)
+    )
+
+    metrics = jnp.stack([
+        q_loss, actor_loss, alpha, jnp.mean(q1),
+        jnp.mean(logp1), jnp.mean(target_q), jnp.mean(r),
+        -jnp.mean(logp1),
+    ])
+    return q_loss, actor_loss, alpha_loss, metrics
+
+
+def sac_full_step(lay: Layout):
+    """Single-device SAC update: returns f(params, targets, m, v, step,
+    s, a, r, d, s2, noise1, noise2, hyper) -> (params', targets', m', v',
+    metrics)."""
+    pa = lay.actor_size
+
+    def step_fn(params, targets, m, v, step, s, a, r, d, s2, n1, n2, hyper):
+        batch = (s, a, r, d, s2, n1, n2)
+
+        def total_loss(p):
+            ql, al, tl, metrics = _sac_losses(lay, p[:pa], p[pa:], targets, batch, hyper)
+            return ql + al + tl, metrics
+
+        (_, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(params)
+        params2, m2, v2 = adam_update(params, grads, m, v, hyper[0], step)
+        targets2 = polyak(params2[pa:], targets, hyper[2])
+        return params2, targets2, m2, v2, metrics
+
+    return step_fn
+
+
+def sac_critic_step(lay: Layout):
+    """Device-1 ("GPU1") half of the model-parallel update: critic + targets.
+    Receives r,d (paper: allocated only to the critic device) plus s,a,s2."""
+
+    def step_fn(actor_params, critic_params, targets, m, v, step,
+                s, a, r, d, s2, n2, hyper):
+        gamma, reward_scale = hyper[1], hyper[4]
+        log_alpha = scalar_view(actor_params, lay.actor_segments, "actor/log_alpha")
+        alpha = jnp.exp(log_alpha)
+
+        mu2, ls2 = actor_forward(lay, actor_params, s2)
+        a2, logp2 = ref.gaussian_head(mu2, ls2, n2)
+        q1t, q2t = q_forward(lay, targets, s2, a2)
+        target_q = r * reward_scale + gamma * (1.0 - d) * (
+            jnp.minimum(q1t, q2t) - alpha * logp2
+        )
+
+        def q_loss_fn(cp):
+            q1, q2 = q_forward(lay, cp, s, a)
+            loss = jnp.mean((q1 - target_q) ** 2) + jnp.mean((q2 - target_q) ** 2)
+            return loss, jnp.mean(q1)
+
+        (q_loss, q1_mean), grads = jax.value_and_grad(q_loss_fn, has_aux=True)(critic_params)
+        critic2, m2, v2 = adam_update(critic_params, grads, m, v, hyper[0], step)
+        targets2 = polyak(critic2, targets, hyper[2])
+        metrics = jnp.stack([
+            q_loss, jnp.float32(0.0), alpha, q1_mean,
+            jnp.mean(logp2), jnp.mean(target_q), jnp.mean(r), -jnp.mean(logp2),
+        ])
+        return critic2, targets2, m2, v2, metrics
+
+    return step_fn
+
+
+def sac_actor_step(lay: Layout):
+    """Device-0 ("GPU0") half of the model-parallel update: policy + alpha.
+    Uses the freshest critic params shipped over (frozen here)."""
+
+    def step_fn(actor_params, critic_params, m, v, step, s, n1, hyper):
+        target_entropy = hyper[3]
+
+        def loss_fn(ap):
+            log_alpha = scalar_view(ap, lay.actor_segments, "actor/log_alpha")
+            alpha = jnp.exp(log_alpha)
+            mu1, ls1 = actor_forward(lay, ap, s)
+            a1, logp1 = ref.gaussian_head(mu1, ls1, n1)
+            q1pi, q2pi = q_forward(lay, critic_params, s, a1)
+            actor_loss = jnp.mean(
+                jax.lax.stop_gradient(alpha) * logp1 - jnp.minimum(q1pi, q2pi)
+            )
+            alpha_loss = -jnp.mean(
+                log_alpha * (jax.lax.stop_gradient(logp1) + target_entropy)
+            )
+            aux = (actor_loss, alpha, jnp.mean(logp1), jnp.mean(q1pi))
+            return actor_loss + alpha_loss, aux
+
+        (_, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(actor_params)
+        actor2, m2, v2 = adam_update(actor_params, grads, m, v, hyper[0], step)
+        actor_loss, alpha, logp_mean, q_mean = aux
+        metrics = jnp.stack([
+            jnp.float32(0.0), actor_loss, alpha, q_mean,
+            logp_mean, jnp.float32(0.0), jnp.float32(0.0), -logp_mean,
+        ])
+        return actor2, m2, v2, metrics
+
+    return step_fn
+
+
+# ---------------------------------------------------------------- TD3
+
+def td3_full_step(lay: Layout):
+    """TD3 update (paper §4.2.4 algorithm robustness). ``update_actor`` is a
+    0/1 f32 scalar implementing the delayed policy update: actor/target
+    changes are multiplied by it so one artifact serves both phases.
+
+    noise2 here is the *target policy smoothing* noise (clipped outside by
+    hyper[5] = policy_noise scale)."""
+    pa = lay.actor_size
+
+    def step_fn(params, targets, m, v, step, s, a, r, d, s2, n2, update_actor, hyper):
+        gamma, tau = hyper[1], hyper[2]
+        reward_scale, policy_noise = hyper[4], hyper[5]
+
+        def total_loss(p):
+            ap, cp = p[:pa], p[pa:]
+            # critic loss with target policy smoothing
+            mu2, _ = actor_forward(lay, jax.lax.stop_gradient(ap), s2)
+            eps = jnp.clip(n2 * policy_noise, -0.5, 0.5)
+            a2 = jnp.clip(jnp.tanh(mu2) + eps, -1.0, 1.0)
+            q1t, q2t = q_forward(lay, targets, s2, a2)
+            target_q = jax.lax.stop_gradient(
+                r * reward_scale + gamma * (1.0 - d) * jnp.minimum(q1t, q2t)
+            )
+            q1, q2 = q_forward(lay, cp, s, a)
+            q_loss = jnp.mean((q1 - target_q) ** 2) + jnp.mean((q2 - target_q) ** 2)
+            # actor loss (delayed, critic frozen)
+            mu1, _ = actor_forward(lay, ap, s)
+            a1 = jnp.tanh(mu1)
+            q1pi, _ = q_forward(lay, jax.lax.stop_gradient(cp), s, a1)
+            actor_loss = -jnp.mean(q1pi)
+            metrics = jnp.stack([
+                q_loss, actor_loss, jnp.float32(0.0), jnp.mean(q1),
+                jnp.float32(0.0), jnp.mean(target_q), jnp.mean(r), jnp.float32(0.0),
+            ])
+            return q_loss + update_actor * actor_loss, metrics
+
+        (_, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(params)
+        params2, m2, v2 = adam_update(params, grads, m, v, hyper[0], step)
+        # delayed target update: interpolate only when the actor updated
+        tau_eff = hyper[2] * update_actor
+        targets2 = polyak(params2[pa:], targets, tau_eff)
+        return params2, targets2, m2, v2, metrics
+
+    return step_fn

@@ -1,0 +1,86 @@
+"""AOT path: lowering produces parseable, deterministic HLO text; the
+manifest records the exact I/O contract the Rust runtime wires against."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.layout import build_layout
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_signature_matrix_covers_all_funcs():
+    lay = build_layout("walker", "sac")
+    for func in ["full", "actor", "critic", "act"]:
+        fn, specs, ins, outs = aot.artifact_signature(lay, func, 8)
+        assert len(specs) == len(ins)
+        assert callable(fn)
+        assert outs
+    lay3 = build_layout("walker", "td3")
+    fn, specs, ins, outs = aot.artifact_signature(lay3, "full", 8)
+    assert "update_actor" in ins
+    with pytest.raises(ValueError):
+        aot.artifact_signature(lay3, "actor", 8)
+
+
+def test_lowering_emits_valid_deterministic_hlo():
+    lay = build_layout("pendulum", "sac")
+    fn, specs, _, _ = aot.artifact_signature(lay, "act", 8)
+    lowered = jax.jit(fn).lower(*specs)
+    text1 = aot.to_hlo_text(lowered)
+    text2 = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert text1 == text2, "lowering is not deterministic"
+    assert "HloModule" in text1
+    assert "f32[8,3]" in text1  # the obs input shape appears
+
+
+def test_build_one_writes_artifact_and_manifest_entry(tmp_path):
+    lay = build_layout("pendulum", "sac")
+    entry, fresh = aot.build_one(lay, "act", 8, str(tmp_path), force=True)
+    assert fresh
+    path = tmp_path / entry["file"]
+    assert path.exists() and path.stat().st_size > 1000
+    assert entry["inputs"][0] == {"name": "actor_params", "shape": [lay.actor_size]}
+    assert entry["outputs"] == ["a"]
+    # idempotent without --force
+    entry2, fresh2 = aot.build_one(lay, "act", 8, str(tmp_path), force=False)
+    assert not fresh2
+    assert entry2["file"] == entry["file"]
+
+
+def test_full_step_io_contract():
+    """The input/output name lists are load-bearing: rust/src/learner
+    wires buffers by these exact names."""
+    lay = build_layout("walker", "sac")
+    _, specs, ins, outs = aot.artifact_signature(lay, "full", 128)
+    assert ins == ["params", "targets", "m", "v", "step",
+                   "s", "a", "r", "d", "s2", "noise1", "noise2", "hyper"]
+    assert outs == ["params", "targets", "m", "v", "metrics"]
+    assert specs[0].shape == (lay.param_size,)
+    assert specs[5].shape == (128, lay.obs_dim)
+    assert specs[12].shape == (model.N_HYPER,)
+
+
+def test_real_manifest_if_built():
+    """When `make artifacts` has run, validate the real manifest contents."""
+    here = os.path.dirname(os.path.dirname(os.path.dirname(__file__)))
+    man_path = os.path.join(here, "artifacts", "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built")
+    with open(man_path) as f:
+        man = json.load(f)
+    assert man["hyper"] == list(model.HYPER)
+    assert man["metrics"] == list(model.METRICS)
+    for key, lay_json in man["layouts"].items():
+        env, algo = key.split("/")
+        lay = build_layout(env, algo)
+        assert lay_json["param_size"] == lay.param_size, key
+        assert lay_json["actor_size"] == lay.actor_size, key
+    # every artifact file referenced must exist
+    for fname in man["artifacts"]:
+        assert os.path.exists(os.path.join(here, "artifacts", fname)), fname

@@ -1,0 +1,161 @@
+"""L1 kernel correctness: every Pallas kernel against its pure-jnp oracle,
+with hypothesis sweeping shapes (including non-tile-multiple dims such as
+obs sizes 3/22/61) — forward AND backward for kernels that carry a
+custom_vjp. This is the core correctness signal of the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import fused_linear as fl
+from compile.kernels import elementwise as ew
+from compile.kernels import gaussian_head as gh
+from compile.layout import CHUNK
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rnd(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ------------------------------------------------------------- fused_linear
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 3, 8, 64, 128, 256, 300]),
+    k=st.sampled_from([1, 3, 22, 61, 64, 256]),
+    n=st.sampled_from([1, 2, 12, 34, 64, 128, 256]),
+    act=st.sampled_from(["none", "relu", "tanh"]),
+)
+def test_fused_linear_forward_matches_ref(b, k, n, act):
+    x, w, bias = rnd(0, b, k), rnd(1, k, n, scale=0.3), rnd(2, n)
+    got = fl.fused_linear(x, w, bias, act)
+    want = ref.fused_linear(x, w, bias, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([4, 64, 128]),
+    k=st.sampled_from([3, 22, 64]),
+    n=st.sampled_from([2, 34, 128]),
+    act=st.sampled_from(["none", "relu", "tanh"]),
+)
+def test_fused_linear_grads_match_ref(b, k, n, act):
+    x, w, bias = rnd(3, b, k), rnd(4, k, n, scale=0.3), rnd(5, n)
+
+    def loss_kernel(x, w, bias):
+        return jnp.sum(fl.fused_linear(x, w, bias, act) ** 2)
+
+    def loss_ref(x, w, bias):
+        return jnp.sum(ref.fused_linear(x, w, bias, act) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, bias)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, bias)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([2, 61, 128, 256]),
+    k=st.sampled_from([3, 64, 200]),
+    n=st.sampled_from([1, 34, 128]),
+)
+def test_matmul_matches_ref(m, k, n):
+    a, b = rnd(6, m, k), rnd(7, k, n)
+    np.testing.assert_allclose(fl.matmul(a, b), ref.matmul(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_pick_block_divides():
+    for d in [1, 2, 3, 8, 61, 64, 127, 128, 256, 8192, 32768]:
+        blk = fl.pick_block(d)
+        assert d % blk == 0, (d, blk)
+        assert blk <= max(d, 128)
+
+
+# ------------------------------------------------------------- elementwise
+
+@settings(**SETTINGS)
+@given(
+    chunks=st.integers(1, 4),
+    t=st.sampled_from([1.0, 2.0, 100.0, 54321.0]),
+    lr=st.sampled_from([1e-4, 3e-4, 1e-2]),
+)
+def test_adam_matches_ref(chunks, t, lr):
+    n = chunks * CHUNK
+    p, g = rnd(8, n), rnd(9, n)
+    m, v = rnd(10, n) * 0.1, jnp.abs(rnd(11, n)) * 0.01
+    got = ew.adam_update(p, g, m, v, lr, jnp.float32(t))
+    want = ref.adam_update(p, g, m, v, lr, ew.ADAM_BETA1, ew.ADAM_BETA2, ew.ADAM_EPS, t)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(chunks=st.integers(1, 3), tau=st.sampled_from([0.0, 0.005, 0.5, 1.0]))
+def test_polyak_matches_ref(chunks, tau):
+    n = chunks * CHUNK
+    p, t = rnd(12, n), rnd(13, n)
+    np.testing.assert_allclose(
+        ew.polyak(p, t, tau), ref.polyak(p, t, tau), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_adam_rejects_unpadded():
+    with pytest.raises(AssertionError):
+        ew.adam_update(jnp.zeros(100), jnp.zeros(100), jnp.zeros(100), jnp.zeros(100), 1e-3, 1.0)
+
+
+def test_adam_under_jit_with_traced_step():
+    n = CHUNK
+    p, g = rnd(14, n), rnd(15, n)
+    m = jnp.zeros(n)
+    v = jnp.zeros(n)
+
+    @jax.jit
+    def step(p, g, m, v, t):
+        return ew.adam_update(p, g, m, v, 3e-4, t)
+
+    p2, m2, v2 = step(p, g, m, v, jnp.float32(1.0))
+    want = ref.adam_update(p, g, m, v, 3e-4, ew.ADAM_BETA1, ew.ADAM_BETA2, ew.ADAM_EPS, 1.0)
+    np.testing.assert_allclose(p2, want[0], rtol=2e-5, atol=1e-7)
+    # first step with zero moments: p moves by ~lr * sign(g)
+    np.testing.assert_allclose(
+        jnp.abs(p2 - p), 3e-4 * jnp.ones(n), rtol=1e-2, atol=1e-6
+    )
+
+
+# ------------------------------------------------------------ gaussian_head
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 8, 64, 256]),
+    a=st.sampled_from([1, 6, 17]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+def test_gaussian_head_matches_ref(b, a, scale):
+    mu, ls, n = rnd(16, b, a, scale=scale), rnd(17, b, a, scale=scale), rnd(18, b, a)
+    act_k, lp_k = gh.gaussian_head(mu, ls, n)
+    act_r, lp_r = ref.gaussian_head(mu, ls, n)
+    np.testing.assert_allclose(act_k, act_r, rtol=1e-5, atol=1e-6)
+    # logp includes log(1 - a^2 + eps): near-saturated tanh samples amplify
+    # f32 ulp differences through the 1/(1-a^2+eps) factor, so logp gets a
+    # loose absolute tolerance while the action stays tight
+    np.testing.assert_allclose(lp_k, lp_r, rtol=5e-3, atol=5e-2)
+
+
+def test_gaussian_head_bounds_and_clipping():
+    mu = jnp.array([[100.0, -100.0]])
+    ls = jnp.array([[50.0, -50.0]])  # clipped to [-5, 2]
+    n = jnp.zeros((1, 2))
+    a, lp = gh.gaussian_head(mu, ls, n)
+    assert np.all(np.abs(np.asarray(a)) <= 1.0)
+    assert np.isfinite(np.asarray(lp)).all()

@@ -1,0 +1,64 @@
+"""Flat-layout invariants: contiguity, padding, cross-algo differences —
+the contract `rust/src/nn/layout.rs` depends on."""
+
+import pytest
+
+from compile.layout import CHUNK, ENV_PRESETS, build_layout, mlp_shapes
+
+
+@pytest.mark.parametrize("env", list(ENV_PRESETS))
+@pytest.mark.parametrize("algo", ["sac", "td3"])
+def test_segments_contiguous_and_padded(env, algo):
+    lay = build_layout(env, algo)
+    # actor segments tile [0, raw_size) without gaps
+    off = 0
+    for seg in lay.actor_segments:
+        assert seg.offset == off, seg.name
+        off += seg.size
+    assert off <= lay.actor_size
+    assert lay.actor_size % CHUNK == 0
+    off = 0
+    for seg in lay.critic_segments:
+        assert seg.offset == off, seg.name
+        off += seg.size
+    assert off <= lay.critic_size
+    assert lay.critic_size % CHUNK == 0
+    assert lay.param_size == lay.actor_size + lay.critic_size
+    assert lay.target_size == lay.critic_size
+
+
+@pytest.mark.parametrize("env", list(ENV_PRESETS))
+def test_actor_head_width(env):
+    obs, act, hidden = ENV_PRESETS[env]
+    sac = build_layout(env, "sac")
+    td3 = build_layout(env, "td3")
+    assert sac.segment("actor/w2").shape == (hidden, 2 * act)
+    assert td3.segment("actor/w2").shape == (hidden, act)
+    # log_alpha only in SAC
+    assert any(s.name == "actor/log_alpha" for s in sac.actor_segments)
+    assert not any(s.name == "actor/log_alpha" for s in td3.actor_segments)
+
+
+def test_targets_mirror_critic():
+    lay = build_layout("walker", "sac")
+    for t, c in zip(lay.target_segments, lay.critic_segments):
+        assert t.name == f"target_{c.name}"
+        assert t.shape == c.shape
+        assert t.offset == c.offset
+
+
+def test_mlp_shapes_structure():
+    shapes = dict(mlp_shapes(10, 32, 5))
+    assert shapes["w0"] == (10, 32)
+    assert shapes["w1"] == (32, 32)
+    assert shapes["w2"] == (32, 5)
+    assert shapes["b2"] == (5,)
+
+
+def test_json_roundtrip_fields():
+    lay = build_layout("ant", "sac")
+    j = lay.to_json()
+    assert j["obs_dim"] == 28 and j["act_dim"] == 8
+    assert j["chunk"] == CHUNK
+    names = [s["name"] for s in j["critic_segments"]]
+    assert "q1/w0" in names and "q2/b2" in names

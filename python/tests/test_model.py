@@ -1,0 +1,250 @@
+"""L2 model correctness: SAC losses against an independently hand-written
+pure-jnp SAC implementation, gradient-isolation invariants (the paper's
+Fig. 3 device boundary), TD3 behaviour, and the model-parallel split steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.layout import build_layout
+
+jax.config.update("jax_platform_name", "cpu")
+
+ENV = "pendulum"
+BS = 16
+
+
+@pytest.fixture(scope="module")
+def lay():
+    return build_layout(ENV, "sac")
+
+
+def make_state(lay, key=0):
+    k = jax.random.PRNGKey(key)
+    ks = jax.random.split(k, 10)
+    params = 0.1 * jax.random.normal(ks[0], (lay.param_size,), jnp.float32)
+    targets = 0.1 * jax.random.normal(ks[1], (lay.target_size,), jnp.float32)
+    batch = dict(
+        s=jax.random.normal(ks[2], (BS, lay.obs_dim), jnp.float32),
+        a=jnp.tanh(jax.random.normal(ks[3], (BS, lay.act_dim), jnp.float32)),
+        r=jax.random.normal(ks[4], (BS,), jnp.float32),
+        d=(jax.random.uniform(ks[5], (BS,)) < 0.1).astype(jnp.float32),
+        s2=jax.random.normal(ks[6], (BS, lay.obs_dim), jnp.float32),
+        n1=jax.random.normal(ks[7], (BS, lay.act_dim), jnp.float32),
+        n2=jax.random.normal(ks[8], (BS, lay.act_dim), jnp.float32),
+    )
+    hyper = jnp.array([3e-4, 0.99, 0.005, -float(lay.act_dim), 1.0, 0.2], jnp.float32)
+    return params, targets, batch, hyper
+
+
+# --------------------------------------------------- hand-written SAC oracle
+
+def dense_params(flat, segs, prefix):
+    return [
+        flat[s.offset: s.offset + s.size].reshape(s.shape)
+        for s in segs
+        if s.name.startswith(prefix) and s.name != "actor/log_alpha"
+    ]
+
+
+def mlp_ref(x, ws):
+    w0, b0, w1, b1, w2, b2 = ws
+    h = jnp.maximum(x @ w0 + b0, 0.0)
+    h = jnp.maximum(h @ w1 + b1, 0.0)
+    return h @ w2 + b2
+
+
+def sac_losses_oracle(lay, params, targets, batch, hyper):
+    """Completely independent implementation (plain jnp, no kernels)."""
+    pa = lay.actor_size
+    actor, critic = params[:pa], params[pa:]
+    aws = dense_params(actor, lay.actor_segments, "actor/")
+    log_alpha = actor[lay.segment("actor/log_alpha").offset]
+    alpha = jnp.exp(log_alpha)
+    gamma, tau = hyper[1], hyper[2]
+    tgt_ent, rscale = hyper[3], hyper[4]
+
+    def actor_fwd(flat_a, s):
+        out = mlp_ref(s, dense_params(flat_a, lay.actor_segments, "actor/"))
+        mu, ls = jnp.split(out, 2, axis=-1)
+        return mu, jnp.clip(ls, ref.LOG_STD_MIN, ref.LOG_STD_MAX)
+
+    def q_fwd(flat_c, s, a):
+        sa = jnp.concatenate([s, a], -1)
+        q1 = mlp_ref(sa, dense_params(flat_c, lay.critic_segments, "q1/"))[:, 0]
+        q2 = mlp_ref(sa, dense_params(flat_c, lay.critic_segments, "q2/"))[:, 0]
+        return q1, q2
+
+    mu2, ls2 = actor_fwd(actor, batch["s2"])
+    a2, lp2 = ref.gaussian_head(mu2, ls2, batch["n2"])
+    q1t, q2t = q_fwd(targets, batch["s2"], a2)
+    tq = batch["r"] * rscale + gamma * (1 - batch["d"]) * (
+        jnp.minimum(q1t, q2t) - alpha * lp2
+    )
+    q1, q2 = q_fwd(critic, batch["s"], batch["a"])
+    q_loss = jnp.mean((q1 - tq) ** 2) + jnp.mean((q2 - tq) ** 2)
+
+    mu1, ls1 = actor_fwd(actor, batch["s"])
+    a1, lp1 = ref.gaussian_head(mu1, ls1, batch["n1"])
+    q1p, q2p = q_fwd(critic, batch["s"], a1)
+    actor_loss = jnp.mean(alpha * lp1 - jnp.minimum(q1p, q2p))
+    alpha_loss = -jnp.mean(log_alpha * (lp1 + tgt_ent))
+    _ = (aws, tau)
+    return q_loss, actor_loss, alpha_loss
+
+
+def test_sac_losses_match_oracle(lay):
+    params, targets, batch, hyper = make_state(lay)
+    ql, al, tl, metrics = model._sac_losses(
+        lay, params[: lay.actor_size], params[lay.actor_size:], targets,
+        (batch["s"], batch["a"], batch["r"], batch["d"], batch["s2"],
+         batch["n1"], batch["n2"]),
+        hyper,
+    )
+    oq, oa, ot = sac_losses_oracle(lay, params, targets, batch, hyper)
+    np.testing.assert_allclose(ql, oq, rtol=1e-4)
+    np.testing.assert_allclose(al, oa, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(tl, ot, rtol=1e-4, atol=1e-5)
+    assert metrics.shape == (model.N_METRICS,)
+
+
+def test_gradient_isolation(lay):
+    """Paper Fig. 3: actor loss must not move critic params; critic loss
+    must not move actor params (except log_alpha in neither)."""
+    params, targets, batch, hyper = make_state(lay, key=1)
+    pa = lay.actor_size
+    b = (batch["s"], batch["a"], batch["r"], batch["d"], batch["s2"],
+         batch["n1"], batch["n2"])
+
+    def actor_only(p):
+        _, al, _, _ = model._sac_losses(lay, p[:pa], p[pa:], targets, b, hyper)
+        return al
+
+    def critic_only(p):
+        ql, _, _, _ = model._sac_losses(lay, p[:pa], p[pa:], targets, b, hyper)
+        return ql
+
+    g_actor = jax.grad(actor_only)(params)
+    g_critic = jax.grad(critic_only)(params)
+    # actor loss: zero grad on the critic half
+    np.testing.assert_allclose(g_actor[pa:], 0.0, atol=1e-9)
+    assert float(jnp.abs(g_actor[:pa]).max()) > 0.0
+    # critic loss: zero grad on the actor half
+    np.testing.assert_allclose(g_critic[:pa], 0.0, atol=1e-9)
+    assert float(jnp.abs(g_critic[pa:]).max()) > 0.0
+
+
+def test_full_step_shapes_and_update(lay):
+    params, targets, batch, hyper = make_state(lay, key=2)
+    fn = jax.jit(model.sac_full_step(lay))
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    p2, t2, m2, v2, metrics = fn(
+        params, targets, m, v, jnp.float32(1),
+        batch["s"], batch["a"], batch["r"], batch["d"], batch["s2"],
+        batch["n1"], batch["n2"], hyper,
+    )
+    assert p2.shape == params.shape and t2.shape == targets.shape
+    assert metrics.shape == (model.N_METRICS,)
+    # Adam step 1 with zero moments: |delta| ~= lr wherever grad != 0
+    delta = jnp.abs(p2 - params)
+    assert float(delta.max()) <= 3.1e-4
+    assert float(delta.max()) > 1e-5
+    # targets moved toward critic by tau
+    tau = hyper[2]
+    expect_t2 = tau * p2[lay.actor_size:] + (1 - tau) * targets
+    np.testing.assert_allclose(t2, expect_t2, rtol=1e-5, atol=1e-7)
+
+
+def test_repeated_steps_reduce_q_loss(lay):
+    params, targets, batch, hyper = make_state(lay, key=3)
+    # faster lr so the fixed-batch TD loss visibly shrinks in 100 steps
+    hyper = hyper.at[0].set(3e-3)
+    fn = jax.jit(model.sac_full_step(lay))
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    losses = []
+    for t in range(100):
+        params, targets, m, v, metrics = fn(
+            params, targets, m, v, jnp.float32(t + 1),
+            batch["s"], batch["a"], batch["r"], batch["d"], batch["s2"],
+            batch["n1"], batch["n2"], hyper,
+        )
+        losses.append(float(metrics[0]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0] * 0.5, losses[::20]
+
+
+def test_split_steps_consistent_with_full(lay):
+    """actor_step + critic_step must update the same quantities the full
+    step updates (not bit-identical — separate Adam states — but the same
+    loss surfaces: each split loss matches the full-step metric)."""
+    params, targets, batch, hyper = make_state(lay, key=4)
+    pa = lay.actor_size
+    critic_fn = jax.jit(model.sac_critic_step(lay))
+    actor_fn = jax.jit(model.sac_actor_step(lay))
+    mc = jnp.zeros(lay.critic_size)
+    vc = jnp.zeros(lay.critic_size)
+    ma = jnp.zeros(pa)
+    va = jnp.zeros(pa)
+    c2, t2, _, _, cmetrics = critic_fn(
+        params[:pa], params[pa:], targets, mc, vc, jnp.float32(1),
+        batch["s"], batch["a"], batch["r"], batch["d"], batch["s2"],
+        batch["n2"], hyper,
+    )
+    a2, _, _, ametrics = actor_fn(
+        params[:pa], params[pa:], ma, va, jnp.float32(1),
+        batch["s"], batch["n1"], hyper,
+    )
+    assert c2.shape == (lay.critic_size,)
+    assert a2.shape == (pa,)
+    # the split losses equal the oracle losses
+    oq, oa, _ = sac_losses_oracle(lay, params, targets, batch, hyper)
+    np.testing.assert_allclose(cmetrics[0], oq, rtol=1e-4)
+    np.testing.assert_allclose(ametrics[1], oa, rtol=1e-4, atol=1e-5)
+    # targets moved
+    assert float(jnp.abs(t2 - targets).max()) > 0.0
+
+
+def test_td3_step_and_delay():
+    lay3 = build_layout(ENV, "td3")
+    k = jax.random.PRNGKey(9)
+    params = 0.1 * jax.random.normal(k, (lay3.param_size,), jnp.float32)
+    targets = 0.1 * jax.random.normal(k, (lay3.target_size,), jnp.float32)
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    ks = jax.random.split(k, 6)
+    s = jax.random.normal(ks[0], (BS, lay3.obs_dim), jnp.float32)
+    a = jnp.tanh(jax.random.normal(ks[1], (BS, lay3.act_dim), jnp.float32))
+    r = jax.random.normal(ks[2], (BS,), jnp.float32)
+    d = jnp.zeros((BS,), jnp.float32)
+    s2 = jax.random.normal(ks[3], (BS, lay3.obs_dim), jnp.float32)
+    n2 = jax.random.normal(ks[4], (BS, lay3.act_dim), jnp.float32)
+    hyper = jnp.array([3e-4, 0.99, 0.005, -1.0, 1.0, 0.2], jnp.float32)
+    fn = jax.jit(model.td3_full_step(lay3))
+    # update_actor=0: targets must NOT move (delayed update)
+    _, t2, _, _, _ = fn(params, targets, m, v, jnp.float32(1),
+                        s, a, r, d, s2, n2, jnp.float32(0.0), hyper)
+    np.testing.assert_allclose(t2, targets, atol=1e-7)
+    # update_actor=1: targets move
+    _, t3, _, _, metrics = fn(params, targets, m, v, jnp.float32(1),
+                              s, a, r, d, s2, n2, jnp.float32(1.0), hyper)
+    assert float(jnp.abs(t3 - targets).max()) > 0.0
+    assert np.isfinite(float(metrics[0]))
+
+
+def test_policy_act_deterministic_flag(lay):
+    k = jax.random.PRNGKey(11)
+    actor = 0.1 * jax.random.normal(k, (lay.actor_size,), jnp.float32)
+    s = jax.random.normal(k, (8, lay.obs_dim), jnp.float32)
+    noise = jax.random.normal(k, (8, lay.act_dim), jnp.float32)
+    a_det = model.policy_act(lay, actor, s, noise, jnp.float32(1.0))
+    a_sto = model.policy_act(lay, actor, s, noise, jnp.float32(0.0))
+    # deterministic ignores the noise
+    a_det2 = model.policy_act(lay, actor, s, noise * 100, jnp.float32(1.0))
+    np.testing.assert_allclose(a_det, a_det2, atol=1e-6)
+    assert float(jnp.abs(a_det - a_sto).max()) > 1e-4
+    assert np.all(np.abs(np.asarray(a_sto)) <= 1.0)

@@ -1,0 +1,44 @@
+//! Bench: short end-to-end training throughput — the whole Spreeze topology
+//! vs the queue-transport and synchronous baselines on walker for a fixed
+//! window (a fast, single-seed version of Tables 1–2 suitable for
+//! before/after perf comparisons in EXPERIMENTS.md §Perf).
+
+use spreeze::baselines::{ApexLike, Framework, Spreeze, SpreezeQueue, SyncFramework};
+use spreeze::config::presets;
+
+fn main() {
+    let budget = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(20.0);
+    println!("== e2e framework bench (walker, {budget:.0}s each) ==\n");
+    println!(
+        "{:<22} {:>6} {:>12} {:>6} {:>14} {:>9} {:>9}",
+        "framework", "CPU%", "Sample Hz", "GPU%", "UpdFrame Hz", "Upd Hz", "final"
+    );
+    let fws: Vec<Box<dyn Framework>> = vec![
+        Box::new(Spreeze),
+        Box::new(SpreezeQueue(20_000)),
+        Box::new(ApexLike::default()),
+        Box::new(SyncFramework::default()),
+    ];
+    for fw in fws {
+        let mut cfg = presets::preset("walker");
+        cfg.max_seconds = budget;
+        cfg.target_return = None;
+        cfg.run_dir = format!("/tmp/spreeze-bench-e2e-{}", fw.name());
+        match fw.run(&cfg) {
+            Ok(s) => println!(
+                "{:<22} {:>5.0}% {:>12.0} {:>5.0}% {:>14.0} {:>9.1} {:>9.1}",
+                fw.name(),
+                s.cpu_usage * 100.0,
+                s.sampling_hz,
+                s.gpu_usage * 100.0,
+                s.update_frame_hz,
+                s.update_hz,
+                s.final_return
+            ),
+            Err(e) => println!("{:<22} FAILED: {e:#}", fw.name()),
+        }
+    }
+}

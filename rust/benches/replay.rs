@@ -1,0 +1,104 @@
+//! Bench: experience transport — shared-memory ring vs bounded queue
+//! (paper §3.3.2 claim: shm transfer never costs the learner; queue does).
+//! Regenerates the microdata behind Table 3's QS rows and Fig. 6a.
+
+use std::sync::Arc;
+
+use spreeze::replay::shm_ring::ShmSource;
+use spreeze::replay::{
+    queue_buf::QueueSource, Batch, ExpSink, ExpSource, FrameSpec, QueueBuffer, ShmRing,
+    ShmRingOptions,
+};
+use spreeze::util::bench::Bench;
+use spreeze::util::rng::Rng;
+
+fn main() {
+    let spec = FrameSpec { obs_dim: 22, act_dim: 6 }; // walker frame (52 f32)
+    let frame = vec![0.5f32; spec.f32s()];
+    let b = Bench::default();
+    println!("== replay transport bench (walker frames, {} f32 each) ==\n", spec.f32s());
+
+    // --- push path (sampler side)
+    let ring = Arc::new(
+        ShmRing::create(&ShmRingOptions { capacity: 1_000_000, spec, shm_name: None }).unwrap(),
+    );
+    b.run("shm_ring/push", Some(1.0), || ring.push_frame(&frame)).print();
+
+    let q = QueueBuffer::new(50_000, spec);
+    {
+        let q2 = q.clone();
+        // drainer keeps the queue from saturating so we measure push cost
+        let qd = q.clone();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let h = std::thread::spawn(move || {
+            let mut src = QueueSource::new(qd, 1_000_000);
+            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                src.drain(true);
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        });
+        b.run("queue/push (drained)", Some(1.0), || q2.push(&frame)).print();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    // --- sample path (learner side)
+    println!();
+    let mut rng = Rng::new(1);
+    for bs in [128usize, 2048, 8192] {
+        let mut src = ShmSource::new(ring.clone());
+        let mut batch = Batch::new(bs, 22, 6);
+        b.run(&format!("shm_ring/sample_batch bs={bs}"), Some(bs as f64), || {
+            assert!(src.sample_batch(&mut rng, &mut batch))
+        })
+        .print();
+    }
+    {
+        let q = QueueBuffer::new(50_000, spec);
+        let mut src = QueueSource::new(q.clone(), 1_000_000);
+        for _ in 0..200_000 {
+            q.push(&frame);
+            if q.is_full() {
+                src.drain(false);
+            }
+        }
+        src.drain(true);
+        let mut batch = Batch::new(8192, 22, 6);
+        b.run("queue/sample_batch bs=8192 (pool)", Some(8192.0), || {
+            assert!(src.sample_batch(&mut rng, &mut batch))
+        })
+        .print();
+    }
+
+    // --- contended push: 8 writers on one ring (the real topology)
+    println!();
+    let ring2 = Arc::new(
+        ShmRing::create(&ShmRingOptions { capacity: 1_000_000, spec, shm_name: None }).unwrap(),
+    );
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let writers: Vec<_> = (0..8)
+        .map(|_| {
+            let r = ring2.clone();
+            let s = stop.clone();
+            let f = frame.clone();
+            std::thread::spawn(move || {
+                while !s.load(std::sync::atomic::Ordering::Relaxed) {
+                    r.push_frame(&f);
+                }
+            })
+        })
+        .collect();
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let c0 = ring2.ring_stats().pushed;
+    std::thread::sleep(std::time::Duration::from_secs(1));
+    let c1 = ring2.ring_stats().pushed;
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for w in writers {
+        w.join().unwrap();
+    }
+    println!(
+        "shm_ring/8-writer aggregate push rate: {:.2}M frames/s",
+        (c1 - c0) as f64 / 1e6
+    );
+}

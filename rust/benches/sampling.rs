@@ -1,0 +1,102 @@
+//! Bench: sampler-side throughput — env stepping and native policy forward
+//! per env (the paper's "Sampling Frame Rate" numerator), plus the sampler
+//! process sweep (Table 3 SP rows) at the thread level.
+
+use std::sync::Arc;
+
+use spreeze::env::registry::make_env;
+use spreeze::nn::GaussianPolicy;
+use spreeze::replay::{ExpSink, FrameSpec, ShmRing, ShmRingOptions};
+use spreeze::runtime::{default_artifacts_dir, Manifest};
+use spreeze::util::bench::Bench;
+use spreeze::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+    println!("== sampling bench ==\n-- env.step cost (random actions)");
+    for env_name in ["pendulum", "walker", "cheetah", "ant", "humanoid"] {
+        let mut env = make_env(env_name).unwrap();
+        let spec = env.spec().clone();
+        let mut rng = Rng::new(0);
+        let mut obs = vec![0.0f32; spec.obs_dim];
+        let mut act = vec![0.0f32; spec.act_dim];
+        env.reset(&mut rng, &mut obs);
+        b.run(&format!("env.step/{env_name}"), Some(1.0), || {
+            rng.fill_uniform(&mut act, -1.0, 1.0);
+            let out = env.step(&act, &mut obs);
+            if out.done || out.truncated {
+                env.reset(&mut rng, &mut obs);
+            }
+        })
+        .print();
+    }
+
+    let manifest = match Manifest::load(&default_artifacts_dir()) {
+        Ok(m) => m,
+        Err(_) => {
+            println!("(no artifacts: skipping policy-forward + full-loop benches)");
+            return;
+        }
+    };
+
+    println!("\n-- native policy forward (Rust MLP over flat params)");
+    for env_name in ["pendulum", "walker", "humanoid"] {
+        let lay = manifest.layout(env_name, "sac").unwrap();
+        let mut policy = GaussianPolicy::new(lay).unwrap();
+        let mut rng = Rng::new(1);
+        let (params, _) = lay.init_params(&mut rng);
+        let actor = &params[..lay.actor_size];
+        let mut obs = vec![0.0f32; lay.obs_dim];
+        rng.fill_normal(&mut obs);
+        let mut act = vec![0.0f32; lay.act_dim];
+        b.run(&format!("policy.act/{env_name}"), Some(1.0), || {
+            policy.act(actor, &obs, &mut rng, false, 0.1, &mut act)
+        })
+        .print();
+    }
+
+    println!("\n-- full sampler loop (env + policy + pack + shm push), walker");
+    let lay = manifest.layout("walker", "sac").unwrap();
+    let fspec = FrameSpec { obs_dim: lay.obs_dim, act_dim: lay.act_dim };
+    let ring = Arc::new(
+        ShmRing::create(&ShmRingOptions { capacity: 1_000_000, spec: fspec, shm_name: None })
+            .unwrap(),
+    );
+    let mut env = make_env("walker").unwrap();
+    let mut policy = GaussianPolicy::new(lay).unwrap();
+    let mut rng = Rng::new(2);
+    let (params, _) = lay.init_params(&mut rng);
+    let actor = params[..lay.actor_size].to_vec();
+    let mut obs = vec![0.0f32; lay.obs_dim];
+    let mut obs2 = vec![0.0f32; lay.obs_dim];
+    let mut act = vec![0.0f32; lay.act_dim];
+    let mut frame = vec![0.0f32; fspec.f32s()];
+    env.reset(&mut rng, &mut obs);
+    b.run("sampler_loop/walker", Some(1.0), || {
+        policy.act(&actor, &obs, &mut rng, false, 0.1, &mut act);
+        let out = env.step(&act, &mut obs2);
+        fspec.pack(&obs, &act, out.reward, out.done, &obs2, &mut frame);
+        ring.push(&frame);
+        if out.done || out.truncated {
+            env.reset(&mut rng, &mut obs);
+        } else {
+            std::mem::swap(&mut obs, &mut obs2);
+        }
+    })
+    .print();
+    println!(
+        "\nper-core sampling upper bound (walker): {:.0} Hz; x N samplers = Table 2 column",
+        1e9 / b.run("sampler_loop/walker (re-run)", Some(1.0), || {
+            policy.act(&actor, &obs, &mut rng, false, 0.1, &mut act);
+            let out = env.step(&act, &mut obs2);
+            fspec.pack(&obs, &act, out.reward, out.done, &obs2, &mut frame);
+            ring.push(&frame);
+            if out.done || out.truncated {
+                env.reset(&mut rng, &mut obs);
+            } else {
+                std::mem::swap(&mut obs, &mut obs2);
+            }
+        })
+        .mean_ns
+    );
+}

@@ -1,0 +1,108 @@
+//! Bench: network-update throughput vs batch size (Table 3 BS rows, the
+//! paper's "Network Update Frame Rate" = update_hz × BS) — executes the
+//! real SAC full-step artifact per AOT-compiled batch size, plus the
+//! dual-executor model-parallel round for comparison (Fig. 6c GPU1 row).
+
+use std::sync::Arc;
+
+use spreeze::config::presets;
+use spreeze::coordinator::metrics::MetricsHub;
+use spreeze::learner::model_parallel::ModelParallelLearner;
+use spreeze::learner::Learner;
+use spreeze::replay::shm_ring::ShmSource;
+use spreeze::replay::{FrameSpec, ShmRing, ShmRingOptions};
+use spreeze::runtime::{default_artifacts_dir, Manifest};
+use spreeze::util::bench::Bench;
+use spreeze::util::rng::Rng;
+
+fn filled_ring(obs_dim: usize, act_dim: usize, n: usize) -> Arc<ShmRing> {
+    let spec = FrameSpec { obs_dim, act_dim };
+    let ring =
+        Arc::new(ShmRing::create(&ShmRingOptions { capacity: n, spec, shm_name: None }).unwrap());
+    let mut rng = Rng::new(9);
+    let mut frame = vec![0.0f32; spec.f32s()];
+    for _ in 0..n {
+        rng.fill_normal(&mut frame);
+        frame[obs_dim + act_dim + 1] = 0.0; // done flag
+        ring.push_frame(&frame);
+    }
+    ring
+}
+
+fn main() {
+    let manifest = match Manifest::load(&default_artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("no artifacts ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let b = Bench { window: std::time::Duration::from_secs(3), ..Default::default() };
+    println!("== network update bench (walker SAC full step) ==\n");
+    println!(
+        "{:<26} {:>12} {:>14} {:>16}",
+        "artifact", "ms/update", "updates/s", "update frames/s"
+    );
+    let cfg = presets::preset("walker");
+    let lay = manifest.layout("walker", "sac").unwrap().clone();
+    for bs in manifest.batch_sizes("walker", "sac", "full") {
+        let ring = filled_ring(lay.obs_dim, lay.act_dim, 64 * 1024);
+        let mut learner =
+            Learner::new(&cfg, &manifest, bs, Box::new(ShmSource::new(ring))).unwrap();
+        let r = b.run(&format!("sac_full_bs{bs}"), Some(bs as f64), || {
+            assert!(learner.try_update().unwrap())
+        });
+        println!(
+            "{:<26} {:>12.2} {:>14.1} {:>16.0}",
+            format!("sac_full_bs{bs}"),
+            r.mean_ns / 1e6,
+            1e9 / r.mean_ns,
+            r.items_per_sec()
+        );
+    }
+
+    // model-parallel round at 8192 (if split artifacts exist)
+    if manifest.find("walker", "sac", "actor", 8192).is_ok() {
+        let ring = filled_ring(lay.obs_dim, lay.act_dim, 64 * 1024);
+        let hub = Arc::new(MetricsHub::new());
+        let mut cfg_mp = cfg.clone();
+        cfg_mp.model_parallel = true;
+        let mut mp = ModelParallelLearner::new(
+            &cfg_mp,
+            &manifest,
+            8192,
+            Box::new(ShmSource::new(ring)),
+            hub,
+        )
+        .unwrap();
+        let r = b.run("model_parallel_bs8192", Some(8192.0), || {
+            assert!(mp.try_update().unwrap())
+        });
+        println!(
+            "{:<26} {:>12.2} {:>14.1} {:>16.0}   (dual executor)",
+            "mp_actor+critic_bs8192",
+            r.mean_ns / 1e6,
+            1e9 / r.mean_ns,
+            r.items_per_sec()
+        );
+    }
+
+    println!("\n== pendulum (small net) ==");
+    let lay_p = manifest.layout("pendulum", "sac").unwrap().clone();
+    let cfg_p = presets::preset("pendulum");
+    for bs in manifest.batch_sizes("pendulum", "sac", "full") {
+        let ring = filled_ring(lay_p.obs_dim, lay_p.act_dim, 64 * 1024);
+        let mut learner =
+            Learner::new(&cfg_p, &manifest, bs, Box::new(ShmSource::new(ring))).unwrap();
+        let r = b.run(&format!("pendulum sac_full_bs{bs}"), Some(bs as f64), || {
+            assert!(learner.try_update().unwrap())
+        });
+        println!(
+            "{:<26} {:>12.2} {:>14.1} {:>16.0}",
+            format!("sac_full_bs{bs}"),
+            r.mean_ns / 1e6,
+            1e9 / r.mean_ns,
+            r.items_per_sec()
+        );
+    }
+}

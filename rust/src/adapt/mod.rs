@@ -1,0 +1,197 @@
+//! Hyperparameter adaptation (paper §3.4): tune the number of sampling
+//! processes (SP) from CPU saturation and the batch size (BS) from executor
+//! ("GPU") saturation, exploiting that both throughput responses are convex
+//! in their knob.
+//!
+//! SP: integer hill-climb — grow while CPU has headroom AND sampling
+//! throughput keeps improving; shrink when the CPU saturates past the
+//! target band (which starves the learner — paper Table 3 SP16 row).
+//!
+//! BS: climb a discrete ladder (the batch sizes that were AOT-compiled) —
+//! grow while the executor is saturated and update *frame* rate improves;
+//! shrink when update frequency collapses without frame-rate gain.
+
+/// One knob observation.
+#[derive(Clone, Copy, Debug)]
+pub struct Obs {
+    /// Saturation of the limiting resource, in [0,1].
+    pub usage: f64,
+    /// The throughput this knob maximizes (frames/s).
+    pub throughput: f64,
+}
+
+/// Generic convex hill-climber over a discrete ladder of settings.
+#[derive(Debug)]
+pub struct HillClimber {
+    pub ladder: Vec<usize>,
+    pub idx: usize,
+    /// usage above which we consider the resource saturated
+    pub hi: f64,
+    /// usage below which we consider it underused
+    pub lo: f64,
+    last_throughput: Option<f64>,
+    last_direction: i32,
+    /// consecutive non-improving moves before we lock in
+    strikes: u32,
+    pub locked: bool,
+}
+
+impl HillClimber {
+    pub fn new(ladder: Vec<usize>, start: usize, lo: f64, hi: f64) -> Self {
+        assert!(!ladder.is_empty());
+        let idx = ladder
+            .iter()
+            .position(|&x| x >= start)
+            .unwrap_or(ladder.len() - 1);
+        HillClimber {
+            ladder,
+            idx,
+            hi,
+            lo,
+            last_throughput: None,
+            last_direction: 1,
+            strikes: 0,
+            locked: false,
+        }
+    }
+
+    pub fn current(&self) -> usize {
+        self.ladder[self.idx]
+    }
+
+    /// Feed one observation window; returns the new setting.
+    pub fn observe(&mut self, obs: Obs) -> usize {
+        if self.locked {
+            return self.current();
+        }
+        let improved = match self.last_throughput {
+            None => true,
+            Some(prev) => obs.throughput > prev * 1.03, // >3% = real gain
+        };
+        let regressed = match self.last_throughput {
+            None => false,
+            Some(prev) => obs.throughput < prev * 0.90,
+        };
+        self.last_throughput = Some(obs.throughput);
+
+        let dir: i32 = if obs.usage > self.hi {
+            // saturated past the band: keep shrinking — this is pressure
+            // relief (the learner is being starved), not peak search, so it
+            // never counts toward convergence lock. Shed proportionally so
+            // a heavily oversubscribed pool recovers in a few windows.
+            self.strikes = 0;
+            -(((self.idx + 1) / 4).max(1) as i32)
+        } else if regressed {
+            // last move hurt: back off and lock after repeated failures
+            self.strikes += 1;
+            -self.last_direction
+        } else if obs.usage < self.lo {
+            // resource underused: grow
+            if improved { self.strikes = 0 } else { self.strikes += 1 }
+            1
+        } else if improved {
+            self.strikes = 0;
+            self.last_direction
+        } else {
+            self.strikes += 1;
+            0
+        };
+
+        if self.strikes >= 3 {
+            self.locked = true; // converged (convex response: we are at peak)
+            return self.current();
+        }
+        let new_idx = (self.idx as i64 + dir as i64)
+            .clamp(0, self.ladder.len() as i64 - 1) as usize;
+        if new_idx != self.idx {
+            self.last_direction = if new_idx > self.idx { 1 } else { -1 };
+            self.idx = new_idx;
+        }
+        self.current()
+    }
+}
+
+/// The two Spreeze knobs bundled (paper §3.4.2).
+#[derive(Debug)]
+pub struct Adaptation {
+    pub sp: HillClimber,
+    pub bs: HillClimber,
+}
+
+impl Adaptation {
+    /// `sp_max` = worker pool size; `bs_ladder` = AOT-compiled batch sizes.
+    pub fn new(sp_max: usize, sp_start: usize, bs_ladder: Vec<usize>, bs_start: usize) -> Self {
+        let sp_ladder: Vec<usize> = (1..=sp_max.max(1)).collect();
+        Adaptation {
+            // CPU band: the paper settles ~75% usage; >95% starves the learner
+            sp: HillClimber::new(sp_ladder, sp_start, 0.75, 0.95),
+            // BS: a busy executor is *expected* (the learner loop is
+            // update-bound); the controller climbs on update-frame-rate
+            // improvement alone and backs off on regression, never on
+            // saturation (lo=1.0 -> always "room to grow", hi>1 -> never
+            // "too saturated").
+            bs: HillClimber::new(bs_ladder, bs_start, 1.0, 1.01),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic convex response: throughput peaks at ladder value 8.
+    fn response(x: usize) -> f64 {
+        let x = x as f64;
+        1000.0 * x / (1.0 + (x / 8.0).powi(2)) // peak at x=8
+    }
+
+    #[test]
+    fn climbs_to_convex_peak_from_below() {
+        let mut hc = HillClimber::new((1..=16).collect(), 2, 0.80, 0.97);
+        let mut setting = hc.current();
+        for _ in 0..40 {
+            let usage = (setting as f64 / 16.0 * 0.9).min(1.0);
+            setting = hc.observe(Obs { usage, throughput: response(setting) });
+        }
+        assert!(
+            (6..=12).contains(&setting),
+            "expected near-peak (~8), got {setting}"
+        );
+    }
+
+    #[test]
+    fn backs_off_when_saturated() {
+        let mut hc = HillClimber::new((1..=16).collect(), 16, 0.75, 0.95);
+        // always saturated, throughput flat: should shrink
+        let first = hc.current();
+        let mut setting = first;
+        for _ in 0..3 {
+            setting = hc.observe(Obs { usage: 0.99, throughput: 100.0 });
+        }
+        assert!(setting < first, "should back off under saturation");
+    }
+
+    #[test]
+    fn locks_after_convergence() {
+        let mut hc = HillClimber::new((1..=4).collect(), 2, 0.5, 0.9);
+        for _ in 0..20 {
+            hc.observe(Obs { usage: 0.7, throughput: 100.0 });
+        }
+        assert!(hc.locked);
+        let s = hc.current();
+        for _ in 0..5 {
+            assert_eq!(hc.observe(Obs { usage: 0.2, throughput: 1e9 }), s);
+        }
+    }
+
+    #[test]
+    fn bs_ladder_is_discrete() {
+        let mut a = Adaptation::new(8, 4, vec![128, 512, 2048, 8192], 512);
+        assert_eq!(a.bs.current(), 512);
+        // saturated executor + improving frame rate -> climb to 2048
+        a.bs.observe(Obs { usage: 0.99, throughput: 1e5 });
+        let v = a.bs.observe(Obs { usage: 0.60, throughput: 2e5 });
+        assert!(v == 2048 || v == 8192 || v == 512, "{v}");
+        assert!([128usize, 512, 2048, 8192].contains(&a.bs.current()));
+    }
+}

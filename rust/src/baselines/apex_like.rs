@@ -1,0 +1,46 @@
+//! APE-X-style baseline (the paper's "RLlib-APEX-BS*" rows): distributed
+//! samplers feed the learner through a bounded queue, and fresh weights are
+//! broadcast eagerly after *every* update (the object-store broadcast
+//! pattern), so the learner pays both the experience-dump cost and the
+//! per-update weight-serialization cost that Spreeze's shared memory +
+//! low-rate SSD sync avoid.
+
+use anyhow::Result;
+
+use super::Framework;
+use crate::config::{TrainConfig, Transport};
+use crate::coordinator::{Coordinator, RunSummary};
+
+pub struct ApexLike {
+    /// Queue size of the experience channel.
+    pub queue_size: usize,
+    /// Fixed training batch size (APE-X defaults are small).
+    pub batch_size: usize,
+}
+
+impl Default for ApexLike {
+    fn default() -> Self {
+        ApexLike { queue_size: 2000, batch_size: 128 }
+    }
+}
+
+impl Framework for ApexLike {
+    fn name(&self) -> &'static str {
+        "apex-like"
+    }
+
+    fn run(&self, cfg: &TrainConfig) -> Result<RunSummary> {
+        let mut cfg = cfg.clone();
+        cfg.transport = Transport::Queue(self.queue_size);
+        cfg.batch_size = self.batch_size;
+        cfg.adapt = false;
+        // warmup can never exceed what the transfer queue can deliver
+        // before its first drain
+        cfg.update_after = cfg.update_after.min(self.queue_size);
+        // eager weight broadcast after every update
+        cfg.sync_every = 1;
+        // workers poll for new weights aggressively (per-rollout pull)
+        cfg.reload_every = 20;
+        Coordinator::new(cfg).run()
+    }
+}

@@ -1,0 +1,51 @@
+//! Comparison framework architectures for Tables 1–2 (DESIGN.md §1):
+//! in-repo stand-ins for the architectural patterns of RLlib / Acme / rlpyt
+//! that the paper benchmarks against. Each baseline shares Spreeze's envs,
+//! networks, and update artifacts but deliberately reintroduces the
+//! coordination costs the paper removes — so the measured deltas isolate
+//! exactly the paper's contributions.
+
+pub mod apex_like;
+pub mod sync_framework;
+
+pub use apex_like::ApexLike;
+pub use sync_framework::SyncFramework;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::RunSummary;
+
+/// A runnable framework variant.
+pub trait Framework {
+    fn name(&self) -> &'static str;
+    fn run(&self, cfg: &TrainConfig) -> Result<RunSummary>;
+}
+
+/// Spreeze itself, behind the same interface (for the harness loops).
+pub struct Spreeze;
+
+impl Framework for Spreeze {
+    fn name(&self) -> &'static str {
+        "spreeze"
+    }
+
+    fn run(&self, cfg: &TrainConfig) -> Result<RunSummary> {
+        crate::coordinator::Coordinator::new(cfg.clone()).run()
+    }
+}
+
+/// Spreeze with queue transport (the paper's Fig. 4a partial-async mode).
+pub struct SpreezeQueue(pub usize);
+
+impl Framework for SpreezeQueue {
+    fn name(&self) -> &'static str {
+        "spreeze-queue"
+    }
+
+    fn run(&self, cfg: &TrainConfig) -> Result<RunSummary> {
+        let mut cfg = cfg.clone();
+        cfg.transport = crate::config::Transport::Queue(self.0);
+        crate::coordinator::Coordinator::new(cfg).run()
+    }
+}

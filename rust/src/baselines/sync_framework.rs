@@ -1,0 +1,225 @@
+//! Synchronous alternating-phase baseline (the paper's "RLlib-PPO-*" rows
+//! and Fig. 4a): collect a rollout batch with all envs stepped on the
+//! driver, THEN update, THEN collect again — sampling and learning never
+//! overlap, so neither the CPU nor the "GPU" is ever fully utilized. This
+//! is the partial-parallelization mode the paper's Fig. 4 contrasts with
+//! full asynchrony.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::Framework;
+use crate::config::TrainConfig;
+use crate::coordinator::metrics::{MetricsHub, Snapshot};
+use crate::coordinator::RunSummary;
+use crate::env::registry::make_env;
+use crate::env::vec::VecEnv;
+use crate::env::StepOut;
+use crate::eval::EvalWorker;
+use crate::learner::Learner;
+use crate::nn::{CheckpointStore, GaussianPolicy};
+use crate::replay::shm_ring::ShmSource;
+use crate::replay::{FrameSpec, ShmRing, ShmRingOptions};
+use crate::runtime::{default_artifacts_dir, Manifest};
+use crate::util::rng::Rng;
+use crate::util::sysinfo::CpuMonitor;
+use crate::util::timer::{interval_rate, interval_utilization};
+
+pub struct SyncFramework {
+    /// Envs stepped per collect phase (all on the driver thread).
+    pub n_envs: usize,
+    /// Frames collected per phase.
+    pub rollout_len: usize,
+    /// Updates per phase.
+    pub updates_per_phase: usize,
+    pub batch_size: usize,
+}
+
+impl Default for SyncFramework {
+    fn default() -> Self {
+        SyncFramework { n_envs: 8, rollout_len: 1024, updates_per_phase: 8, batch_size: 128 }
+    }
+}
+
+impl Framework for SyncFramework {
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+
+    fn run(&self, cfg: &TrainConfig) -> Result<RunSummary> {
+        let manifest = Manifest::load(&default_artifacts_dir())?;
+        let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();
+        let run_dir = PathBuf::from(&cfg.run_dir);
+        std::fs::create_dir_all(&run_dir)?;
+        let mut store = CheckpointStore::new(&run_dir.join("ckpt"))?;
+        let hub = Arc::new(MetricsHub::new());
+
+        let fspec = FrameSpec { obs_dim: layout.obs_dim, act_dim: layout.act_dim };
+        let ring = Arc::new(ShmRing::create(&ShmRingOptions {
+            capacity: cfg.capacity,
+            spec: fspec,
+            shm_name: None,
+        })?);
+        let mut learner = Learner::new_with_bs_fallback(
+            cfg,
+            &manifest,
+            self.batch_size,
+            Box::new(ShmSource::new(ring.clone())),
+        )?;
+
+        let eval = EvalWorker::spawn(cfg, &layout, hub.clone(), store.policy_path.clone())?;
+        store.publish_policy(&cfg.env, cfg.algo.name(), learner.actor_params())?;
+
+        let envs: Vec<_> =
+            (0..self.n_envs).map(|_| make_env(&cfg.env)).collect::<Result<_>>()?;
+        let mut venv = VecEnv::new(envs, cfg.seed + 100);
+        let mut policy = GaussianPolicy::new(&layout)?;
+        let mut rng = Rng::for_worker(cfg.seed, 0x515C);
+        let mut actions = vec![0.0f32; self.n_envs * layout.act_dim];
+        let mut outs = vec![StepOut::default(); self.n_envs];
+        let mut frame = vec![0.0f32; fspec.f32s()];
+        let mut prev_obs = venv.obs.clone();
+
+        let start = Instant::now();
+        let mut cpu_mon = CpuMonitor::new();
+        let mut snapshots = Vec::new();
+        let mut solved_s = None;
+        let mut best_return = f64::NEG_INFINITY;
+        let mut last_snap = Instant::now();
+        let mut prev_sampled = hub.sampled.snapshot();
+        let mut prev_updates = hub.updates.snapshot();
+        let mut prev_upframes = hub.update_frames.snapshot();
+        let mut prev_busy = hub.exec_busy[0].snapshot();
+
+        'outer: loop {
+            let wall = start.elapsed().as_secs_f64();
+            if wall >= cfg.max_seconds || learner.step >= cfg.max_updates {
+                break;
+            }
+            if let (Some(target), Some(m)) = (cfg.target_return, eval.curve.recent_mean(3)) {
+                if m >= target {
+                    solved_s = Some(wall);
+                    break;
+                }
+            }
+
+            // ---- phase 1: synchronous collection (learner idle)
+            let mut collected = 0usize;
+            while collected < self.rollout_len {
+                prev_obs.copy_from_slice(&venv.obs);
+                for i in 0..self.n_envs {
+                    let obs = &prev_obs[i * layout.obs_dim..(i + 1) * layout.obs_dim];
+                    let act = &mut actions[i * layout.act_dim..(i + 1) * layout.act_dim];
+                    if hub.sampled.count() < cfg.start_steps {
+                        rng.fill_uniform(act, -1.0, 1.0);
+                    } else {
+                        policy.act(
+                            learner.actor_params(),
+                            obs,
+                            &mut rng,
+                            false,
+                            cfg.expl_noise as f32,
+                            act,
+                        );
+                    }
+                }
+                venv.step(&actions, &mut outs);
+                for i in 0..self.n_envs {
+                    let o = &prev_obs[i * layout.obs_dim..(i + 1) * layout.obs_dim];
+                    let a = &actions[i * layout.act_dim..(i + 1) * layout.act_dim];
+                    let o2 = &venv.obs[i * layout.obs_dim..(i + 1) * layout.obs_dim];
+                    let done = outs[i].done && !outs[i].truncated;
+                    fspec.pack(o, a, outs[i].reward, done, o2, &mut frame);
+                    ring.push_frame(&frame);
+                }
+                for r in venv.finished.drain(..) {
+                    hub.push_train_return(r);
+                }
+                hub.sampled.add(self.n_envs as u64);
+                collected += self.n_envs;
+                if start.elapsed().as_secs_f64() >= cfg.max_seconds {
+                    break 'outer;
+                }
+            }
+
+            // ---- phase 2: synchronous updates (samplers idle)
+            if ring.visible_now() >= cfg.update_after {
+                for _ in 0..self.updates_per_phase {
+                    let t0 = Instant::now();
+                    if learner.try_update()? {
+                        hub.exec_busy[0].add_busy_ns(t0.elapsed().as_nanos() as u64);
+                        hub.updates.add(1);
+                        hub.update_frames.add(learner.batch_size() as u64);
+                    }
+                }
+                store.publish_policy(&cfg.env, cfg.algo.name(), learner.actor_params())?;
+            }
+
+            if last_snap.elapsed().as_secs_f64() >= 1.0 {
+                last_snap = Instant::now();
+                let now_sampled = hub.sampled.snapshot();
+                let now_updates = hub.updates.snapshot();
+                let now_upframes = hub.update_frames.snapshot();
+                let now_busy = hub.exec_busy[0].snapshot();
+                snapshots.push(Snapshot {
+                    t_s: wall,
+                    cpu_usage: cpu_mon.sample(),
+                    sampling_hz: interval_rate(prev_sampled, now_sampled),
+                    gpu_usage: interval_utilization(prev_busy, now_busy),
+                    update_frame_hz: interval_rate(prev_upframes, now_upframes),
+                    update_hz: interval_rate(prev_updates, now_updates),
+                    transfer_cycle_s: 0.0,
+                    loss_fraction: 0.0,
+                    visible: ring.visible_now(),
+                    latest_return: hub.latest_return(),
+                    batch_size: learner.batch_size(),
+                    n_samplers: self.n_envs,
+                });
+                prev_sampled = now_sampled;
+                prev_updates = now_updates;
+                prev_upframes = now_upframes;
+                prev_busy = now_busy;
+                if let Some(m) = eval.curve.recent_mean(1) {
+                    best_return = best_return.max(m);
+                }
+            }
+        }
+
+        let wall_s = start.elapsed().as_secs_f64();
+        let curve = eval.curve.points.lock().unwrap().clone();
+        let final_return = eval.curve.recent_mean(3).unwrap_or(f64::NAN);
+        eval.shutdown();
+        let tail = &snapshots[snapshots.len() / 3..];
+        let mean = |f: &dyn Fn(&Snapshot) -> f64| {
+            if tail.is_empty() {
+                0.0
+            } else {
+                tail.iter().map(|s| f(s)).sum::<f64>() / tail.len() as f64
+            }
+        };
+        Ok(RunSummary {
+            env: cfg.env.clone(),
+            algo: cfg.algo.name().into(),
+            wall_s,
+            updates: learner.step,
+            sampled_frames: hub.sampled.count(),
+            solved_s,
+            final_return,
+            best_return,
+            sampling_hz: mean(&|s| s.sampling_hz),
+            update_hz: mean(&|s| s.update_hz),
+            update_frame_hz: mean(&|s| s.update_frame_hz),
+            cpu_usage: mean(&|s| s.cpu_usage),
+            gpu_usage: mean(&|s| s.gpu_usage),
+            transfer_cycle_s: 0.0,
+            loss_fraction: 0.0,
+            batch_size: learner.batch_size(),
+            n_samplers: self.n_envs,
+            curve,
+            snapshots,
+        })
+    }
+}

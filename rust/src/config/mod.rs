@@ -1,0 +1,263 @@
+//! Configuration system: typed training config + env presets + hardware
+//! profile, buildable from CLI flags or a JSON config file.
+
+pub mod presets;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Value;
+use crate::util::sysinfo;
+
+/// Experience transport between samplers and the learner (paper §3.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// Shared-memory ring (the paper's contribution).
+    Shm,
+    /// Bounded queue of the given size (the ablation baseline, Fig. 6a).
+    Queue(usize),
+}
+
+/// RL algorithm choice (paper §4.2.4 robustness: SAC and TD3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Sac,
+    Td3,
+}
+
+impl Algo {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Sac => "sac",
+            Algo::Td3 => "td3",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sac" => Ok(Algo::Sac),
+            "td3" => Ok(Algo::Td3),
+            _ => bail!("unknown algo {s:?} (expected sac|td3)"),
+        }
+    }
+}
+
+/// A simulated hardware profile (Fig. 6b/c and Fig. 8a): caps on the sampler
+/// core budget and a throttle on the learner executor(s).
+#[derive(Clone, Copy, Debug)]
+pub struct HardwareProfile {
+    /// Max CPU cores the sampler pool may use (0 = all).
+    pub cpu_cores: usize,
+    /// Number of learner executors: 2 = dual-"GPU" model parallelism.
+    pub gpus: usize,
+    /// Fraction of each executor's duty cycle (1.0 = unthrottled;
+    /// 0.5 simulates "50% of a single GPU" by sleeping between updates).
+    pub gpu_throttle: f64,
+}
+
+impl Default for HardwareProfile {
+    fn default() -> Self {
+        HardwareProfile { cpu_cores: 0, gpus: 2, gpu_throttle: 1.0 }
+    }
+}
+
+/// Full training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub env: String,
+    pub algo: Algo,
+    /// 0 = adapt automatically (paper §3.4).
+    pub batch_size: usize,
+    /// 0 = adapt automatically.
+    pub n_samplers: usize,
+    pub transport: Transport,
+    /// Replay capacity in frames.
+    pub capacity: usize,
+    pub seed: u64,
+
+    // SAC/TD3 hyper vector (runtime inputs to the artifacts)
+    pub lr: f64,
+    pub gamma: f64,
+    pub tau: f64,
+    /// 0.0 = auto (-act_dim).
+    pub target_entropy: f64,
+    pub reward_scale: f64,
+    pub policy_noise: f64,
+    /// TD3 delayed policy update period.
+    pub policy_delay: u64,
+
+    // schedule
+    /// Uniform-random warmup actions before using the policy.
+    pub start_steps: u64,
+    /// Frames required in the buffer before updates begin.
+    pub update_after: usize,
+    /// Learner checkpoint ("SSD weight transmission") period, in updates.
+    pub sync_every: u64,
+    /// Sampler weight-reload poll period, in env steps.
+    pub reload_every: u64,
+    /// Eval episode period (seconds of wall clock).
+    pub eval_period_s: f64,
+    /// Exploration noise std for TD3 samplers.
+    pub expl_noise: f64,
+
+    // termination
+    pub max_updates: u64,
+    pub max_seconds: f64,
+    /// Stop when the eval return reaches this (paper Table 1 "solve").
+    pub target_return: Option<f64>,
+
+    pub hardware: HardwareProfile,
+    pub model_parallel: bool,
+    pub adapt: bool,
+    pub artifacts_dir: String,
+    pub run_dir: String,
+    /// Print progress lines.
+    pub verbose: bool,
+    /// Enable the visualization worker.
+    pub viz: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            env: "pendulum".into(),
+            algo: Algo::Sac,
+            batch_size: 0,
+            n_samplers: 0,
+            transport: Transport::Shm,
+            capacity: 1_000_000,
+            seed: 0,
+            lr: 3e-4,
+            gamma: 0.99,
+            tau: 0.005,
+            target_entropy: 0.0,
+            reward_scale: 1.0,
+            policy_noise: 0.2,
+            policy_delay: 2,
+            start_steps: 2_000,
+            update_after: 2_000,
+            sync_every: 10,
+            reload_every: 200,
+            eval_period_s: 2.0,
+            expl_noise: 0.1,
+            max_updates: u64::MAX,
+            max_seconds: f64::INFINITY,
+            target_return: None,
+            hardware: HardwareProfile::default(),
+            model_parallel: false,
+            adapt: true,
+            artifacts_dir: "artifacts".into(),
+            run_dir: "results/run".into(),
+            verbose: false,
+            viz: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply common CLI flags on top of the current config.
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        self.env = a.str_or("env", &self.env);
+        if let Some(algo) = a.str_opt("algo") {
+            self.algo = Algo::parse(&algo)?;
+        }
+        self.batch_size = a.usize_or("bs", self.batch_size)?;
+        self.n_samplers = a.usize_or("sp", self.n_samplers)?;
+        if let Some(qs) = a.str_opt("queue-size") {
+            self.transport = Transport::Queue(qs.parse()?);
+        }
+        self.capacity = a.usize_or("capacity", self.capacity)?;
+        self.seed = a.u64_or("seed", self.seed)?;
+        self.lr = a.f64_or("lr", self.lr)?;
+        self.gamma = a.f64_or("gamma", self.gamma)?;
+        self.tau = a.f64_or("tau", self.tau)?;
+        self.reward_scale = a.f64_or("reward-scale", self.reward_scale)?;
+        self.start_steps = a.u64_or("start-steps", self.start_steps)?;
+        self.update_after = a.usize_or("update-after", self.update_after)?;
+        self.sync_every = a.u64_or("sync-every", self.sync_every)?;
+        self.max_updates = a.u64_or("max-updates", self.max_updates)?;
+        self.max_seconds = a.f64_or("max-seconds", self.max_seconds)?;
+        if let Some(t) = a.str_opt("target-return") {
+            self.target_return = Some(t.parse()?);
+        }
+        self.model_parallel = a.bool_or("model-parallel", self.model_parallel)?;
+        self.adapt = a.bool_or("adapt", self.adapt)?;
+        self.hardware.cpu_cores = a.usize_or("cpu-cores", self.hardware.cpu_cores)?;
+        self.hardware.gpus = a.usize_or("gpus", self.hardware.gpus)?;
+        self.hardware.gpu_throttle = a.f64_or("gpu-throttle", self.hardware.gpu_throttle)?;
+        self.artifacts_dir = a.str_or("artifacts", &self.artifacts_dir);
+        self.run_dir = a.str_or("run-dir", &self.run_dir);
+        self.verbose = a.bool_or("verbose", self.verbose)?;
+        self.viz = a.bool_or("viz", self.viz)?;
+        Ok(())
+    }
+
+    /// Initial sampler count when not adapting: cores minus the learner,
+    /// eval and main threads (paper: "optimal value often aligning closely
+    /// with the available CPU cores").
+    pub fn effective_samplers(&self) -> usize {
+        if self.n_samplers > 0 {
+            return self.n_samplers;
+        }
+        let cores = if self.hardware.cpu_cores > 0 {
+            self.hardware.cpu_cores
+        } else {
+            sysinfo::num_cpus()
+        };
+        cores.saturating_sub(2).max(1)
+    }
+
+    pub fn to_json(&self) -> Value {
+        use crate::util::json::{num, obj, s};
+        obj(vec![
+            ("env", s(&self.env)),
+            ("algo", s(self.algo.name())),
+            ("batch_size", num(self.batch_size as f64)),
+            ("n_samplers", num(self.n_samplers as f64)),
+            (
+                "transport",
+                match self.transport {
+                    Transport::Shm => s("shm"),
+                    Transport::Queue(n) => s(&format!("queue:{n}")),
+                },
+            ),
+            ("capacity", num(self.capacity as f64)),
+            ("seed", num(self.seed as f64)),
+            ("lr", num(self.lr)),
+            ("gamma", num(self.gamma)),
+            ("tau", num(self.tau)),
+            ("model_parallel", Value::Bool(self.model_parallel)),
+            ("adapt", Value::Bool(self.adapt)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_override_defaults() {
+        let argv: Vec<String> =
+            ["--env", "walker", "--bs", "8192", "--queue-size", "5000", "--algo", "td3"]
+                .iter()
+                .map(|x| x.to_string())
+                .collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.env, "walker");
+        assert_eq!(c.batch_size, 8192);
+        assert_eq!(c.transport, Transport::Queue(5000));
+        assert_eq!(c.algo, Algo::Td3);
+    }
+
+    #[test]
+    fn effective_samplers_leaves_headroom() {
+        let mut c = TrainConfig::default();
+        c.hardware.cpu_cores = 12;
+        assert_eq!(c.effective_samplers(), 10);
+        c.n_samplers = 3;
+        assert_eq!(c.effective_samplers(), 3);
+    }
+}

@@ -1,0 +1,138 @@
+//! Metrics hub: the shared counters behind every throughput number the
+//! paper reports (Tables 2–3) plus periodic snapshot rows for analysis.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::timer::{BusyMeter, RateMeter};
+
+/// Shared across samplers / learner / eval / adaptation.
+#[derive(Debug)]
+pub struct MetricsHub {
+    pub start: Instant,
+    /// Env frames pushed by samplers ("Sampling Frame Rate").
+    pub sampled: RateMeter,
+    /// Learner updates ("Network Update Frequency").
+    pub updates: RateMeter,
+    /// Learner updates × batch size ("Network Update Frame Rate").
+    pub update_frames: RateMeter,
+    /// Executor busy time ("GPU usage" proxy; one per executor).
+    pub exec_busy: [BusyMeter; 2],
+    /// Eval episodes completed.
+    pub evals: RateMeter,
+    /// Latest train episode return ×1000 (atomic fixed-point), for logging.
+    latest_return_milli: AtomicU64,
+    /// Episode returns from sampler workers (exploration returns).
+    pub train_returns: Mutex<Vec<f32>>,
+}
+
+impl Default for MetricsHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        MetricsHub {
+            start: Instant::now(),
+            sampled: RateMeter::new(),
+            updates: RateMeter::new(),
+            update_frames: RateMeter::new(),
+            exec_busy: [BusyMeter::new(), BusyMeter::new()],
+            evals: RateMeter::new(),
+            latest_return_milli: AtomicU64::new(f64_to_fixed(0.0)),
+            train_returns: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn push_train_return(&self, ret: f32) {
+        self.latest_return_milli.store(f64_to_fixed(ret as f64), Ordering::Relaxed);
+        let mut g = self.train_returns.lock().unwrap();
+        if g.len() < 100_000 {
+            g.push(ret);
+        }
+    }
+
+    pub fn latest_return(&self) -> f64 {
+        fixed_to_f64(self.latest_return_milli.load(Ordering::Relaxed))
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+fn f64_to_fixed(x: f64) -> u64 {
+    ((x * 1000.0) as i64) as u64
+}
+
+fn fixed_to_f64(x: u64) -> f64 {
+    (x as i64) as f64 / 1000.0
+}
+
+/// One periodic snapshot row — the columns of paper Tables 2–3.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Snapshot {
+    pub t_s: f64,
+    pub cpu_usage: f64,
+    pub sampling_hz: f64,
+    pub gpu_usage: f64,
+    pub update_frame_hz: f64,
+    pub update_hz: f64,
+    pub transfer_cycle_s: f64,
+    pub loss_fraction: f64,
+    pub visible: usize,
+    pub latest_return: f64,
+    pub batch_size: usize,
+    pub n_samplers: usize,
+}
+
+impl Snapshot {
+    pub fn csv_header() -> &'static str {
+        "t_s,cpu_usage,sampling_hz,gpu_usage,update_frame_hz,update_hz,\
+         transfer_cycle_s,loss_fraction,visible,latest_return,batch_size,n_samplers"
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{:.2},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4},{},{:.2},{},{}",
+            self.t_s,
+            self.cpu_usage,
+            self.sampling_hz,
+            self.gpu_usage,
+            self.update_frame_hz,
+            self.update_hz,
+            self.transfer_cycle_s,
+            self.loss_fraction,
+            self.visible,
+            self.latest_return,
+            self.batch_size,
+            self.n_samplers
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_point_returns_roundtrip_negative() {
+        let hub = MetricsHub::new();
+        hub.push_train_return(-1234.567);
+        assert!((hub.latest_return() + 1234.567).abs() < 0.01);
+        hub.push_train_return(88.25);
+        assert!((hub.latest_return() - 88.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn snapshot_csv_shape() {
+        let s = Snapshot { t_s: 1.0, sampling_hz: 100.0, ..Default::default() };
+        assert_eq!(
+            s.csv_row().split(',').count(),
+            Snapshot::csv_header().split(',').count()
+        );
+    }
+}

@@ -1,0 +1,51 @@
+//! Ant-lite: quadruped, 4 legs × 2 joints, termination on torso collapse —
+//! the planar stand-in for PyBullet Ant (obs 28, act 8).
+
+use super::planar::{Leg, Planar, PlanarConfig};
+
+pub fn ant_config() -> PlanarConfig {
+    PlanarConfig {
+        name: "ant",
+        obs_dim: 28,
+        n_joints: 8,
+        legs: vec![
+            Leg { joints: vec![0, 1], hip_x: -0.3 },
+            Leg { joints: vec![2, 3], hip_x: -0.1 },
+            Leg { joints: vec![4, 5], hip_x: 0.1 },
+            Leg { joints: vec![6, 7], hip_x: 0.3 },
+        ],
+        seg_len: 0.28,
+        torso_mass: 6.0,
+        stand_z: 0.5,
+        terminate: Some((0.22, 1.2)),
+        w_forward: 1.2,
+        alive_bonus: 0.3,
+        ctrl_cost: 0.04,
+        upright_spring: 8.0,
+        flagrun: false,
+        max_steps: 1000,
+    }
+}
+
+pub fn make() -> Planar {
+    Planar::new(ant_config())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::testutil::check_env_invariants;
+    use crate::env::Env;
+
+    #[test]
+    fn invariants() {
+        check_env_invariants(|| Box::new(make()), 17);
+    }
+
+    #[test]
+    fn dims() {
+        let e = make();
+        assert_eq!(e.spec().obs_dim, 28);
+        assert_eq!(e.spec().act_dim, 8);
+    }
+}

@@ -1,0 +1,51 @@
+//! HalfCheetah-lite: low-slung quadruped-profile biped (front+back leg,
+//! 3 joints each), NO early termination (gym semantics) — the planar
+//! stand-in for PyBullet HalfCheetah (obs 26, act 6).
+
+use super::planar::{Leg, Planar, PlanarConfig};
+
+pub fn cheetah_config() -> PlanarConfig {
+    PlanarConfig {
+        name: "cheetah",
+        obs_dim: 26,
+        n_joints: 6,
+        legs: vec![
+            Leg { joints: vec![0, 1, 2], hip_x: -0.5 },
+            Leg { joints: vec![3, 4, 5], hip_x: 0.5 },
+        ],
+        seg_len: 0.25,
+        torso_mass: 5.0,
+        stand_z: 0.7,
+        terminate: None,
+        w_forward: 1.0,
+        alive_bonus: 0.0,
+        ctrl_cost: 0.05,
+        upright_spring: 14.0, // long body self-rights, like halfcheetah
+        flagrun: false,
+        max_steps: 1000,
+    }
+}
+
+pub fn make() -> Planar {
+    Planar::new(cheetah_config())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::testutil::check_env_invariants;
+    use crate::env::Env;
+
+    #[test]
+    fn invariants() {
+        check_env_invariants(|| Box::new(make()), 13);
+    }
+
+    #[test]
+    fn dims_and_no_termination() {
+        let e = make();
+        assert_eq!(e.spec().obs_dim, 26);
+        assert_eq!(e.spec().act_dim, 6);
+        assert!(cheetah_config().terminate.is_none());
+    }
+}

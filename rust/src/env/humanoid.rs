@@ -1,0 +1,72 @@
+//! Humanoid-lite (obs 44, act 17) and HumanoidFlagrun-lite (obs 46,
+//! act 17): biped with articulated arms + abdomen. Flagrun rewards
+//! progress toward a relocating target instead of raw forward speed —
+//! the planar stand-ins for the paper's hardest PyBullet tasks.
+
+use super::planar::{Leg, Planar, PlanarConfig};
+
+fn base() -> PlanarConfig {
+    PlanarConfig {
+        name: "humanoid",
+        obs_dim: 44,
+        // 2 legs x 4 (hip/knee/ankle/toe) + 2 arms x 4 + abdomen = 17
+        n_joints: 17,
+        legs: vec![
+            Leg { joints: vec![0, 1, 2, 3], hip_x: -0.08 },
+            Leg { joints: vec![4, 5, 6, 7], hip_x: 0.08 },
+            // arms contribute balance torque through their joint dynamics
+            // but are not contact chains (indices 8..15); joint 16 = abdomen
+        ],
+        seg_len: 0.42,
+        torso_mass: 8.0,
+        stand_z: 1.55,
+        terminate: Some((0.75, 0.9)),
+        w_forward: 1.3,
+        alive_bonus: 0.5,
+        ctrl_cost: 0.02,
+        upright_spring: 5.0,
+        flagrun: false,
+        max_steps: 1000,
+    }
+}
+
+pub fn humanoid_config() -> PlanarConfig {
+    base()
+}
+
+pub fn flagrun_config() -> PlanarConfig {
+    PlanarConfig { name: "humanoid_flagrun", obs_dim: 46, flagrun: true, ..base() }
+}
+
+pub fn make() -> Planar {
+    Planar::new(humanoid_config())
+}
+
+pub fn make_flagrun() -> Planar {
+    Planar::new(flagrun_config())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::testutil::check_env_invariants;
+    use crate::env::Env;
+
+    #[test]
+    fn invariants_humanoid() {
+        check_env_invariants(|| Box::new(make()), 19);
+    }
+
+    #[test]
+    fn invariants_flagrun() {
+        check_env_invariants(|| Box::new(make_flagrun()), 23);
+    }
+
+    #[test]
+    fn dims() {
+        assert_eq!(make().spec().obs_dim, 44);
+        assert_eq!(make().spec().act_dim, 17);
+        assert_eq!(make_flagrun().spec().obs_dim, 46);
+        assert_eq!(make_flagrun().spec().act_dim, 17);
+    }
+}

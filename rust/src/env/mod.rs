@@ -1,0 +1,93 @@
+//! Environment substrate. The paper trains on OpenAI Gym `Pendulum-v0` and
+//! five PyBullet locomotion tasks; we implement Pendulum with the exact Gym
+//! dynamics and the locomotion tasks on a planar articulated-rigid-body
+//! "physics-lite" simulator (`planar.rs`) with matching obs/action
+//! dimensionality and reward structure (see DESIGN.md §1 substitutions).
+
+pub mod ant;
+pub mod cheetah;
+pub mod humanoid;
+pub mod pendulum;
+pub mod planar;
+pub mod registry;
+pub mod vec;
+pub mod walker;
+
+use crate::util::rng::Rng;
+
+/// Static environment description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnvSpec {
+    pub name: String,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    /// Episode step limit (time-limit truncation, not a failure terminal).
+    pub max_steps: u32,
+}
+
+/// Result of one control step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepOut {
+    pub reward: f32,
+    /// Failure terminal (fell over etc.) — the TD bootstrap is cut.
+    pub done: bool,
+    /// Time-limit truncation — episode ends but the bootstrap is NOT cut
+    /// (standard Gym time-limit handling).
+    pub truncated: bool,
+}
+
+/// A single-agent continuous-control environment.
+///
+/// Actions are always in [-1, 1]^act_dim; envs do their own scaling.
+/// Implementations must be deterministic given the reset RNG draws.
+pub trait Env: Send {
+    fn spec(&self) -> &EnvSpec;
+
+    /// Reset and write the initial observation into `obs`.
+    fn reset(&mut self, rng: &mut Rng, obs: &mut [f32]);
+
+    /// Advance one step; writes the next observation into `obs`.
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> StepOut;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Shared env invariants, run by every concrete env's test module:
+    /// determinism per seed, bounded obs, correct dims, episode termination
+    /// within max_steps.
+    pub fn check_env_invariants(mut mk: impl FnMut() -> Box<dyn Env>, seed: u64) {
+        let mut e1 = mk();
+        let mut e2 = mk();
+        let spec = e1.spec().clone();
+        assert!(spec.obs_dim > 0 && spec.act_dim > 0);
+        let mut o1 = vec![0.0f32; spec.obs_dim];
+        let mut o2 = vec![0.0f32; spec.obs_dim];
+        let mut r1 = Rng::new(seed);
+        let mut r2 = Rng::new(seed);
+        e1.reset(&mut r1, &mut o1);
+        e2.reset(&mut r2, &mut o2);
+        assert_eq!(o1, o2, "reset not deterministic");
+        let mut arng = Rng::new(seed + 1);
+        let mut act = vec![0.0f32; spec.act_dim];
+        let mut steps = 0u32;
+        loop {
+            arng.fill_uniform(&mut act, -1.0, 1.0);
+            let s1 = e1.step(&act, &mut o1);
+            let s2 = e2.step(&act, &mut o2);
+            assert_eq!(o1, o2, "step not deterministic at step {steps}");
+            assert_eq!(s1.reward, s2.reward);
+            assert!(s1.reward.is_finite(), "non-finite reward");
+            assert!(o1.iter().all(|x| x.is_finite()), "non-finite obs at step {steps}");
+            steps += 1;
+            if s1.done || s1.truncated {
+                break;
+            }
+            assert!(steps <= spec.max_steps + 1, "episode never ends");
+        }
+        // resets again cleanly
+        e1.reset(&mut r1, &mut o1);
+        assert!(o1.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,148 @@
+//! Exact OpenAI Gym `Pendulum-v0` dynamics (classic control).
+//!
+//! State (θ, θ̇); obs = [cos θ, sin θ, θ̇]; torque u ∈ [-2, 2] (policy action
+//! in [-1,1] scaled by 2); reward = -(Δθ² + 0.1 θ̇² + 0.001 u²);
+//! θ̈ = 3g/(2l)·sin θ + 3/(m l²)·u with g=10, m=1, l=1, dt=0.05;
+//! θ̇ clipped to [-8, 8]; 200-step time limit, no failure terminal.
+
+use super::{Env, EnvSpec, StepOut};
+use crate::util::rng::Rng;
+
+const MAX_SPEED: f32 = 8.0;
+const MAX_TORQUE: f32 = 2.0;
+const DT: f32 = 0.05;
+const G: f32 = 10.0;
+const M: f32 = 1.0;
+const L: f32 = 1.0;
+const MAX_STEPS: u32 = 200;
+
+pub struct Pendulum {
+    spec: EnvSpec,
+    th: f32,
+    thdot: f32,
+    t: u32,
+}
+
+impl Default for Pendulum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pendulum {
+    pub fn new() -> Self {
+        Pendulum {
+            spec: EnvSpec {
+                name: "pendulum".into(),
+                obs_dim: 3,
+                act_dim: 1,
+                max_steps: MAX_STEPS,
+            },
+            th: 0.0,
+            thdot: 0.0,
+            t: 0,
+        }
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.th.cos();
+        obs[1] = self.th.sin();
+        obs[2] = self.thdot;
+    }
+}
+
+/// Wrap an angle to [-π, π).
+pub fn angle_normalize(x: f32) -> f32 {
+    let two_pi = 2.0 * std::f32::consts::PI;
+    (x + std::f32::consts::PI).rem_euclid(two_pi) - std::f32::consts::PI
+}
+
+impl Env for Pendulum {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs: &mut [f32]) {
+        self.th = rng.uniform_in(-std::f32::consts::PI, std::f32::consts::PI);
+        self.thdot = rng.uniform_in(-1.0, 1.0);
+        self.t = 0;
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> StepOut {
+        let u = (action[0] * MAX_TORQUE).clamp(-MAX_TORQUE, MAX_TORQUE);
+        let costs = angle_normalize(self.th).powi(2)
+            + 0.1 * self.thdot * self.thdot
+            + 0.001 * u * u;
+        let newthdot = (self.thdot
+            + (3.0 * G / (2.0 * L) * self.th.sin() + 3.0 / (M * L * L) * u) * DT)
+            .clamp(-MAX_SPEED, MAX_SPEED);
+        self.th += newthdot * DT;
+        self.thdot = newthdot;
+        self.t += 1;
+        self.write_obs(obs);
+        StepOut { reward: -costs, done: false, truncated: self.t >= MAX_STEPS }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::testutil::check_env_invariants;
+
+    #[test]
+    fn invariants() {
+        check_env_invariants(|| Box::new(Pendulum::new()), 7);
+    }
+
+    #[test]
+    fn gym_dynamics_fixture() {
+        // Hand-computed: th=0, thdot=0, u=+2 (action=+1):
+        //   cost = 0; thdot' = (3*10/2*sin0 + 3*2)*0.05 = 0.3; th' = 0.015
+        let mut env = Pendulum::new();
+        env.th = 0.0;
+        env.thdot = 0.0;
+        env.t = 0;
+        let mut obs = [0.0f32; 3];
+        let out = env.step(&[1.0], &mut obs);
+        assert!((out.reward - 0.0 + 0.001 * 4.0).abs() < 1e-6, "{}", out.reward);
+        assert!((env.thdot - 0.3).abs() < 1e-6);
+        assert!((env.th - 0.015).abs() < 1e-6);
+        assert!((obs[0] - env.th.cos()).abs() < 1e-7);
+    }
+
+    #[test]
+    fn angle_normalize_range() {
+        for k in -20..20 {
+            let x = k as f32 * 0.7;
+            let n = angle_normalize(x);
+            assert!((-std::f32::consts::PI..=std::f32::consts::PI).contains(&n));
+            // same angle modulo 2π (ratio must be a near-integer)
+            let r = (x - n) / (2.0 * std::f32::consts::PI);
+            assert!((r - r.round()).abs() < 1e-5, "x={x} n={n} r={r}");
+        }
+    }
+
+    #[test]
+    fn hanging_still_is_max_cost_region() {
+        // θ=π (hanging down) should cost about π² per step
+        let mut env = Pendulum::new();
+        env.th = std::f32::consts::PI;
+        env.thdot = 0.0;
+        let mut obs = [0.0f32; 3];
+        let out = env.step(&[0.0], &mut obs);
+        assert!(out.reward < -9.0 && out.reward > -10.5, "{}", out.reward);
+    }
+
+    #[test]
+    fn speed_is_clipped() {
+        let mut env = Pendulum::new();
+        env.th = std::f32::consts::FRAC_PI_2;
+        env.thdot = 7.9;
+        let mut obs = [0.0f32; 3];
+        for _ in 0..50 {
+            env.step(&[1.0], &mut obs);
+            assert!(env.thdot.abs() <= MAX_SPEED);
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! Planar articulated-rigid-body "physics-lite" locomotion substrate.
+//!
+//! Stands in for the paper's PyBullet tasks (DESIGN.md §1): a torso
+//! (x, z, pitch) with torque-driven joint chains ("legs") whose feet make
+//! spring-damper ground contact; horizontal thrust comes from foot/ground
+//! friction, so locomotion requires coordinated leg oscillation while
+//! keeping the torso upright — the same learning problem shape as the
+//! PyBullet originals, at a comparable per-step CPU cost, with matching
+//! obs/action dimensionality.
+//!
+//! Integration: semi-implicit Euler with substeps, velocity clamps for
+//! unconditional numerical stability (tested: no NaN/Inf under any action
+//! sequence).
+
+use super::{Env, EnvSpec, StepOut};
+use crate::util::rng::Rng;
+
+/// One contact chain (leg): joint indices from hip to foot.
+#[derive(Clone, Debug)]
+pub struct Leg {
+    pub joints: Vec<usize>,
+    /// Hip anchor in torso frame (along the torso axis).
+    pub hip_x: f32,
+}
+
+/// Static morphology + task definition for one locomotion env.
+#[derive(Clone, Debug)]
+pub struct PlanarConfig {
+    pub name: &'static str,
+    pub obs_dim: usize,
+    /// Number of actuated joints (== act_dim).
+    pub n_joints: usize,
+    pub legs: Vec<Leg>,
+    pub seg_len: f32,
+    pub torso_mass: f32,
+    /// Nominal standing height (sum of leg segment lengths).
+    pub stand_z: f32,
+    /// Failure terminal: (min z, max |pitch|). None = no early termination.
+    pub terminate: Option<(f32, f32)>,
+    /// Reward weights: forward, alive bonus, control cost.
+    pub w_forward: f32,
+    pub alive_bonus: f32,
+    pub ctrl_cost: f32,
+    /// Small upright assistance spring (cheetah-style bodies).
+    pub upright_spring: f32,
+    /// Flagrun mode: reward is progress toward a relocating target.
+    pub flagrun: bool,
+    pub max_steps: u32,
+}
+
+const DT: f32 = 0.0165; // pybullet default control period
+const SUBSTEPS: usize = 4;
+const GRAVITY: f32 = 9.8;
+const TORQUE_GAIN: f32 = 18.0;
+const JOINT_DAMP: f32 = 1.2;
+const JOINT_SPRING: f32 = 6.0;
+const JOINT_INERTIA: f32 = 0.12;
+const JOINT_LIMIT: f32 = 1.4;
+const CONTACT_KP: f32 = 280.0;
+const CONTACT_KD: f32 = 18.0;
+const FRICTION_KT: f32 = 9.0;
+const ROOT_DRAG: f32 = 0.35;
+const PITCH_DAMP: f32 = 2.2;
+const PITCH_INERTIA: f32 = 0.9;
+const MAX_V: f32 = 12.0;
+const MAX_W: f32 = 12.0;
+const MAX_QD: f32 = 18.0;
+
+pub struct Planar {
+    spec: EnvSpec,
+    cfg: PlanarConfig,
+    // root state
+    x: f32,
+    z: f32,
+    pitch: f32,
+    vx: f32,
+    vz: f32,
+    w: f32,
+    // joint state
+    q: Vec<f32>,
+    qd: Vec<f32>,
+    q_rest: Vec<f32>,
+    // per-foot cache: previous world position for velocity estimation
+    foot_prev: Vec<(f32, f32)>,
+    contact: Vec<f32>,
+    t: u32,
+    flag_x: f32,
+    features: Vec<f32>,
+}
+
+impl Planar {
+    pub fn new(cfg: PlanarConfig) -> Self {
+        let spec = EnvSpec {
+            name: cfg.name.into(),
+            obs_dim: cfg.obs_dim,
+            act_dim: cfg.n_joints,
+            max_steps: cfg.max_steps,
+        };
+        let nf = cfg.legs.len();
+        let nj = cfg.n_joints;
+        // Rest pose: legs slightly bent, alternating sign for stability.
+        let mut q_rest = vec![0.0f32; nj];
+        for (li, leg) in cfg.legs.iter().enumerate() {
+            for (si, &j) in leg.joints.iter().enumerate() {
+                q_rest[j] = if si % 2 == 0 { 0.12 } else { -0.24 }
+                    * if li % 2 == 0 { 1.0 } else { -1.0 };
+            }
+        }
+        Planar {
+            spec,
+            x: 0.0,
+            z: cfg.stand_z,
+            pitch: 0.0,
+            vx: 0.0,
+            vz: 0.0,
+            w: 0.0,
+            q: q_rest.clone(),
+            qd: vec![0.0; nj],
+            q_rest,
+            foot_prev: vec![(0.0, 0.0); nf],
+            contact: vec![0.0; nf],
+            t: 0,
+            flag_x: 10.0,
+            features: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// World position of a leg's foot (forward kinematics down the chain).
+    fn foot_pos(&self, leg: &Leg) -> (f32, f32) {
+        let (sp, cp) = self.pitch.sin_cos();
+        // hip anchor in world frame
+        let mut px = self.x + leg.hip_x * cp;
+        let mut pz = self.z + leg.hip_x * sp;
+        let mut ang = self.pitch;
+        for &j in &leg.joints {
+            ang += self.q[j];
+            // segments point downward at ang=0
+            px += self.cfg.seg_len * ang.sin();
+            pz -= self.cfg.seg_len * ang.cos();
+        }
+        (px, pz)
+    }
+
+    fn substep(&mut self, action: &[f32], dt: f32) {
+        let cfg = &self.cfg;
+        // --- joint dynamics (PD-damped torque integration)
+        for j in 0..cfg.n_joints {
+            let u = action[j].clamp(-1.0, 1.0);
+            let qdd = (TORQUE_GAIN * u
+                - JOINT_DAMP * self.qd[j]
+                - JOINT_SPRING * (self.q[j] - self.q_rest[j]))
+                / JOINT_INERTIA;
+            self.qd[j] = (self.qd[j] + qdd * dt).clamp(-MAX_QD, MAX_QD);
+        }
+        for j in 0..cfg.n_joints {
+            self.q[j] = (self.q[j] + self.qd[j] * dt).clamp(-JOINT_LIMIT, JOINT_LIMIT);
+        }
+
+        // --- contacts
+        let mut fx_sum = 0.0f32;
+        let mut fz_sum = 0.0f32;
+        let mut torque = 0.0f32;
+        let legs = cfg.legs.clone();
+        for (li, leg) in legs.iter().enumerate() {
+            let (px, pz) = self.foot_pos(leg);
+            let (ppx, ppz) = self.foot_prev[li];
+            let (vfx, vfz) = ((px - ppx) / dt, (pz - ppz) / dt);
+            self.foot_prev[li] = (px, pz);
+            if pz < 0.0 {
+                let fn_ = (-CONTACT_KP * pz - CONTACT_KD * vfz).max(0.0);
+                // kinetic friction opposes foot slip; this is what propels
+                let fx = (-FRICTION_KT * vfx).clamp(-0.9 * fn_, 0.9 * fn_);
+                fx_sum += fx;
+                fz_sum += fn_;
+                // ground reaction torque about the torso COM
+                let rx = px - self.x;
+                let rz = pz - self.z;
+                torque += rx * fn_ - rz * fx;
+                self.contact[li] = 1.0;
+            } else {
+                self.contact[li] = 0.0;
+            }
+        }
+
+        // --- root dynamics
+        let m = cfg.torso_mass;
+        let ax = fx_sum / m - ROOT_DRAG * self.vx;
+        let az = fz_sum / m - GRAVITY - ROOT_DRAG * self.vz;
+        let aw = (torque / m - PITCH_DAMP * self.w - cfg.upright_spring * self.pitch.sin())
+            / PITCH_INERTIA;
+        self.vx = (self.vx + ax * dt).clamp(-MAX_V, MAX_V);
+        self.vz = (self.vz + az * dt).clamp(-MAX_V, MAX_V);
+        self.w = (self.w + aw * dt).clamp(-MAX_W, MAX_W);
+        self.x += self.vx * dt;
+        self.z += self.vz * dt;
+        self.pitch += self.w * dt;
+        // hard floor for the torso itself
+        if self.z < 0.1 {
+            self.z = 0.1;
+            if self.vz < 0.0 {
+                self.vz = 0.0;
+            }
+        }
+    }
+
+    /// Feature vector in fixed priority order; `write_obs` takes the first
+    /// obs_dim entries (the priority list is always >= obs_dim long; see
+    /// DESIGN.md §1 obs packing).
+    fn build_features(&mut self) {
+        let cfg = &self.cfg;
+        self.features.clear();
+        if cfg.flagrun {
+            let d = self.flag_x - self.x;
+            self.features.push((d / 5.0).clamp(-2.0, 2.0));
+            self.features.push(d.signum());
+        }
+        let f0 = [
+            self.z - cfg.stand_z,
+            self.pitch.cos(),
+            self.pitch.sin(),
+            (self.vx / 5.0).clamp(-3.0, 3.0),
+            (self.vz / 5.0).clamp(-3.0, 3.0),
+            (self.w / 5.0).clamp(-3.0, 3.0),
+        ];
+        self.features.extend_from_slice(&f0);
+        for j in 0..cfg.n_joints {
+            self.features.push(self.q[j]);
+        }
+        for j in 0..cfg.n_joints {
+            self.features.push((self.qd[j] / 10.0).clamp(-2.0, 2.0));
+        }
+        let legs = cfg.legs.clone();
+        for (li, leg) in legs.iter().enumerate() {
+            let (px, pz) = self.foot_pos(leg);
+            self.features.push(self.contact[li]);
+            self.features.push(pz.clamp(-1.0, 2.0));
+            self.features.push((px - self.x).clamp(-2.0, 2.0));
+        }
+        // clock features (gait phase helpers)
+        let phase = self.t as f32 * 0.1;
+        self.features.push(phase.sin());
+        self.features.push(phase.cos());
+        assert!(
+            self.features.len() >= self.spec.obs_dim,
+            "{}: feature vector {} < obs_dim {}",
+            cfg.name,
+            self.features.len(),
+            self.spec.obs_dim
+        );
+    }
+
+    fn write_obs(&mut self, obs: &mut [f32]) {
+        self.build_features();
+        obs.copy_from_slice(&self.features[..obs.len()]);
+    }
+}
+
+impl Env for Planar {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs: &mut [f32]) {
+        self.x = 0.0;
+        self.z = self.cfg.stand_z + rng.uniform_in(-0.02, 0.02);
+        self.pitch = rng.uniform_in(-0.05, 0.05);
+        self.vx = 0.0;
+        self.vz = 0.0;
+        self.w = 0.0;
+        for j in 0..self.cfg.n_joints {
+            self.q[j] = self.q_rest[j] + rng.uniform_in(-0.05, 0.05);
+            self.qd[j] = 0.0;
+        }
+        let legs = self.cfg.legs.clone();
+        for (li, leg) in legs.iter().enumerate() {
+            self.foot_prev[li] = self.foot_pos(leg);
+            self.contact[li] = 0.0;
+        }
+        self.t = 0;
+        self.flag_x = if self.cfg.flagrun { rng.uniform_in(4.0, 12.0) } else { f32::MAX };
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> StepOut {
+        let x0 = self.x;
+        let dt = DT / SUBSTEPS as f32;
+        for _ in 0..SUBSTEPS {
+            self.substep(action, dt);
+        }
+        self.t += 1;
+
+        let (flagrun, w_forward, alive_bonus, ctrl_cost, terminate, max_steps) = (
+            self.cfg.flagrun,
+            self.cfg.w_forward,
+            self.cfg.alive_bonus,
+            self.cfg.ctrl_cost,
+            self.cfg.terminate,
+            self.cfg.max_steps,
+        );
+        let progress = (self.x - x0) / DT;
+        let ctrl: f32 = action.iter().map(|u| u * u).sum();
+        let mut reward = if flagrun {
+            // progress toward the flag; relocate flag when reached
+            let toward = progress * (self.flag_x - self.x).signum();
+            if (self.flag_x - self.x).abs() < 0.5 {
+                self.flag_x = self.x + if self.t % 2 == 0 { 8.0 } else { -8.0 };
+            }
+            w_forward * toward
+        } else {
+            w_forward * progress
+        };
+        reward += alive_bonus - ctrl_cost * ctrl;
+
+        let mut done = false;
+        if let Some((z_min, pitch_max)) = terminate {
+            if self.z < z_min || self.pitch.abs() > pitch_max {
+                done = true;
+                reward -= 1.0; // fall penalty
+            }
+        }
+        self.write_obs(obs);
+        StepOut { reward, done, truncated: self.t >= max_steps }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::walker::walker_config;
+
+    #[test]
+    fn stable_under_zero_action() {
+        // Standing with the rest pose should survive a while (contact spring
+        // supports the torso) and never go non-finite.
+        let mut env = Planar::new(walker_config());
+        let mut rng = Rng::new(0);
+        let mut obs = vec![0.0f32; env.spec().obs_dim];
+        env.reset(&mut rng, &mut obs);
+        let act = vec![0.0f32; env.spec().act_dim];
+        for i in 0..50 {
+            let out = env.step(&act, &mut obs);
+            assert!(out.reward.is_finite());
+            assert!(obs.iter().all(|x| x.is_finite()), "step {i}");
+        }
+    }
+
+    #[test]
+    fn extreme_actions_never_explode() {
+        let mut env = Planar::new(walker_config());
+        let mut rng = Rng::new(3);
+        let mut obs = vec![0.0f32; env.spec().obs_dim];
+        env.reset(&mut rng, &mut obs);
+        let mut arng = Rng::new(9);
+        let mut act = vec![0.0f32; env.spec().act_dim];
+        for _ in 0..3 {
+            for _ in 0..400 {
+                for a in act.iter_mut() {
+                    *a = if arng.below(2) == 0 { 1.0 } else { -1.0 };
+                }
+                let out = env.step(&act, &mut obs);
+                assert!(out.reward.is_finite());
+                assert!(obs.iter().all(|x| x.is_finite()));
+                if out.done || out.truncated {
+                    env.reset(&mut rng, &mut obs);
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_motion_is_rewarded() {
+        // Directly verify the reward couples to +x progress.
+        let mut env = Planar::new(walker_config());
+        let mut rng = Rng::new(1);
+        let mut obs = vec![0.0f32; env.spec().obs_dim];
+        env.reset(&mut rng, &mut obs);
+        env.vx = 3.0; // shove it forward
+        let act = vec![0.0f32; env.spec().act_dim];
+        let out = env.step(&act, &mut obs);
+        let alive = env.cfg.alive_bonus;
+        assert!(out.reward > alive, "forward motion should add reward: {}", out.reward);
+    }
+}

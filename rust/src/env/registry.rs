@@ -1,0 +1,55 @@
+//! Environment registry: name → constructor, used by the coordinator, the
+//! experiment harness, and the `spreeze` CLI.
+
+use anyhow::{bail, Result};
+
+use super::{ant, cheetah, humanoid, pendulum::Pendulum, walker, Env};
+
+pub fn make_env(name: &str) -> Result<Box<dyn Env>> {
+    Ok(match name {
+        "pendulum" => Box::new(Pendulum::new()),
+        "walker" => Box::new(walker::make()),
+        "cheetah" => Box::new(cheetah::make()),
+        "ant" => Box::new(ant::make()),
+        "humanoid" => Box::new(humanoid::make()),
+        "humanoid_flagrun" => Box::new(humanoid::make_flagrun()),
+        _ => bail!("unknown env {name:?}"),
+    })
+}
+
+pub fn env_names() -> &'static [&'static str] {
+    crate::config::presets::ALL_ENVS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_registered_envs_construct() {
+        for name in env_names() {
+            let e = make_env(name).unwrap();
+            assert_eq!(&e.spec().name, name);
+        }
+        assert!(make_env("nope").is_err());
+    }
+
+    /// The Rust env dims must agree with python/compile/layout.py presets
+    /// (enforced again at runtime against the manifest).
+    #[test]
+    fn dims_match_python_presets() {
+        let expect = [
+            ("pendulum", 3, 1),
+            ("walker", 22, 6),
+            ("cheetah", 26, 6),
+            ("ant", 28, 8),
+            ("humanoid", 44, 17),
+            ("humanoid_flagrun", 46, 17),
+        ];
+        for (name, o, a) in expect {
+            let e = make_env(name).unwrap();
+            assert_eq!(e.spec().obs_dim, o, "{name} obs");
+            assert_eq!(e.spec().act_dim, a, "{name} act");
+        }
+    }
+}

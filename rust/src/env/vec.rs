@@ -1,0 +1,91 @@
+//! Vectorized env wrapper: steps K envs with auto-reset, used by the
+//! synchronous baseline framework (RLlib-PPO-style alternating phases) and
+//! by benches that need batched stepping.
+
+use super::{Env, StepOut};
+use crate::util::rng::Rng;
+
+pub struct VecEnv {
+    envs: Vec<Box<dyn Env>>,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    /// Flattened current observations, row-major [K, obs_dim].
+    pub obs: Vec<f32>,
+    /// Episode returns in progress.
+    returns: Vec<f32>,
+    /// Completed-episode returns since last drain.
+    pub finished: Vec<f32>,
+    rng: Rng,
+}
+
+impl VecEnv {
+    pub fn new(mut envs: Vec<Box<dyn Env>>, seed: u64) -> Self {
+        assert!(!envs.is_empty());
+        let obs_dim = envs[0].spec().obs_dim;
+        let act_dim = envs[0].spec().act_dim;
+        let mut rng = Rng::new(seed);
+        let mut obs = vec![0.0f32; envs.len() * obs_dim];
+        for (i, e) in envs.iter_mut().enumerate() {
+            e.reset(&mut rng, &mut obs[i * obs_dim..(i + 1) * obs_dim]);
+        }
+        VecEnv {
+            returns: vec![0.0; envs.len()],
+            finished: Vec::new(),
+            envs,
+            obs_dim,
+            act_dim,
+            obs,
+            rng,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.envs.is_empty()
+    }
+
+    /// Step all envs with the flattened action matrix [K, act_dim];
+    /// writes rewards/dones and auto-resets finished envs.
+    /// Returns per-env StepOut (done reflects pre-reset state).
+    pub fn step(&mut self, actions: &[f32], outs: &mut [StepOut]) {
+        let k = self.envs.len();
+        debug_assert_eq!(actions.len(), k * self.act_dim);
+        debug_assert_eq!(outs.len(), k);
+        for i in 0..k {
+            let obs_i = &mut self.obs[i * self.obs_dim..(i + 1) * self.obs_dim];
+            let act_i = &actions[i * self.act_dim..(i + 1) * self.act_dim];
+            let out = self.envs[i].step(act_i, obs_i);
+            self.returns[i] += out.reward;
+            outs[i] = out;
+            if out.done || out.truncated {
+                self.finished.push(self.returns[i]);
+                self.returns[i] = 0.0;
+                self.envs[i].reset(&mut self.rng, obs_i);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::pendulum::Pendulum;
+
+    #[test]
+    fn steps_and_autoresets() {
+        let envs: Vec<Box<dyn Env>> = (0..4).map(|_| Box::new(Pendulum::new()) as _).collect();
+        let mut v = VecEnv::new(envs, 5);
+        assert_eq!(v.len(), 4);
+        let actions = vec![0.0f32; 4 * v.act_dim];
+        let mut outs = vec![StepOut::default(); 4];
+        for _ in 0..250 {
+            v.step(&actions, &mut outs);
+        }
+        // pendulum truncates at 200 steps -> all 4 finished once
+        assert_eq!(v.finished.len(), 4);
+        assert!(v.obs.iter().all(|x| x.is_finite()));
+    }
+}

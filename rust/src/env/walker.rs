@@ -1,0 +1,50 @@
+//! Walker2D-lite: biped, 2 legs × 3 joints (hip/knee/ankle), early
+//! termination on fall — the planar stand-in for PyBullet Walker2D
+//! (obs 22, act 6).
+
+use super::planar::{Leg, Planar, PlanarConfig};
+
+pub fn walker_config() -> PlanarConfig {
+    PlanarConfig {
+        name: "walker",
+        obs_dim: 22,
+        n_joints: 6,
+        legs: vec![
+            Leg { joints: vec![0, 1, 2], hip_x: -0.05 },
+            Leg { joints: vec![3, 4, 5], hip_x: 0.05 },
+        ],
+        seg_len: 0.35,
+        torso_mass: 4.0,
+        stand_z: 1.0,
+        terminate: Some((0.45, 1.0)),
+        w_forward: 1.5,
+        alive_bonus: 0.35,
+        ctrl_cost: 0.03,
+        upright_spring: 4.0,
+        flagrun: false,
+        max_steps: 1000,
+    }
+}
+
+pub fn make() -> Planar {
+    Planar::new(walker_config())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::testutil::check_env_invariants;
+    use crate::env::Env;
+
+    #[test]
+    fn invariants() {
+        check_env_invariants(|| Box::new(make()), 11);
+    }
+
+    #[test]
+    fn dims_match_manifest_preset() {
+        let e = make();
+        assert_eq!(e.spec().obs_dim, 22);
+        assert_eq!(e.spec().act_dim, 6);
+    }
+}

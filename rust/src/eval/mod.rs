@@ -1,0 +1,155 @@
+//! Test/validation process (paper §3.1.2): a dedicated worker runs
+//! deterministic-policy episodes continuously to draw the dense return
+//! curve (the y-axis of every training figure), without ever touching the
+//! experience stream.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::metrics::MetricsHub;
+use crate::env::registry::make_env;
+use crate::nn::{checkpoint, GaussianPolicy, Layout};
+use crate::util::rng::Rng;
+
+/// (wall-clock seconds since start, episode return, policy version)
+pub type CurvePoint = (f64, f64, u64);
+
+#[derive(Default)]
+pub struct EvalCurve {
+    pub points: Mutex<Vec<CurvePoint>>,
+}
+
+impl EvalCurve {
+    /// Mean of the last `k` eval returns (the solve criterion smoother).
+    /// Returns None until a full window exists — a single lucky early
+    /// episode must not register as "solved".
+    pub fn recent_mean(&self, k: usize) -> Option<f64> {
+        let g = self.points.lock().unwrap();
+        if g.len() < k {
+            return None;
+        }
+        let tail = &g[g.len() - k..];
+        Some(tail.iter().map(|p| p.1).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t_s,return,policy_version\n");
+        for (t, r, v) in self.points.lock().unwrap().iter() {
+            out.push_str(&format!("{t:.2},{r:.3},{v}\n"));
+        }
+        out
+    }
+}
+
+pub struct EvalWorker {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    pub curve: Arc<EvalCurve>,
+}
+
+impl EvalWorker {
+    pub fn spawn(
+        cfg: &TrainConfig,
+        layout: &Layout,
+        hub: Arc<MetricsHub>,
+        policy_path: PathBuf,
+    ) -> Result<EvalWorker> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let curve = Arc::new(EvalCurve::default());
+        let (cfg, layout) = (cfg.clone(), layout.clone());
+        let (stop2, curve2) = (stop.clone(), curve.clone());
+        let handle = std::thread::Builder::new().name("eval".into()).spawn(move || {
+            if let Err(e) = eval_loop(&cfg, &layout, &hub, &policy_path, &stop2, &curve2) {
+                eprintln!("eval worker: {e:#}");
+            }
+        })?;
+        Ok(EvalWorker { stop, handle: Some(handle), curve })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn eval_loop(
+    cfg: &TrainConfig,
+    layout: &Layout,
+    hub: &MetricsHub,
+    policy_path: &PathBuf,
+    stop: &AtomicBool,
+    curve: &EvalCurve,
+) -> Result<()> {
+    let mut env = make_env(&cfg.env)?;
+    let spec = env.spec().clone();
+    let mut policy = GaussianPolicy::new(layout)?;
+    let mut rng = Rng::for_worker(cfg.seed, 0xEEAA);
+    let mut actor = vec![0.0f32; layout.actor_size];
+    let mut version = 0u64;
+    let mut obs = vec![0.0f32; spec.obs_dim];
+    let mut act = vec![0.0f32; spec.act_dim];
+
+    while !stop.load(Ordering::Relaxed) {
+        // wait for the first policy publish
+        match checkpoint::load_policy(policy_path, version)? {
+            Some((ver, flat)) => {
+                version = ver;
+                actor.copy_from_slice(&flat);
+            }
+            None if version == 0 => {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                continue;
+            }
+            None => {}
+        }
+        // one deterministic episode
+        env.reset(&mut rng, &mut obs);
+        let mut ret = 0.0f64;
+        loop {
+            policy.act(&actor, &obs, &mut rng, true, 0.0, &mut act);
+            let out = env.step(&act, &mut obs);
+            ret += out.reward as f64;
+            if out.done || out.truncated || stop.load(Ordering::Relaxed) {
+                break;
+            }
+        }
+        curve.points.lock().unwrap().push((hub.elapsed_s(), ret, version));
+        hub.evals.add(1);
+        // pace the test process (paper §3.1.2): dense-enough curve without
+        // competing with samplers/learner for CPU
+        let mut waited = 0.0;
+        while waited < cfg.eval_period_s && !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            waited += 0.05;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recent_mean_windows() {
+        let c = EvalCurve::default();
+        assert!(c.recent_mean(3).is_none());
+        for i in 0..10 {
+            c.points.lock().unwrap().push((i as f64, i as f64, 1));
+        }
+        assert_eq!(c.recent_mean(2), Some(8.5));
+        assert_eq!(c.recent_mean(10), Some(4.5));
+        // incomplete window -> no verdict (anti lucky-first-eval)
+        assert_eq!(c.recent_mean(100), None);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("t_s,return"));
+        assert_eq!(csv.lines().count(), 11);
+    }
+}

@@ -1,0 +1,48 @@
+//! Fig. 5: return-vs-wall-clock training curves, every env × every
+//! framework. Produces one CSV per env with a `series` column.
+
+use anyhow::Result;
+
+use super::{table1, write_curve, HarnessOpts};
+use crate::config::presets::{self, TABLE1_ENVS};
+
+pub fn run(opts: &HarnessOpts) -> Result<()> {
+    let dir = opts.ensure_dir("fig5")?;
+    let envs: Vec<&str> = if opts.envs.is_empty() {
+        TABLE1_ENVS.to_vec()
+    } else {
+        opts.envs.iter().map(|s| s.as_str()).collect()
+    };
+    println!("== Fig 5: training curves per env x framework ==");
+    let fws = table1::frameworks();
+    let labels = table1::framework_labels();
+    for env in &envs {
+        let mut summaries = Vec::new();
+        for (fi, fw) in fws.iter().enumerate() {
+            let mut cfg = presets::preset(env);
+            cfg.seed = *opts.seeds.first().unwrap_or(&0);
+            cfg.max_seconds = opts.budget_s;
+            cfg.target_return = None; // run the full budget to draw the curve
+            cfg.verbose = opts.verbose;
+            cfg.run_dir = opts
+                .out_dir
+                .join("runs")
+                .join(format!("f5-{env}-{}", fw.name()))
+                .to_string_lossy()
+                .into_owned();
+            let s = fw.run(&cfg)?;
+            println!(
+                "  {env:18} {:20} final return {:8.1} ({} evals)",
+                labels[fi],
+                s.final_return,
+                s.curve.len()
+            );
+            summaries.push((labels[fi].to_string(), s));
+        }
+        let refs: Vec<(String, &crate::coordinator::RunSummary)> =
+            summaries.iter().map(|(l, s)| (l.clone(), s)).collect();
+        write_curve(&dir.join(format!("fig5_{env}.csv")), &refs)?;
+    }
+    println!("wrote {}", dir.display());
+    Ok(())
+}

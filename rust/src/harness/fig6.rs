@@ -1,0 +1,127 @@
+//! Fig. 6 ablations:
+//!  (a) shared-memory vs queue transport (several queue sizes) — final curves
+//!  (b) CPU hardware limited to 100% / 50% / 25% of cores
+//!  (c) "GPU" limited: dual executors / single / 75% / 50% of one
+//!
+//! Paper runs these on the humanoid task; `--env` can override (walker is
+//! much cheaper for smoke runs).
+
+use anyhow::Result;
+
+use super::{write_curve, HarnessOpts};
+use crate::config::presets;
+use crate::config::{TrainConfig, Transport};
+use crate::coordinator::{Coordinator, RunSummary};
+use crate::util::sysinfo;
+
+fn base_cfg(opts: &HarnessOpts, env: &str, tag: &str) -> TrainConfig {
+    let mut cfg = presets::preset(env);
+    cfg.seed = *opts.seeds.first().unwrap_or(&0);
+    cfg.max_seconds = opts.budget_s;
+    cfg.target_return = None;
+    cfg.verbose = opts.verbose;
+    cfg.run_dir = opts
+        .out_dir
+        .join("runs")
+        .join(format!("f6-{tag}"))
+        .to_string_lossy()
+        .into_owned();
+    cfg
+}
+
+fn one(cfg: TrainConfig) -> Result<RunSummary> {
+    Coordinator::new(cfg).run()
+}
+
+pub fn part_a(opts: &HarnessOpts, env: &str) -> Result<Vec<(String, RunSummary)>> {
+    println!("-- Fig 6a: shared memory vs queue transport ({env})");
+    let mut out = Vec::new();
+    out.push(("shared-memory".to_string(), one(base_cfg(opts, env, "a-shm"))?));
+    for qs in [5_000usize, 20_000, 50_000] {
+        let mut cfg = base_cfg(opts, env, &format!("a-qs{qs}"));
+        cfg.transport = Transport::Queue(qs);
+        out.push((format!("queue-{qs}"), one(cfg)?));
+    }
+    for (name, s) in &out {
+        println!(
+            "   {name:16} final {:8.1}  upd_frame {:10.0}/s  loss {:4.1}%  cycle {:5.2}s",
+            s.final_return,
+            s.update_frame_hz,
+            s.loss_fraction * 100.0,
+            s.transfer_cycle_s
+        );
+    }
+    Ok(out)
+}
+
+pub fn part_b(opts: &HarnessOpts, env: &str) -> Result<Vec<(String, RunSummary)>> {
+    println!("-- Fig 6b: CPU resource limits ({env})");
+    let cores = sysinfo::num_cpus();
+    let mut out = Vec::new();
+    for (label, frac) in [("cpu-100%", 1.0), ("cpu-50%", 0.5), ("cpu-25%", 0.25)] {
+        let mut cfg = base_cfg(opts, env, &format!("b-{label}"));
+        cfg.hardware.cpu_cores = ((cores as f64 * frac).round() as usize).max(1);
+        out.push((label.to_string(), one(cfg)?));
+    }
+    for (name, s) in &out {
+        println!(
+            "   {name:16} final {:8.1}  sampling {:8.0}/s  cpu {:4.1}%",
+            s.final_return,
+            s.sampling_hz,
+            s.cpu_usage * 100.0
+        );
+    }
+    Ok(out)
+}
+
+pub fn part_c(opts: &HarnessOpts, env: &str) -> Result<Vec<(String, RunSummary)>> {
+    println!("-- Fig 6c: GPU limits: dual / single / 75% / 50% ({env})");
+    let mut out = Vec::new();
+    // dual-executor model parallelism (requires the split artifacts — walker)
+    {
+        let mut cfg = base_cfg(opts, env, "c-gpu2");
+        cfg.model_parallel = true;
+        cfg.batch_size = 8192;
+        cfg.adapt = false;
+        let mp_env_ok = env == "walker"; // actor/critic artifacts built for walker
+        if mp_env_ok {
+            out.push(("gpu-dual".to_string(), one(cfg)?));
+        }
+    }
+    for (label, throttle) in [("gpu-single", 1.0), ("gpu-75%", 0.75), ("gpu-50%", 0.5)] {
+        let mut cfg = base_cfg(opts, env, &format!("c-{label}"));
+        cfg.hardware.gpus = 1;
+        cfg.hardware.gpu_throttle = throttle;
+        out.push((label.to_string(), one(cfg)?));
+    }
+    for (name, s) in &out {
+        println!(
+            "   {name:16} final {:8.1}  upd_frame {:10.0}/s  gpu {:4.1}%",
+            s.final_return,
+            s.update_frame_hz,
+            s.gpu_usage * 100.0
+        );
+    }
+    Ok(out)
+}
+
+pub fn run(opts: &HarnessOpts, part: &str, env_override: Option<&str>) -> Result<()> {
+    let dir = opts.ensure_dir("fig6")?;
+    // paper uses the humanoid task; default here too
+    let env = env_override.unwrap_or("humanoid");
+    let parts: Vec<char> = if part == "all" { vec!['a', 'b', 'c'] } else { part.chars().collect() };
+    for p in parts {
+        let (name, results) = match p {
+            'a' => ("fig6a", part_a(opts, env)?),
+            'b' => ("fig6b", part_b(opts, env)?),
+            // fig6c's dual-GPU row needs the walker split artifacts
+            'c' => ("fig6c", part_c(opts, if env_override.is_none() { "walker" } else { env })?),
+            _ => anyhow::bail!("unknown fig6 part {p:?}"),
+        };
+        let refs: Vec<(String, &RunSummary)> =
+            results.iter().map(|(l, s)| (l.clone(), s)).collect();
+        write_curve(&dir.join(format!("{name}.csv")), &refs)?;
+    }
+    println!("wrote {}", dir.display());
+    Ok(())
+}

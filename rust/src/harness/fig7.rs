@@ -1,0 +1,68 @@
+//! Fig. 7: effect of the two adaptation hyperparameters on final training
+//! performance (walker): (a) batch size sweep, (b) number of sample
+//! processes sweep — each with adaptation disabled, against the
+//! auto-adapted default.
+
+use anyhow::Result;
+
+use super::{write_curve, HarnessOpts};
+use crate::config::presets;
+use crate::coordinator::{Coordinator, RunSummary};
+use crate::runtime::{default_artifacts_dir, Manifest};
+
+pub fn run(opts: &HarnessOpts) -> Result<()> {
+    let dir = opts.ensure_dir("fig7")?;
+    let env = "walker";
+    let manifest = Manifest::load(&default_artifacts_dir())?;
+    let ladder = manifest.batch_sizes(env, "sac", "full");
+
+    let one = |tag: &str, bs: usize, sp: usize, adapt: bool| -> Result<RunSummary> {
+        let mut cfg = presets::preset(env);
+        cfg.seed = *opts.seeds.first().unwrap_or(&0);
+        cfg.max_seconds = opts.budget_s;
+        cfg.target_return = None;
+        cfg.batch_size = bs;
+        cfg.n_samplers = sp;
+        cfg.adapt = adapt;
+        cfg.verbose = opts.verbose;
+        cfg.run_dir = opts
+            .out_dir
+            .join("runs")
+            .join(format!("f7-{tag}"))
+            .to_string_lossy()
+            .into_owned();
+        Coordinator::new(cfg).run()
+    };
+
+    println!("== Fig 7a: batch size sweep (walker, ladder {ladder:?}) ==");
+    let mut a = vec![("auto".to_string(), one("auto", 0, 0, true)?)];
+    for &bs in &ladder {
+        a.push((format!("bs{bs}"), one(&format!("bs{bs}"), bs, 0, false)?));
+    }
+    for (name, s) in &a {
+        println!(
+            "   {name:10} final {:8.1}  upd {:6.1}/s x bs{} = {:10.0} fr/s",
+            s.final_return, s.update_hz, s.batch_size, s.update_frame_hz
+        );
+    }
+    let refs: Vec<(String, &RunSummary)> = a.iter().map(|(l, s)| (l.clone(), s)).collect();
+    write_curve(&dir.join("fig7a_batch_size.csv"), &refs)?;
+
+    println!("== Fig 7b: sample process sweep (walker) ==");
+    let mut b = Vec::new();
+    for sp in [2usize, 4, 8, 16] {
+        b.push((format!("sp{sp}"), one(&format!("sp{sp}"), 8192, sp, false)?));
+    }
+    for (name, s) in &b {
+        println!(
+            "   {name:10} final {:8.1}  sampling {:8.0}/s  cpu {:4.1}%",
+            s.final_return,
+            s.sampling_hz,
+            s.cpu_usage * 100.0
+        );
+    }
+    let refs: Vec<(String, &RunSummary)> = b.iter().map(|(l, s)| (l.clone(), s)).collect();
+    write_curve(&dir.join("fig7b_sample_processes.csv"), &refs)?;
+    println!("wrote {}", dir.display());
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Fig. 8 robustness experiments:
+//!  (a) device robustness — desktop / server / laptop hardware profiles,
+//!      with the adaptation controller choosing (BS, SP) per device
+//!  (b) algorithm robustness — SAC vs TD3 under the same parallelization.
+
+use anyhow::Result;
+
+use super::{write_curve, HarnessOpts};
+use crate::config::presets;
+use crate::config::{Algo, HardwareProfile};
+use crate::coordinator::{Coordinator, RunSummary};
+use crate::util::sysinfo;
+
+pub fn run(opts: &HarnessOpts, part: &str) -> Result<()> {
+    let dir = opts.ensure_dir("fig8")?;
+    let env = "walker";
+    let parts: Vec<char> = if part == "all" { vec!['a', 'b'] } else { part.chars().collect() };
+
+    for p in parts {
+        match p {
+            'a' => {
+                println!("== Fig 8a: device robustness (walker) ==");
+                let cores = sysinfo::num_cpus();
+                // (label, core fraction, executor throttle): the paper's
+                // desktop / 40-core server / 4-core laptop, as profiles
+                let profiles = [
+                    ("desktop", 1.0, 1.0),
+                    ("server", 1.0, 1.3_f64.min(1.0)), // same-class GPU: unthrottled
+                    ("laptop", (4.0 / cores as f64).min(1.0), 0.35),
+                ];
+                let mut out = Vec::new();
+                for (label, core_frac, throttle) in profiles {
+                    let mut cfg = presets::preset(env);
+                    cfg.seed = *opts.seeds.first().unwrap_or(&0);
+                    cfg.max_seconds = opts.budget_s;
+                    cfg.target_return = None;
+                    cfg.hardware = HardwareProfile {
+                        cpu_cores: ((cores as f64 * core_frac).round() as usize).max(2),
+                        gpus: 1,
+                        gpu_throttle: throttle,
+                    };
+                    cfg.verbose = opts.verbose;
+                    cfg.run_dir = opts
+                        .out_dir
+                        .join("runs")
+                        .join(format!("f8a-{label}"))
+                        .to_string_lossy()
+                        .into_owned();
+                    let s = Coordinator::new(cfg).run()?;
+                    println!(
+                        "   {label:10} final {:8.1}  adapted bs={} sp={}",
+                        s.final_return, s.batch_size, s.n_samplers
+                    );
+                    out.push((label.to_string(), s));
+                }
+                let refs: Vec<(String, &RunSummary)> =
+                    out.iter().map(|(l, s)| (l.clone(), s)).collect();
+                write_curve(&dir.join("fig8a_devices.csv"), &refs)?;
+            }
+            'b' => {
+                println!("== Fig 8b: algorithm robustness SAC vs TD3 (walker) ==");
+                let mut out = Vec::new();
+                for algo in [Algo::Sac, Algo::Td3] {
+                    let mut cfg = presets::preset(env);
+                    cfg.algo = algo;
+                    cfg.seed = *opts.seeds.first().unwrap_or(&0);
+                    cfg.max_seconds = opts.budget_s;
+                    cfg.target_return = None;
+                    cfg.batch_size = 8192; // td3 artifacts built at 8192
+                    cfg.adapt = false;
+                    cfg.verbose = opts.verbose;
+                    cfg.run_dir = opts
+                        .out_dir
+                        .join("runs")
+                        .join(format!("f8b-{}", algo.name()))
+                        .to_string_lossy()
+                        .into_owned();
+                    let s = Coordinator::new(cfg).run()?;
+                    println!("   {:10} final {:8.1}", algo.name(), s.final_return);
+                    out.push((algo.name().to_string(), s));
+                }
+                let refs: Vec<(String, &RunSummary)> =
+                    out.iter().map(|(l, s)| (l.clone(), s)).collect();
+                write_curve(&dir.join("fig8b_algorithms.csv"), &refs)?;
+            }
+            _ => anyhow::bail!("unknown fig8 part {p:?}"),
+        }
+    }
+    println!("wrote {}", dir.display());
+    Ok(())
+}

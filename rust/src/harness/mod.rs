@@ -1,0 +1,67 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section (DESIGN.md §6 experiment index). Each entry point
+//! prints paper-format rows and writes CSVs under `results/<id>/`.
+
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::RunSummary;
+
+/// Shared harness options parsed from the CLI.
+#[derive(Clone, Debug)]
+pub struct HarnessOpts {
+    /// Seconds each individual run is allowed (scaled-down reproduction).
+    pub budget_s: f64,
+    /// Random seeds per configuration (paper uses 5).
+    pub seeds: Vec<u64>,
+    pub out_dir: PathBuf,
+    /// Restrict to a subset of envs (empty = paper's set).
+    pub envs: Vec<String>,
+    pub verbose: bool,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        HarnessOpts {
+            budget_s: 60.0,
+            seeds: vec![0, 1, 2],
+            out_dir: PathBuf::from("results"),
+            envs: Vec::new(),
+            verbose: false,
+        }
+    }
+}
+
+impl HarnessOpts {
+    pub fn ensure_dir(&self, sub: &str) -> Result<PathBuf> {
+        let d = self.out_dir.join(sub);
+        std::fs::create_dir_all(&d)?;
+        Ok(d)
+    }
+}
+
+/// Write one run's eval curve as CSV (fig data).
+pub fn write_curve(path: &std::path::Path, runs: &[(String, &RunSummary)]) -> Result<()> {
+    let mut out = String::from("series,t_s,return\n");
+    for (name, r) in runs {
+        for (t, ret, _) in &r.curve {
+            out.push_str(&format!("{name},{t:.2},{ret:.3}\n"));
+        }
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// "mean ± std" formatting used by the paper's tables.
+pub fn pm(xs: &[f64]) -> String {
+    format!("{:.1} ± {:.1}", crate::util::stats::mean(xs), crate::util::stats::std(xs))
+}

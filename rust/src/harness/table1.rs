@@ -1,0 +1,139 @@
+//! Table 1: time-to-solve per environment, Spreeze vs the comparison
+//! framework architectures, mean ± std over seeds. Runs are budget-capped;
+//! unsolved runs are censored at the budget (reported with a ">" marker),
+//! matching the paper's practice of bounding each training session.
+
+use anyhow::Result;
+
+use super::HarnessOpts;
+use crate::baselines::{ApexLike, Framework, Spreeze, SpreezeQueue, SyncFramework};
+use crate::config::presets::{self, TABLE1_ENVS};
+use crate::util::stats;
+
+pub fn frameworks() -> Vec<Box<dyn Framework>> {
+    vec![
+        Box::new(Spreeze),
+        // RLlib-like: APE-X pattern (queue + eager weight broadcast)
+        Box::new(ApexLike::default()),
+        // Acme-like: distributed queue-buffer (reverb-style) transport
+        Box::new(SpreezeQueue(20_000)),
+        // rlpyt-like: alternating synchronous sampling/optimization
+        Box::new(SyncFramework::default()),
+    ]
+}
+
+pub fn framework_labels() -> [&'static str; 4] {
+    ["Spreeze(Ours)", "RLlib-like(APEX)", "ACME-like(queue)", "rlpyt-like(sync)"]
+}
+
+/// Returns per-(env, framework) solve times (censored at budget).
+pub fn run_matrix(
+    opts: &HarnessOpts,
+    envs: &[&str],
+) -> Result<Vec<(String, String, Vec<f64>, Vec<bool>)>> {
+    let fws = frameworks();
+    let labels = framework_labels();
+    let mut rows = Vec::new();
+    for env in envs {
+        for (fi, fw) in fws.iter().enumerate() {
+            let mut times = Vec::new();
+            let mut solved = Vec::new();
+            for &seed in &opts.seeds {
+                let mut cfg = presets::preset(env);
+                cfg.seed = seed;
+                cfg.max_seconds = opts.budget_s;
+                cfg.verbose = opts.verbose;
+                cfg.run_dir = opts
+                    .out_dir
+                    .join("runs")
+                    .join(format!("t1-{env}-{}-s{seed}", fw.name()))
+                    .to_string_lossy()
+                    .into_owned();
+                let summary = fw.run(&cfg)?;
+                match summary.solved_s {
+                    Some(t) => {
+                        times.push(t);
+                        solved.push(true);
+                    }
+                    None => {
+                        times.push(opts.budget_s);
+                        solved.push(false);
+                    }
+                }
+            }
+            println!(
+                "  {env:18} {:18} solve: {}",
+                labels[fi],
+                times
+                    .iter()
+                    .zip(&solved)
+                    .map(|(t, s)| format!("{}{t:.0}s", if *s { "" } else { ">" }))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+            rows.push((env.to_string(), labels[fi].to_string(), times, solved));
+        }
+    }
+    Ok(rows)
+}
+
+pub fn run(opts: &HarnessOpts) -> Result<()> {
+    let dir = opts.ensure_dir("table1")?;
+    let envs: Vec<&str> = if opts.envs.is_empty() {
+        TABLE1_ENVS.to_vec()
+    } else {
+        opts.envs.iter().map(|s| s.as_str()).collect()
+    };
+    println!("== Table 1: time to solve (budget {:.0}s, seeds {:?}) ==", opts.budget_s, opts.seeds);
+    let rows = run_matrix(opts, &envs)?;
+
+    // paper-format table
+    let labels = framework_labels();
+    println!("\n{:<18} {:>22} {:>22} {:>22} {:>22}  TimeSave", "Env\\Framework", labels[0], labels[1], labels[2], labels[3]);
+    let mut csv = String::from("env,framework,mean_s,std_s,n_solved,n_seeds\n");
+    let mut save_fracs = Vec::new();
+    for env in &envs {
+        let mut cells = Vec::new();
+        let mut means = Vec::new();
+        for label in &labels {
+            let (_, _, times, solved) = rows
+                .iter()
+                .find(|(e, f, _, _)| e == env && f == label)
+                .expect("row");
+            let m = stats::mean(times);
+            let s = stats::std(times);
+            let n_solved = solved.iter().filter(|x| **x).count();
+            let censored = n_solved < solved.len();
+            cells.push(format!("{}{m:.1} ± {s:.1}", if censored { ">" } else { "" }));
+            means.push((m, censored));
+            csv.push_str(&format!(
+                "{env},{label},{m:.2},{s:.2},{n_solved},{}\n",
+                solved.len()
+            ));
+        }
+        // Time Save vs best baseline (paper's definition)
+        let ours = means[0].0;
+        let best_other = means[1..]
+            .iter()
+            .map(|(m, _)| *m)
+            .fold(f64::INFINITY, f64::min);
+        let save = if best_other > 0.0 { (1.0 - ours / best_other) * 100.0 } else { 0.0 };
+        if means[0].1 == false {
+            save_fracs.push(save);
+        }
+        println!(
+            "{:<18} {:>22} {:>22} {:>22} {:>22}  {save:5.1}%",
+            env, cells[0], cells[1], cells[2], cells[3]
+        );
+    }
+    if !save_fracs.is_empty() {
+        println!(
+            "{:<18} average Time Save: {:.1}%  (paper: 72.7%)",
+            "",
+            stats::mean(&save_fracs)
+        );
+    }
+    std::fs::write(dir.join("table1.csv"), csv)?;
+    println!("wrote {}", dir.join("table1.csv").display());
+    Ok(())
+}

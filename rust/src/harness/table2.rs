@@ -1,0 +1,121 @@
+//! Table 2: hardware usage + throughput across framework architectures on
+//! the Walker task: CPU%, sampling frame rate, "GPU"%, network update frame
+//! rate, network update frequency.
+
+use anyhow::Result;
+
+use super::HarnessOpts;
+use crate::baselines::{ApexLike, Framework, Spreeze, SpreezeQueue, SyncFramework};
+use crate::config::presets;
+use crate::coordinator::RunSummary;
+
+struct Row {
+    label: &'static str,
+    run: Box<dyn Fn(&HarnessOpts) -> Result<RunSummary>>,
+}
+
+fn cfg_for(opts: &HarnessOpts, tag: &str) -> crate::config::TrainConfig {
+    let mut cfg = presets::preset("walker");
+    cfg.seed = *opts.seeds.first().unwrap_or(&0);
+    cfg.max_seconds = opts.budget_s;
+    cfg.target_return = None; // throughput measurement, not solve
+    cfg.verbose = opts.verbose;
+    cfg.run_dir = opts
+        .out_dir
+        .join("runs")
+        .join(format!("t2-{tag}"))
+        .to_string_lossy()
+        .into_owned();
+    cfg
+}
+
+fn rows() -> Vec<Row> {
+    vec![
+        Row {
+            label: "Spreeze(Ours)",
+            run: Box::new(|o| Spreeze.run(&cfg_for(o, "spreeze"))),
+        },
+        Row {
+            label: "Spreeze-BS128",
+            run: Box::new(|o| {
+                let mut c = cfg_for(o, "spreeze-bs128");
+                c.batch_size = 128;
+                c.adapt = false;
+                Spreeze.run(&c)
+            }),
+        },
+        Row {
+            label: "RLlib-APEX-BS128-like",
+            run: Box::new(|o| ApexLike { queue_size: 2000, batch_size: 128 }.run(&cfg_for(o, "apex-bs128"))),
+        },
+        Row {
+            label: "RLlib-APEX-BS2048-like",
+            run: Box::new(|o| ApexLike { queue_size: 2000, batch_size: 2048 }.run(&cfg_for(o, "apex-bs2048"))),
+        },
+        Row {
+            label: "Sync-BS128 (PPO-like)",
+            run: Box::new(|o| {
+                SyncFramework { batch_size: 128, ..Default::default() }.run(&cfg_for(o, "sync-bs128"))
+            }),
+        },
+        Row {
+            label: "Sync-BS8192 (PPO-like)",
+            run: Box::new(|o| {
+                SyncFramework { batch_size: 8192, ..Default::default() }.run(&cfg_for(o, "sync-bs8192"))
+            }),
+        },
+        Row {
+            label: "ACME-like-BS512 (queue)",
+            run: Box::new(|o| {
+                let mut c = cfg_for(o, "acme-bs512");
+                c.batch_size = 512;
+                c.adapt = false;
+                SpreezeQueue(20_000).run(&c)
+            }),
+        },
+        Row {
+            label: "ACME-like-BS8192 (queue)",
+            run: Box::new(|o| {
+                let mut c = cfg_for(o, "acme-bs8192");
+                c.batch_size = 8192;
+                c.adapt = false;
+                SpreezeQueue(20_000).run(&c)
+            }),
+        },
+    ]
+}
+
+pub fn run(opts: &HarnessOpts) -> Result<()> {
+    let dir = opts.ensure_dir("table2")?;
+    println!(
+        "== Table 2: hardware usage & throughput (walker, {:.0}s each) ==",
+        opts.budget_s
+    );
+    println!(
+        "{:<26} {:>6} {:>12} {:>6} {:>14} {:>10}",
+        "Framework", "CPU%", "Sample Hz", "GPU%", "UpdFrame Hz", "Upd Hz"
+    );
+    let mut csv = String::from(
+        "framework,cpu_usage,sampling_hz,gpu_usage,update_frame_hz,update_hz,batch_size\n",
+    );
+    for row in rows() {
+        let s = (row.run)(opts)?;
+        println!(
+            "{:<26} {:>5.0}% {:>12.0} {:>5.0}% {:>14.3e} {:>10.1}",
+            row.label,
+            s.cpu_usage * 100.0,
+            s.sampling_hz,
+            s.gpu_usage * 100.0,
+            s.update_frame_hz,
+            s.update_hz
+        );
+        csv.push_str(&format!(
+            "{},{:.3},{:.1},{:.3},{:.1},{:.2},{}\n",
+            row.label, s.cpu_usage, s.sampling_hz, s.gpu_usage, s.update_frame_hz, s.update_hz,
+            s.batch_size
+        ));
+    }
+    std::fs::write(dir.join("table2.csv"), csv)?;
+    println!("wrote {}", dir.join("table2.csv").display());
+    Ok(())
+}

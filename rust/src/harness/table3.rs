@@ -1,0 +1,91 @@
+//! Table 3: impact of Spreeze's own hyperparameters on hardware usage and
+//! throughput (walker): batch size {128, 8192, 32768}, sampler processes
+//! {2, 16}, and queue-transport sizes {5k, 20k, 50k} — including the
+//! experience transfer cycle and transmission loss columns.
+
+use anyhow::Result;
+
+use super::HarnessOpts;
+use crate::config::presets;
+use crate::config::Transport;
+use crate::coordinator::Coordinator;
+
+struct Variant {
+    label: &'static str,
+    bs: usize,
+    sp: usize,
+    transport: Transport,
+}
+
+fn variants() -> Vec<Variant> {
+    use Transport::*;
+    vec![
+        Variant { label: "Spreeze (auto ~8192)", bs: 8192, sp: 0, transport: Shm },
+        Variant { label: "Spreeze-BS32768", bs: 32768, sp: 0, transport: Shm },
+        Variant { label: "Spreeze-BS128", bs: 128, sp: 0, transport: Shm },
+        Variant { label: "Spreeze-SP16", bs: 8192, sp: 16, transport: Shm },
+        Variant { label: "Spreeze-SP2", bs: 8192, sp: 2, transport: Shm },
+        Variant { label: "Spreeze-QS5000", bs: 8192, sp: 0, transport: Queue(5_000) },
+        Variant { label: "Spreeze-QS20000", bs: 8192, sp: 0, transport: Queue(20_000) },
+        Variant { label: "Spreeze-QS50000", bs: 8192, sp: 0, transport: Queue(50_000) },
+    ]
+}
+
+pub fn run(opts: &HarnessOpts) -> Result<()> {
+    let dir = opts.ensure_dir("table3")?;
+    println!(
+        "== Table 3: Spreeze hyperparameter impact (walker, {:.0}s each) ==",
+        opts.budget_s
+    );
+    println!(
+        "{:<22} {:>6} {:>11} {:>6} {:>13} {:>8} {:>9} {:>7}",
+        "Variant", "CPU%", "Sample Hz", "GPU%", "UpdFrame Hz", "Upd Hz", "Cycle s", "Loss%"
+    );
+    let mut csv = String::from(
+        "variant,cpu_usage,sampling_hz,gpu_usage,update_frame_hz,update_hz,\
+         transfer_cycle_s,loss_fraction\n",
+    );
+    for v in variants() {
+        let mut cfg = presets::preset("walker");
+        cfg.seed = *opts.seeds.first().unwrap_or(&0);
+        cfg.max_seconds = opts.budget_s;
+        cfg.target_return = None;
+        cfg.batch_size = v.bs;
+        cfg.n_samplers = v.sp;
+        cfg.transport = v.transport;
+        cfg.adapt = false;
+        cfg.verbose = opts.verbose;
+        cfg.run_dir = opts
+            .out_dir
+            .join("runs")
+            .join(format!("t3-{}", v.label.replace([' ', '(', ')', '~'], "")))
+            .to_string_lossy()
+            .into_owned();
+        let s = Coordinator::new(cfg).run()?;
+        println!(
+            "{:<22} {:>5.0}% {:>11.0} {:>5.0}% {:>13.3e} {:>8.1} {:>9.2} {:>6.1}%",
+            v.label,
+            s.cpu_usage * 100.0,
+            s.sampling_hz,
+            s.gpu_usage * 100.0,
+            s.update_frame_hz,
+            s.update_hz,
+            s.transfer_cycle_s,
+            s.loss_fraction * 100.0
+        );
+        csv.push_str(&format!(
+            "{},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4}\n",
+            v.label,
+            s.cpu_usage,
+            s.sampling_hz,
+            s.gpu_usage,
+            s.update_frame_hz,
+            s.update_hz,
+            s.transfer_cycle_s,
+            s.loss_fraction
+        ));
+    }
+    std::fs::write(dir.join("table3.csv"), csv)?;
+    println!("wrote {}", dir.join("table3.csv").display());
+    Ok(())
+}

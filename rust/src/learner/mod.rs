@@ -1,0 +1,200 @@
+//! Network-update process (paper §3.2): pulls large batches from the
+//! experience source and executes the AOT-compiled SAC/TD3 step artifact.
+//!
+//! Input/output wiring is driven entirely by the artifact manifest's named
+//! tensor lists, so the same learner drives `sac_full`, `td3_full`, and the
+//! split `actor`/`critic` modules without per-algorithm glue.
+
+pub mod model_parallel;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Algo, TrainConfig};
+use crate::nn::Layout;
+use crate::replay::{Batch, ExpSource};
+use crate::runtime::{Engine, Manifest, StepExe};
+use crate::util::rng::Rng;
+
+/// Names of the metrics vector entries (mirrors `model.py::METRICS`).
+pub const METRIC_NAMES: [&str; 8] = [
+    "q_loss", "actor_loss", "alpha", "q1_mean",
+    "logp_mean", "target_q_mean", "reward_mean", "entropy_term",
+];
+
+/// Runtime-tunable hyper vector (mirrors `model.py::HYPER`).
+pub fn hyper_vec(cfg: &TrainConfig, act_dim: usize) -> [f32; 6] {
+    let target_entropy = if cfg.target_entropy == 0.0 {
+        -(act_dim as f64)
+    } else {
+        cfg.target_entropy
+    };
+    [
+        cfg.lr as f32,
+        cfg.gamma as f32,
+        cfg.tau as f32,
+        target_entropy as f32,
+        cfg.reward_scale as f32,
+        cfg.policy_noise as f32,
+    ]
+}
+
+/// Single-executor learner (one "GPU").
+pub struct Learner {
+    engine: Engine,
+    exe: StepExe,
+    pub layout: Layout,
+    pub batch: Batch,
+    pub source: Box<dyn ExpSource>,
+    pub params: Vec<f32>,
+    pub targets: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+    hyper: [f32; 6],
+    noise1: Vec<f32>,
+    noise2: Vec<f32>,
+    rng: Rng,
+    algo: Algo,
+    policy_delay: u64,
+    pub last_metrics: [f32; 8],
+}
+
+impl Learner {
+    pub fn new(
+        cfg: &TrainConfig,
+        manifest: &Manifest,
+        bs: usize,
+        source: Box<dyn ExpSource>,
+    ) -> Result<Learner> {
+        let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();
+        let engine = Engine::cpu()?;
+        let meta = manifest.find(&cfg.env, cfg.algo.name(), "full", bs)?;
+        let exe = engine.load(manifest, meta)?;
+        let mut rng = Rng::for_worker(cfg.seed, 0xC0FFEE);
+        let (params, targets) = layout.init_params(&mut rng);
+        let hyper = hyper_vec(cfg, layout.act_dim);
+        Ok(Learner {
+            batch: Batch::new(bs, layout.obs_dim, layout.act_dim),
+            noise1: vec![0.0; bs * layout.act_dim],
+            noise2: vec![0.0; bs * layout.act_dim],
+            m: vec![0.0; layout.param_size],
+            v: vec![0.0; layout.param_size],
+            params,
+            targets,
+            step: 0,
+            hyper,
+            rng,
+            algo: cfg.algo,
+            policy_delay: cfg.policy_delay.max(1),
+            last_metrics: [0.0; 8],
+            engine,
+            exe,
+            layout,
+            source,
+        })
+    }
+
+    /// Like [`Learner::new`], but snaps to the nearest AOT-compiled batch
+    /// size when the exact one was not built.
+    pub fn new_with_bs_fallback(
+        cfg: &TrainConfig,
+        manifest: &Manifest,
+        bs: usize,
+        source: Box<dyn ExpSource>,
+    ) -> Result<Learner> {
+        let ladder = manifest.batch_sizes(&cfg.env, cfg.algo.name(), "full");
+        if ladder.is_empty() {
+            bail!("no full-step artifacts for {}/{}", cfg.env, cfg.algo.name());
+        }
+        let snapped = *ladder
+            .iter()
+            .min_by_key(|&&b| (b as i64 - bs as i64).unsigned_abs())
+            .unwrap();
+        Self::new(cfg, manifest, snapped, source)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch.bs
+    }
+
+    /// Adaptation knob: swap in the artifact compiled for a different batch
+    /// size (the BS ladder of paper §3.4). Parameters carry over untouched.
+    pub fn switch_batch_size(&mut self, manifest: &Manifest, bs: usize) -> Result<()> {
+        if bs == self.batch.bs {
+            return Ok(());
+        }
+        let meta = manifest.find(&self.layout.env, self.algo.name(), "full", bs)?;
+        self.exe = self.engine.load(manifest, meta)?;
+        self.batch = Batch::new(bs, self.layout.obs_dim, self.layout.act_dim);
+        self.noise1 = vec![0.0; bs * self.layout.act_dim];
+        self.noise2 = vec![0.0; bs * self.layout.act_dim];
+        Ok(())
+    }
+
+    /// Actor slice of the flat params (what the samplers need).
+    pub fn actor_params(&self) -> &[f32] {
+        &self.params[..self.layout.actor_size]
+    }
+
+    /// One update if a batch is available. Returns false when the source
+    /// has no data yet (the learner never blocks on samplers — paper Fig 4b).
+    pub fn try_update(&mut self) -> Result<bool> {
+        if !self.source.sample_batch(&mut self.rng, &mut self.batch) {
+            return Ok(false);
+        }
+        self.rng.fill_normal(&mut self.noise1);
+        self.rng.fill_normal(&mut self.noise2);
+        self.step += 1;
+        let step_f = [self.step as f32];
+        let update_actor = [if self.step % self.policy_delay == 0 { 1.0f32 } else { 0.0 }];
+
+        // Assemble inputs by manifest name — order is the artifact's.
+        let names: Vec<String> = self.exe.meta.inputs.iter().map(|(n, _)| n.clone()).collect();
+        let mut inputs: Vec<&[f32]> = Vec::with_capacity(names.len());
+        for name in &names {
+            inputs.push(match name.as_str() {
+                "params" => &self.params,
+                "targets" => &self.targets,
+                "m" => &self.m,
+                "v" => &self.v,
+                "step" => &step_f,
+                "s" => &self.batch.s,
+                "a" => &self.batch.a,
+                "r" => &self.batch.r,
+                "d" => &self.batch.d,
+                "s2" => &self.batch.s2,
+                "noise1" => &self.noise1,
+                "noise2" => &self.noise2,
+                "update_actor" => &update_actor,
+                "hyper" => &self.hyper,
+                other => bail!("unknown artifact input {other:?}"),
+            });
+        }
+        let mut outs = self.exe.run(&inputs)?;
+        // Scatter outputs by name (reverse order pops cheaply).
+        for (i, name) in self.exe.meta.outputs.clone().iter().enumerate().rev() {
+            let buf = std::mem::take(&mut outs[i]);
+            match name.as_str() {
+                "params" => self.params = buf,
+                "targets" => self.targets = buf,
+                "m" => self.m = buf,
+                "v" => self.v = buf,
+                "metrics" => {
+                    for (j, x) in buf.iter().take(8).enumerate() {
+                        self.last_metrics[j] = *x;
+                    }
+                }
+                other => bail!("unknown artifact output {other:?}"),
+            }
+        }
+        Ok(true)
+    }
+
+    pub fn metric(&self, name: &str) -> f32 {
+        METRIC_NAMES
+            .iter()
+            .position(|n| *n == name)
+            .map(|i| self.last_metrics[i])
+            .unwrap_or(f32::NAN)
+    }
+}

@@ -1,0 +1,284 @@
+//! "Actor-Critic" model parallelism (paper §3.2.2, Fig. 3): the actor and
+//! critic halves of the SAC update run **concurrently** on two dedicated
+//! executor threads, each with its own PJRT engine and compiled artifact —
+//! the CPU-client analogue of the paper's GPU0/GPU1 split.
+//!
+//! Per round, the coordinator ships each device exactly what the paper's
+//! Fig. 3 ships: the critic device gets (r, d) plus fresh actor params for
+//! the TD target; the actor device gets fresh critic params for the policy
+//! loss. Both devices update their own half + its Adam state locally;
+//! the halves are exchanged at the round boundary.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::metrics::MetricsHub;
+use crate::learner::hyper_vec;
+use crate::nn::Layout;
+use crate::replay::{Batch, ExpSource};
+use crate::runtime::{Engine, Manifest};
+use crate::util::rng::Rng;
+
+struct Job {
+    inputs: Vec<Vec<f32>>,
+}
+
+struct JobOut {
+    outputs: Vec<Vec<f32>>,
+}
+
+struct ExecutorHandle {
+    tx: Sender<Job>,
+    rx: Receiver<Result<JobOut>>,
+    handle: Option<JoinHandle<()>>,
+    input_names: Vec<String>,
+    output_names: Vec<String>,
+}
+
+/// Spawn an executor thread owning its own Engine + compiled artifact.
+fn spawn_executor(
+    manifest: &Manifest,
+    env: &str,
+    algo: &str,
+    func: &str,
+    bs: usize,
+    hub: Arc<MetricsHub>,
+    busy_idx: usize,
+    throttle: f64,
+) -> Result<ExecutorHandle> {
+    let meta = manifest.find(env, algo, func, bs)?.clone();
+    let input_names: Vec<String> = meta.inputs.iter().map(|(n, _)| n.clone()).collect();
+    let output_names = meta.outputs.clone();
+    let dir = manifest.dir.clone();
+    let (tx, jrx) = channel::<Job>();
+    let (otx, rx) = channel::<Result<JobOut>>();
+    let handle = std::thread::Builder::new()
+        .name(format!("executor-{busy_idx}-{func}"))
+        .spawn(move || {
+            // Engine is created on this thread (PJRT client is thread-bound).
+            let setup = (|| -> Result<_> {
+                let manifest = Manifest::load(&dir)?;
+                let engine = Engine::cpu()?;
+                let exe = engine.load(&manifest, &meta)?;
+                Ok((engine, exe))
+            })();
+            let (_engine, mut exe) = match setup {
+                Ok(x) => x,
+                Err(e) => {
+                    let _ = otx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(job) = jrx.recv() {
+                let t0 = std::time::Instant::now();
+                let refs: Vec<&[f32]> = job.inputs.iter().map(|v| v.as_slice()).collect();
+                let out = exe.run(&refs).map(|outputs| JobOut { outputs });
+                let busy = t0.elapsed();
+                hub.exec_busy[busy_idx].add_busy_ns(busy.as_nanos() as u64);
+                // GPU-throttle ablation (Fig. 6c): sleep the complement
+                if throttle < 1.0 {
+                    let idle = busy.as_secs_f64() * (1.0 / throttle - 1.0);
+                    std::thread::sleep(std::time::Duration::from_secs_f64(idle));
+                }
+                if otx.send(out).is_err() {
+                    return;
+                }
+            }
+        })?;
+    Ok(ExecutorHandle { tx, rx, handle: Some(handle), input_names, output_names })
+}
+
+/// Dual-executor SAC learner (the paper's dual-GPU mode).
+pub struct ModelParallelLearner {
+    pub layout: Layout,
+    pub batch: Batch,
+    pub source: Box<dyn ExpSource>,
+    actor_exec: ExecutorHandle,
+    critic_exec: ExecutorHandle,
+    pub actor_params: Vec<f32>,
+    pub critic_params: Vec<f32>,
+    pub targets: Vec<f32>,
+    m_a: Vec<f32>,
+    v_a: Vec<f32>,
+    m_c: Vec<f32>,
+    v_c: Vec<f32>,
+    pub step: u64,
+    hyper: [f32; 6],
+    noise1: Vec<f32>,
+    noise2: Vec<f32>,
+    rng: Rng,
+    pub last_metrics: [f32; 8],
+}
+
+impl ModelParallelLearner {
+    pub fn new(
+        cfg: &TrainConfig,
+        manifest: &Manifest,
+        bs: usize,
+        source: Box<dyn ExpSource>,
+        hub: Arc<MetricsHub>,
+    ) -> Result<ModelParallelLearner> {
+        if cfg.algo != crate::config::Algo::Sac {
+            bail!("model parallelism is implemented for SAC (paper Fig. 3)");
+        }
+        let layout = manifest.layout(&cfg.env, "sac")?.clone();
+        let throttle = cfg.hardware.gpu_throttle;
+        let actor_exec =
+            spawn_executor(manifest, &cfg.env, "sac", "actor", bs, hub.clone(), 0, throttle)?;
+        let critic_exec =
+            spawn_executor(manifest, &cfg.env, "sac", "critic", bs, hub, 1, throttle)?;
+        let mut rng = Rng::for_worker(cfg.seed, 0xC0FFEE);
+        let (params, targets) = layout.init_params(&mut rng);
+        let (pa, pc) = (layout.actor_size, layout.critic_size);
+        Ok(ModelParallelLearner {
+            batch: Batch::new(bs, layout.obs_dim, layout.act_dim),
+            noise1: vec![0.0; bs * layout.act_dim],
+            noise2: vec![0.0; bs * layout.act_dim],
+            actor_params: params[..pa].to_vec(),
+            critic_params: params[pa..].to_vec(),
+            targets,
+            m_a: vec![0.0; pa],
+            v_a: vec![0.0; pa],
+            m_c: vec![0.0; pc],
+            v_c: vec![0.0; pc],
+            step: 0,
+            hyper: hyper_vec(cfg, layout.act_dim),
+            rng,
+            last_metrics: [0.0; 8],
+            layout,
+            source,
+            actor_exec,
+            critic_exec,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch.bs
+    }
+
+    pub fn actor_params(&self) -> &[f32] {
+        &self.actor_params
+    }
+
+    /// Full flat params (actor ‖ critic) — for checkpoints/tests.
+    pub fn full_params(&self) -> Vec<f32> {
+        let mut p = Vec::with_capacity(self.layout.param_size);
+        p.extend_from_slice(&self.actor_params);
+        p.extend_from_slice(&self.critic_params);
+        p
+    }
+
+    fn gather<'a>(
+        names: &[String],
+        lookup: impl Fn(&str) -> Result<&'a [f32]>,
+    ) -> Result<Vec<Vec<f32>>> {
+        names.iter().map(|n| Ok(lookup(n)?.to_vec())).collect()
+    }
+
+    /// One concurrent round: actor and critic artifacts run in parallel on
+    /// their executors; halves are exchanged afterwards.
+    pub fn try_update(&mut self) -> Result<bool> {
+        if !self.source.sample_batch(&mut self.rng, &mut self.batch) {
+            return Ok(false);
+        }
+        self.rng.fill_normal(&mut self.noise1);
+        self.rng.fill_normal(&mut self.noise2);
+        self.step += 1;
+        let step_f = [self.step as f32];
+
+        let lk = |name: &str| -> Result<&[f32]> {
+            Ok(match name {
+                "actor_params" => &self.actor_params,
+                "critic_params" => &self.critic_params,
+                "targets" => &self.targets,
+                "step" => &step_f,
+                "s" => &self.batch.s,
+                "a" => &self.batch.a,
+                "r" => &self.batch.r,
+                "d" => &self.batch.d,
+                "s2" => &self.batch.s2,
+                "noise1" => &self.noise1,
+                "noise2" => &self.noise2,
+                "hyper" => &self.hyper,
+                other => bail!("unknown model-parallel input {other:?}"),
+            })
+        };
+        // actor device: m/v are the actor's optimizer state
+        let actor_inputs = Self::gather(&self.actor_exec.input_names, |n| match n {
+            "m" => Ok(&self.m_a[..]),
+            "v" => Ok(&self.v_a[..]),
+            other => lk(other),
+        })?;
+        let critic_inputs = Self::gather(&self.critic_exec.input_names, |n| match n {
+            "m" => Ok(&self.m_c[..]),
+            "v" => Ok(&self.v_c[..]),
+            other => lk(other),
+        })?;
+
+        // dispatch both; they overlap (the paper's dual-GPU concurrency)
+        self.actor_exec
+            .tx
+            .send(Job { inputs: actor_inputs })
+            .map_err(|_| anyhow!("actor executor died"))?;
+        self.critic_exec
+            .tx
+            .send(Job { inputs: critic_inputs })
+            .map_err(|_| anyhow!("critic executor died"))?;
+        let actor_out = self.actor_exec.rx.recv().context("actor executor hung up")??;
+        let critic_out = self.critic_exec.rx.recv().context("critic executor hung up")??;
+
+        for (i, name) in self.actor_exec.output_names.clone().iter().enumerate() {
+            let buf = actor_out.outputs[i].clone();
+            match name.as_str() {
+                "actor_params" => self.actor_params = buf,
+                "m" => self.m_a = buf,
+                "v" => self.v_a = buf,
+                "metrics" => {
+                    // actor metrics: actor_loss, alpha, logp
+                    self.last_metrics[1] = buf[1];
+                    self.last_metrics[2] = buf[2];
+                    self.last_metrics[4] = buf[4];
+                    self.last_metrics[7] = buf[7];
+                }
+                other => bail!("unexpected actor output {other:?}"),
+            }
+        }
+        for (i, name) in self.critic_exec.output_names.clone().iter().enumerate() {
+            let buf = critic_out.outputs[i].clone();
+            match name.as_str() {
+                "critic_params" => self.critic_params = buf,
+                "targets" => self.targets = buf,
+                "m" => self.m_c = buf,
+                "v" => self.v_c = buf,
+                "metrics" => {
+                    self.last_metrics[0] = buf[0];
+                    self.last_metrics[3] = buf[3];
+                    self.last_metrics[5] = buf[5];
+                    self.last_metrics[6] = buf[6];
+                }
+                other => bail!("unexpected critic output {other:?}"),
+            }
+        }
+        Ok(true)
+    }
+}
+
+impl Drop for ModelParallelLearner {
+    fn drop(&mut self) {
+        // close channels so executor threads exit, then join
+        let (tx, _rx) = channel();
+        self.actor_exec.tx = tx;
+        let (tx, _rx) = channel();
+        self.critic_exec.tx = tx;
+        if let Some(h) = self.actor_exec.handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.critic_exec.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! # Spreeze — high-throughput parallel RL framework (paper reproduction)
+//!
+//! Rust coordinator (L3) over AOT-compiled JAX/Pallas update artifacts (L2/L1)
+//! executed through the PJRT CPU client (`xla` crate). Python never runs at
+//! training time.
+//!
+//! Architecture (paper Fig. 1):
+//! * N asynchronous **sampler** workers step environments and run the policy
+//!   natively in Rust ([`nn::Mlp`]), pushing frames into the **shared-memory
+//!   replay ring** ([`replay::ShmRing`]).
+//! * One **learner** pulls large batches and executes the SAC/TD3 update
+//!   artifact ([`runtime::Engine`]); with model parallelism, actor and critic
+//!   halves run concurrently on two executor threads
+//!   ([`learner::model_parallel`]).
+//! * Weights travel sampler-ward through **SSD checkpoints**
+//!   ([`nn::checkpoint`]); an **eval** worker draws the return curve and a
+//!   **viz** worker traces rollouts.
+//! * The **adaptation controller** ([`adapt`]) tunes batch size and sampler
+//!   count from hardware saturation, as in paper §3.4.
+//! * [`baselines`] implements the comparison architectures (queue transport,
+//!   APE-X-like, synchronous) for Tables 1–2, and [`harness`] regenerates
+//!   every table and figure of the paper's evaluation.
+
+pub mod adapt;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod eval;
+pub mod harness;
+pub mod learner;
+pub mod nn;
+pub mod replay;
+pub mod runtime;
+pub mod sampler;
+pub mod util;
+pub mod viz;
+
+pub use config::TrainConfig;
+pub use coordinator::Coordinator;

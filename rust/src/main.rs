@@ -1,0 +1,156 @@
+//! `spreeze` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   train                train one configuration (all knobs via flags)
+//!   table1|table2|table3 regenerate the paper's tables
+//!   fig5|fig6|fig7|fig8  regenerate the paper's figures
+//!   info                 print manifest/artifact inventory
+//!
+//! Common flags: --env --algo --bs --sp --queue-size --seed --max-seconds
+//!               --budget --seeds --out results --model-parallel --verbose
+
+use anyhow::{bail, Context, Result};
+
+use spreeze::config::presets;
+use spreeze::coordinator::Coordinator;
+use spreeze::harness::{self, HarnessOpts};
+use spreeze::runtime::{default_artifacts_dir, Manifest};
+use spreeze::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn harness_opts(a: &Args) -> Result<HarnessOpts> {
+    let seeds: Vec<u64> = a
+        .str_or("seeds", "0,1,2")
+        .split(',')
+        .map(|s| s.trim().parse().context("bad --seeds"))
+        .collect::<Result<_>>()?;
+    Ok(HarnessOpts {
+        budget_s: a.f64_or("budget", 60.0)?,
+        seeds,
+        out_dir: a.str_or("out", "results").into(),
+        envs: a
+            .str_opt("env")
+            .map(|e| e.split(',').map(|s| s.to_string()).collect())
+            .unwrap_or_default(),
+        verbose: a.bool_or("verbose", false)?,
+    })
+}
+
+fn run() -> Result<()> {
+    let a = Args::from_env()?;
+    let cmd = a.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => {
+            let env = a.str_or("env", "pendulum");
+            let mut cfg = presets::preset(&env);
+            cfg.verbose = true;
+            cfg.max_seconds = 120.0;
+            cfg.apply_args(&a)?;
+            a.finish()?;
+            let s = Coordinator::new(cfg).run()?;
+            println!(
+                "\ndone: {} updates, {:.0} samples, final return {:.1}{}",
+                s.updates,
+                s.sampled_frames as f64,
+                s.final_return,
+                s.solved_s.map(|t| format!(", SOLVED at {t:.1}s")).unwrap_or_default()
+            );
+        }
+        "table1" => {
+            let o = harness_opts(&a)?;
+            a.finish()?;
+            harness::table1::run(&o)?;
+        }
+        "table2" => {
+            let o = harness_opts(&a)?;
+            a.finish()?;
+            harness::table2::run(&o)?;
+        }
+        "table3" => {
+            let o = harness_opts(&a)?;
+            a.finish()?;
+            harness::table3::run(&o)?;
+        }
+        "fig5" => {
+            let o = harness_opts(&a)?;
+            a.finish()?;
+            harness::fig5::run(&o)?;
+        }
+        "fig6" => {
+            let o = harness_opts(&a)?;
+            let part = a.str_or("part", "all");
+            let env = a.str_opt("fig-env");
+            a.finish()?;
+            harness::fig6::run(&o, &part, env.as_deref())?;
+        }
+        "fig7" => {
+            let o = harness_opts(&a)?;
+            a.finish()?;
+            harness::fig7::run(&o)?;
+        }
+        "fig8" => {
+            let o = harness_opts(&a)?;
+            let part = a.str_or("part", "all");
+            a.finish()?;
+            harness::fig8::run(&o, &part)?;
+        }
+        "info" => {
+            a.finish()?;
+            let dir = default_artifacts_dir();
+            let m = Manifest::load(&dir)?;
+            println!("artifacts dir: {}", dir.display());
+            println!("layouts:");
+            for (k, lay) in &m.layouts {
+                println!(
+                    "  {k:28} obs {:3} act {:3} hidden {:3}  P={} T={}",
+                    lay.obs_dim, lay.act_dim, lay.hidden, lay.param_size, lay.target_size
+                );
+            }
+            println!("artifacts ({}):", m.artifacts.len());
+            for art in &m.artifacts {
+                println!(
+                    "  {:48} in={} out={}",
+                    art.file,
+                    art.inputs.len(),
+                    art.outputs.len()
+                );
+            }
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+        }
+        other => bail!("unknown command {other:?} — try `spreeze help`"),
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+spreeze — high-throughput parallel RL framework (paper reproduction)
+
+USAGE: spreeze <command> [flags]
+
+COMMANDS
+  train    train one configuration
+             --env pendulum|walker|cheetah|ant|humanoid|humanoid_flagrun
+             --algo sac|td3  --bs N (0=adapt)  --sp N (0=adapt)
+             --queue-size N (queue transport instead of shared memory)
+             --model-parallel true  --gpus N  --gpu-throttle F
+             --cpu-cores N  --seed N  --max-seconds S  --max-updates N
+             --target-return R  --adapt true|false  --verbose true
+  table1   time-to-solve matrix            [--budget S] [--seeds 0,1,2] [--env e1,e2]
+  table2   hardware usage & throughput     [--budget S]
+  table3   hyperparameter impact           [--budget S]
+  fig5     training curves per framework   [--budget S]
+  fig6     ablations  --part a|b|c|all     [--fig-env walker]
+  fig7     BS / SP sweeps
+  fig8     robustness  --part a|b|all
+  info     artifact inventory
+
+Run `make artifacts` first; results land under ./results/.
+";

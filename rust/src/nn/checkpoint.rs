@@ -1,0 +1,228 @@
+//! SSD weight transmission (paper §3.3.1): network weights move between the
+//! learner and the sampler/eval/viz workers through files, not IPC.
+//!
+//! Format: a single JSON header line (magic, env, algo, version, sizes)
+//! followed by raw little-endian f32 payloads. Writes are atomic
+//! (`<path>.tmp` + rename) so readers never observe a torn file; readers
+//! poll the version counter embedded in the header to skip redundant loads.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, num, obj, s, Value};
+
+const MAGIC: &str = "spreeze-ckpt-v1";
+
+/// Write a policy (actor flat vector) atomically with a version stamp.
+pub fn save_policy(path: &Path, env: &str, algo: &str, version: u64, actor: &[f32]) -> Result<()> {
+    let header = obj(vec![
+        ("magic", s(MAGIC)),
+        ("env", s(env)),
+        ("algo", s(algo)),
+        ("version", num(version as f64)),
+        ("actor_size", num(actor.len() as f64)),
+    ]);
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(header.to_string().as_bytes())?;
+        f.write_all(b"\n")?;
+        f.write_all(f32s_as_bytes(actor))?;
+    }
+    fs::rename(&tmp, path).with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+/// Read a policy file; returns (version, actor). Returns Ok(None) if the file
+/// does not exist yet or its version equals `known_version`.
+pub fn load_policy(path: &Path, known_version: u64) -> Result<Option<(u64, Vec<f32>)>> {
+    let bytes = match fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    let nl = bytes
+        .iter()
+        .position(|&b| b == b'\n')
+        .context("checkpoint missing header newline")?;
+    let header = json::parse(std::str::from_utf8(&bytes[..nl])?)?;
+    if header.get("magic")?.as_str()? != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let version = header.get("version")?.as_f64()? as u64;
+    if version == known_version {
+        return Ok(None);
+    }
+    let n = header.get("actor_size")?.as_usize()?;
+    let payload = &bytes[nl + 1..];
+    if payload.len() != n * 4 {
+        bail!("truncated checkpoint: want {} bytes, have {}", n * 4, payload.len());
+    }
+    Ok(Some((version, bytes_as_f32s(payload))))
+}
+
+/// Full training state for resume + the policy file the workers watch.
+pub struct CheckpointStore {
+    dir: PathBuf,
+    pub policy_path: PathBuf,
+    version: u64,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: &Path) -> Result<Self> {
+        fs::create_dir_all(dir)?;
+        Ok(CheckpointStore {
+            dir: dir.to_path_buf(),
+            policy_path: dir.join("policy.bin"),
+            version: 0,
+        })
+    }
+
+    /// Publish fresh actor weights for the sampler/eval/viz workers.
+    pub fn publish_policy(&mut self, env: &str, algo: &str, actor: &[f32]) -> Result<u64> {
+        self.version += 1;
+        save_policy(&self.policy_path, env, algo, self.version, actor)?;
+        Ok(self.version)
+    }
+
+    /// Save the full learner state (params/targets/m/v/step) for resume.
+    pub fn save_full(
+        &self,
+        env: &str,
+        algo: &str,
+        step: u64,
+        params: &[f32],
+        targets: &[f32],
+        m: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        let path = self.dir.join("learner_state.bin");
+        let header = obj(vec![
+            ("magic", s(MAGIC)),
+            ("env", s(env)),
+            ("algo", s(algo)),
+            ("step", num(step as f64)),
+            ("param_size", num(params.len() as f64)),
+            ("target_size", num(targets.len() as f64)),
+        ]);
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(header.to_string().as_bytes())?;
+            f.write_all(b"\n")?;
+            for buf in [params, targets, m, v] {
+                f.write_all(f32s_as_bytes(buf))?;
+            }
+        }
+        fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// Load the full learner state if present:
+    /// (step, params, targets, m, v).
+    pub fn load_full(&self) -> Result<Option<(u64, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>> {
+        let path = self.dir.join("learner_state.bin");
+        let mut bytes = Vec::new();
+        match fs::File::open(&path) {
+            Ok(mut f) => {
+                f.read_to_end(&mut bytes)?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        }
+        let nl = bytes.iter().position(|&b| b == b'\n').context("missing header")?;
+        let header: Value = json::parse(std::str::from_utf8(&bytes[..nl])?)?;
+        let p = header.get("param_size")?.as_usize()?;
+        let t = header.get("target_size")?.as_usize()?;
+        let step = header.get("step")?.as_f64()? as u64;
+        let mut cursor = nl + 1;
+        let mut take = |n: usize| -> Result<Vec<f32>> {
+            let end = cursor + n * 4;
+            if end > bytes.len() {
+                bail!("truncated learner state");
+            }
+            let v = bytes_as_f32s(&bytes[cursor..end]);
+            cursor = end;
+            Ok(v)
+        };
+        let params = take(p)?;
+        let targets = take(t)?;
+        let m = take(p)?;
+        let v = take(p)?;
+        Ok(Some((step, params, targets, m, v)))
+    }
+}
+
+fn f32s_as_bytes(v: &[f32]) -> &[u8] {
+    // f32 -> LE bytes; x86_64/aarch64 are little-endian, asserted below.
+    #[cfg(target_endian = "big")]
+    compile_error!("little-endian host required for checkpoint format");
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytes_as_f32s(b: &[u8]) -> Vec<f32> {
+    let mut out = vec![0.0f32; b.len() / 4];
+    unsafe {
+        std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr() as *mut u8, out.len() * 4);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spreeze-test-{name}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn policy_roundtrip_and_version_skip() {
+        let d = tmpdir("ckpt");
+        let path = d.join("policy.bin");
+        let actor: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        save_policy(&path, "pendulum", "sac", 3, &actor).unwrap();
+        let (ver, back) = load_policy(&path, 0).unwrap().unwrap();
+        assert_eq!(ver, 3);
+        assert_eq!(back, actor);
+        // same version -> skip
+        assert!(load_policy(&path, 3).unwrap().is_none());
+        // missing file -> None
+        assert!(load_policy(&d.join("nope.bin"), 0).unwrap().is_none());
+    }
+
+    #[test]
+    fn full_state_roundtrip() {
+        let d = tmpdir("full");
+        let store = CheckpointStore::new(&d).unwrap();
+        let p: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let t: Vec<f32> = (0..32).map(|i| -(i as f32)).collect();
+        let m = vec![0.5f32; 64];
+        let v = vec![0.25f32; 64];
+        store.save_full("walker", "sac", 42, &p, &t, &m, &v).unwrap();
+        let (step, p2, t2, m2, v2) = store.load_full().unwrap().unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(p2, p);
+        assert_eq!(t2, t);
+        assert_eq!(m2, m);
+        assert_eq!(v2, v);
+    }
+
+    #[test]
+    fn publish_increments_version() {
+        let d = tmpdir("pub");
+        let mut store = CheckpointStore::new(&d).unwrap();
+        let a = vec![1.0f32; 8];
+        assert_eq!(store.publish_policy("pendulum", "sac", &a).unwrap(), 1);
+        assert_eq!(store.publish_policy("pendulum", "sac", &a).unwrap(), 2);
+        let (ver, _) = load_policy(&store.policy_path, 1).unwrap().unwrap();
+        assert_eq!(ver, 2);
+    }
+}

@@ -1,0 +1,202 @@
+//! Flat parameter layout parsed from `artifacts/manifest.json`.
+//!
+//! The layout is *defined* in exactly one place — `python/compile/layout.py`
+//! — and this module is its read-side mirror: segment names, shapes, and
+//! offsets inside the flat f32 vectors the update artifacts consume. The
+//! Rust-native sampler MLP reads actor weights straight out of the flat
+//! vector at these offsets, so JAX-updated parameters and Rust inference
+//! always agree byte-for-byte (verified in `rust/tests/integration.rs`
+//! against the `policy_act` artifact).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Segment {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl Segment {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Segment> {
+        Ok(Segment {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+            offset: v.get("offset")?.as_usize()?,
+        })
+    }
+}
+
+/// Layout of one (env, algo) parameter family.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub env: String,
+    pub algo: String,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: usize,
+    pub actor_size: usize,
+    pub critic_size: usize,
+    pub target_size: usize,
+    pub param_size: usize,
+    pub chunk: usize,
+    pub actor_segments: Vec<Segment>,
+    pub critic_segments: Vec<Segment>,
+}
+
+impl Layout {
+    pub fn from_json(v: &Value) -> Result<Layout> {
+        let segs = |key: &str| -> Result<Vec<Segment>> {
+            v.get(key)?.as_arr()?.iter().map(Segment::from_json).collect()
+        };
+        let lay = Layout {
+            env: v.get("env")?.as_str()?.to_string(),
+            algo: v.get("algo")?.as_str()?.to_string(),
+            obs_dim: v.get("obs_dim")?.as_usize()?,
+            act_dim: v.get("act_dim")?.as_usize()?,
+            hidden: v.get("hidden")?.as_usize()?,
+            actor_size: v.get("actor_size")?.as_usize()?,
+            critic_size: v.get("critic_size")?.as_usize()?,
+            target_size: v.get("target_size")?.as_usize()?,
+            param_size: v.get("param_size")?.as_usize()?,
+            chunk: v.get("chunk")?.as_usize()?,
+            actor_segments: segs("actor_segments")?,
+            critic_segments: segs("critic_segments")?,
+        };
+        lay.validate()?;
+        Ok(lay)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.param_size != self.actor_size + self.critic_size {
+            bail!("param_size != actor_size + critic_size");
+        }
+        for seg in self.actor_segments.iter() {
+            if seg.offset + seg.size() > self.actor_size {
+                bail!("actor segment {} out of bounds", seg.name);
+            }
+        }
+        for seg in self.critic_segments.iter() {
+            if seg.offset + seg.size() > self.critic_size {
+                bail!("critic segment {} out of bounds", seg.name);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn actor_segment(&self, name: &str) -> Result<&Segment> {
+        self.actor_segments
+            .iter()
+            .find(|s| s.name == name)
+            .with_context(|| format!("no actor segment {name:?}"))
+    }
+
+    /// (weight, bias) offset/shape list for the actor MLP, in forward order.
+    pub fn actor_mlp(&self) -> Result<Vec<(&Segment, &Segment)>> {
+        let mut out = Vec::new();
+        for i in 0..3 {
+            let w = self.actor_segment(&format!("actor/w{i}"))?;
+            let b = self.actor_segment(&format!("actor/b{i}"))?;
+            out.push((w, b));
+        }
+        Ok(out)
+    }
+
+    /// Actor output dimension (2*act for SAC mu‖log_std, act for TD3).
+    pub fn actor_out(&self) -> usize {
+        if self.algo == "sac" {
+            2 * self.act_dim
+        } else {
+            self.act_dim
+        }
+    }
+
+    /// Initialize a fresh flat parameter vector (LeCun-uniform weights, zero
+    /// biases, log_alpha = 0) and matching targets (copy of critic part).
+    pub fn init_params(&self, rng: &mut crate::util::rng::Rng) -> (Vec<f32>, Vec<f32>) {
+        let mut params = vec![0.0f32; self.param_size];
+        let mut init_seg = |seg: &Segment, base: usize, buf: &mut Vec<f32>| {
+            if seg.shape.len() == 2 {
+                let bound = 1.0 / (seg.shape[0] as f32).sqrt();
+                rng.fill_uniform(&mut buf[base + seg.offset..base + seg.offset + seg.size()], -bound, bound);
+            }
+            // biases and log_alpha stay zero
+        };
+        for seg in &self.actor_segments {
+            init_seg(seg, 0, &mut params);
+        }
+        for seg in &self.critic_segments {
+            init_seg(seg, self.actor_size, &mut params);
+        }
+        // targets start as a copy of the critic parameters
+        let targets = params[self.actor_size..self.actor_size + self.target_size].to_vec();
+        (params, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn toy_layout_json() -> Value {
+        json::parse(
+            r#"{
+            "env":"toy","algo":"sac","obs_dim":3,"act_dim":1,"hidden":4,
+            "actor_size":64,"critic_size":64,"target_size":64,"param_size":128,
+            "chunk":64,
+            "actor_segments":[
+              {"name":"actor/w0","shape":[3,4],"offset":0},
+              {"name":"actor/b0","shape":[4],"offset":12},
+              {"name":"actor/w1","shape":[4,4],"offset":16},
+              {"name":"actor/b1","shape":[4],"offset":32},
+              {"name":"actor/w2","shape":[4,2],"offset":36},
+              {"name":"actor/b2","shape":[2],"offset":44},
+              {"name":"actor/log_alpha","shape":[1],"offset":46}],
+            "critic_segments":[
+              {"name":"q1/w0","shape":[4,4],"offset":0},
+              {"name":"q1/b0","shape":[4],"offset":16}]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let lay = Layout::from_json(&toy_layout_json()).unwrap();
+        assert_eq!(lay.obs_dim, 3);
+        assert_eq!(lay.actor_mlp().unwrap().len(), 3);
+        assert_eq!(lay.actor_out(), 2);
+    }
+
+    #[test]
+    fn init_params_structure() {
+        let lay = Layout::from_json(&toy_layout_json()).unwrap();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let (p, t) = lay.init_params(&mut rng);
+        assert_eq!(p.len(), 128);
+        assert_eq!(t.len(), 64);
+        // biases zero
+        let b0 = lay.actor_segment("actor/b0").unwrap();
+        assert!(p[b0.offset..b0.offset + 4].iter().all(|&x| x == 0.0));
+        // weights bounded by 1/sqrt(fan_in)
+        let w0 = lay.actor_segment("actor/w0").unwrap();
+        let bound = 1.0 / (3.0f32).sqrt() + 1e-6;
+        assert!(p[w0.offset..w0.offset + w0.size()].iter().all(|&x| x.abs() <= bound));
+        // at least some weights nonzero
+        assert!(p[w0.offset..w0.offset + w0.size()].iter().any(|&x| x != 0.0));
+        // targets mirror critic slice
+        assert_eq!(&t[..], &p[64..128]);
+    }
+}

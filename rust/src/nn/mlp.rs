@@ -1,0 +1,214 @@
+//! Sampler-side policy inference: a native Rust MLP forward pass reading
+//! weights directly from the flat parameter vector (offsets from
+//! [`crate::nn::Layout`]).
+//!
+//! This is what lets Spreeze's sampler workers run on pure CPU without ever
+//! touching PJRT: they reload the flat actor vector from the SSD checkpoint
+//! and do forward passes locally, exactly like the paper's sampling
+//! processes. Numerics match `python/compile/model.py::policy_act` (same
+//! clipping, same tanh-gaussian head) — asserted against the `policy_act`
+//! artifact in `rust/tests/integration.rs`.
+
+use crate::nn::layout::Layout;
+use crate::util::rng::Rng;
+
+pub const LOG_STD_MIN: f32 = -5.0;
+pub const LOG_STD_MAX: f32 = 2.0;
+
+/// One dense layer view into a flat vector: weights (in,out) row-major.
+#[derive(Clone, Debug)]
+struct Dense {
+    w_off: usize,
+    b_off: usize,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+/// MLP with two ReLU hidden layers and a linear head, evaluated out of a
+/// flat parameter slice. Scratch buffers are owned, so `forward` is
+/// allocation-free after construction.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    layers: [Dense; 3],
+    h0: Vec<f32>,
+    h1: Vec<f32>,
+    out: Vec<f32>,
+}
+
+/// y = x @ W + b (W row-major (in,out)), optionally ReLU'd.
+#[inline]
+fn dense(flat: &[f32], layer: &Dense, x: &[f32], y: &mut [f32], relu: bool) {
+    let w = &flat[layer.w_off..layer.w_off + layer.in_dim * layer.out_dim];
+    let b = &flat[layer.b_off..layer.b_off + layer.out_dim];
+    let y = &mut y[..layer.out_dim];
+    y.copy_from_slice(b);
+    for (i, &xi) in x[..layer.in_dim].iter().enumerate() {
+        if xi == 0.0 {
+            continue; // ReLU sparsity: skip dead rows
+        }
+        let row = &w[i * layer.out_dim..(i + 1) * layer.out_dim];
+        for (yj, &wij) in y.iter_mut().zip(row) {
+            *yj += xi * wij;
+        }
+    }
+    if relu {
+        for v in y.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+}
+
+impl Mlp {
+    /// Build the actor MLP from a layout.
+    pub fn actor(layout: &Layout) -> anyhow::Result<Self> {
+        let mut layers = Vec::new();
+        for (w, b) in layout.actor_mlp()? {
+            layers.push(Dense {
+                w_off: w.offset,
+                b_off: b.offset,
+                in_dim: w.shape[0],
+                out_dim: w.shape[1],
+            });
+        }
+        let layers: [Dense; 3] =
+            layers.try_into().map_err(|_| anyhow::anyhow!("actor MLP must have 3 layers"))?;
+        let h = layout.hidden;
+        Ok(Mlp { layers, h0: vec![0.0; h], h1: vec![0.0; h], out: vec![0.0; layout.actor_out()] })
+    }
+
+    /// Forward pass; returns the output slice (valid until next call).
+    /// `flat` is the actor parameter vector.
+    pub fn forward(&mut self, flat: &[f32], x: &[f32]) -> &[f32] {
+        debug_assert_eq!(x.len(), self.layers[0].in_dim);
+        dense(flat, &self.layers[0], x, &mut self.h0, true);
+        dense(flat, &self.layers[1], &self.h0, &mut self.h1, true);
+        dense(flat, &self.layers[2], &self.h1, &mut self.out, false);
+        &self.out
+    }
+}
+
+/// Tanh-gaussian policy head over the actor MLP (SAC) or deterministic tanh
+/// (TD3) — numerics mirror `kernels/ref.py::gaussian_head`.
+#[derive(Clone, Debug)]
+pub struct GaussianPolicy {
+    pub mlp: Mlp,
+    pub act_dim: usize,
+    /// true for SAC (stochastic head), false for TD3 (deterministic + noise)
+    pub stochastic: bool,
+}
+
+impl GaussianPolicy {
+    pub fn new(layout: &Layout) -> anyhow::Result<Self> {
+        Ok(GaussianPolicy {
+            mlp: Mlp::actor(layout)?,
+            act_dim: layout.act_dim,
+            stochastic: layout.algo == "sac",
+        })
+    }
+
+    /// Sample an action into `action`. `expl_noise` is the TD3 additive
+    /// exploration std (ignored for SAC whose head is already stochastic).
+    pub fn act(
+        &mut self,
+        flat: &[f32],
+        obs: &[f32],
+        rng: &mut Rng,
+        deterministic: bool,
+        expl_noise: f32,
+        action: &mut [f32],
+    ) {
+        let out = self.mlp.forward(flat, obs);
+        if self.stochastic {
+            let (mu, log_std) = out.split_at(self.act_dim);
+            for j in 0..self.act_dim {
+                let ls = log_std[j].clamp(LOG_STD_MIN, LOG_STD_MAX);
+                let noise = if deterministic { 0.0 } else { rng.normal() };
+                action[j] = (mu[j] + ls.exp() * noise).tanh();
+            }
+        } else {
+            for j in 0..self.act_dim {
+                let noise = if deterministic { 0.0 } else { rng.normal() * expl_noise };
+                action[j] = (out[j].tanh() + noise).clamp(-1.0, 1.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn toy_layout() -> Layout {
+        // obs 2, act 1, hidden 3, SAC (actor out = 2)
+        Layout::from_json(
+            &json::parse(
+                r#"{
+          "env":"toy","algo":"sac","obs_dim":2,"act_dim":1,"hidden":3,
+          "actor_size":64,"critic_size":0,"target_size":0,"param_size":64,
+          "chunk":64,
+          "actor_segments":[
+            {"name":"actor/w0","shape":[2,3],"offset":0},
+            {"name":"actor/b0","shape":[3],"offset":6},
+            {"name":"actor/w1","shape":[3,3],"offset":9},
+            {"name":"actor/b1","shape":[3],"offset":18},
+            {"name":"actor/w2","shape":[3,2],"offset":21},
+            {"name":"actor/b2","shape":[2],"offset":27},
+            {"name":"actor/log_alpha","shape":[1],"offset":29}],
+          "critic_segments":[]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn forward_matches_hand_computation() {
+        let lay = toy_layout();
+        let mut flat = vec![0.0f32; 64];
+        // w0 = identity-ish: y = relu(x@w0 + b0)
+        // x=(1,-2); w0 rows: [1,0,0],[0,1,0] -> pre=(1,-2,0)+b0(0.5,...)=...
+        flat[0] = 1.0; // w0[0,0]
+        flat[4] = 1.0; // w0[1,1]
+        flat[6] = 0.5; // b0[0]
+        // w1 = I3
+        flat[9] = 1.0;
+        flat[13] = 1.0;
+        flat[17] = 1.0;
+        // w2: out0 = h0, out1 = h2
+        flat[21] = 1.0; // w2[0,0]
+        flat[26] = 1.0; // w2[2,1]
+        flat[28] = -0.25; // b2[1]
+        let mut mlp = Mlp::actor(&lay).unwrap();
+        let y = mlp.forward(&flat, &[1.0, -2.0]);
+        // h = relu([1+0.5, -2, 0]) = [1.5, 0, 0]; h2 = h; out = [1.5, -0.25]
+        assert!((y[0] - 1.5).abs() < 1e-6, "{y:?}");
+        assert!((y[1] + 0.25).abs() < 1e-6, "{y:?}");
+    }
+
+    #[test]
+    fn deterministic_act_is_tanh_mu() {
+        let lay = toy_layout();
+        let flat = vec![0.0f32; 64];
+        let mut pol = GaussianPolicy::new(&lay).unwrap();
+        let mut rng = Rng::new(0);
+        let mut a = [0.0f32];
+        pol.act(&flat, &[0.3, 0.7], &mut rng, true, 0.0, &mut a);
+        assert_eq!(a[0], 0.0f32.tanh()); // zero params -> mu = 0
+    }
+
+    #[test]
+    fn actions_bounded() {
+        let lay = toy_layout();
+        let mut rng = Rng::new(2);
+        let mut flat = vec![0.0f32; 64];
+        rng.fill_uniform(&mut flat, -2.0, 2.0);
+        let mut pol = GaussianPolicy::new(&lay).unwrap();
+        let mut a = [0.0f32];
+        for _ in 0..200 {
+            let obs = [rng.normal(), rng.normal()];
+            pol.act(&flat, &obs, &mut rng, false, 0.1, &mut a);
+            assert!(a[0].abs() <= 1.0);
+        }
+    }
+}

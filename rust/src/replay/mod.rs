@@ -1,0 +1,71 @@
+//! Experience transport between sampler workers and the learner — the
+//! heart of the paper (§3.3): a shared-memory replay ring that never blocks
+//! or copies through the learner's time budget, versus the conventional
+//! bounded-queue transport it ablates against (Fig. 4, Fig. 6a, Table 3
+//! QS rows).
+
+pub mod queue_buf;
+pub mod shm_ring;
+pub mod transport;
+
+pub use queue_buf::QueueBuffer;
+pub use shm_ring::{ShmRing, ShmRingOptions};
+pub use transport::{Batch, ExpSink, ExpSource, TransportStats};
+
+/// Frame layout in every transport: [s (obs), a (act), r, done, s2 (obs)].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameSpec {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+}
+
+impl FrameSpec {
+    pub fn f32s(&self) -> usize {
+        2 * self.obs_dim + self.act_dim + 2
+    }
+
+    /// Pack one transition into `out` (length `self.f32s()`).
+    #[inline]
+    pub fn pack(&self, s: &[f32], a: &[f32], r: f32, done: bool, s2: &[f32], out: &mut [f32]) {
+        let (o, k) = (self.obs_dim, self.act_dim);
+        out[..o].copy_from_slice(s);
+        out[o..o + k].copy_from_slice(a);
+        out[o + k] = r;
+        out[o + k + 1] = if done { 1.0 } else { 0.0 };
+        out[o + k + 2..].copy_from_slice(s2);
+    }
+
+    /// Unpack a frame row into the batch's column views at row `i`.
+    #[inline]
+    pub fn unpack_into(&self, frame: &[f32], batch: &mut Batch, i: usize) {
+        let (o, k) = (self.obs_dim, self.act_dim);
+        batch.s[i * o..(i + 1) * o].copy_from_slice(&frame[..o]);
+        batch.a[i * k..(i + 1) * k].copy_from_slice(&frame[o..o + k]);
+        batch.r[i] = frame[o + k];
+        batch.d[i] = frame[o + k + 1];
+        batch.s2[i * o..(i + 1) * o].copy_from_slice(&frame[o + k + 2..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let spec = FrameSpec { obs_dim: 3, act_dim: 2 };
+        assert_eq!(spec.f32s(), 10);
+        let s = [1.0, 2.0, 3.0];
+        let a = [4.0, 5.0];
+        let s2 = [6.0, 7.0, 8.0];
+        let mut frame = vec![0.0f32; spec.f32s()];
+        spec.pack(&s, &a, 9.0, true, &s2, &mut frame);
+        let mut batch = Batch::new(2, 3, 2);
+        spec.unpack_into(&frame, &mut batch, 1);
+        assert_eq!(&batch.s[3..6], &s);
+        assert_eq!(&batch.a[2..4], &a);
+        assert_eq!(batch.r[1], 9.0);
+        assert_eq!(batch.d[1], 1.0);
+        assert_eq!(&batch.s2[3..6], &s2);
+    }
+}

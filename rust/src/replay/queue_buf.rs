@@ -1,0 +1,254 @@
+//! Queue-based experience transport — the conventional baseline the paper
+//! ablates against (Fig. 4a, Fig. 6a, Table 3 QS rows).
+//!
+//! Semantics mirror multiprocessing.Queue pipelines: sampler workers push
+//! into a bounded queue (dropping when full — transmission loss); the
+//! learner ingests only when the queue has filled ("centrally agree on a
+//! time for data transmission"), paying the dump cost on its own time
+//! budget and observing a long "experience transfer cycle". Ingested frames
+//! land in a learner-local replay pool that batches are drawn from.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::transport::{Batch, ExpSink, ExpSource, TransportStats};
+use super::FrameSpec;
+use crate::util::rng::Rng;
+
+struct QueueInner {
+    q: VecDeque<Vec<f32>>,
+}
+
+/// Shared bounded queue (the sink half).
+pub struct QueueBuffer {
+    inner: Mutex<QueueInner>,
+    queue_size: usize,
+    spec: FrameSpec,
+    pushed: AtomicU64,
+    lost: AtomicU64,
+}
+
+impl QueueBuffer {
+    pub fn new(queue_size: usize, spec: FrameSpec) -> Arc<Self> {
+        Arc::new(QueueBuffer {
+            inner: Mutex::new(QueueInner { q: VecDeque::with_capacity(queue_size) }),
+            queue_size,
+            spec,
+            pushed: AtomicU64::new(0),
+            lost: AtomicU64::new(0),
+        })
+    }
+
+    pub fn spec(&self) -> FrameSpec {
+        self.spec
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len() >= self.queue_size
+    }
+}
+
+impl ExpSink for QueueBuffer {
+    fn push(&self, frame: &[f32]) {
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        if g.q.len() >= self.queue_size {
+            // full queue: the frame is dropped — transmission loss
+            drop(g);
+            self.lost.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        g.q.push_back(frame.to_vec());
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            pushed: self.pushed.load(Ordering::Relaxed),
+            lost: self.lost.load(Ordering::Relaxed),
+            visible: self.len(),
+            transfer_cycle_s: 0.0,
+        }
+    }
+}
+
+/// Learner-side pool fed by draining the queue (the source half).
+pub struct QueueSource {
+    pub queue: Arc<QueueBuffer>,
+    /// Local replay pool (flat frames).
+    pool: Vec<Vec<f32>>,
+    capacity: usize,
+    write: usize,
+    filled: usize,
+    last_drain: Instant,
+    cycle_ewma: f64,
+    drains: u64,
+}
+
+impl QueueSource {
+    pub fn new(queue: Arc<QueueBuffer>, capacity: usize) -> Self {
+        QueueSource {
+            queue,
+            pool: Vec::new(),
+            capacity,
+            write: 0,
+            filled: 0,
+            last_drain: Instant::now(),
+            cycle_ewma: 0.0,
+            drains: 0,
+        }
+    }
+
+    /// Ingest pending frames. Paper semantics: the learner only pays the
+    /// dump cost when the queue has filled (or `force` while warming up).
+    /// Returns the number of frames ingested.
+    pub fn drain(&mut self, force: bool) -> usize {
+        if !force && !self.queue.is_full() {
+            return 0;
+        }
+        let mut g = self.queue.inner.lock().unwrap();
+        if g.q.is_empty() {
+            return 0;
+        }
+        let mut n = 0;
+        while let Some(frame) = g.q.pop_front() {
+            if self.pool.len() < self.capacity {
+                self.pool.push(frame);
+            } else {
+                self.pool[self.write] = frame;
+            }
+            self.write = (self.write + 1) % self.capacity;
+            self.filled = (self.filled + 1).min(self.capacity);
+            n += 1;
+        }
+        drop(g);
+        let now = Instant::now();
+        let cycle = now.duration_since(self.last_drain).as_secs_f64();
+        self.last_drain = now;
+        self.drains += 1;
+        self.cycle_ewma = if self.drains <= 1 { cycle } else { self.cycle_ewma * 0.8 + cycle * 0.2 };
+        n
+    }
+}
+
+impl ExpSource for QueueSource {
+    fn sample_batch(&mut self, rng: &mut Rng, batch: &mut Batch) -> bool {
+        // intake on the learner's time budget — this is exactly the cost the
+        // shared-memory design avoids. Forced whenever the local pool can't
+        // serve a batch on its own (warmup / small-queue topologies).
+        self.drain(self.filled < batch.bs);
+        if self.filled == 0 {
+            return false;
+        }
+        let spec = self.queue.spec;
+        for i in 0..batch.bs {
+            let idx = rng.below(self.filled as u64) as usize;
+            spec.unpack_into(&self.pool[idx], batch, i);
+        }
+        true
+    }
+
+    fn visible(&self) -> usize {
+        // frames that exist for the learner: local pool + still-queued.
+        // (Counting queued frames matters: the first drain happens inside
+        // sample_batch, which the coordinator only calls once `visible`
+        // crosses the warmup threshold.)
+        self.filled + self.queue.len()
+    }
+
+    fn stats(&self) -> TransportStats {
+        let mut st = self.queue.stats();
+        st.visible = self.filled;
+        st.transfer_cycle_s = self.cycle_ewma;
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FrameSpec {
+        FrameSpec { obs_dim: 2, act_dim: 1 }
+    }
+
+    #[test]
+    fn drops_when_full() {
+        let q = QueueBuffer::new(4, spec());
+        let frame = vec![1.0f32; spec().f32s()];
+        for _ in 0..10 {
+            q.push(&frame);
+        }
+        let st = q.stats();
+        assert_eq!(st.pushed, 10);
+        assert_eq!(st.lost, 6);
+        assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn drain_only_when_full_then_sample() {
+        let q = QueueBuffer::new(4, spec());
+        let mut src = QueueSource::new(q.clone(), 100);
+        let sp = spec();
+        let mut frame = vec![0.0f32; sp.f32s()];
+        sp.pack(&[1.0, 2.0], &[3.0], 4.0, false, &[5.0, 6.0], &mut frame);
+        q.push(&frame);
+        // not full -> no drain
+        assert_eq!(src.drain(false), 0);
+        for _ in 0..3 {
+            q.push(&frame);
+        }
+        assert_eq!(src.drain(false), 4);
+        let mut rng = Rng::new(0);
+        let mut batch = Batch::new(2, 2, 1);
+        assert!(src.sample_batch(&mut rng, &mut batch));
+        assert_eq!(batch.r[0], 4.0);
+        assert_eq!(batch.s2[1], 6.0);
+    }
+
+    #[test]
+    fn pool_wraps_at_capacity() {
+        let q = QueueBuffer::new(8, spec());
+        let mut src = QueueSource::new(q.clone(), 8);
+        let sp = spec();
+        let mut frame = vec![0.0f32; sp.f32s()];
+        for k in 0..24 {
+            sp.pack(&[k as f32, 0.0], &[0.0], k as f32, false, &[0.0, 0.0], &mut frame);
+            q.push(&frame);
+            src.drain(false);
+        }
+        assert_eq!(src.visible(), 8);
+        // pool should only contain recent frames (k >= 8)
+        let mut rng = Rng::new(2);
+        let mut batch = Batch::new(8, 2, 1);
+        assert!(src.sample_batch(&mut rng, &mut batch));
+        for i in 0..8 {
+            assert!(batch.r[i] >= 8.0, "{}", batch.r[i]);
+        }
+    }
+
+    #[test]
+    fn transfer_cycle_is_tracked() {
+        let q = QueueBuffer::new(2, spec());
+        let mut src = QueueSource::new(q.clone(), 10);
+        let frame = vec![0.0f32; spec().f32s()];
+        q.push(&frame);
+        q.push(&frame);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        src.drain(false);
+        q.push(&frame);
+        q.push(&frame);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        src.drain(false);
+        assert!(src.stats().transfer_cycle_s > 0.0);
+    }
+}

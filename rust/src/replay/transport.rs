@@ -1,0 +1,76 @@
+//! Transport abstraction: sampler-side sink + learner-side source, with the
+//! throughput accounting the paper reports (transmission loss, transfer
+//! cycle).
+
+use crate::util::rng::Rng;
+
+/// Staging buffers for one training batch (column-major arrays matching the
+/// update artifact's input shapes). Reused across updates — no allocation on
+/// the hot path.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub bs: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub s: Vec<f32>,
+    pub a: Vec<f32>,
+    pub r: Vec<f32>,
+    pub d: Vec<f32>,
+    pub s2: Vec<f32>,
+}
+
+impl Batch {
+    pub fn new(bs: usize, obs_dim: usize, act_dim: usize) -> Self {
+        Batch {
+            bs,
+            obs_dim,
+            act_dim,
+            s: vec![0.0; bs * obs_dim],
+            a: vec![0.0; bs * act_dim],
+            r: vec![0.0; bs],
+            d: vec![0.0; bs],
+            s2: vec![0.0; bs * obs_dim],
+        }
+    }
+}
+
+/// Counters every transport maintains (paper Table 3 columns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransportStats {
+    /// Frames pushed by samplers.
+    pub pushed: u64,
+    /// Frames that never became visible to the learner (overwritten unseen /
+    /// dropped at a full queue) — the paper's "experience transmission loss".
+    pub lost: u64,
+    /// Frames currently visible for sampling.
+    pub visible: usize,
+    /// Seconds between learner-side intake events; 0 for shared memory
+    /// (data is visible immediately) — the paper's "experience transfer
+    /// cycle".
+    pub transfer_cycle_s: f64,
+}
+
+impl TransportStats {
+    pub fn loss_fraction(&self) -> f64 {
+        if self.pushed == 0 {
+            0.0
+        } else {
+            self.lost as f64 / self.pushed as f64
+        }
+    }
+}
+
+/// Sampler-side: push one packed frame. Must be callable concurrently from
+/// many worker threads without blocking the learner.
+pub trait ExpSink: Send + Sync {
+    fn push(&self, frame: &[f32]);
+    fn stats(&self) -> TransportStats;
+}
+
+/// Learner-side: fill a batch by uniform sampling over visible experience.
+pub trait ExpSource: Send {
+    /// Returns false if there is not yet enough visible experience.
+    fn sample_batch(&mut self, rng: &mut Rng, batch: &mut Batch) -> bool;
+    fn visible(&self) -> usize;
+    fn stats(&self) -> TransportStats;
+}

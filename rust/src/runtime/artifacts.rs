@@ -1,0 +1,161 @@
+//! `artifacts/manifest.json` parsing: the L2→L3 contract.
+//!
+//! The manifest lists every lowered module (env, algo, function, batch size,
+//! ordered input/output tensor names+shapes) and every flat parameter layout.
+//! The coordinator cross-checks env dims against the Rust env registry at
+//! startup, so a drifted python preset fails fast instead of corrupting
+//! training.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::layout::Layout;
+use crate::util::json::{self, Value};
+
+/// One lowered HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub env: String,
+    pub algo: String,
+    pub func: String,
+    pub bs: usize,
+    /// Ordered (name, shape) of the computation's parameters.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// Ordered output names.
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Value) -> Result<ArtifactMeta> {
+        let inputs = v
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|x| {
+                Ok((
+                    x.get("name")?.as_str()?.to_string(),
+                    x.get("shape")?.as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<_>>()?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        Ok(ArtifactMeta {
+            file: v.get("file")?.as_str()?.to_string(),
+            env: v.get("env")?.as_str()?.to_string(),
+            algo: v.get("algo")?.as_str()?.to_string(),
+            func: v.get("func")?.as_str()?.to_string(),
+            bs: v.get("bs")?.as_usize()?,
+            inputs,
+            outputs: v
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Total f32 count of input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].1.iter().product()
+    }
+}
+
+/// Parsed manifest + artifact directory.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub layouts: BTreeMap<String, Layout>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let v = json::parse_file(&dir.join("manifest.json"))
+            .context("loading artifacts/manifest.json — run `make artifacts` first")?;
+        let mut layouts = BTreeMap::new();
+        for (k, lv) in v.get("layouts")?.as_obj()? {
+            layouts.insert(k.clone(), Layout::from_json(lv)?);
+        }
+        let mut artifacts = Vec::new();
+        for (_, av) in v.get("artifacts")?.as_obj()? {
+            artifacts.push(ArtifactMeta::from_json(av)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), layouts, artifacts })
+    }
+
+    pub fn layout(&self, env: &str, algo: &str) -> Result<&Layout> {
+        self.layouts
+            .get(&format!("{env}/{algo}"))
+            .with_context(|| format!("no layout for {env}/{algo} in manifest"))
+    }
+
+    pub fn find(&self, env: &str, algo: &str, func: &str, bs: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.env == env && a.algo == algo && a.func == func && a.bs == bs)
+            .with_context(|| format!("no artifact {env}/{algo}_{func}_bs{bs} — rebuild artifacts"))
+    }
+
+    /// Batch sizes available for (env, algo, func), ascending — the discrete
+    /// ladder the adaptation controller climbs.
+    pub fn batch_sizes(&self, env: &str, algo: &str, func: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.env == env && a.algo == algo && a.func == func)
+            .map(|a| a.bs)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Fail fast if the Rust env dims drifted from the python presets.
+    pub fn check_env(&self, env: &str, algo: &str, obs_dim: usize, act_dim: usize) -> Result<()> {
+        let lay = self.layout(env, algo)?;
+        if lay.obs_dim != obs_dim || lay.act_dim != act_dim {
+            bail!(
+                "env {env}: rust dims ({obs_dim},{act_dim}) != manifest ({},{})",
+                lay.obs_dim,
+                lay.act_dim
+            );
+        }
+        Ok(())
+    }
+
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests exercise the real artifacts directory when present
+    /// (CI runs `make artifacts` first); they are skipped otherwise.
+    fn manifest() -> Option<Manifest> {
+        let dir = crate::runtime::engine::default_artifacts_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: no artifacts built");
+            return;
+        };
+        assert!(!m.artifacts.is_empty());
+        let lay = m.layout("pendulum", "sac").unwrap();
+        assert_eq!(lay.obs_dim, 3);
+        assert_eq!(lay.act_dim, 1);
+        let a = m.find("pendulum", "sac", "full", 256).unwrap();
+        assert_eq!(a.inputs[0].0, "params");
+        assert_eq!(a.input_len(0), lay.param_size);
+        assert!(m.batch_sizes("pendulum", "sac", "full").contains(&8192));
+        m.check_env("pendulum", "sac", 3, 1).unwrap();
+        assert!(m.check_env("pendulum", "sac", 4, 1).is_err());
+    }
+}

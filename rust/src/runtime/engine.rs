@@ -1,0 +1,147 @@
+//! PJRT execution engine: HLO text → compiled executable → `run` with flat
+//! f32 buffers.
+//!
+//! One [`Engine`] per executor thread — the paper's dual-GPU model
+//! parallelism maps to two engines on two threads, each owning its own
+//! compiled `actor_step`/`critic_step` executable (DESIGN.md §1).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{ArtifactMeta, Manifest};
+
+/// Resolve the artifacts directory: $SPREEZE_ARTIFACTS or ./artifacts
+/// relative to the workspace root (walking up from cwd).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SPREEZE_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// A PJRT client wrapper. NOT `Send` (the underlying client is thread-bound
+/// by construction here) — create one per executor thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, manifest: &Manifest, meta: &ArtifactMeta) -> Result<StepExe> {
+        let path = manifest.path_of(meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(StepExe { exe, meta: meta.clone(), out_scratch: Vec::new() })
+    }
+}
+
+/// A compiled step function plus its I/O contract.
+pub struct StepExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    out_scratch: Vec<Vec<f32>>,
+}
+
+impl StepExe {
+    /// Execute with inputs in manifest order; returns one flat vec per
+    /// output (in manifest order). Scalars are 1-element slices.
+    ///
+    /// Input lengths are validated against the manifest shapes — a mismatch
+    /// means the caller wired the wrong buffer and must fail loudly.
+    pub fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: {} inputs given, {} expected",
+                self.meta.file,
+                inputs.len(),
+                self.meta.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, buf) in inputs.iter().enumerate() {
+            let want = self.meta.input_len(i);
+            if buf.len() != want {
+                bail!(
+                    "{}: input {} ({}) has {} f32s, want {}",
+                    self.meta.file,
+                    i,
+                    self.meta.inputs[i].0,
+                    buf.len(),
+                    want
+                );
+            }
+            let dims: Vec<usize> = self.meta.inputs[i].1.clone();
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &dims,
+                bytes_of(buf),
+            )
+            .map_err(|e| anyhow::anyhow!("literal {}: {e}", self.meta.inputs[i].0))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.meta.file))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+        // aot.py lowers with return_tuple=True: one tuple literal out.
+        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling: {e}"))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: {} outputs, manifest says {}",
+                self.meta.file,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        let mut out = std::mem::take(&mut self.out_scratch);
+        out.clear();
+        for p in parts {
+            let mut v = vec![0.0f32; p.element_count()];
+            p.copy_raw_to(&mut v).map_err(|e| anyhow::anyhow!("copy out: {e}"))?;
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Index of a named output.
+    pub fn out_index(&self, name: &str) -> Result<usize> {
+        self.meta
+            .outputs
+            .iter()
+            .position(|o| o == name)
+            .with_context(|| format!("{}: no output {name:?}", self.meta.file))
+    }
+}
+
+fn bytes_of(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT-lowered HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the only place Rust touches XLA; everything above speaks
+//! flat `&[f32]` buffers.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactMeta, Manifest};
+pub use engine::{default_artifacts_dir, Engine, StepExe};

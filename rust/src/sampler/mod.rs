@@ -1,0 +1,241 @@
+//! Asynchronous experience-sampling worker pool (paper §3.1.1).
+//!
+//! Each worker owns an environment instance and a native Rust policy
+//! ([`crate::nn::GaussianPolicy`]); it steps, packs transitions, and pushes
+//! them into the experience sink (shared-memory ring by default) without
+//! ever synchronizing with the learner. Weights arrive through the SSD
+//! checkpoint file, polled every `reload_every` env steps (paper §3.3.1).
+//!
+//! The pool supports *live resizing*: `set_active(n)` parks workers above
+//! index `n` (the adaptation controller's SP knob, and the Fig. 6b CPU-limit
+//! ablation).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::metrics::MetricsHub;
+use crate::env::registry::make_env;
+use crate::nn::{checkpoint, GaussianPolicy, Layout};
+use crate::replay::{ExpSink, FrameSpec};
+use crate::util::rng::Rng;
+
+pub struct SamplerPool {
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    handles: Vec<JoinHandle<()>>,
+    pub max_workers: usize,
+}
+
+struct WorkerCtx {
+    id: usize,
+    cfg: TrainConfig,
+    layout: Layout,
+    sink: Arc<dyn ExpSink>,
+    hub: Arc<MetricsHub>,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    policy_path: PathBuf,
+}
+
+impl SamplerPool {
+    /// Spawn `max_workers` worker threads; `initial_active` of them sample.
+    pub fn spawn(
+        cfg: &TrainConfig,
+        layout: &Layout,
+        sink: Arc<dyn ExpSink>,
+        hub: Arc<MetricsHub>,
+        policy_path: PathBuf,
+        max_workers: usize,
+        initial_active: usize,
+    ) -> Result<SamplerPool> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let active = Arc::new(AtomicUsize::new(initial_active.min(max_workers)));
+        let mut handles = Vec::new();
+        for id in 0..max_workers {
+            let ctx = WorkerCtx {
+                id,
+                cfg: cfg.clone(),
+                layout: layout.clone(),
+                sink: sink.clone(),
+                hub: hub.clone(),
+                stop: stop.clone(),
+                active: active.clone(),
+                policy_path: policy_path.clone(),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sampler-{id}"))
+                    .spawn(move || worker_main(ctx))?,
+            );
+        }
+        Ok(SamplerPool { stop, active, handles, max_workers })
+    }
+
+    /// Adaptation knob: number of concurrently sampling workers.
+    pub fn set_active(&self, n: usize) {
+        self.active.store(n.min(self.max_workers), Ordering::Relaxed);
+    }
+
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(ctx: WorkerCtx) {
+    if let Err(e) = worker_loop(&ctx) {
+        eprintln!("sampler-{}: {e:#}", ctx.id);
+    }
+}
+
+fn worker_loop(ctx: &WorkerCtx) -> Result<()> {
+    let mut env = make_env(&ctx.cfg.env)?;
+    let spec = env.spec().clone();
+    let fspec = FrameSpec { obs_dim: spec.obs_dim, act_dim: spec.act_dim };
+    let mut policy = GaussianPolicy::new(&ctx.layout)?;
+    let mut rng = Rng::for_worker(ctx.cfg.seed, ctx.id as u64 + 1);
+
+    let mut actor = vec![0.0f32; ctx.layout.actor_size];
+    let mut policy_version = 0u64;
+    let mut have_policy = false;
+
+    let mut obs = vec![0.0f32; spec.obs_dim];
+    let mut obs2 = vec![0.0f32; spec.obs_dim];
+    let mut act = vec![0.0f32; spec.act_dim];
+    let mut frame = vec![0.0f32; fspec.f32s()];
+    let mut episode_return = 0.0f32;
+    let mut steps_since_reload = 0u64;
+
+    env.reset(&mut rng, &mut obs);
+    while !ctx.stop.load(Ordering::Relaxed) {
+        // live-resize parking: workers above the active count idle
+        if ctx.id >= ctx.active.load(Ordering::Relaxed) {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            continue;
+        }
+
+        // periodic SSD weight reload (paper §3.3.1)
+        if steps_since_reload == 0 {
+            if let Ok(Some((ver, flat))) =
+                checkpoint::load_policy(&ctx.policy_path, policy_version)
+            {
+                policy_version = ver;
+                actor.copy_from_slice(&flat);
+                have_policy = true;
+            }
+        }
+        steps_since_reload = (steps_since_reload + 1) % ctx.cfg.reload_every.max(1);
+
+        // action: uniform random during warmup / before the first publish
+        let total = ctx.hub.sampled.count();
+        if !have_policy || total < ctx.cfg.start_steps {
+            rng.fill_uniform(&mut act, -1.0, 1.0);
+        } else {
+            policy.act(&actor, &obs, &mut rng, false, ctx.cfg.expl_noise as f32, &mut act);
+        }
+
+        let out = env.step(&act, &mut obs2);
+        episode_return += out.reward;
+        // time-limit truncation must NOT cut the TD bootstrap
+        let done_flag = out.done && !out.truncated;
+        fspec.pack(&obs, &act, out.reward, done_flag, &obs2, &mut frame);
+        ctx.sink.push(&frame);
+        ctx.hub.sampled.add(1);
+
+        if out.done || out.truncated {
+            ctx.hub.push_train_return(episode_return);
+            episode_return = 0.0;
+            env.reset(&mut rng, &mut obs);
+        } else {
+            std::mem::swap(&mut obs, &mut obs2);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::{ShmRing, ShmRingOptions};
+
+    fn test_layout() -> Layout {
+        // pendulum-shaped layout (no manifest needed)
+        crate::nn::layout::Layout {
+            env: "pendulum".into(),
+            algo: "sac".into(),
+            obs_dim: 3,
+            act_dim: 1,
+            hidden: 8,
+            actor_size: 256,
+            critic_size: 256,
+            target_size: 256,
+            param_size: 512,
+            chunk: 256,
+            actor_segments: vec![
+                seg("actor/w0", vec![3, 8], 0),
+                seg("actor/b0", vec![8], 24),
+                seg("actor/w1", vec![8, 8], 32),
+                seg("actor/b1", vec![8], 96),
+                seg("actor/w2", vec![8, 2], 104),
+                seg("actor/b2", vec![2], 120),
+                seg("actor/log_alpha", vec![1], 122),
+            ],
+            critic_segments: vec![],
+        }
+    }
+
+    fn seg(name: &str, shape: Vec<usize>, offset: usize) -> crate::nn::Segment {
+        crate::nn::Segment { name: name.into(), shape, offset }
+    }
+
+    #[test]
+    fn pool_samples_resizes_and_stops() {
+        let layout = test_layout();
+        let ring = Arc::new(
+            ShmRing::create(&ShmRingOptions {
+                capacity: 10_000,
+                spec: FrameSpec { obs_dim: 3, act_dim: 1 },
+                shm_name: None,
+            })
+            .unwrap(),
+        );
+        let hub = Arc::new(MetricsHub::new());
+        let mut cfg = TrainConfig::default();
+        cfg.env = "pendulum".into();
+        cfg.start_steps = 1_000_000; // random actions: no policy file needed
+        let dir = std::env::temp_dir().join(format!("spreeze-sampler-test-{}", std::process::id()));
+        let pool = SamplerPool::spawn(
+            &cfg,
+            &layout,
+            ring.clone() as Arc<dyn ExpSink>,
+            hub.clone(),
+            dir.join("policy.bin"),
+            4,
+            2,
+        )
+        .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        let n1 = hub.sampled.count();
+        assert!(n1 > 100, "samplers produced only {n1} frames");
+        assert_eq!(pool.active(), 2);
+        pool.set_active(0);
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        let n2 = hub.sampled.count();
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let n3 = hub.sampled.count();
+        assert!(n3 - n2 < (n1.max(200)) / 2, "parking did not slow sampling: {n2}->{n3}");
+        pool.shutdown();
+        assert_eq!(ring.ring_stats().pushed, hub.sampled.count());
+    }
+}

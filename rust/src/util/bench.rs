@@ -1,0 +1,141 @@
+//! Hand-rolled micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Deliberately criterion-shaped: warmup, timed iterations until a minimum
+//! measurement window, mean/σ/percentiles, and throughput annotations.
+//! All `cargo bench` targets (`rust/benches/*.rs`, `harness = false`) use it.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+pub struct Bench {
+    pub warmup: Duration,
+    pub window: Duration,
+    pub max_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            window: Duration::from_secs(1),
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Optional items-per-iteration for throughput lines.
+    pub items: Option<f64>,
+}
+
+impl Report {
+    pub fn print(&self) {
+        let (m, unit) = humanize_ns(self.mean_ns);
+        let (p50, u50) = humanize_ns(self.p50_ns);
+        let (p99, u99) = humanize_ns(self.p99_ns);
+        print!(
+            "{:44} {:>9.3} {}/iter  (p50 {:.3} {}, p99 {:.3} {}, n={})",
+            self.name, m, unit, p50, u50, p99, u99, self.iters
+        );
+        if let Some(items) = self.items {
+            let per_sec = items / (self.mean_ns / 1e9);
+            print!("  {:>12} items/s", humanize_rate(per_sec));
+        }
+        println!();
+    }
+
+    pub fn items_per_sec(&self) -> f64 {
+        self.items.map(|i| i / (self.mean_ns / 1e9)).unwrap_or(0.0)
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            window: Duration::from_millis(300),
+            max_iters: 100_000,
+        }
+    }
+
+    /// Benchmark `f`; `items` = work units per call (for throughput).
+    pub fn run<T>(&self, name: &str, items: Option<f64>, mut f: impl FnMut() -> T) -> Report {
+        // warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // measure
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(4096);
+        let t1 = Instant::now();
+        let mut iters = 0u64;
+        while t1.elapsed() < self.window && iters < self.max_iters {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+            iters += 1;
+        }
+        Report {
+            name: name.to_string(),
+            iters,
+            mean_ns: stats::mean(&samples_ns),
+            std_ns: stats::std(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p99_ns: stats::percentile(&samples_ns, 99.0),
+            items,
+        }
+    }
+}
+
+pub fn humanize_ns(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "µs")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s ")
+    }
+}
+
+pub fn humanize_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}k", r / 1e3)
+    } else {
+        format!("{r:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench { warmup: Duration::from_millis(5), window: Duration::from_millis(30), max_iters: 10_000 };
+        let r = b.run("noop-ish", Some(1.0), || std::hint::black_box(3u64).wrapping_mul(7));
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.items_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(humanize_ns(500.0).1, "ns");
+        assert_eq!(humanize_ns(5_000.0).1, "µs");
+        assert_eq!(humanize_rate(2_000_000.0), "2.00M");
+    }
+}

@@ -1,0 +1,150 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, and typed
+//! getters with defaults. Unknown-flag detection is the caller's job via
+//! [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects number, got {v:?}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => match v.as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                _ => bail!("--{key} expects bool, got {v:?}"),
+            },
+        }
+    }
+
+    /// Comma-separated list of integers.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.str_opt(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse().with_context(|| format!("--{key}: bad item {x:?}")))
+                .collect(),
+        }
+    }
+
+    /// Error on any flag that was never queried (catches typos).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = args(&["train", "--env", "walker", "--bs=8192", "--verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.str_or("env", "x"), "walker");
+        assert_eq!(a.usize_or("bs", 0).unwrap(), 8192);
+        assert!(a.has("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = args(&["--oops", "1"]);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = args(&["--bs", "128,512"]);
+        assert_eq!(a.usize_list_or("bs", &[1]).unwrap(), vec![128, 512]);
+        assert_eq!(a.usize_list_or("sp", &[16]).unwrap(), vec![16]);
+        assert!(a.f64_or("lr", 3e-4).unwrap() == 3e-4);
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained infrastructure (offline build: no clap/serde/rand/criterion).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod sysinfo;
+pub mod timer;

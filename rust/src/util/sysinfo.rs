@@ -1,0 +1,97 @@
+//! Hardware introspection for the adaptation controller (paper §3.4):
+//! CPU core count and utilization from `/proc/stat`.
+
+use std::fs;
+
+/// Number of logical CPUs available to this process.
+pub fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One reading of aggregate CPU jiffies from /proc/stat: (busy, total).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CpuTimes {
+    pub busy: u64,
+    pub total: u64,
+}
+
+pub fn read_cpu_times() -> Option<CpuTimes> {
+    let text = fs::read_to_string("/proc/stat").ok()?;
+    let line = text.lines().next()?;
+    // "cpu  user nice system idle iowait irq softirq steal guest guest_nice"
+    let fields: Vec<u64> = line
+        .split_whitespace()
+        .skip(1)
+        .filter_map(|x| x.parse().ok())
+        .collect();
+    if fields.len() < 4 {
+        return None;
+    }
+    let total: u64 = fields.iter().sum();
+    let idle = fields[3] + fields.get(4).copied().unwrap_or(0); // idle + iowait
+    Some(CpuTimes { busy: total - idle, total })
+}
+
+/// System-wide CPU utilization in [0,1] between two readings.
+pub fn cpu_usage_between(prev: CpuTimes, now: CpuTimes) -> f64 {
+    let dt = now.total.saturating_sub(prev.total);
+    if dt == 0 {
+        return 0.0;
+    }
+    (now.busy.saturating_sub(prev.busy)) as f64 / dt as f64
+}
+
+/// Convenience sampler that keeps the previous reading internally.
+#[derive(Debug, Default)]
+pub struct CpuMonitor {
+    prev: Option<CpuTimes>,
+}
+
+impl CpuMonitor {
+    pub fn new() -> Self {
+        CpuMonitor { prev: read_cpu_times() }
+    }
+
+    /// Utilization since the last call (or since construction).
+    pub fn sample(&mut self) -> f64 {
+        let now = match read_cpu_times() {
+            Some(t) => t,
+            None => return 0.0,
+        };
+        let usage = match self.prev {
+            Some(p) => cpu_usage_between(p, now),
+            None => 0.0,
+        };
+        self.prev = Some(now);
+        usage
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_count_positive() {
+        assert!(num_cpus() >= 1);
+    }
+
+    #[test]
+    fn proc_stat_parses() {
+        let t = read_cpu_times().expect("linux /proc/stat");
+        assert!(t.total > 0 && t.busy <= t.total);
+    }
+
+    #[test]
+    fn usage_in_unit_interval() {
+        let mut mon = CpuMonitor::new();
+        // burn a little CPU so the delta is nonzero
+        let mut x = 0u64;
+        for i in 0..2_000_000u64 {
+            x = x.wrapping_add(i * i);
+        }
+        std::hint::black_box(x);
+        let u = mon.sample();
+        assert!((0.0..=1.0).contains(&u), "{u}");
+    }
+}

@@ -1,0 +1,180 @@
+//! Throughput instrumentation: rate meters, EWMAs, busy-fraction probes.
+//!
+//! These back every column of the paper's Tables 2–3 (sampling frame rate,
+//! network update frame rate / frequency, CPU/"GPU" usage, transfer cycle).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic event counter + wall-clock rate, shared across threads.
+#[derive(Debug)]
+pub struct RateMeter {
+    count: AtomicU64,
+    start: Instant,
+}
+
+impl Default for RateMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RateMeter {
+    pub fn new() -> Self {
+        RateMeter { count: AtomicU64::new(0), start: Instant::now() }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Events per second since creation.
+    pub fn rate(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.count() as f64 / dt
+        }
+    }
+
+    /// Snapshot for interval rates: returns (count, seconds since start).
+    pub fn snapshot(&self) -> (u64, f64) {
+        (self.count(), self.start.elapsed().as_secs_f64())
+    }
+}
+
+/// Interval rate between two snapshots of a RateMeter.
+pub fn interval_rate(prev: (u64, f64), now: (u64, f64)) -> f64 {
+    let dt = now.1 - prev.1;
+    if dt <= 0.0 {
+        0.0
+    } else {
+        (now.0 - prev.0) as f64 / dt
+    }
+}
+
+/// Exponentially-weighted moving average (single-threaded use).
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        Ewma { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+}
+
+/// Busy-fraction probe: accumulate busy nanoseconds on a worker thread, read
+/// utilization from anywhere. This is the "GPU usage" proxy for the PJRT
+/// executor threads (DESIGN.md §1 substitutions).
+#[derive(Debug)]
+pub struct BusyMeter {
+    busy_ns: AtomicU64,
+    start: Instant,
+}
+
+impl Default for BusyMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BusyMeter {
+    pub fn new() -> Self {
+        BusyMeter { busy_ns: AtomicU64::new(0), start: Instant::now() }
+    }
+
+    /// Time a closure, attributing its wall time as busy.
+    #[inline]
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+
+    pub fn add_busy_ns(&self, ns: u64) {
+        self.busy_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Busy fraction in [0, 1] since creation.
+    pub fn utilization(&self) -> f64 {
+        let total = self.start.elapsed().as_nanos() as f64;
+        if total <= 0.0 {
+            0.0
+        } else {
+            (self.busy_ns.load(Ordering::Relaxed) as f64 / total).min(1.0)
+        }
+    }
+
+    pub fn snapshot(&self) -> (u64, f64) {
+        (self.busy_ns.load(Ordering::Relaxed), self.start.elapsed().as_secs_f64())
+    }
+}
+
+/// Interval utilization between two BusyMeter snapshots.
+pub fn interval_utilization(prev: (u64, f64), now: (u64, f64)) -> f64 {
+    let dt = now.1 - prev.1;
+    if dt <= 0.0 {
+        0.0
+    } else {
+        ((now.0 - prev.0) as f64 / (dt * 1e9)).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_meter_counts() {
+        let m = RateMeter::new();
+        m.add(10);
+        m.add(5);
+        assert_eq!(m.count(), 15);
+        assert!(m.rate() > 0.0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..30 {
+            e.update(10.0);
+        }
+        assert!((e.get() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn busy_meter_bounded() {
+        let b = BusyMeter::new();
+        b.time(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        let u = b.utilization();
+        assert!(u > 0.0 && u <= 1.0, "{u}");
+    }
+
+    #[test]
+    fn interval_rate_math() {
+        assert_eq!(interval_rate((0, 0.0), (100, 2.0)), 50.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Visualization process (paper §3.1.2): a low-rate worker that replays the
+//! current policy and renders rollout traces. Headless here — "rendering"
+//! writes an ASCII/CSV trajectory trace under the run directory, at a frame
+//! rate deliberately far below the test process (the reason the paper keeps
+//! the two as separate processes).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::env::registry::make_env;
+use crate::nn::{checkpoint, GaussianPolicy, Layout};
+use crate::util::rng::Rng;
+
+pub struct VizWorker {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl VizWorker {
+    pub fn spawn(
+        cfg: &TrainConfig,
+        layout: &Layout,
+        policy_path: PathBuf,
+        out_dir: PathBuf,
+    ) -> Result<VizWorker> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let (cfg, layout, stop2) = (cfg.clone(), layout.clone(), stop.clone());
+        let handle = std::thread::Builder::new().name("viz".into()).spawn(move || {
+            if let Err(e) = viz_loop(&cfg, &layout, &policy_path, &out_dir, &stop2) {
+                eprintln!("viz worker: {e:#}");
+            }
+        })?;
+        Ok(VizWorker { stop, handle: Some(handle) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn viz_loop(
+    cfg: &TrainConfig,
+    layout: &Layout,
+    policy_path: &PathBuf,
+    out_dir: &PathBuf,
+    stop: &AtomicBool,
+) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut env = make_env(&cfg.env)?;
+    let spec = env.spec().clone();
+    let mut policy = GaussianPolicy::new(layout)?;
+    let mut rng = Rng::for_worker(cfg.seed, 0x5151);
+    let mut actor = vec![0.0f32; layout.actor_size];
+    let mut version = 0u64;
+    let mut obs = vec![0.0f32; spec.obs_dim];
+    let mut act = vec![0.0f32; spec.act_dim];
+    let mut episode = 0u64;
+
+    while !stop.load(Ordering::Relaxed) {
+        if let Some((ver, flat)) = checkpoint::load_policy(policy_path, version)? {
+            version = ver;
+            actor.copy_from_slice(&flat);
+        }
+        if version == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            continue;
+        }
+        episode += 1;
+        let mut trace = String::from("step,reward,obs0,obs1,obs2,act0\n");
+        env.reset(&mut rng, &mut obs);
+        let mut step = 0u32;
+        let mut ret = 0.0f32;
+        loop {
+            policy.act(&actor, &obs, &mut rng, true, 0.0, &mut act);
+            let out = env.step(&act, &mut obs);
+            ret += out.reward;
+            trace.push_str(&format!(
+                "{step},{:.4},{:.4},{:.4},{:.4},{:.4}\n",
+                out.reward,
+                obs[0],
+                obs.get(1).copied().unwrap_or(0.0),
+                obs.get(2).copied().unwrap_or(0.0),
+                act[0]
+            ));
+            step += 1;
+            // visualization frame rate is intentionally low (paper §3.1.2)
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            if out.done || out.truncated || stop.load(Ordering::Relaxed) {
+                break;
+            }
+        }
+        trace.push_str(&format!("# return={ret:.2} version={version}\n"));
+        std::fs::write(out_dir.join("viz_latest.csv"), &trace)?;
+        if episode % 10 == 1 {
+            std::fs::write(out_dir.join(format!("viz_ep{episode}.csv")), &trace)?;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(500));
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! End-to-end smoke: the full Spreeze topology (samplers + shm ring +
+//! learner + eval + checkpoints + adaptation) makes measurable learning
+//! progress on Pendulum within a small wall-clock budget.
+//!
+//! The full solve (eval >= -200) is exercised by `examples/quickstart.rs`
+//! and recorded in EXPERIMENTS.md; this test uses a short budget so the
+//! suite stays fast, and asserts progress rather than solution.
+
+use spreeze::config::presets;
+use spreeze::coordinator::Coordinator;
+use spreeze::runtime::{default_artifacts_dir, Manifest};
+
+#[test]
+fn pendulum_learns_within_budget() {
+    if Manifest::load(&default_artifacts_dir()).is_err() {
+        eprintln!("SKIP (no artifacts)");
+        return;
+    }
+    let mut cfg = presets::preset("pendulum");
+    cfg.seed = 0;
+    cfg.max_seconds = 45.0;
+    cfg.target_return = Some(-250.0);
+    cfg.run_dir = std::env::temp_dir()
+        .join(format!("spreeze-e2e-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let s = Coordinator::new(cfg).run().unwrap();
+
+    assert!(s.updates > 100, "too few updates: {}", s.updates);
+    assert!(s.sampled_frames > 5_000, "too few frames: {}", s.sampled_frames);
+    assert!(!s.curve.is_empty(), "eval curve empty");
+    // untrained pendulum sits around -1100..-1600; require clear progress
+    assert!(
+        s.solved_s.is_some() || s.best_return > -800.0,
+        "no learning progress: best {:.1} final {:.1}",
+        s.best_return,
+        s.final_return
+    );
+    // run artifacts written
+    assert!(std::path::Path::new(&s.snapshots.is_empty().to_string()).to_str().is_some());
+    let run_dir = std::path::PathBuf::from(&format!(
+        "{}",
+        std::env::temp_dir()
+            .join(format!("spreeze-e2e-{}", std::process::id()))
+            .display()
+    ));
+    assert!(run_dir.join("curve.csv").exists());
+    assert!(run_dir.join("metrics.csv").exists());
+    assert!(run_dir.join("summary.json").exists());
+    let _ = std::fs::remove_dir_all(run_dir);
+}
