@@ -1,15 +1,126 @@
 //! Bench: sampler-side throughput — env stepping and native policy forward
-//! per env (the paper's "Sampling Frame Rate" numerator), plus the sampler
-//! process sweep (Table 3 SP rows) at the thread level.
+//! per env (the paper's "Sampling Frame Rate" numerator), the scalar-vs-
+//! batched sampler hot path comparison (K envs per worker, matrix-matrix
+//! inference, one ring reservation per tick), plus manifest-dependent
+//! policy-forward and full-loop benches.
 
 use std::sync::Arc;
 
 use spreeze::env::registry::make_env;
+use spreeze::env::vec::VecEnv;
+use spreeze::env::{Env, StepOut};
+use spreeze::nn::layout::{Layout, Segment};
 use spreeze::nn::GaussianPolicy;
 use spreeze::replay::{ExpSink, FrameSpec, ShmRing, ShmRingOptions};
 use spreeze::runtime::{default_artifacts_dir, Manifest};
 use spreeze::util::bench::Bench;
 use spreeze::util::rng::Rng;
+
+/// Pendulum-shaped SAC actor layout (obs 3, act 1, hidden 64 — matching
+/// `python/compile/layout.py` ENV_PRESETS) so the hot-path comparison runs
+/// without artifacts.
+fn pendulum_layout() -> Layout {
+    let seg = |name: &str, shape: Vec<usize>, offset: usize| Segment {
+        name: name.to_string(),
+        shape,
+        offset,
+    };
+    Layout {
+        env: "pendulum".into(),
+        algo: "sac".into(),
+        obs_dim: 3,
+        act_dim: 1,
+        hidden: 64,
+        actor_size: 4547,
+        critic_size: 0,
+        target_size: 0,
+        param_size: 4547,
+        chunk: 4547,
+        actor_segments: vec![
+            seg("actor/w0", vec![3, 64], 0),
+            seg("actor/b0", vec![64], 192),
+            seg("actor/w1", vec![64, 64], 256),
+            seg("actor/b1", vec![64], 4352),
+            seg("actor/w2", vec![64, 2], 4416),
+            seg("actor/b2", vec![2], 4544),
+            seg("actor/log_alpha", vec![1], 4546),
+        ],
+        critic_segments: vec![],
+    }
+}
+
+fn mk_ring(spec: FrameSpec) -> Arc<ShmRing> {
+    Arc::new(
+        ShmRing::create(&ShmRingOptions { capacity: 1 << 20, spec, shm_name: None }).unwrap(),
+    )
+}
+
+/// The tentpole comparison: one worker's tick, scalar (1 env, matrix-vector
+/// forward, 1 ring atomic per frame) vs batched (K envs, matrix-matrix
+/// forward, 1 ring atomic per K frames).
+fn scalar_vs_batched(b: &Bench) {
+    const K: usize = 16;
+    println!("\n-- scalar vs batched sampler hot path (pendulum, hidden 64, K={K})");
+    let lay = pendulum_layout();
+    let fspec = FrameSpec { obs_dim: lay.obs_dim, act_dim: lay.act_dim };
+    let flen = fspec.f32s();
+    let mut rng = Rng::new(7);
+    let (params, _) = lay.init_params(&mut rng);
+    let actor = params[..lay.actor_size].to_vec();
+
+    // scalar path: the pre-batching worker loop
+    let ring = mk_ring(fspec);
+    let mut env = make_env("pendulum").unwrap();
+    let mut policy = GaussianPolicy::new(&lay).unwrap();
+    let mut obs = vec![0.0f32; lay.obs_dim];
+    let mut obs2 = vec![0.0f32; lay.obs_dim];
+    let mut act = vec![0.0f32; lay.act_dim];
+    let mut frame = vec![0.0f32; flen];
+    env.reset(&mut rng, &mut obs);
+    let scalar = b.run("sampler_tick/scalar", Some(1.0), || {
+        policy.act(&actor, &obs, &mut rng, false, 0.1, &mut act);
+        let out = env.step(&act, &mut obs2);
+        fspec.pack(&obs, &act, out.reward, out.done && !out.truncated, &obs2, &mut frame);
+        ring.push(&frame);
+        if out.done || out.truncated {
+            env.reset(&mut rng, &mut obs);
+        } else {
+            std::mem::swap(&mut obs, &mut obs2);
+        }
+    });
+    scalar.print();
+
+    // batched path: the current worker loop at K envs per tick
+    let ring_b = mk_ring(fspec);
+    let envs: Vec<Box<dyn Env>> = (0..K).map(|_| make_env("pendulum").unwrap()).collect();
+    let mut venv = VecEnv::new(envs, &mut rng);
+    let mut policy_b = GaussianPolicy::new(&lay).unwrap();
+    let mut prev = vec![0.0f32; K * lay.obs_dim];
+    let mut acts = vec![0.0f32; K * lay.act_dim];
+    let mut outs = vec![StepOut::default(); K];
+    let mut frames = vec![0.0f32; K * flen];
+    let batched = b.run("sampler_tick/batched", Some(K as f64), || {
+        policy_b.act_batch(&actor, &venv.obs, K, &mut rng, false, 0.1, &mut acts);
+        prev.copy_from_slice(&venv.obs);
+        venv.step(&acts, &mut rng, &mut outs);
+        for i in 0..K {
+            let s = &prev[i * lay.obs_dim..(i + 1) * lay.obs_dim];
+            let a = &acts[i * lay.act_dim..(i + 1) * lay.act_dim];
+            let s2 = &venv.last_obs[i * lay.obs_dim..(i + 1) * lay.obs_dim];
+            let done = outs[i].done && !outs[i].truncated;
+            fspec.pack(s, a, outs[i].reward, done, s2, &mut frames[i * flen..(i + 1) * flen]);
+        }
+        ring_b.push_many(&frames, K);
+        venv.finished.clear();
+    });
+    batched.print();
+    println!(
+        "   batched/scalar frames-per-second: {:.2}x  ({:.0} vs {:.0} frames/s)",
+        batched.items_per_sec() / scalar.items_per_sec(),
+        batched.items_per_sec(),
+        scalar.items_per_sec()
+    );
+}
 
 fn main() {
     let b = Bench::default();
@@ -31,10 +142,12 @@ fn main() {
         .print();
     }
 
+    scalar_vs_batched(&b);
+
     let manifest = match Manifest::load(&default_artifacts_dir()) {
         Ok(m) => m,
         Err(_) => {
-            println!("(no artifacts: skipping policy-forward + full-loop benches)");
+            println!("\n(no artifacts: skipping policy-forward + full-loop benches)");
             return;
         }
     };
@@ -55,13 +168,28 @@ fn main() {
         .print();
     }
 
+    println!("\n-- batched policy forward (matrix-matrix, walker)");
+    {
+        let lay = manifest.layout("walker", "sac").unwrap();
+        let mut rng = Rng::new(3);
+        let (params, _) = lay.init_params(&mut rng);
+        let actor = &params[..lay.actor_size];
+        for k in [1usize, 4, 8, 16, 32] {
+            let mut policy = GaussianPolicy::new(lay).unwrap();
+            let mut obs = vec![0.0f32; k * lay.obs_dim];
+            rng.fill_normal(&mut obs);
+            let mut acts = vec![0.0f32; k * lay.act_dim];
+            b.run(&format!("policy.act_batch/walker K={k}"), Some(k as f64), || {
+                policy.act_batch(actor, &obs, k, &mut rng, false, 0.1, &mut acts)
+            })
+            .print();
+        }
+    }
+
     println!("\n-- full sampler loop (env + policy + pack + shm push), walker");
     let lay = manifest.layout("walker", "sac").unwrap();
     let fspec = FrameSpec { obs_dim: lay.obs_dim, act_dim: lay.act_dim };
-    let ring = Arc::new(
-        ShmRing::create(&ShmRingOptions { capacity: 1_000_000, spec: fspec, shm_name: None })
-            .unwrap(),
-    );
+    let ring = mk_ring(fspec);
     let mut env = make_env("walker").unwrap();
     let mut policy = GaussianPolicy::new(lay).unwrap();
     let mut rng = Rng::new(2);
@@ -72,7 +200,7 @@ fn main() {
     let mut act = vec![0.0f32; lay.act_dim];
     let mut frame = vec![0.0f32; fspec.f32s()];
     env.reset(&mut rng, &mut obs);
-    b.run("sampler_loop/walker", Some(1.0), || {
+    let report = b.run("sampler_loop/walker", Some(1.0), || {
         policy.act(&actor, &obs, &mut rng, false, 0.1, &mut act);
         let out = env.step(&act, &mut obs2);
         fspec.pack(&obs, &act, out.reward, out.done, &obs2, &mut frame);
@@ -82,21 +210,10 @@ fn main() {
         } else {
             std::mem::swap(&mut obs, &mut obs2);
         }
-    })
-    .print();
+    });
+    report.print();
     println!(
-        "\nper-core sampling upper bound (walker): {:.0} Hz; x N samplers = Table 2 column",
-        1e9 / b.run("sampler_loop/walker (re-run)", Some(1.0), || {
-            policy.act(&actor, &obs, &mut rng, false, 0.1, &mut act);
-            let out = env.step(&act, &mut obs2);
-            fspec.pack(&obs, &act, out.reward, out.done, &obs2, &mut frame);
-            ring.push(&frame);
-            if out.done || out.truncated {
-                env.reset(&mut rng, &mut obs);
-            } else {
-                std::mem::swap(&mut obs, &mut obs2);
-            }
-        })
-        .mean_ns
+        "\nper-core sampling upper bound (walker, scalar): {:.0} Hz; x N samplers = Table 2 column",
+        1e9 / report.mean_ns
     );
 }

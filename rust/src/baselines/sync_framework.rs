@@ -75,7 +75,8 @@ impl Framework for SyncFramework {
 
         let envs: Vec<_> =
             (0..self.n_envs).map(|_| make_env(&cfg.env)).collect::<Result<_>>()?;
-        let mut venv = VecEnv::new(envs, cfg.seed + 100);
+        let mut env_rng = Rng::new(cfg.seed + 100);
+        let mut venv = VecEnv::new(envs, &mut env_rng);
         let mut policy = GaussianPolicy::new(&layout)?;
         let mut rng = Rng::for_worker(cfg.seed, 0x515C);
         let mut actions = vec![0.0f32; self.n_envs * layout.act_dim];
@@ -126,11 +127,13 @@ impl Framework for SyncFramework {
                         );
                     }
                 }
-                venv.step(&actions, &mut outs);
+                venv.step(&actions, &mut env_rng, &mut outs);
                 for i in 0..self.n_envs {
                     let o = &prev_obs[i * layout.obs_dim..(i + 1) * layout.obs_dim];
                     let a = &actions[i * layout.act_dim..(i + 1) * layout.act_dim];
-                    let o2 = &venv.obs[i * layout.obs_dim..(i + 1) * layout.obs_dim];
+                    // s2 = the pre-reset step observation, so terminal frames
+                    // carry the final state rather than the reset one
+                    let o2 = &venv.last_obs[i * layout.obs_dim..(i + 1) * layout.obs_dim];
                     let done = outs[i].done && !outs[i].truncated;
                     fspec.pack(o, a, outs[i].reward, done, o2, &mut frame);
                     ring.push_frame(&frame);

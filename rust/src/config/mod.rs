@@ -70,6 +70,10 @@ pub struct TrainConfig {
     pub batch_size: usize,
     /// 0 = adapt automatically.
     pub n_samplers: usize,
+    /// Envs stepped per sampler worker per tick (batched actor inference +
+    /// batched ring push). 1 = the scalar hot path; presets pick 8–16.
+    /// Orthogonal to the adaptation SP knob, which parks whole workers.
+    pub envs_per_worker: usize,
     pub transport: Transport,
     /// Replay capacity in frames.
     pub capacity: usize,
@@ -124,6 +128,7 @@ impl Default for TrainConfig {
             algo: Algo::Sac,
             batch_size: 0,
             n_samplers: 0,
+            envs_per_worker: 1,
             transport: Transport::Shm,
             capacity: 1_000_000,
             seed: 0,
@@ -163,6 +168,7 @@ impl TrainConfig {
         }
         self.batch_size = a.usize_or("bs", self.batch_size)?;
         self.n_samplers = a.usize_or("sp", self.n_samplers)?;
+        self.envs_per_worker = a.usize_or("envs-per-worker", self.envs_per_worker)?.max(1);
         if let Some(qs) = a.str_opt("queue-size") {
             self.transport = Transport::Queue(qs.parse()?);
         }
@@ -214,6 +220,7 @@ impl TrainConfig {
             ("algo", s(self.algo.name())),
             ("batch_size", num(self.batch_size as f64)),
             ("n_samplers", num(self.n_samplers as f64)),
+            ("envs_per_worker", num(self.envs_per_worker as f64)),
             (
                 "transport",
                 match self.transport {
@@ -238,11 +245,21 @@ mod tests {
 
     #[test]
     fn args_override_defaults() {
-        let argv: Vec<String> =
-            ["--env", "walker", "--bs", "8192", "--queue-size", "5000", "--algo", "td3"]
-                .iter()
-                .map(|x| x.to_string())
-                .collect();
+        let argv: Vec<String> = [
+            "--env",
+            "walker",
+            "--bs",
+            "8192",
+            "--queue-size",
+            "5000",
+            "--algo",
+            "td3",
+            "--envs-per-worker",
+            "8",
+        ]
+        .iter()
+        .map(|x| x.to_string())
+        .collect();
         let a = Args::parse(&argv).unwrap();
         let mut c = TrainConfig::default();
         c.apply_args(&a).unwrap();
@@ -250,6 +267,17 @@ mod tests {
         assert_eq!(c.batch_size, 8192);
         assert_eq!(c.transport, Transport::Queue(5000));
         assert_eq!(c.algo, Algo::Td3);
+        assert_eq!(c.envs_per_worker, 8);
+    }
+
+    #[test]
+    fn envs_per_worker_clamps_to_one() {
+        let argv: Vec<String> =
+            ["--envs-per-worker", "0"].iter().map(|x| x.to_string()).collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.envs_per_worker, 1);
     }
 
     #[test]

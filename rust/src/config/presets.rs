@@ -40,19 +40,24 @@ pub fn preset(env: &str) -> TrainConfig {
             // (the BS ladder's frame-rate signal misleads on sub-desktop
             // testbeds — see EXPERIMENTS.md Table 1 notes)
             c.batch_size = 256;
+            // cheap env + tiny MLP: deep batching amortizes per-tick costs
+            c.envs_per_worker = 16;
         }
         "walker" | "cheetah" => {
             c.start_steps = 4_000;
             c.update_after = 4_000;
+            c.envs_per_worker = 8;
         }
         "ant" => {
             c.start_steps = 6_000;
             c.update_after = 6_000;
+            c.envs_per_worker = 8;
         }
         "humanoid" | "humanoid_flagrun" => {
             c.start_steps = 8_000;
             c.update_after = 8_000;
             c.reward_scale = 0.5;
+            c.envs_per_worker = 8;
         }
         _ => {}
     }
@@ -69,6 +74,12 @@ mod tests {
             let c = preset(env);
             assert_eq!(&c.env, env);
             assert!(c.capacity > 0);
+            // every preset opts into the batched sampler hot path
+            assert!(
+                (8..=16).contains(&c.envs_per_worker),
+                "{env}: envs_per_worker {}",
+                c.envs_per_worker
+            );
         }
     }
 

@@ -195,6 +195,10 @@ impl Coordinator {
         };
         let max_workers = cores.max(2);
         let sp0 = cfg.effective_samplers().min(max_workers);
+        // Each worker steps `envs_per_worker` envs per tick (batched actor
+        // forward + one ring reservation); the adaptation SP knob still
+        // parks whole workers, so Fig. 6b ablation semantics are unchanged
+        // and total concurrent envs = active_workers * envs_per_worker.
         let pool = SamplerPool::spawn(
             cfg,
             &layout,
@@ -204,6 +208,13 @@ impl Coordinator {
             max_workers,
             sp0,
         )?;
+        if cfg.verbose {
+            println!(
+                "topology: {sp0}/{max_workers} sampler workers x {} envs/worker, transport {:?}",
+                cfg.envs_per_worker.max(1),
+                cfg.transport
+            );
+        }
         let eval = EvalWorker::spawn(cfg, &layout, hub.clone(), store.policy_path.clone())?;
         let viz = if cfg.viz {
             Some(VizWorker::spawn(

@@ -327,7 +327,22 @@ impl Env for Planar {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::env::testutil::check_env_invariants;
     use crate::env::walker::walker_config;
+
+    #[test]
+    fn substrate_invariants_with_and_without_termination() {
+        // The shared env invariants, run against the substrate directly in
+        // both termination modes (every registered env runs them too in its
+        // own module): determinism per seed, finite obs/reward, episode
+        // termination within max_steps.
+        check_env_invariants(|| Box::new(Planar::new(walker_config())), 29);
+        let mut no_term = walker_config();
+        no_term.name = "walker"; // keep the registered name/dims
+        no_term.terminate = None;
+        no_term.max_steps = 300;
+        check_env_invariants(move || Box::new(Planar::new(no_term.clone())), 31);
+    }
 
     #[test]
     fn stable_under_zero_action() {

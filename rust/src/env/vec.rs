@@ -1,6 +1,11 @@
-//! Vectorized env wrapper: steps K envs with auto-reset, used by the
-//! synchronous baseline framework (RLlib-PPO-style alternating phases) and
-//! by benches that need batched stepping.
+//! Vectorized env wrapper: steps K envs with auto-reset. Used by the
+//! batched sampler hot path (K envs per worker, one matrix-matrix policy
+//! forward per tick), by the synchronous baseline framework, and by benches
+//! that need batched stepping.
+//!
+//! Reset randomness comes from a caller-provided RNG so a K=1 `VecEnv`
+//! driven by a sampler worker consumes exactly the same stream as the old
+//! scalar loop — the batched/scalar equivalence tests rely on this.
 
 use super::{Env, StepOut};
 use crate::util::rng::Rng;
@@ -9,33 +14,38 @@ pub struct VecEnv {
     envs: Vec<Box<dyn Env>>,
     pub obs_dim: usize,
     pub act_dim: usize,
-    /// Flattened current observations, row-major [K, obs_dim].
+    /// Flattened current observations, row-major [K, obs_dim]. After a step
+    /// that terminated row i, this holds the *post-reset* observation (the
+    /// next action's input).
     pub obs: Vec<f32>,
+    /// Observations produced by the last `step` *before* any auto-reset,
+    /// row-major [K, obs_dim] — the `s2` a transition frame must pack so
+    /// terminal frames carry the final observation, not the reset one.
+    pub last_obs: Vec<f32>,
     /// Episode returns in progress.
     returns: Vec<f32>,
     /// Completed-episode returns since last drain.
     pub finished: Vec<f32>,
-    rng: Rng,
 }
 
 impl VecEnv {
-    pub fn new(mut envs: Vec<Box<dyn Env>>, seed: u64) -> Self {
+    /// Wrap `envs`, resetting each row in order from `rng`.
+    pub fn new(mut envs: Vec<Box<dyn Env>>, rng: &mut Rng) -> Self {
         assert!(!envs.is_empty());
         let obs_dim = envs[0].spec().obs_dim;
         let act_dim = envs[0].spec().act_dim;
-        let mut rng = Rng::new(seed);
         let mut obs = vec![0.0f32; envs.len() * obs_dim];
         for (i, e) in envs.iter_mut().enumerate() {
-            e.reset(&mut rng, &mut obs[i * obs_dim..(i + 1) * obs_dim]);
+            e.reset(rng, &mut obs[i * obs_dim..(i + 1) * obs_dim]);
         }
         VecEnv {
             returns: vec![0.0; envs.len()],
             finished: Vec::new(),
+            last_obs: obs.clone(),
             envs,
             obs_dim,
             act_dim,
             obs,
-            rng,
         }
     }
 
@@ -48,22 +58,26 @@ impl VecEnv {
     }
 
     /// Step all envs with the flattened action matrix [K, act_dim];
-    /// writes rewards/dones and auto-resets finished envs.
-    /// Returns per-env StepOut (done reflects pre-reset state).
-    pub fn step(&mut self, actions: &[f32], outs: &mut [StepOut]) {
+    /// writes rewards/dones and auto-resets finished envs (reset draws come
+    /// from `rng` in row order). Returns per-env StepOut (done reflects
+    /// pre-reset state); `last_obs` keeps the pre-reset observation of each
+    /// row while `obs` holds the next action's input.
+    pub fn step(&mut self, actions: &[f32], rng: &mut Rng, outs: &mut [StepOut]) {
         let k = self.envs.len();
         debug_assert_eq!(actions.len(), k * self.act_dim);
         debug_assert_eq!(outs.len(), k);
         for i in 0..k {
-            let obs_i = &mut self.obs[i * self.obs_dim..(i + 1) * self.obs_dim];
+            let row = i * self.obs_dim..(i + 1) * self.obs_dim;
             let act_i = &actions[i * self.act_dim..(i + 1) * self.act_dim];
-            let out = self.envs[i].step(act_i, obs_i);
+            let out = self.envs[i].step(act_i, &mut self.last_obs[row.clone()]);
             self.returns[i] += out.reward;
             outs[i] = out;
             if out.done || out.truncated {
                 self.finished.push(self.returns[i]);
                 self.returns[i] = 0.0;
-                self.envs[i].reset(&mut self.rng, obs_i);
+                self.envs[i].reset(rng, &mut self.obs[row]);
+            } else {
+                self.obs[row.clone()].copy_from_slice(&self.last_obs[row]);
             }
         }
     }
@@ -77,15 +91,62 @@ mod tests {
     #[test]
     fn steps_and_autoresets() {
         let envs: Vec<Box<dyn Env>> = (0..4).map(|_| Box::new(Pendulum::new()) as _).collect();
-        let mut v = VecEnv::new(envs, 5);
+        let mut rng = Rng::new(5);
+        let mut v = VecEnv::new(envs, &mut rng);
         assert_eq!(v.len(), 4);
         let actions = vec![0.0f32; 4 * v.act_dim];
         let mut outs = vec![StepOut::default(); 4];
         for _ in 0..250 {
-            v.step(&actions, &mut outs);
+            v.step(&actions, &mut rng, &mut outs);
         }
         // pendulum truncates at 200 steps -> all 4 finished once
         assert_eq!(v.finished.len(), 4);
         assert!(v.obs.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn last_obs_keeps_preset_terminal_observation() {
+        let envs: Vec<Box<dyn Env>> = (0..2).map(|_| Box::new(Pendulum::new()) as _).collect();
+        let mut rng = Rng::new(9);
+        let mut v = VecEnv::new(envs, &mut rng);
+        let actions = vec![0.0f32; 2 * v.act_dim];
+        let mut outs = vec![StepOut::default(); 2];
+        // while no episode ends, obs must track last_obs exactly
+        for _ in 0..199 {
+            v.step(&actions, &mut rng, &mut outs);
+            assert!(!(outs[0].done || outs[0].truncated));
+            assert_eq!(v.obs, v.last_obs);
+        }
+        // step 200: both rows truncate; obs is reset, last_obs is terminal
+        v.step(&actions, &mut rng, &mut outs);
+        assert!(outs.iter().all(|o| o.done || o.truncated));
+        assert_eq!(v.finished.len(), 2);
+        for i in 0..2 {
+            let row = i * v.obs_dim..(i + 1) * v.obs_dim;
+            assert_ne!(
+                &v.obs[row.clone()],
+                &v.last_obs[row],
+                "row {i}: reset obs should differ from the terminal obs"
+            );
+        }
+    }
+
+    #[test]
+    fn resets_consume_caller_rng() {
+        // Two VecEnvs fed the same RNG stream stay in lockstep; a diverged
+        // stream diverges the resets.
+        let mk = || -> Vec<Box<dyn Env>> { (0..2).map(|_| Box::new(Pendulum::new()) as _).collect() };
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let mut a = VecEnv::new(mk(), &mut r1);
+        let mut b = VecEnv::new(mk(), &mut r2);
+        let actions = vec![0.5f32; 2 * a.act_dim];
+        let mut outs = vec![StepOut::default(); 2];
+        for _ in 0..210 {
+            a.step(&actions, &mut r1, &mut outs);
+            b.step(&actions, &mut r2, &mut outs);
+            assert_eq!(a.obs, b.obs);
+            assert_eq!(a.last_obs, b.last_obs);
+        }
     }
 }

@@ -139,6 +139,7 @@ COMMANDS
   train    train one configuration
              --env pendulum|walker|cheetah|ant|humanoid|humanoid_flagrun
              --algo sac|td3  --bs N (0=adapt)  --sp N (0=adapt)
+             --envs-per-worker K (batched sampler: K envs per worker)
              --queue-size N (queue transport instead of shared memory)
              --model-parallel true  --gpus N  --gpu-throttle F
              --cpu-cores N  --seed N  --max-seconds S  --max-updates N

@@ -25,8 +25,9 @@ struct Dense {
 }
 
 /// MLP with two ReLU hidden layers and a linear head, evaluated out of a
-/// flat parameter slice. Scratch buffers are owned, so `forward` is
-/// allocation-free after construction.
+/// flat parameter slice. Scratch buffers are owned and grown on demand for
+/// batched calls, so `forward` / `forward_batch` are allocation-free at
+/// steady state.
 #[derive(Clone, Debug)]
 pub struct Mlp {
     layers: [Dense; 3],
@@ -58,6 +59,66 @@ fn dense(flat: &[f32], layer: &Dense, x: &[f32], y: &mut [f32], relu: bool) {
     }
 }
 
+/// Batched y = x @ W + b over `n` row-major samples (matrix-matrix).
+///
+/// Accumulation order per output element is ascending over the input index,
+/// exactly like the scalar [`dense`], so results match `forward` per row
+/// (bitwise up to the sign of zero). Rows are processed in tiles of 4 so
+/// each weight row is loaded once per 4 samples — the cache/ILP win the
+/// per-frame scalar kernel cannot get.
+fn dense_batch(flat: &[f32], layer: &Dense, xs: &[f32], n: usize, ys: &mut [f32], relu: bool) {
+    let (ind, outd) = (layer.in_dim, layer.out_dim);
+    let w = &flat[layer.w_off..layer.w_off + ind * outd];
+    let b = &flat[layer.b_off..layer.b_off + outd];
+    for r in 0..n {
+        ys[r * outd..(r + 1) * outd].copy_from_slice(b);
+    }
+    let mut r = 0;
+    while r + 4 <= n {
+        let tile = &mut ys[r * outd..(r + 4) * outd];
+        let (y0, t) = tile.split_at_mut(outd);
+        let (y1, t) = t.split_at_mut(outd);
+        let (y2, y3) = t.split_at_mut(outd);
+        for i in 0..ind {
+            let x0 = xs[r * ind + i];
+            let x1 = xs[(r + 1) * ind + i];
+            let x2 = xs[(r + 2) * ind + i];
+            let x3 = xs[(r + 3) * ind + i];
+            if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                continue; // ReLU sparsity: whole tile dead on this input
+            }
+            let row = &w[i * outd..(i + 1) * outd];
+            for j in 0..outd {
+                let wij = row[j];
+                y0[j] += x0 * wij;
+                y1[j] += x1 * wij;
+                y2[j] += x2 * wij;
+                y3[j] += x3 * wij;
+            }
+        }
+        r += 4;
+    }
+    // remainder rows: the scalar kernel verbatim
+    while r < n {
+        let y = &mut ys[r * outd..(r + 1) * outd];
+        for (i, &xi) in xs[r * ind..(r + 1) * ind].iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &w[i * outd..(i + 1) * outd];
+            for (yj, &wij) in y.iter_mut().zip(row) {
+                *yj += xi * wij;
+            }
+        }
+        r += 1;
+    }
+    if relu {
+        for v in ys[..n * outd].iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+}
+
 impl Mlp {
     /// Build the actor MLP from a layout.
     pub fn actor(layout: &Layout) -> anyhow::Result<Self> {
@@ -83,7 +144,27 @@ impl Mlp {
         dense(flat, &self.layers[0], x, &mut self.h0, true);
         dense(flat, &self.layers[1], &self.h0, &mut self.h1, true);
         dense(flat, &self.layers[2], &self.h1, &mut self.out, false);
-        &self.out
+        &self.out[..self.layers[2].out_dim]
+    }
+
+    /// Batched forward over `n` row-major inputs `[n, in_dim]`; returns the
+    /// row-major output `[n, out_dim]` (valid until next call). Matches `n`
+    /// independent [`Mlp::forward`] calls per row to f32 exactness.
+    pub fn forward_batch(&mut self, flat: &[f32], xs: &[f32], n: usize) -> &[f32] {
+        debug_assert_eq!(xs.len(), n * self.layers[0].in_dim);
+        let h = self.layers[0].out_dim;
+        let out_dim = self.layers[2].out_dim;
+        if self.h0.len() < n * h {
+            self.h0.resize(n * h, 0.0);
+            self.h1.resize(n * h, 0.0);
+        }
+        if self.out.len() < n * out_dim {
+            self.out.resize(n * out_dim, 0.0);
+        }
+        dense_batch(flat, &self.layers[0], xs, n, &mut self.h0, true);
+        dense_batch(flat, &self.layers[1], &self.h0, n, &mut self.h1, true);
+        dense_batch(flat, &self.layers[2], &self.h1, n, &mut self.out, false);
+        &self.out[..n * out_dim]
     }
 }
 
@@ -129,6 +210,47 @@ impl GaussianPolicy {
             for j in 0..self.act_dim {
                 let noise = if deterministic { 0.0 } else { rng.normal() * expl_noise };
                 action[j] = (out[j].tanh() + noise).clamp(-1.0, 1.0);
+            }
+        }
+    }
+
+    /// Batched [`GaussianPolicy::act`]: one matrix-matrix forward over `n`
+    /// row-major observations, then per-row noise drawn from `rng` in
+    /// deterministic order (row-major, action index ascending) — so `n = 1`
+    /// reproduces the scalar call's stream exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn act_batch(
+        &mut self,
+        flat: &[f32],
+        obs: &[f32],
+        n: usize,
+        rng: &mut Rng,
+        deterministic: bool,
+        expl_noise: f32,
+        actions: &mut [f32],
+    ) {
+        let act_dim = self.act_dim;
+        debug_assert_eq!(actions.len(), n * act_dim);
+        let stochastic = self.stochastic;
+        let out = self.mlp.forward_batch(flat, obs, n);
+        if stochastic {
+            for r in 0..n {
+                let (mu, log_std) = out[r * 2 * act_dim..(r + 1) * 2 * act_dim].split_at(act_dim);
+                let act = &mut actions[r * act_dim..(r + 1) * act_dim];
+                for j in 0..act_dim {
+                    let ls = log_std[j].clamp(LOG_STD_MIN, LOG_STD_MAX);
+                    let noise = if deterministic { 0.0 } else { rng.normal() };
+                    act[j] = (mu[j] + ls.exp() * noise).tanh();
+                }
+            }
+        } else {
+            for r in 0..n {
+                let row = &out[r * act_dim..(r + 1) * act_dim];
+                let act = &mut actions[r * act_dim..(r + 1) * act_dim];
+                for j in 0..act_dim {
+                    let noise = if deterministic { 0.0 } else { rng.normal() * expl_noise };
+                    act[j] = (row[j].tanh() + noise).clamp(-1.0, 1.0);
+                }
             }
         }
     }
@@ -195,6 +317,84 @@ mod tests {
         let mut a = [0.0f32];
         pol.act(&flat, &[0.3, 0.7], &mut rng, true, 0.0, &mut a);
         assert_eq!(a[0], 0.0f32.tanh()); // zero params -> mu = 0
+    }
+
+    #[test]
+    fn forward_batch_matches_per_row_forward() {
+        let lay = toy_layout();
+        let mut rng = Rng::new(11);
+        let mut flat = vec![0.0f32; 64];
+        rng.fill_uniform(&mut flat, -1.5, 1.5);
+        let mut scalar = Mlp::actor(&lay).unwrap();
+        let mut batched = Mlp::actor(&lay).unwrap();
+        // cover both the 4-row tile and the remainder path
+        for n in [1usize, 3, 4, 7, 16] {
+            let mut xs = vec![0.0f32; n * 2];
+            rng.fill_normal(&mut xs);
+            let ys = batched.forward_batch(&flat, &xs, n).to_vec();
+            for r in 0..n {
+                let yr = scalar.forward(&flat, &xs[r * 2..(r + 1) * 2]);
+                for j in 0..2 {
+                    assert!(
+                        (ys[r * 2 + j] - yr[j]).abs() < 1e-6,
+                        "n={n} row {r} out {j}: batched {} vs scalar {}",
+                        ys[r * 2 + j],
+                        yr[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn act_batch_n1_matches_act_stream() {
+        // With identical RNG streams, act_batch(n=1) must reproduce act()
+        // exactly — the property the K=1 batched sampler relies on.
+        let lay = toy_layout();
+        let mut init = Rng::new(5);
+        let mut flat = vec![0.0f32; 64];
+        init.fill_uniform(&mut flat, -1.0, 1.0);
+        let mut p1 = GaussianPolicy::new(&lay).unwrap();
+        let mut p2 = GaussianPolicy::new(&lay).unwrap();
+        let mut r1 = Rng::new(99);
+        let mut r2 = Rng::new(99);
+        let mut a1 = [0.0f32];
+        let mut a2 = [0.0f32];
+        for step in 0..100 {
+            let obs = [init.normal(), init.normal()];
+            p1.act(&flat, &obs, &mut r1, false, 0.1, &mut a1);
+            p2.act_batch(&flat, &obs, 1, &mut r2, false, 0.1, &mut a2);
+            assert_eq!(a1, a2, "diverged at step {step}");
+        }
+    }
+
+    #[test]
+    fn act_batch_rows_match_scalar_acts() {
+        // Multi-row: per-row noise is drawn row-major, so a scalar policy
+        // sharing the RNG stream and stepping rows in order must agree.
+        let lay = toy_layout();
+        let mut init = Rng::new(6);
+        let mut flat = vec![0.0f32; 64];
+        init.fill_uniform(&mut flat, -1.0, 1.0);
+        let n = 6;
+        let mut obs = vec![0.0f32; n * 2];
+        init.fill_normal(&mut obs);
+        let mut pb = GaussianPolicy::new(&lay).unwrap();
+        let mut ps = GaussianPolicy::new(&lay).unwrap();
+        let mut rb = Rng::new(1234);
+        let mut rs = Rng::new(1234);
+        let mut batched = vec![0.0f32; n];
+        pb.act_batch(&flat, &obs, n, &mut rb, false, 0.1, &mut batched);
+        for r in 0..n {
+            let mut a = [0.0f32];
+            ps.act(&flat, &obs[r * 2..(r + 1) * 2], &mut rs, false, 0.1, &mut a);
+            assert!(
+                (batched[r] - a[0]).abs() < 1e-6,
+                "row {r}: batched {} vs scalar {}",
+                batched[r],
+                a[0]
+            );
+        }
     }
 
     #[test]

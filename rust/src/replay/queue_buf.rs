@@ -71,6 +71,32 @@ impl ExpSink for QueueBuffer {
         g.q.push_back(frame.to_vec());
     }
 
+    /// Batched push: one lock acquisition for the whole frame block instead
+    /// of one per frame (the batched sampler's transport call).
+    fn push_many(&self, frames: &[f32], n_frames: usize) {
+        if n_frames == 0 {
+            return;
+        }
+        let f = self.spec.f32s();
+        debug_assert_eq!(frames.len(), n_frames * f);
+        self.pushed.fetch_add(n_frames as u64, Ordering::Relaxed);
+        let mut lost = 0u64;
+        {
+            let mut g = self.inner.lock().unwrap();
+            for frame in frames.chunks_exact(f) {
+                if g.q.len() >= self.queue_size {
+                    // full queue: the frame is dropped — transmission loss
+                    lost += 1;
+                } else {
+                    g.q.push_back(frame.to_vec());
+                }
+            }
+        }
+        if lost > 0 {
+            self.lost.fetch_add(lost, Ordering::Relaxed);
+        }
+    }
+
     fn stats(&self) -> TransportStats {
         TransportStats {
             pushed: self.pushed.load(Ordering::Relaxed),
@@ -192,6 +218,32 @@ mod tests {
         assert_eq!(st.pushed, 10);
         assert_eq!(st.lost, 6);
         assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn push_many_fills_then_drops() {
+        let sp = spec();
+        let f = sp.f32s();
+        let q = QueueBuffer::new(6, sp);
+        // 10 frames in one batched call: 6 enqueued, 4 lost
+        let mut frames = vec![0.0f32; 10 * f];
+        for k in 0..10 {
+            frames[k * f] = k as f32;
+        }
+        q.push_many(&frames, 10);
+        let st = q.stats();
+        assert_eq!(st.pushed, 10);
+        assert_eq!(st.lost, 4);
+        assert_eq!(q.len(), 6);
+        // queued frames are the first six, in order
+        let mut src = QueueSource::new(q.clone(), 100);
+        assert_eq!(src.drain(true), 6);
+        let mut rng = Rng::new(4);
+        let mut batch = Batch::new(6, 2, 1);
+        assert!(src.sample_batch(&mut rng, &mut batch));
+        for i in 0..6 {
+            assert!(batch.s[i * 2] < 6.0, "dropped frame leaked: {}", batch.s[i * 2]);
+        }
     }
 
     #[test]

@@ -215,10 +215,10 @@ impl ShmRing {
         (self.cursor() as usize).min(self.capacity)
     }
 
-    /// Push one frame (multi-writer safe, wait-free for the learner).
-    pub fn push_frame(&self, frame: &[f32]) {
-        debug_assert_eq!(frame.len(), self.frame);
-        let idx = self.hdr(3).fetch_add(1, Ordering::AcqRel);
+    /// Seqlock-write one claimed global index: loss accounting, odd marker,
+    /// payload copy, publish with the wrap-count epoch.
+    #[inline]
+    fn publish_slot(&self, idx: u64, frame: &[f32]) {
         let slot = (idx % self.capacity as u64) as usize;
         let seq = self.seq(slot);
         let prev = seq.load(Ordering::Relaxed);
@@ -234,6 +234,36 @@ impl ShmRing {
         // publish with a new even value (epoch = wrap count + 1)
         let epoch = (idx / self.capacity as u64 + 1) << 1;
         seq.store(epoch, Ordering::Release);
+    }
+
+    /// Push one frame (multi-writer safe, wait-free for the learner).
+    pub fn push_frame(&self, frame: &[f32]) {
+        debug_assert_eq!(frame.len(), self.frame);
+        let idx = self.hdr(3).fetch_add(1, Ordering::AcqRel);
+        self.publish_slot(idx, frame);
+    }
+
+    /// Push `n` contiguous frames with a single head reservation: one atomic
+    /// RMW claims slots `[base, base + n)`, then each slot is seqlock-
+    /// published independently. This is the batched sampler's hot path —
+    /// K frames per tick cost one cursor atomic instead of K.
+    pub fn push_frames(&self, frames: &[f32], n: usize) {
+        debug_assert_eq!(frames.len(), n * self.frame);
+        if n == 0 {
+            return;
+        }
+        let base = self.hdr(3).fetch_add(n as u64, Ordering::AcqRel);
+        // bound to the n slots reserved above, whatever frames' length is
+        for (k, frame) in frames.chunks_exact(self.frame).take(n).enumerate() {
+            self.publish_slot(base + k as u64, frame);
+        }
+    }
+
+    /// Read the frame at `slot` into `out` if a consistent value is
+    /// published there (seqlock-validated; does not mark the slot sampled).
+    /// Exposed for tests and tools that need in-order inspection.
+    pub fn read_slot(&self, slot: usize, out: &mut [f32]) -> bool {
+        self.try_read(slot, out)
     }
 
     /// Read slot into `out`; seqlock-validated. Returns false on torn read.
@@ -263,6 +293,10 @@ impl ShmRing {
 impl ExpSink for ShmRing {
     fn push(&self, frame: &[f32]) {
         self.push_frame(frame);
+    }
+
+    fn push_many(&self, frames: &[f32], n_frames: usize) {
+        self.push_frames(frames, n_frames);
     }
 
     fn stats(&self) -> TransportStats {
@@ -364,6 +398,59 @@ mod tests {
             assert!(k >= 0.0 && k < 8.0);
             assert_eq!(batch.r[i], k * 10.0);
             assert_eq!(batch.d[i], if (k as i64) % 2 == 0 { 1.0 } else { 0.0 });
+        }
+    }
+
+    #[test]
+    fn push_frames_matches_sequential_pushes() {
+        let sp = spec();
+        let f = sp.f32s();
+        let single = mk(8);
+        let batched = mk(8);
+        // 6 distinct frames: push one-by-one vs one batch
+        let mut frames = vec![0.0f32; 6 * f];
+        for k in 0..6 {
+            for x in frames[k * f..(k + 1) * f].iter_mut() {
+                *x = k as f32 + 0.5;
+            }
+            single.push_frame(&frames[k * f..(k + 1) * f]);
+        }
+        batched.push_frames(&frames, 6);
+        assert_eq!(single.ring_stats().pushed, batched.ring_stats().pushed);
+        assert_eq!(single.visible_now(), batched.visible_now());
+        let mut a = vec![0.0f32; f];
+        let mut b = vec![0.0f32; f];
+        for slot in 0..6 {
+            assert!(single.read_slot(slot, &mut a));
+            assert!(batched.read_slot(slot, &mut b));
+            assert_eq!(a, b, "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn push_frames_wraps_and_counts_loss() {
+        let sp = spec();
+        let f = sp.f32s();
+        let ring = mk(4);
+        // 3 batches of 4 into a 4-slot ring: 8 frames overwritten unseen
+        let mut frames = vec![0.0f32; 4 * f];
+        for round in 0..3 {
+            for k in 0..4 {
+                for x in frames[k * f..(k + 1) * f].iter_mut() {
+                    *x = (round * 4 + k) as f32;
+                }
+            }
+            ring.push_frames(&frames, 4);
+        }
+        let st = ring.ring_stats();
+        assert_eq!(st.pushed, 12);
+        assert_eq!(st.visible, 4);
+        assert_eq!(st.lost, 8);
+        // latest round is readable and consistent
+        let mut out = vec![0.0f32; f];
+        for slot in 0..4 {
+            assert!(ring.read_slot(slot, &mut out));
+            assert_eq!(out[0], (8 + slot) as f32);
         }
     }
 

@@ -60,10 +60,26 @@ impl TransportStats {
     }
 }
 
-/// Sampler-side: push one packed frame. Must be callable concurrently from
+/// Sampler-side: push packed frames. Must be callable concurrently from
 /// many worker threads without blocking the learner.
 pub trait ExpSink: Send + Sync {
     fn push(&self, frame: &[f32]);
+
+    /// Push `n_frames` packed frames stored contiguously in `frames`
+    /// (length `n_frames * frame_f32s`). Transports override this to
+    /// amortize per-frame synchronization (one ring reservation / one queue
+    /// lock for the whole batch); the default is `n_frames` scalar pushes.
+    fn push_many(&self, frames: &[f32], n_frames: usize) {
+        if n_frames == 0 || frames.is_empty() {
+            return;
+        }
+        debug_assert_eq!(frames.len() % n_frames, 0);
+        let f = frames.len() / n_frames;
+        for chunk in frames.chunks_exact(f).take(n_frames) {
+            self.push(chunk);
+        }
+    }
+
     fn stats(&self) -> TransportStats;
 }
 

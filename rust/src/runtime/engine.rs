@@ -10,6 +10,8 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use super::artifacts::{ArtifactMeta, Manifest};
+// Offline builds use the stub; swap in the real bindings with `use xla;`.
+use super::xla_stub as xla;
 
 /// Resolve the artifacts directory: $SPREEZE_ARTIFACTS or ./artifacts
 /// relative to the workspace root (walking up from cwd).

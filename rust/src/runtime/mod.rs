@@ -5,6 +5,7 @@
 
 pub mod artifacts;
 pub mod engine;
+pub mod xla_stub;
 
 pub use artifacts::{ArtifactMeta, Manifest};
 pub use engine::{default_artifacts_dir, Engine, StepExe};

@@ -1,0 +1,174 @@
+//! Transport under concurrency: N producer threads doing mixed `push` /
+//! `push_many` into one shared-memory ring while a reader samples batches.
+//! Every sampled frame must be internally consistent (checksum-validated —
+//! no torn frames), `stats().pushed` must equal the exact number of frames
+//! sent, and loss accounting must stay consistent with the ring capacity.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use spreeze::replay::shm_ring::ShmSource;
+use spreeze::replay::{Batch, ExpSink, ExpSource, FrameSpec, QueueBuffer, ShmRing, ShmRingOptions};
+use spreeze::util::rng::Rng;
+
+const OBS: usize = 3;
+const ACT: usize = 2;
+
+fn spec() -> FrameSpec {
+    FrameSpec { obs_dim: OBS, act_dim: ACT }
+}
+
+/// Frame layout is 10 f32s: payload[0..9] all equal to a writer-unique tag,
+/// last element = 9 * tag (the checksum). Tags stay below 2^24 / 9 so all
+/// arithmetic is exact in f32.
+fn checksum_frame(frame: &mut [f32], tag: f32) {
+    let n = frame.len();
+    for x in frame[..n - 1].iter_mut() {
+        *x = tag;
+    }
+    frame[n - 1] = tag * (n - 1) as f32;
+}
+
+/// Validate one unpacked batch row; returns the tag.
+fn validate_row(batch: &Batch, i: usize) -> f32 {
+    let tag = batch.s[i * OBS];
+    for j in 0..OBS {
+        assert_eq!(batch.s[i * OBS + j], tag, "torn obs in row {i}");
+    }
+    for j in 0..ACT {
+        assert_eq!(batch.a[i * ACT + j], tag, "torn action in row {i}");
+    }
+    assert_eq!(batch.r[i], tag, "torn reward in row {i}");
+    assert_eq!(batch.d[i], tag, "torn done in row {i}");
+    for j in 0..OBS - 1 {
+        assert_eq!(batch.s2[i * OBS + j], tag, "torn s2 in row {i}");
+    }
+    let f32s = spec().f32s();
+    assert_eq!(
+        batch.s2[i * OBS + OBS - 1],
+        tag * (f32s - 1) as f32,
+        "checksum mismatch in row {i}: frame torn across writers"
+    );
+    tag
+}
+
+#[test]
+fn concurrent_mixed_push_and_push_many_no_torn_frames() {
+    const WRITERS: usize = 4;
+    const ROUNDS: usize = 750;
+    const BATCH_K: usize = 7;
+    // per round: 1 scalar push + one 7-frame batched push = 8 frames
+    const FRAMES_PER_WRITER: u64 = (ROUNDS * (1 + BATCH_K)) as u64;
+    const CAPACITY: usize = 1024;
+
+    let sp = spec();
+    let f = sp.f32s();
+    let ring = Arc::new(
+        ShmRing::create(&ShmRingOptions { capacity: CAPACITY, spec: sp, shm_name: None }).unwrap(),
+    );
+
+    let done = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let ring = ring.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let mut src = ShmSource::new(ring);
+            let mut rng = Rng::new(1);
+            let mut batch = Batch::new(64, OBS, ACT);
+            let mut checked = 0u64;
+            while !done.load(Ordering::Relaxed) || checked == 0 {
+                if !src.sample_batch(&mut rng, &mut batch) {
+                    std::hint::spin_loop();
+                    continue;
+                }
+                for i in 0..batch.bs {
+                    let tag = validate_row(&batch, i);
+                    let w = (tag as u64) / 100_000;
+                    assert!(w < WRITERS as u64, "tag {tag} from unknown writer");
+                    checked += 1;
+                }
+            }
+            checked
+        })
+    };
+
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|w| {
+            let ring = ring.clone();
+            std::thread::spawn(move || {
+                let mut frame = vec![0.0f32; f];
+                let mut frames = vec![0.0f32; BATCH_K * f];
+                let mut seq = 0u32;
+                for _ in 0..ROUNDS {
+                    let tag = (w * 100_000 + seq as usize) as f32;
+                    seq += 1;
+                    checksum_frame(&mut frame, tag);
+                    ring.push(&frame);
+                    for k in 0..BATCH_K {
+                        let tag = (w * 100_000 + seq as usize) as f32;
+                        seq += 1;
+                        checksum_frame(&mut frames[k * f..(k + 1) * f], tag);
+                    }
+                    ring.push_many(&frames, BATCH_K);
+                }
+            })
+        })
+        .collect();
+
+    for h in writers {
+        h.join().unwrap();
+    }
+    done.store(true, Ordering::Relaxed);
+    let checked = reader.join().unwrap();
+    assert!(checked > 0, "reader validated no frames");
+
+    let st = ring.ring_stats();
+    let sent = FRAMES_PER_WRITER * WRITERS as u64;
+    assert_eq!(st.pushed, sent, "pushed accounting drifted");
+    assert_eq!(st.visible, CAPACITY, "ring should be full");
+    // every loss is an overwrite of a never-sampled published slot; with
+    // all slots written at least once, overwrites number pushed - capacity
+    assert!(
+        st.lost <= sent - CAPACITY as u64,
+        "lost {} exceeds possible overwrites {}",
+        st.lost,
+        sent - CAPACITY as u64
+    );
+}
+
+#[test]
+fn concurrent_queue_push_many_accounting() {
+    const WRITERS: usize = 4;
+    const ROUNDS: usize = 200;
+    const BATCH_K: usize = 5;
+    let sp = spec();
+    let f = sp.f32s();
+    let q = QueueBuffer::new(50_000, sp);
+
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|w| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut frame = vec![0.0f32; f];
+                let mut frames = vec![0.0f32; BATCH_K * f];
+                for round in 0..ROUNDS {
+                    checksum_frame(&mut frame, (w * 100_000 + round) as f32);
+                    q.push(&frame);
+                    for k in 0..BATCH_K {
+                        checksum_frame(&mut frames[k * f..(k + 1) * f], (w * 100_000 + round) as f32);
+                    }
+                    q.push_many(&frames, BATCH_K);
+                }
+            })
+        })
+        .collect();
+    for h in writers {
+        h.join().unwrap();
+    }
+    let st = q.stats();
+    let sent = (WRITERS * ROUNDS * (1 + BATCH_K)) as u64;
+    assert_eq!(st.pushed, sent);
+    // queue was large enough: nothing dropped, everything visible
+    assert_eq!(st.lost, 0);
+    assert_eq!(st.visible as u64, sent);
+}
