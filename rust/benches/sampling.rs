@@ -144,13 +144,7 @@ fn main() {
 
     scalar_vs_batched(&b);
 
-    let manifest = match Manifest::load(&default_artifacts_dir()) {
-        Ok(m) => m,
-        Err(_) => {
-            println!("\n(no artifacts: skipping policy-forward + full-loop benches)");
-            return;
-        }
-    };
+    let manifest = Manifest::load_or_native(&default_artifacts_dir()).unwrap();
 
     println!("\n-- native policy forward (Rust MLP over flat params)");
     for env_name in ["pendulum", "walker", "humanoid"] {

@@ -1,11 +1,16 @@
 //! Bench: network-update throughput vs batch size (Table 3 BS rows, the
 //! paper's "Network Update Frame Rate" = update_hz × BS) — executes the
-//! real SAC full-step artifact per AOT-compiled batch size, plus the
+//! real SAC/TD3 full-step per batch size on whichever backend the manifest
+//! selects (native CPU executor when no artifacts are built), plus the
 //! dual-executor model-parallel round for comparison (Fig. 6c GPU1 row).
+//!
+//! `SPREEZE_BENCH_SMOKE=1` shrinks the measurement window and caps the
+//! batch-size ladder so CI can exercise the whole path in seconds.
 
 use std::sync::Arc;
 
 use spreeze::config::presets;
+use spreeze::config::Algo;
 use spreeze::coordinator::metrics::MetricsHub;
 use spreeze::learner::model_parallel::ModelParallelLearner;
 use spreeze::learner::Learner;
@@ -30,76 +35,75 @@ fn filled_ring(obs_dim: usize, act_dim: usize, n: usize) -> Arc<ShmRing> {
 }
 
 fn main() {
-    let manifest = match Manifest::load(&default_artifacts_dir()) {
-        Ok(m) => m,
-        Err(e) => {
-            println!("no artifacts ({e}); run `make artifacts`");
-            return;
+    let smoke = std::env::var("SPREEZE_BENCH_SMOKE").is_ok();
+    let manifest = Manifest::load_or_native(&default_artifacts_dir()).unwrap();
+    let backend = if manifest.native { "native" } else { "pjrt artifacts" };
+    let window = if smoke {
+        std::time::Duration::from_millis(200)
+    } else {
+        std::time::Duration::from_secs(3)
+    };
+    let max_bs = if smoke { 512 } else { usize::MAX };
+    let b = Bench { window, ..Default::default() };
+
+    println!("== network update bench ({backend} backend) ==\n");
+    println!(
+        "{:<30} {:>12} {:>14} {:>16}",
+        "step", "ms/update", "updates/s", "update frames/s"
+    );
+
+    let row = |env: &str, algo: Algo| {
+        let lay = manifest.layout(env, algo.name()).unwrap().clone();
+        let mut cfg = presets::preset(env);
+        cfg.algo = algo;
+        for bs in manifest.batch_sizes(env, algo.name(), "full") {
+            if bs > max_bs {
+                continue;
+            }
+            let ring = filled_ring(lay.obs_dim, lay.act_dim, 64 * 1024);
+            let mut learner =
+                Learner::new(&cfg, &manifest, bs, Box::new(ShmSource::new(ring))).unwrap();
+            let name = format!("{env} {}_full_bs{bs}", algo.name());
+            let r = b.run(&name, Some(bs as f64), || {
+                assert!(learner.try_update().unwrap())
+            });
+            println!(
+                "{:<30} {:>12.2} {:>14.1} {:>16.0}",
+                name,
+                r.mean_ns / 1e6,
+                1e9 / r.mean_ns,
+                r.items_per_sec()
+            );
         }
     };
-    let b = Bench { window: std::time::Duration::from_secs(3), ..Default::default() };
-    println!("== network update bench (walker SAC full step) ==\n");
-    println!(
-        "{:<26} {:>12} {:>14} {:>16}",
-        "artifact", "ms/update", "updates/s", "update frames/s"
-    );
-    let cfg = presets::preset("walker");
-    let lay = manifest.layout("walker", "sac").unwrap().clone();
-    for bs in manifest.batch_sizes("walker", "sac", "full") {
-        let ring = filled_ring(lay.obs_dim, lay.act_dim, 64 * 1024);
-        let mut learner =
-            Learner::new(&cfg, &manifest, bs, Box::new(ShmSource::new(ring))).unwrap();
-        let r = b.run(&format!("sac_full_bs{bs}"), Some(bs as f64), || {
-            assert!(learner.try_update().unwrap())
-        });
-        println!(
-            "{:<26} {:>12.2} {:>14.1} {:>16.0}",
-            format!("sac_full_bs{bs}"),
-            r.mean_ns / 1e6,
-            1e9 / r.mean_ns,
-            r.items_per_sec()
-        );
-    }
 
-    // model-parallel round at 8192 (if split artifacts exist)
-    if manifest.find("walker", "sac", "actor", 8192).is_ok() {
+    row("walker", Algo::Sac);
+    row("walker", Algo::Td3);
+    row("pendulum", Algo::Sac);
+
+    // model-parallel round (if split artifacts exist at this bs)
+    let mp_bs = if smoke { 256 } else { 8192 };
+    if manifest.find("walker", "sac", "actor", mp_bs).is_ok() {
+        let lay = manifest.layout("walker", "sac").unwrap().clone();
         let ring = filled_ring(lay.obs_dim, lay.act_dim, 64 * 1024);
         let hub = Arc::new(MetricsHub::new());
-        let mut cfg_mp = cfg.clone();
+        let mut cfg_mp = presets::preset("walker");
         cfg_mp.model_parallel = true;
         let mut mp = ModelParallelLearner::new(
             &cfg_mp,
             &manifest,
-            8192,
+            mp_bs,
             Box::new(ShmSource::new(ring)),
             hub,
         )
         .unwrap();
-        let r = b.run("model_parallel_bs8192", Some(8192.0), || {
+        let name = format!("walker mp_actor+critic_bs{mp_bs}");
+        let r = b.run(&name, Some(mp_bs as f64), || {
             assert!(mp.try_update().unwrap())
         });
         println!(
-            "{:<26} {:>12.2} {:>14.1} {:>16.0}   (dual executor)",
-            "mp_actor+critic_bs8192",
-            r.mean_ns / 1e6,
-            1e9 / r.mean_ns,
-            r.items_per_sec()
-        );
-    }
-
-    println!("\n== pendulum (small net) ==");
-    let lay_p = manifest.layout("pendulum", "sac").unwrap().clone();
-    let cfg_p = presets::preset("pendulum");
-    for bs in manifest.batch_sizes("pendulum", "sac", "full") {
-        let ring = filled_ring(lay_p.obs_dim, lay_p.act_dim, 64 * 1024);
-        let mut learner =
-            Learner::new(&cfg_p, &manifest, bs, Box::new(ShmSource::new(ring))).unwrap();
-        let r = b.run(&format!("pendulum sac_full_bs{bs}"), Some(bs as f64), || {
-            assert!(learner.try_update().unwrap())
-        });
-        println!(
-            "{:<26} {:>12.2} {:>14.1} {:>16.0}",
-            format!("sac_full_bs{bs}"),
+            "{:<30} {:>12.2} {:>14.1} {:>16.0}   (dual executor)",
+            name,
             r.mean_ns / 1e6,
             1e9 / r.mean_ns,
             r.items_per_sec()

@@ -101,12 +101,15 @@ impl HillClimber {
             self.locked = true; // converged (convex response: we are at peak)
             return self.current();
         }
-        let new_idx = (self.idx as i64 + dir as i64)
-            .clamp(0, self.ladder.len() as i64 - 1) as usize;
-        if new_idx != self.idx {
-            self.last_direction = if new_idx > self.idx { 1 } else { -1 };
-            self.idx = new_idx;
+        // Record the *attempted* direction even when the move clamps at a
+        // ladder edge: the `regressed → -last_direction` back-off must
+        // reverse the last attempt, not a stale earlier move — otherwise a
+        // clamped shrink at the bottom rung leaves last_direction pointing
+        // up and a later regression pushes further into the edge.
+        if dir != 0 {
+            self.last_direction = dir.signum();
         }
+        self.idx = (self.idx as i64 + dir as i64).clamp(0, self.ladder.len() as i64 - 1) as usize;
         self.current()
     }
 }
@@ -182,6 +185,37 @@ mod tests {
         for _ in 0..5 {
             assert_eq!(hc.observe(Obs { usage: 0.2, throughput: 1e9 }), s);
         }
+    }
+
+    #[test]
+    fn clamped_shrink_at_bottom_backs_off_upward() {
+        // Start at the bottom rung, attempt a shrink (clamped), then
+        // regress: the back-off must move UP (away from the edge), not try
+        // to shrink again based on a stale pre-clamp direction.
+        let mut hc = HillClimber::new((1..=4).collect(), 1, 0.5, 0.9);
+        assert_eq!(hc.current(), 1);
+        // saturated: attempted shrink, clamped at idx 0
+        assert_eq!(hc.observe(Obs { usage: 0.95, throughput: 100.0 }), 1);
+        assert_eq!(hc.last_direction, -1, "clamped attempt must be recorded");
+        // throughput collapses: reverse of the last *attempt* is up
+        let v = hc.observe(Obs { usage: 0.7, throughput: 50.0 });
+        assert_eq!(v, 2, "regression after clamped shrink must grow");
+    }
+
+    #[test]
+    fn clamped_grow_at_top_backs_off_downward() {
+        // Symmetric case at the top rung: a clamped grow followed by a
+        // regression must shrink.
+        let mut hc = HillClimber::new((1..=4).collect(), 4, 0.5, 0.9);
+        // force last_direction to look "down" via an in-band regression
+        // history, then attempt a clamped grow.
+        assert_eq!(hc.current(), 4);
+        // underused: attempted grow, clamped at the top rung
+        assert_eq!(hc.observe(Obs { usage: 0.2, throughput: 100.0 }), 4);
+        assert_eq!(hc.last_direction, 1, "clamped attempt must be recorded");
+        // throughput collapses (in band): back off downward
+        let v = hc.observe(Obs { usage: 0.7, throughput: 50.0 });
+        assert_eq!(v, 3, "regression after clamped grow must shrink");
     }
 
     #[test]

@@ -50,7 +50,7 @@ impl Framework for SyncFramework {
     }
 
     fn run(&self, cfg: &TrainConfig) -> Result<RunSummary> {
-        let manifest = Manifest::load(&default_artifacts_dir())?;
+        let manifest = Manifest::load_or_native(&default_artifacts_dir())?;
         let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();
         let run_dir = PathBuf::from(&cfg.run_dir);
         std::fs::create_dir_all(&run_dir)?;

@@ -83,8 +83,9 @@ pub struct TrainConfig {
     pub lr: f64,
     pub gamma: f64,
     pub tau: f64,
-    /// 0.0 = auto (-act_dim).
-    pub target_entropy: f64,
+    /// None = auto (-act_dim); Some(x) is passed through verbatim — an
+    /// explicit 0.0 is a valid setting, not the auto sentinel.
+    pub target_entropy: Option<f64>,
     pub reward_scale: f64,
     pub policy_noise: f64,
     /// TD3 delayed policy update period.
@@ -135,7 +136,7 @@ impl Default for TrainConfig {
             lr: 3e-4,
             gamma: 0.99,
             tau: 0.005,
-            target_entropy: 0.0,
+            target_entropy: None,
             reward_scale: 1.0,
             policy_noise: 0.2,
             policy_delay: 2,
@@ -177,6 +178,9 @@ impl TrainConfig {
         self.lr = a.f64_or("lr", self.lr)?;
         self.gamma = a.f64_or("gamma", self.gamma)?;
         self.tau = a.f64_or("tau", self.tau)?;
+        if let Some(te) = a.str_opt("target-entropy") {
+            self.target_entropy = Some(te.parse()?);
+        }
         self.reward_scale = a.f64_or("reward-scale", self.reward_scale)?;
         self.start_steps = a.u64_or("start-steps", self.start_steps)?;
         self.update_after = a.usize_or("update-after", self.update_after)?;

@@ -126,7 +126,10 @@ impl Coordinator {
         } else {
             PathBuf::from(&cfg.artifacts_dir)
         };
-        let manifest = Manifest::load(&artifacts_dir)?;
+        let manifest = Manifest::load_or_native(&artifacts_dir)?;
+        if cfg.verbose && manifest.native {
+            println!("backend: native CPU executor (no artifacts manifest)");
+        }
         let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();
         // fail fast if Rust env dims drifted from the python presets
         {

@@ -13,7 +13,7 @@ use crate::runtime::{default_artifacts_dir, Manifest};
 pub fn run(opts: &HarnessOpts) -> Result<()> {
     let dir = opts.ensure_dir("fig7")?;
     let env = "walker";
-    let manifest = Manifest::load(&default_artifacts_dir())?;
+    let manifest = Manifest::load_or_native(&default_artifacts_dir())?;
     let ladder = manifest.batch_sizes(env, "sac", "full");
 
     let one = |tag: &str, bs: usize, sp: usize, adapt: bool| -> Result<RunSummary> {

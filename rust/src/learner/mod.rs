@@ -1,9 +1,11 @@
 //! Network-update process (paper §3.2): pulls large batches from the
-//! experience source and executes the AOT-compiled SAC/TD3 step artifact.
+//! experience source and executes the SAC/TD3 step — natively via
+//! `runtime::native`, or through the AOT-compiled PJRT artifact when an
+//! `artifacts/` manifest is present.
 //!
-//! Input/output wiring is driven entirely by the artifact manifest's named
-//! tensor lists, so the same learner drives `sac_full`, `td3_full`, and the
-//! split `actor`/`critic` modules without per-algorithm glue.
+//! Input/output wiring is driven entirely by the manifest's named tensor
+//! lists, so the same learner drives `sac_full`, `td3_full`, and the split
+//! `actor`/`critic` modules on either backend without per-algorithm glue.
 
 pub mod model_parallel;
 
@@ -22,12 +24,10 @@ pub const METRIC_NAMES: [&str; 8] = [
 ];
 
 /// Runtime-tunable hyper vector (mirrors `model.py::HYPER`).
+/// `target_entropy: None` means auto (`-act_dim`, the SAC default); an
+/// explicit `Some(0.0)` is a legitimate setting and is passed through.
 pub fn hyper_vec(cfg: &TrainConfig, act_dim: usize) -> [f32; 6] {
-    let target_entropy = if cfg.target_entropy == 0.0 {
-        -(act_dim as f64)
-    } else {
-        cfg.target_entropy
-    };
+    let target_entropy = cfg.target_entropy.unwrap_or(-(act_dim as f64));
     [
         cfg.lr as f32,
         cfg.gamma as f32,
@@ -67,7 +67,7 @@ impl Learner {
         source: Box<dyn ExpSource>,
     ) -> Result<Learner> {
         let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();
-        let engine = Engine::cpu()?;
+        let engine = Engine::for_manifest(manifest)?;
         let meta = manifest.find(&cfg.env, cfg.algo.name(), "full", bs)?;
         let exe = engine.load(manifest, meta)?;
         let mut rng = Rng::for_worker(cfg.seed, 0xC0FFEE);

@@ -40,6 +40,7 @@ struct ExecutorHandle {
 }
 
 /// Spawn an executor thread owning its own Engine + compiled artifact.
+#[allow(clippy::too_many_arguments)]
 fn spawn_executor(
     manifest: &Manifest,
     env: &str,
@@ -59,10 +60,11 @@ fn spawn_executor(
     let handle = std::thread::Builder::new()
         .name(format!("executor-{busy_idx}-{func}"))
         .spawn(move || {
-            // Engine is created on this thread (PJRT client is thread-bound).
+            // Engine is created on this thread (PJRT client is thread-bound;
+            // the native manifest is rebuilt deterministically per thread).
             let setup = (|| -> Result<_> {
-                let manifest = Manifest::load(&dir)?;
-                let engine = Engine::cpu()?;
+                let manifest = Manifest::load_or_native(&dir)?;
+                let engine = Engine::for_manifest(&manifest)?;
                 let exe = engine.load(&manifest, &meta)?;
                 Ok((engine, exe))
             })();

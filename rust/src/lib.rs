@@ -1,7 +1,9 @@
 //! # Spreeze — high-throughput parallel RL framework (paper reproduction)
 //!
-//! Rust coordinator (L3) over AOT-compiled JAX/Pallas update artifacts (L2/L1)
-//! executed through the PJRT CPU client (`xla` crate). Python never runs at
+//! Rust coordinator (L3) over the SAC/TD3 update step, executed either by
+//! the **native Rust backend** ([`runtime::native`]: forward + backprop +
+//! Adam, no artifacts needed) or by AOT-compiled JAX/Pallas update artifacts
+//! (L2/L1) through the PJRT CPU client (`xla` crate). Python never runs at
 //! training time.
 //!
 //! Architecture (paper Fig. 1):

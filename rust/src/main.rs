@@ -103,8 +103,11 @@ fn run() -> Result<()> {
         "info" => {
             a.finish()?;
             let dir = default_artifacts_dir();
-            let m = Manifest::load(&dir)?;
+            let m = Manifest::load_or_native(&dir)?;
             println!("artifacts dir: {}", dir.display());
+            let backend =
+                if m.native { "native CPU executor (synthesized manifest)" } else { "pjrt" };
+            println!("backend: {backend}");
             println!("layouts:");
             for (k, lay) in &m.layouts {
                 println!(

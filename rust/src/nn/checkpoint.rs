@@ -90,6 +90,7 @@ impl CheckpointStore {
     }
 
     /// Save the full learner state (params/targets/m/v/step) for resume.
+    #[allow(clippy::too_many_arguments)]
     pub fn save_full(
         &self,
         env: &str,

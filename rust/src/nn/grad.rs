@@ -1,0 +1,420 @@
+//! Backward pass + optimizer kernels for the native update backend.
+//!
+//! [`MlpGrad`] is the training-side sibling of [`crate::nn::Mlp`]: the same
+//! 3-layer ReLU MLP read out of a flat parameter slice, but `forward` caches
+//! activations so `backward` can accumulate weight gradients into a flat
+//! gradient vector (same segment offsets) and/or propagate input gradients.
+//! [`adam_step`] and [`polyak`] mirror `python/compile/kernels/ref.py`
+//! (`adam_update` / `polyak`) so native updates and the AOT artifacts agree
+//! on optimizer numerics.
+
+use anyhow::{Context, Result};
+
+use crate::nn::layout::Segment;
+
+pub const ADAM_BETA1: f32 = 0.9;
+pub const ADAM_BETA2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// One dense layer's placement inside a flat parameter slice.
+#[derive(Clone, Copy, Debug)]
+pub struct DenseDef {
+    pub w_off: usize,
+    pub b_off: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+/// out[m,n] = a[m,k] @ b[k,n]
+fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    out[..m * n].fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // ReLU sparsity
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[m,n] += a[bdim,m]^T @ b[bdim,n] — weight-gradient shape (x^T dY).
+fn gemm_tn_acc(a: &[f32], b: &[f32], bdim: usize, m: usize, n: usize, out: &mut [f32]) {
+    for r in 0..bdim {
+        let arow = &a[r * m..(r + 1) * m];
+        let brow = &b[r * n..(r + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[m,k] = a[m,n] @ b[k,n]^T — input-gradient shape (dY W^T).
+fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (l, o) in orow.iter_mut().enumerate() {
+            let brow = &b[l * n..(l + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// out[n] += column sums of a[bdim,n] — bias gradient.
+fn colsum_acc(a: &[f32], bdim: usize, n: usize, out: &mut [f32]) {
+    for r in 0..bdim {
+        let arow = &a[r * n..(r + 1) * n];
+        for (o, &av) in out.iter_mut().zip(arow) {
+            *o += av;
+        }
+    }
+}
+
+/// 3-layer ReLU MLP (in → h → h → out, linear head) with cached activations
+/// for backprop. Weights/biases live in a flat slice at [`DenseDef`] offsets;
+/// gradients are accumulated into a same-shaped flat gradient slice.
+#[derive(Clone, Debug)]
+pub struct MlpGrad {
+    pub layers: [DenseDef; 3],
+    // forward caches (post-ReLU activations), sized lazily to the batch
+    x: Vec<f32>,
+    h0: Vec<f32>,
+    h1: Vec<f32>,
+    out: Vec<f32>,
+    // backward scratch
+    d1: Vec<f32>,
+    d0: Vec<f32>,
+}
+
+impl MlpGrad {
+    /// Build from layout segments named `{prefix}w0,b0,w1,b1,w2,b2`.
+    pub fn from_segments(segs: &[Segment], prefix: &str) -> Result<MlpGrad> {
+        let find = |name: String| -> Result<&Segment> {
+            segs.iter()
+                .find(|s| s.name == name)
+                .with_context(|| format!("no segment {name:?}"))
+        };
+        let mut layers = Vec::with_capacity(3);
+        for i in 0..3 {
+            let w = find(format!("{prefix}w{i}"))?;
+            let b = find(format!("{prefix}b{i}"))?;
+            layers.push(DenseDef {
+                w_off: w.offset,
+                b_off: b.offset,
+                in_dim: w.shape[0],
+                out_dim: w.shape[1],
+            });
+        }
+        let layers: [DenseDef; 3] = layers.try_into().unwrap();
+        Ok(MlpGrad {
+            layers,
+            x: Vec::new(),
+            h0: Vec::new(),
+            h1: Vec::new(),
+            out: Vec::new(),
+            d1: Vec::new(),
+            d0: Vec::new(),
+        })
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers[2].out_dim
+    }
+
+    /// Forward over `n` row-major inputs, caching activations for
+    /// [`MlpGrad::backward`]. Returns the `[n, out_dim]` output slice
+    /// (valid until the next forward).
+    pub fn forward(&mut self, flat: &[f32], xs: &[f32], n: usize) -> &[f32] {
+        let (ind, h) = (self.layers[0].in_dim, self.layers[0].out_dim);
+        let outd = self.layers[2].out_dim;
+        debug_assert_eq!(xs.len(), n * ind);
+        self.x.clear();
+        self.x.extend_from_slice(xs);
+        self.h0.resize(n * h, 0.0);
+        self.h1.resize(n * h, 0.0);
+        self.out.resize(n * outd, 0.0);
+        dense_fwd(flat, &self.layers[0], xs, n, &mut self.h0, true);
+        dense_fwd(flat, &self.layers[1], &self.h0, n, &mut self.h1, true);
+        dense_fwd(flat, &self.layers[2], &self.h1, n, &mut self.out, false);
+        &self.out[..n * outd]
+    }
+
+    /// Backprop `dy = dL/d out` through the cached forward.
+    ///
+    /// - `gflat`: if present, weight/bias gradients are **accumulated** into
+    ///   it at the layer offsets (caller zeroes it when starting a step).
+    /// - `dx`: if present, receives `dL/d input` `[n, in_dim]` (overwritten).
+    pub fn backward(
+        &mut self,
+        flat: &[f32],
+        dy: &[f32],
+        n: usize,
+        mut gflat: Option<&mut [f32]>,
+        dx: Option<&mut [f32]>,
+    ) {
+        let h = self.layers[0].out_dim;
+        debug_assert_eq!(dy.len(), n * self.layers[2].out_dim);
+        self.d1.resize(n * h, 0.0);
+        self.d0.resize(n * h, 0.0);
+
+        // layer 2 (linear head)
+        let l2 = self.layers[2];
+        if let Some(g) = gflat.as_deref_mut() {
+            let w = &mut g[l2.w_off..l2.w_off + l2.in_dim * l2.out_dim];
+            gemm_tn_acc(&self.h1, dy, n, l2.in_dim, l2.out_dim, w);
+            colsum_acc(dy, n, l2.out_dim, &mut g[l2.b_off..l2.b_off + l2.out_dim]);
+        }
+        let w2 = &flat[l2.w_off..l2.w_off + l2.in_dim * l2.out_dim];
+        gemm_nt(dy, w2, n, l2.out_dim, l2.in_dim, &mut self.d1);
+        relu_mask(&mut self.d1[..n * h], &self.h1);
+
+        // layer 1
+        let l1 = self.layers[1];
+        if let Some(g) = gflat.as_deref_mut() {
+            let w = &mut g[l1.w_off..l1.w_off + l1.in_dim * l1.out_dim];
+            gemm_tn_acc(&self.h0, &self.d1, n, l1.in_dim, l1.out_dim, w);
+            colsum_acc(&self.d1, n, l1.out_dim, &mut g[l1.b_off..l1.b_off + l1.out_dim]);
+        }
+        let w1 = &flat[l1.w_off..l1.w_off + l1.in_dim * l1.out_dim];
+        gemm_nt(&self.d1, w1, n, l1.out_dim, l1.in_dim, &mut self.d0);
+        relu_mask(&mut self.d0[..n * h], &self.h0);
+
+        // layer 0
+        let l0 = self.layers[0];
+        if let Some(g) = gflat.as_deref_mut() {
+            let w = &mut g[l0.w_off..l0.w_off + l0.in_dim * l0.out_dim];
+            gemm_tn_acc(&self.x, &self.d0, n, l0.in_dim, l0.out_dim, w);
+            colsum_acc(&self.d0, n, l0.out_dim, &mut g[l0.b_off..l0.b_off + l0.out_dim]);
+        }
+        if let Some(dx) = dx {
+            let w0 = &flat[l0.w_off..l0.w_off + l0.in_dim * l0.out_dim];
+            gemm_nt(&self.d0, w0, n, l0.out_dim, l0.in_dim, dx);
+        }
+    }
+}
+
+/// dH *= (H > 0) — ReLU gradient through the cached post-activation
+/// (gradient at exactly 0 is taken as 0, matching `jnp.maximum(x, 0)` up to
+/// the measure-zero tie).
+fn relu_mask(dh: &mut [f32], h: &[f32]) {
+    for (d, &hv) in dh.iter_mut().zip(h) {
+        if hv <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// y = act(x @ W + b) for one layer out of a flat parameter slice.
+fn dense_fwd(flat: &[f32], l: &DenseDef, x: &[f32], n: usize, y: &mut [f32], relu: bool) {
+    let w = &flat[l.w_off..l.w_off + l.in_dim * l.out_dim];
+    let b = &flat[l.b_off..l.b_off + l.out_dim];
+    gemm_nn(x, w, n, l.in_dim, l.out_dim, y);
+    for r in 0..n {
+        let row = &mut y[r * l.out_dim..(r + 1) * l.out_dim];
+        for (v, &bv) in row.iter_mut().zip(b) {
+            *v += bv;
+            if relu {
+                *v = v.max(0.0);
+            }
+        }
+    }
+}
+
+/// Standard Adam with bias correction at integer step `t >= 1`, in place —
+/// mirrors `ref.py::adam_update` (m̂/(√v̂ + eps), eps outside the sqrt).
+pub fn adam_step(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32, t: f32) {
+    let c1 = 1.0 / (1.0 - ADAM_BETA1.powf(t));
+    let c2 = 1.0 / (1.0 - ADAM_BETA2.powf(t));
+    for i in 0..p.len() {
+        let gi = g[i];
+        let m2 = ADAM_BETA1 * m[i] + (1.0 - ADAM_BETA1) * gi;
+        let v2 = ADAM_BETA2 * v[i] + (1.0 - ADAM_BETA2) * gi * gi;
+        m[i] = m2;
+        v[i] = v2;
+        p[i] -= lr * (m2 * c1) / ((v2 * c2).sqrt() + ADAM_EPS);
+    }
+}
+
+/// Soft target update t' = tau * p + (1 - tau) * t, in place on `t`.
+pub fn polyak(p: &[f32], t: &mut [f32], tau: f32) {
+    for (ti, &pi) in t.iter_mut().zip(p) {
+        *ti = tau * pi + (1.0 - tau) * *ti;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layout::Segment;
+    use crate::util::rng::Rng;
+
+    fn toy_segments(ind: usize, h: usize, outd: usize) -> Vec<Segment> {
+        let shapes = [
+            ("w0", vec![ind, h]),
+            ("b0", vec![h]),
+            ("w1", vec![h, h]),
+            ("b1", vec![h]),
+            ("w2", vec![h, outd]),
+            ("b2", vec![outd]),
+        ];
+        let mut off = 0;
+        shapes
+            .into_iter()
+            .map(|(n, shape)| {
+                let s = Segment { name: format!("net/{n}"), shape, offset: off };
+                off += s.size();
+                s
+            })
+            .collect()
+    }
+
+    fn flat_size(segs: &[Segment]) -> usize {
+        segs.iter().map(|s| s.offset + s.size()).max().unwrap()
+    }
+
+    /// f64 oracle: forward the same MLP and scalar loss L = sum(y * cy).
+    fn oracle_loss(segs: &[Segment], flat: &[f32], xs: &[f32], n: usize, cy: &[f32]) -> f64 {
+        let seg = |name: &str| segs.iter().find(|s| s.name == format!("net/{name}")).unwrap();
+        let dense = |x: &[f64], ind: usize, outd: usize, w: &Segment, b: &Segment, relu: bool| {
+            let mut y = vec![0.0f64; n * outd];
+            for r in 0..n {
+                for j in 0..outd {
+                    let mut acc = flat[b.offset + j] as f64;
+                    for i in 0..ind {
+                        acc += x[r * ind + i] * flat[w.offset + i * outd + j] as f64;
+                    }
+                    y[r * outd + j] = if relu { acc.max(0.0) } else { acc };
+                }
+            }
+            y
+        };
+        let (w0, b0) = (seg("w0"), seg("b0"));
+        let ind = w0.shape[0];
+        let h = w0.shape[1];
+        let outd = seg("w2").shape[1];
+        let x: Vec<f64> = xs.iter().map(|&v| v as f64).collect();
+        let h0 = dense(&x, ind, h, w0, b0, true);
+        let h1 = dense(&h0, h, h, seg("w1"), seg("b1"), true);
+        let y = dense(&h1, h, outd, seg("w2"), seg("b2"), false);
+        y.iter().zip(cy).map(|(&yv, &c)| yv * c as f64).sum()
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let segs = toy_segments(3, 5, 2);
+        let psize = flat_size(&segs);
+        let mut rng = Rng::new(7);
+        let mut flat = vec![0.0f32; psize];
+        rng.fill_uniform(&mut flat, -0.8, 0.8);
+        let n = 4;
+        let mut xs = vec![0.0f32; n * 3];
+        rng.fill_normal(&mut xs);
+        // loss = sum(y * cy) so dL/dy = cy
+        let mut cy = vec![0.0f32; n * 2];
+        rng.fill_uniform(&mut cy, -1.0, 1.0);
+
+        let mut mlp = MlpGrad::from_segments(&segs, "net/").unwrap();
+        mlp.forward(&flat, &xs, n);
+        let mut g = vec![0.0f32; psize];
+        let mut dx = vec![0.0f32; n * 3];
+        mlp.backward(&flat, &cy, n, Some(&mut g), Some(&mut dx));
+
+        // FD over every parameter
+        let eps = 1e-3f32;
+        for i in 0..psize {
+            let mut fp = flat.clone();
+            fp[i] += eps;
+            let lp = oracle_loss(&segs, &fp, &xs, n, &cy);
+            fp[i] = flat[i] - eps;
+            let lm = oracle_loss(&segs, &fp, &xs, n, &cy);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (g[i] - fd).abs() <= 1e-2 * fd.abs().max(1.0),
+                "param {i}: analytic {} vs fd {fd}",
+                g[i]
+            );
+        }
+        // FD over inputs
+        for i in 0..xs.len() {
+            let mut xp = xs.clone();
+            xp[i] += eps;
+            let lp = oracle_loss(&segs, &flat, &xp, n, &cy);
+            xp[i] = xs[i] - eps;
+            let lm = oracle_loss(&segs, &flat, &xp, n, &cy);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (dx[i] - fd).abs() <= 1e-2 * fd.abs().max(1.0),
+                "input {i}: analytic {} vs fd {fd}",
+                dx[i]
+            );
+        }
+    }
+
+    #[test]
+    fn forward_matches_inference_mlp() {
+        // MlpGrad::forward must agree with the sampler-side Mlp on the same
+        // flat actor vector (the two forward implementations stay in sync).
+        let lay = crate::nn::layout::Layout::build_native("pendulum", "sac", 3, 1, 8, 64).unwrap();
+        let mut rng = Rng::new(3);
+        let (params, _) = lay.init_params(&mut rng);
+        let mut a = crate::nn::Mlp::actor(&lay).unwrap();
+        let mut b = MlpGrad::from_segments(&lay.actor_segments, "actor/").unwrap();
+        let n = 5;
+        let mut xs = vec![0.0f32; n * 3];
+        rng.fill_normal(&mut xs);
+        let ya = a.forward_batch(&params[..lay.actor_size], &xs, n).to_vec();
+        let yb = b.forward(&params[..lay.actor_size], &xs, n);
+        for (i, (&u, &v)) in ya.iter().zip(yb).enumerate() {
+            assert!((u - v).abs() < 1e-5, "out {i}: {u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn adam_matches_reference() {
+        // one step from zero state: m = (1-b1)g, v = (1-b2)g²,
+        // p' = p - lr * mhat / (sqrt(vhat) + eps)
+        let mut p = vec![1.0f32, -2.0];
+        let g = vec![0.5f32, -0.25];
+        let (mut m, mut v) = (vec![0.0f32; 2], vec![0.0f32; 2]);
+        adam_step(&mut p, &g, &mut m, &mut v, 1e-2, 1.0);
+        for i in 0..2 {
+            let m2 = (1.0 - ADAM_BETA1) * g[i];
+            let v2 = (1.0 - ADAM_BETA2) * g[i] * g[i];
+            let mhat = m2 / (1.0 - ADAM_BETA1);
+            let vhat = v2 / (1.0 - ADAM_BETA2);
+            let want = [1.0f32, -2.0][i] - 1e-2 * mhat / (vhat.sqrt() + ADAM_EPS);
+            assert!((p[i] - want).abs() < 1e-6, "p[{i}] {} vs {want}", p[i]);
+            assert!((m[i] - m2).abs() < 1e-7);
+            assert!((v[i] - v2).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn polyak_interpolates() {
+        let p = vec![1.0f32, 0.0];
+        let mut t = vec![0.0f32, 1.0];
+        polyak(&p, &mut t, 0.1);
+        assert!((t[0] - 0.1).abs() < 1e-7);
+        assert!((t[1] - 0.9).abs() < 1e-7);
+    }
+}

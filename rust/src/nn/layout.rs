@@ -102,6 +102,79 @@ impl Layout {
             .with_context(|| format!("no actor segment {name:?}"))
     }
 
+    /// Build a layout natively (no manifest), mirroring
+    /// `python/compile/layout.py::build_layout`: actor MLP (+ log_alpha for
+    /// SAC), then q1 + q2 MLPs, each flat region padded to `chunk`. The
+    /// native backend uses a small chunk (its elementwise kernels have no
+    /// grid-divisibility constraint), so padding waste stays negligible.
+    pub fn build_native(
+        env: &str,
+        algo: &str,
+        obs_dim: usize,
+        act_dim: usize,
+        hidden: usize,
+        chunk: usize,
+    ) -> Result<Layout> {
+        let pad = |n: usize| n.div_ceil(chunk) * chunk;
+        let mlp_segments = |prefix: &str, in_dim: usize, out_dim: usize, off: &mut usize| {
+            let shapes: [(&str, Vec<usize>); 6] = [
+                ("w0", vec![in_dim, hidden]),
+                ("b0", vec![hidden]),
+                ("w1", vec![hidden, hidden]),
+                ("b1", vec![hidden]),
+                ("w2", vec![hidden, out_dim]),
+                ("b2", vec![out_dim]),
+            ];
+            shapes
+                .into_iter()
+                .map(|(n, shape)| {
+                    let seg = Segment { name: format!("{prefix}{n}"), shape, offset: *off };
+                    *off += seg.size();
+                    seg
+                })
+                .collect::<Vec<_>>()
+        };
+
+        let actor_out = if algo == "sac" { 2 * act_dim } else { act_dim };
+        let mut off = 0;
+        let mut actor_segments = mlp_segments("actor/", obs_dim, actor_out, &mut off);
+        if algo == "sac" {
+            let la = Segment { name: "actor/log_alpha".into(), shape: vec![1], offset: off };
+            actor_segments.push(la);
+            off += 1;
+        }
+        let actor_size = pad(off);
+
+        let mut off = 0;
+        let mut critic_segments = mlp_segments("q1/", obs_dim + act_dim, 1, &mut off);
+        critic_segments.extend(mlp_segments("q2/", obs_dim + act_dim, 1, &mut off));
+        let critic_size = pad(off);
+
+        let lay = Layout {
+            env: env.to_string(),
+            algo: algo.to_string(),
+            obs_dim,
+            act_dim,
+            hidden,
+            actor_size,
+            critic_size,
+            target_size: critic_size,
+            param_size: actor_size + critic_size,
+            chunk,
+            actor_segments,
+            critic_segments,
+        };
+        lay.validate()?;
+        Ok(lay)
+    }
+
+    pub fn critic_segment(&self, name: &str) -> Result<&Segment> {
+        self.critic_segments
+            .iter()
+            .find(|s| s.name == name)
+            .with_context(|| format!("no critic segment {name:?}"))
+    }
+
     /// (weight, bias) offset/shape list for the actor MLP, in forward order.
     pub fn actor_mlp(&self) -> Result<Vec<(&Segment, &Segment)>> {
         let mut out = Vec::new();
@@ -149,6 +222,27 @@ impl Layout {
 mod tests {
     use super::*;
     use crate::util::json;
+
+    #[test]
+    fn build_native_mirrors_python_layout() {
+        // Same structure as layout.py::build_layout (offsets, segment order,
+        // log_alpha, q1+q2 packing); chunk differs (native pads less).
+        let lay = Layout::build_native("pendulum", "sac", 3, 1, 64, 256).unwrap();
+        assert_eq!(lay.actor_out(), 2);
+        let raw_actor = 3 * 64 + 64 + 64 * 64 + 64 + 64 * 2 + 2 + 1;
+        assert_eq!(lay.actor_segment("actor/log_alpha").unwrap().offset, raw_actor - 1);
+        assert_eq!(lay.actor_size, raw_actor.div_ceil(256) * 256);
+        let raw_q = 4 * 64 + 64 + 64 * 64 + 64 + 64 + 1;
+        assert_eq!(lay.critic_segment("q2/w0").unwrap().offset, raw_q);
+        assert_eq!(lay.critic_size, (2 * raw_q).div_ceil(256) * 256);
+        assert_eq!(lay.target_size, lay.critic_size);
+        assert_eq!(lay.param_size, lay.actor_size + lay.critic_size);
+        assert_eq!(lay.actor_mlp().unwrap().len(), 3);
+
+        let td3 = Layout::build_native("walker", "td3", 22, 6, 256, 256).unwrap();
+        assert_eq!(td3.actor_out(), 6);
+        assert!(td3.actor_segment("actor/log_alpha").is_err());
+    }
 
     fn toy_layout_json() -> Value {
         json::parse(

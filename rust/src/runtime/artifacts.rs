@@ -68,6 +68,9 @@ pub struct Manifest {
     pub dir: PathBuf,
     pub layouts: BTreeMap<String, Layout>,
     pub artifacts: Vec<ArtifactMeta>,
+    /// True for the synthesized native-backend manifest (no HLO files on
+    /// disk; every entry executes via `runtime::native`).
+    pub native: bool,
 }
 
 impl Manifest {
@@ -82,7 +85,29 @@ impl Manifest {
         for (_, av) in v.get("artifacts")?.as_obj()? {
             artifacts.push(ArtifactMeta::from_json(av)?);
         }
-        Ok(Manifest { dir: dir.to_path_buf(), layouts, artifacts })
+        Ok(Manifest { dir: dir.to_path_buf(), layouts, artifacts, native: false })
+    }
+
+    /// Load the AOT manifest if present, else fall back to the synthesized
+    /// native-backend manifest — the default entry point for everything that
+    /// wants the update path to *run* (coordinator, harnesses, benches).
+    ///
+    /// `SPREEZE_BACKEND=native` skips the disk manifest entirely;
+    /// `SPREEZE_BACKEND=pjrt` disables the fallback (missing artifacts stay
+    /// a hard error). A manifest that *exists* but fails to parse is always
+    /// a hard error — only a missing manifest selects the native fallback.
+    pub fn load_or_native(dir: &Path) -> Result<Manifest> {
+        use crate::runtime::engine::BackendChoice;
+        match BackendChoice::from_env()? {
+            BackendChoice::Native => return Ok(crate::runtime::native::native_manifest()),
+            BackendChoice::Pjrt => return Self::load(dir),
+            BackendChoice::Auto => {}
+        }
+        if dir.join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(crate::runtime::native::native_manifest())
+        }
     }
 
     pub fn layout(&self, env: &str, algo: &str) -> Result<&Layout> {

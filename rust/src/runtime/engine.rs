@@ -1,15 +1,21 @@
-//! PJRT execution engine: HLO text → compiled executable → `run` with flat
-//! f32 buffers.
+//! Execution engine: dispatches each manifest entry to a backend — the
+//! native Rust executor ([`super::native`]) or the PJRT path (HLO text →
+//! compiled executable) — behind one `run(&[&[f32]]) -> Vec<Vec<f32>>` API.
 //!
 //! One [`Engine`] per executor thread — the paper's dual-GPU model
 //! parallelism maps to two engines on two threads, each owning its own
-//! compiled `actor_step`/`critic_step` executable (DESIGN.md §1).
+//! `actor_step`/`critic_step` executable (DESIGN.md §1).
+//!
+//! Backend selection: native manifests (no `artifacts/` on disk) always
+//! execute natively; disk manifests compile via PJRT unless
+//! `SPREEZE_BACKEND=native` forces the native executor onto them.
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
 use super::artifacts::{ArtifactMeta, Manifest};
+use super::native::NativeStep;
 // Offline builds use the stub; swap in the real bindings with `use xla;`.
 use super::xla_stub as xla;
 
@@ -31,43 +37,113 @@ pub fn default_artifacts_dir() -> PathBuf {
     }
 }
 
-/// A PJRT client wrapper. NOT `Send` (the underlying client is thread-bound
-/// by construction here) — create one per executor thread.
+/// The execution backend for one engine.
+enum Backend {
+    /// Pure-Rust executor (no artifacts needed).
+    Native,
+    /// PJRT client (thread-bound by construction — create one per thread).
+    Pjrt(xla::PjRtClient),
+}
+
+/// A per-thread execution engine. NOT `Send` for the PJRT backend; create
+/// one per executor thread either way.
 pub struct Engine {
-    client: xla::PjRtClient,
+    backend: Backend,
+}
+
+/// The `SPREEZE_BACKEND` override, parsed in exactly one place so the
+/// manifest fallback ([`Manifest::load_or_native`]) and the engine selection
+/// agree on unknown-value handling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// No override: disk manifest → PJRT, synthesized manifest → native.
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl BackendChoice {
+    pub fn from_env() -> Result<BackendChoice> {
+        match std::env::var("SPREEZE_BACKEND").ok().as_deref() {
+            None => Ok(BackendChoice::Auto),
+            Some("native") => Ok(BackendChoice::Native),
+            Some("pjrt") | Some("xla") => Ok(BackendChoice::Pjrt),
+            Some(other) => bail!("unknown SPREEZE_BACKEND {other:?} (expected native|pjrt)"),
+        }
+    }
 }
 
 impl Engine {
+    /// Pick the backend for a manifest (see module docs). This is how the
+    /// learners construct engines; `Engine::cpu` remains the explicit
+    /// PJRT-only constructor.
+    pub fn for_manifest(manifest: &Manifest) -> Result<Engine> {
+        match BackendChoice::from_env()? {
+            BackendChoice::Native => Ok(Engine::native()),
+            BackendChoice::Pjrt => Engine::cpu(),
+            BackendChoice::Auto if manifest.native => Ok(Engine::native()),
+            BackendChoice::Auto => Engine::cpu(),
+        }
+    }
+
+    /// Native Rust executor (always available).
+    pub fn native() -> Engine {
+        Engine { backend: Backend::Native }
+    }
+
+    /// PJRT CPU client (errors offline when built with the xla stub).
     pub fn cpu() -> Result<Engine> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e}"))?;
-        Ok(Engine { client })
+        Ok(Engine { backend: Backend::Pjrt(client) })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Native => "native-cpu".to_string(),
+            Backend::Pjrt(client) => client.platform_name(),
+        }
     }
 
-    /// Load + compile one artifact.
+    /// Load + compile one artifact (PJRT) or instantiate the native step.
     pub fn load(&self, manifest: &Manifest, meta: &ArtifactMeta) -> Result<StepExe> {
-        let path = manifest.path_of(meta);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
-        Ok(StepExe { exe, meta: meta.clone(), out_scratch: Vec::new() })
+        let inner = match &self.backend {
+            Backend::Native => {
+                let layout = manifest.layout(&meta.env, &meta.algo)?.clone();
+                StepInner::Native(Box::new(NativeStep::new(layout, &meta.func, meta.bs)?))
+            }
+            Backend::Pjrt(client) => {
+                if manifest.native {
+                    bail!(
+                        "manifest is native (no HLO files) but the engine is PJRT; \
+                         unset SPREEZE_BACKEND or build real artifacts"
+                    );
+                }
+                let path = manifest.path_of(meta);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path not utf-8")?,
+                )
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+                StepInner::Pjrt(exe)
+            }
+        };
+        Ok(StepExe { inner, meta: meta.clone() })
     }
 }
 
-/// A compiled step function plus its I/O contract.
+enum StepInner {
+    // boxed: NativeStep carries layout + scratch, far larger than a PJRT handle
+    Native(Box<NativeStep>),
+    Pjrt(xla::PjRtLoadedExecutable),
+}
+
+/// A loaded step function (native or compiled) plus its I/O contract.
 pub struct StepExe {
-    exe: xla::PjRtLoadedExecutable,
+    inner: StepInner,
     pub meta: ArtifactMeta,
-    out_scratch: Vec<Vec<f32>>,
 }
 
 impl StepExe {
@@ -85,7 +161,6 @@ impl StepExe {
                 self.meta.inputs.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, buf) in inputs.iter().enumerate() {
             let want = self.meta.input_len(i);
             if buf.len() != want {
@@ -98,40 +173,11 @@ impl StepExe {
                     want
                 );
             }
-            let dims: Vec<usize> = self.meta.inputs[i].1.clone();
-            let lit = xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                &dims,
-                bytes_of(buf),
-            )
-            .map_err(|e| anyhow::anyhow!("literal {}: {e}", self.meta.inputs[i].0))?;
-            literals.push(lit);
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.meta.file))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
-        // aot.py lowers with return_tuple=True: one tuple literal out.
-        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling: {e}"))?;
-        if parts.len() != self.meta.outputs.len() {
-            bail!(
-                "{}: {} outputs, manifest says {}",
-                self.meta.file,
-                parts.len(),
-                self.meta.outputs.len()
-            );
+        match &mut self.inner {
+            StepInner::Native(step) => step.run(&self.meta, inputs),
+            StepInner::Pjrt(exe) => run_pjrt(exe, &self.meta, inputs),
         }
-        let mut out = std::mem::take(&mut self.out_scratch);
-        out.clear();
-        for p in parts {
-            let mut v = vec![0.0f32; p.element_count()];
-            p.copy_raw_to(&mut v).map_err(|e| anyhow::anyhow!("copy out: {e}"))?;
-            out.push(v);
-        }
-        Ok(out)
     }
 
     /// Index of a named output.
@@ -142,6 +188,42 @@ impl StepExe {
             .position(|o| o == name)
             .with_context(|| format!("{}: no output {name:?}", self.meta.file))
     }
+}
+
+fn run_pjrt(
+    exe: &mut xla::PjRtLoadedExecutable,
+    meta: &ArtifactMeta,
+    inputs: &[&[f32]],
+) -> Result<Vec<Vec<f32>>> {
+    let mut literals = Vec::with_capacity(inputs.len());
+    for (i, buf) in inputs.iter().enumerate() {
+        let dims: Vec<usize> = meta.inputs[i].1.clone();
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &dims,
+            bytes_of(buf),
+        )
+        .map_err(|e| anyhow::anyhow!("literal {}: {e}", meta.inputs[i].0))?;
+        literals.push(lit);
+    }
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow::anyhow!("executing {}: {e}", meta.file))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+    // aot.py lowers with return_tuple=True: one tuple literal out.
+    let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling: {e}"))?;
+    if parts.len() != meta.outputs.len() {
+        bail!("{}: {} outputs, manifest says {}", meta.file, parts.len(), meta.outputs.len());
+    }
+    let mut out = Vec::with_capacity(parts.len());
+    for p in parts {
+        let mut v = vec![0.0f32; p.element_count()];
+        p.copy_raw_to(&mut v).map_err(|e| anyhow::anyhow!("copy out: {e}"))?;
+        out.push(v);
+    }
+    Ok(out)
 }
 
 fn bytes_of(v: &[f32]) -> &[u8] {

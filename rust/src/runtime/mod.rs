@@ -1,11 +1,19 @@
-//! PJRT runtime: loads the AOT-lowered HLO text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
-//! This is the only place Rust touches XLA; everything above speaks
-//! flat `&[f32]` buffers.
+//! Update-step runtime. Two backends behind one engine API:
+//!
+//! - `native`: the pure-Rust executor (forward + backprop + Adam) — always
+//!   available, selected whenever no `artifacts/` manifest exists (or via
+//!   `SPREEZE_BACKEND=native`).
+//! - PJRT: loads the AOT-lowered HLO text artifacts produced by
+//!   `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place Rust touches XLA; everything above speaks flat
+//! `&[f32]` buffers.
 
 pub mod artifacts;
 pub mod engine;
+pub mod native;
 pub mod xla_stub;
 
 pub use artifacts::{ArtifactMeta, Manifest};
-pub use engine::{default_artifacts_dir, Engine, StepExe};
+pub use engine::{default_artifacts_dir, BackendChoice, Engine, StepExe};
+pub use native::{native_manifest, NativeStep, NATIVE_BS_LADDER};

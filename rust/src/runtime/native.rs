@@ -1,0 +1,1141 @@
+//! Native CPU executor backend: the SAC/TD3 update step implemented in pure
+//! Rust (forward, hand-derived backprop, fused Adam, Polyak targets) behind
+//! the same manifest-driven I/O contract the PJRT artifacts use.
+//!
+//! This is what makes the update half of the framework run without any
+//! `artifacts/` build: [`native_manifest`] synthesizes layouts (mirroring
+//! `python/compile/layout.py`) and artifact metadata for every registered
+//! env × {sac, td3} across a batch-size ladder, and [`NativeStep`] executes
+//! `full`, `actor`, and `critic` step functions with numerics mirroring
+//! `python/compile/model.py` / `kernels/ref.py` (same gaussian head, same
+//! stop-gradient structure, same Adam bias correction). Gradient correctness
+//! is pinned by finite-difference tests against an independent f64 oracle.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::grad::{adam_step, polyak, MlpGrad};
+use crate::nn::mlp::{LOG_STD_MAX, LOG_STD_MIN};
+use crate::nn::Layout;
+
+use super::artifacts::{ArtifactMeta, Manifest};
+
+/// Flat-segment padding for native layouts. The Pallas kernels need
+/// CHUNK=16384; the native elementwise kernels have no grid constraint, so a
+/// small chunk keeps padding waste negligible on tiny nets.
+pub const NATIVE_CHUNK: usize = 256;
+
+/// Batch sizes the native backend "compiles" (it is shape-generic, but the
+/// ladder keeps the adaptation controller and manifest contract identical to
+/// the AOT path — paper §3.4's discrete BS ladder).
+pub const NATIVE_BS_LADDER: &[usize] = &[32, 64, 128, 256, 512, 1024, 2048, 4096, 8192];
+
+const SQUASH_EPS: f32 = 1e-6;
+const HALF_LOG_2PI: f32 = 0.918_938_5;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StepFunc {
+    SacFull,
+    Td3Full,
+    SacActor,
+    SacCritic,
+}
+
+/// Scratch buffers reused across updates (steady-state allocation-free on
+/// the forward/backward path; only the returned state vectors are fresh).
+#[derive(Default)]
+struct Scratch {
+    sa: Vec<f32>,
+    mu: Vec<f32>,
+    ls: Vec<f32>,
+    a_pol: Vec<f32>,
+    logp: Vec<f32>,
+    logp2: Vec<f32>,
+    tq: Vec<f32>,
+    qa: Vec<f32>,
+    qb: Vec<f32>,
+    dq: Vec<f32>,
+    dsa: Vec<f32>,
+    da: Vec<f32>,
+    dout: Vec<f32>,
+    grads: Vec<f32>,
+}
+
+/// One native step function instance (the native analogue of a compiled
+/// `StepExe` executable).
+pub struct NativeStep {
+    layout: Layout,
+    func: StepFunc,
+    bs: usize,
+    actor: MlpGrad,
+    q1: MlpGrad,
+    q2: MlpGrad,
+    scr: Scratch,
+}
+
+impl NativeStep {
+    pub fn new(layout: Layout, func: &str, bs: usize) -> Result<NativeStep> {
+        let func = match (func, layout.algo.as_str()) {
+            ("full", "sac") => StepFunc::SacFull,
+            ("full", "td3") => StepFunc::Td3Full,
+            ("actor", "sac") => StepFunc::SacActor,
+            ("critic", "sac") => StepFunc::SacCritic,
+            (f, a) => bail!("native backend: unsupported step {a}/{f}"),
+        };
+        let actor = MlpGrad::from_segments(&layout.actor_segments, "actor/")?;
+        let q1 = MlpGrad::from_segments(&layout.critic_segments, "q1/")?;
+        let q2 = MlpGrad::from_segments(&layout.critic_segments, "q2/")?;
+        Ok(NativeStep { layout, func, bs, actor, q1, q2, scr: Scratch::default() })
+    }
+
+    /// Execute one step; `inputs` are in `meta` order (validated upstream by
+    /// [`super::StepExe::run`]); outputs come back in `meta.outputs` order.
+    pub fn run(&mut self, meta: &ArtifactMeta, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let hyper: [f32; 6] =
+            get(meta, inputs, "hyper")?.try_into().context("hyper must have 6 entries")?;
+        let step = get(meta, inputs, "step")?[0];
+        let g = |name: &str| get(meta, inputs, name);
+        let mut produced = match self.func {
+            StepFunc::SacFull => self.sac_full(
+                g("params")?, g("targets")?, g("m")?, g("v")?, step,
+                g("s")?, g("a")?, g("r")?, g("d")?, g("s2")?,
+                g("noise1")?, g("noise2")?, &hyper,
+            ),
+            StepFunc::Td3Full => self.td3_full(
+                g("params")?, g("targets")?, g("m")?, g("v")?, step,
+                g("s")?, g("a")?, g("r")?, g("d")?, g("s2")?,
+                g("noise2")?, g("update_actor")?[0], &hyper,
+            ),
+            StepFunc::SacActor => self.sac_actor(
+                g("actor_params")?, g("critic_params")?, g("m")?, g("v")?, step,
+                g("s")?, g("noise1")?, &hyper,
+            ),
+            StepFunc::SacCritic => self.sac_critic(
+                g("actor_params")?, g("critic_params")?, g("targets")?,
+                g("m")?, g("v")?, step,
+                g("s")?, g("a")?, g("r")?, g("d")?, g("s2")?,
+                g("noise2")?, &hyper,
+            ),
+        };
+        let mut out = Vec::with_capacity(meta.outputs.len());
+        for name in &meta.outputs {
+            let i = produced
+                .iter()
+                .position(|(n, _)| n == name)
+                .with_context(|| format!("native step produced no output {name:?}"))?;
+            out.push(std::mem::take(&mut produced[i].1));
+        }
+        Ok(out)
+    }
+
+    /// Gradient vector of the last `run` (layout: full params for `full`,
+    /// one half for split steps) — exposed for finite-difference tests.
+    #[cfg(test)]
+    pub(crate) fn last_grads(&self) -> &[f32] {
+        &self.scr.grads
+    }
+
+    /// Single-device SAC update — mirrors `model.py::sac_full_step`.
+    #[allow(clippy::too_many_arguments)]
+    fn sac_full(
+        &mut self,
+        params: &[f32],
+        targets: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: f32,
+        s: &[f32],
+        a: &[f32],
+        r: &[f32],
+        d: &[f32],
+        s2: &[f32],
+        n1: &[f32],
+        n2: &[f32],
+        hyper: &[f32; 6],
+    ) -> Vec<(String, Vec<f32>)> {
+        let NativeStep { layout, actor, q1, q2, scr, bs, .. } = self;
+        let b = *bs;
+        let (o, adim) = (layout.obs_dim, layout.act_dim);
+        let pa = layout.actor_size;
+        let (actor_p, critic_p) = params.split_at(pa);
+        let la_off = layout.actor_segment("actor/log_alpha").unwrap().offset;
+        let log_alpha = actor_p[la_off];
+        let alpha = log_alpha.exp();
+        let (lr, gamma, tau, tent, rs) = (hyper[0], hyper[1], hyper[2], hyper[3], hyper[4]);
+
+        scr.grads.clear();
+        scr.grads.resize(layout.param_size, 0.0);
+
+        // --- TD target (everything frozen): a2, logp2 ~ pi(s2); q from targets
+        let out2 = actor.forward(actor_p, s2, b);
+        copy_mu_ls(out2, b, adim, &mut scr.mu, &mut scr.ls);
+        head_fwd(&scr.mu, &scr.ls, n2, b, adim, &mut scr.a_pol, &mut scr.logp2);
+        concat_sa(s2, &scr.a_pol, b, o, adim, &mut scr.sa);
+        copy_into(q1.forward(targets, &scr.sa, b), &mut scr.tq);
+        copy_into(q2.forward(targets, &scr.sa, b), &mut scr.qb);
+        for i in 0..b {
+            let qmin = scr.tq[i].min(scr.qb[i]);
+            scr.tq[i] = r[i] * rs + gamma * (1.0 - d[i]) * (qmin - alpha * scr.logp2[i]);
+        }
+        let tq_mean = mean(&scr.tq);
+
+        // --- critic loss on (s, a): grads into the critic half
+        concat_sa(s, a, b, o, adim, &mut scr.sa);
+        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
+        let q1_mean = mean(&scr.qa);
+        let mut q_loss = 0.0f32;
+        scr.dq.resize(b, 0.0);
+        for i in 0..b {
+            let e = scr.qa[i] - scr.tq[i];
+            q_loss += e * e / b as f32;
+            scr.dq[i] = 2.0 * e / b as f32;
+        }
+        q1.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[pa..]), None);
+        copy_into(q2.forward(critic_p, &scr.sa, b), &mut scr.qb);
+        for i in 0..b {
+            let e = scr.qb[i] - scr.tq[i];
+            q_loss += e * e / b as f32;
+            scr.dq[i] = 2.0 * e / b as f32;
+        }
+        q2.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[pa..]), None);
+
+        // --- actor loss on s (critic frozen): a1, logp1 ~ pi(s)
+        let out1 = actor.forward(actor_p, s, b);
+        copy_mu_ls(out1, b, adim, &mut scr.mu, &mut scr.ls);
+        head_fwd(&scr.mu, &scr.ls, n1, b, adim, &mut scr.a_pol, &mut scr.logp);
+        let logp_mean = mean(&scr.logp);
+        concat_sa(s, &scr.a_pol, b, o, adim, &mut scr.sa);
+        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
+        copy_into(q2.forward(critic_p, &scr.sa, b), &mut scr.qb);
+        let mut actor_loss = 0.0f32;
+        scr.da.clear();
+        scr.da.resize(b * adim, 0.0);
+        scr.dsa.resize(b * (o + adim), 0.0);
+        // d(-mean(min(q1pi, q2pi)))/dq through each net, then to the action
+        for (pass, qn) in [(&mut *q1, 0usize), (&mut *q2, 1usize)] {
+            scr.dq.resize(b, 0.0);
+            for i in 0..b {
+                let m1 = scr.qa[i] <= scr.qb[i];
+                let mine = if m1 { scr.qa[i] } else { scr.qb[i] };
+                if qn == 0 {
+                    actor_loss += (alpha * scr.logp[i] - mine) / b as f32;
+                }
+                let on_this = if qn == 0 { m1 } else { !m1 };
+                scr.dq[i] = if on_this { -1.0 / b as f32 } else { 0.0 };
+            }
+            pass.backward(critic_p, &scr.dq, b, None, Some(&mut scr.dsa));
+            for i in 0..b {
+                for j in 0..adim {
+                    scr.da[i * adim + j] += scr.dsa[i * (o + adim) + o + j];
+                }
+            }
+        }
+        // chain through the tanh-gaussian head into the actor output grads
+        let gl = alpha / b as f32; // d actor_loss / d logp1 per row
+        head_bwd(&scr.ls, n1, &scr.a_pol, &scr.da, gl, b, adim, &mut scr.dout);
+        actor.backward(actor_p, &scr.dout, b, Some(&mut scr.grads[..pa]), None);
+        // temperature: d(-mean(log_alpha * (sg(logp1) + tent)))/d log_alpha
+        scr.grads[la_off] += -(logp_mean + tent);
+
+        let metrics = vec![
+            q_loss, actor_loss, alpha, q1_mean,
+            logp_mean, tq_mean, mean(r), -logp_mean,
+        ];
+
+        // --- fused optimizer + target update
+        let mut p2 = params.to_vec();
+        let mut m2 = m.to_vec();
+        let mut v2 = v.to_vec();
+        adam_step(&mut p2, &scr.grads, &mut m2, &mut v2, lr, step);
+        let mut t2 = targets.to_vec();
+        polyak(&p2[pa..], &mut t2, tau);
+        vec![
+            ("params".into(), p2),
+            ("targets".into(), t2),
+            ("m".into(), m2),
+            ("v".into(), v2),
+            ("metrics".into(), metrics),
+        ]
+    }
+
+    /// TD3 update with delayed policy/target gating — mirrors
+    /// `model.py::td3_full_step` (`update_actor` scales the actor loss and
+    /// the target interpolation, so one step fn serves both phases).
+    #[allow(clippy::too_many_arguments)]
+    fn td3_full(
+        &mut self,
+        params: &[f32],
+        targets: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: f32,
+        s: &[f32],
+        a: &[f32],
+        r: &[f32],
+        d: &[f32],
+        s2: &[f32],
+        n2: &[f32],
+        update_actor: f32,
+        hyper: &[f32; 6],
+    ) -> Vec<(String, Vec<f32>)> {
+        let NativeStep { layout, actor, q1, q2, scr, bs, .. } = self;
+        let b = *bs;
+        let (o, adim) = (layout.obs_dim, layout.act_dim);
+        let pa = layout.actor_size;
+        let (actor_p, critic_p) = params.split_at(pa);
+        let (lr, gamma, tau, rs, pn) = (hyper[0], hyper[1], hyper[2], hyper[4], hyper[5]);
+
+        scr.grads.clear();
+        scr.grads.resize(layout.param_size, 0.0);
+
+        // --- TD target with target policy smoothing (all frozen)
+        let mu2 = actor.forward(actor_p, s2, b);
+        scr.a_pol.clear();
+        scr.a_pol.extend(mu2.iter().zip(n2).map(|(&mu, &n)| {
+            let eps = (n * pn).clamp(-0.5, 0.5);
+            (mu.tanh() + eps).clamp(-1.0, 1.0)
+        }));
+        concat_sa(s2, &scr.a_pol, b, o, adim, &mut scr.sa);
+        copy_into(q1.forward(targets, &scr.sa, b), &mut scr.tq);
+        copy_into(q2.forward(targets, &scr.sa, b), &mut scr.qb);
+        for i in 0..b {
+            let qmin = scr.tq[i].min(scr.qb[i]);
+            scr.tq[i] = r[i] * rs + gamma * (1.0 - d[i]) * qmin;
+        }
+        let tq_mean = mean(&scr.tq);
+
+        // --- critic loss on (s, a)
+        concat_sa(s, a, b, o, adim, &mut scr.sa);
+        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
+        let q1_mean = mean(&scr.qa);
+        let mut q_loss = 0.0f32;
+        scr.dq.resize(b, 0.0);
+        for i in 0..b {
+            let e = scr.qa[i] - scr.tq[i];
+            q_loss += e * e / b as f32;
+            scr.dq[i] = 2.0 * e / b as f32;
+        }
+        q1.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[pa..]), None);
+        copy_into(q2.forward(critic_p, &scr.sa, b), &mut scr.qb);
+        for i in 0..b {
+            let e = scr.qb[i] - scr.tq[i];
+            q_loss += e * e / b as f32;
+            scr.dq[i] = 2.0 * e / b as f32;
+        }
+        q2.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[pa..]), None);
+
+        // --- (delayed) deterministic actor loss: -mean(q1(s, tanh(mu)))
+        let mu1 = actor.forward(actor_p, s, b);
+        scr.a_pol.clear();
+        scr.a_pol.extend(mu1.iter().map(|&mu| mu.tanh()));
+        concat_sa(s, &scr.a_pol, b, o, adim, &mut scr.sa);
+        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
+        let actor_loss = -mean(&scr.qa);
+        if update_actor != 0.0 {
+            scr.dq.resize(b, 0.0);
+            scr.dq.fill(-update_actor / b as f32);
+            scr.dsa.resize(b * (o + adim), 0.0);
+            q1.backward(critic_p, &scr.dq, b, None, Some(&mut scr.dsa));
+            scr.dout.clear();
+            scr.dout.resize(b * adim, 0.0);
+            for i in 0..b {
+                for j in 0..adim {
+                    let av = scr.a_pol[i * adim + j];
+                    scr.dout[i * adim + j] = scr.dsa[i * (o + adim) + o + j] * (1.0 - av * av);
+                }
+            }
+            actor.backward(actor_p, &scr.dout, b, Some(&mut scr.grads[..pa]), None);
+        }
+
+        let metrics = vec![
+            q_loss, actor_loss, 0.0, q1_mean,
+            0.0, tq_mean, mean(r), 0.0,
+        ];
+
+        let mut p2 = params.to_vec();
+        let mut m2 = m.to_vec();
+        let mut v2 = v.to_vec();
+        adam_step(&mut p2, &scr.grads, &mut m2, &mut v2, lr, step);
+        let mut t2 = targets.to_vec();
+        polyak(&p2[pa..], &mut t2, tau * update_actor);
+        vec![
+            ("params".into(), p2),
+            ("targets".into(), t2),
+            ("m".into(), m2),
+            ("v".into(), v2),
+            ("metrics".into(), metrics),
+        ]
+    }
+
+    /// Device-0 half of the model-parallel round — mirrors
+    /// `model.py::sac_actor_step` (policy + temperature, critic frozen).
+    #[allow(clippy::too_many_arguments)]
+    fn sac_actor(
+        &mut self,
+        actor_p: &[f32],
+        critic_p: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: f32,
+        s: &[f32],
+        n1: &[f32],
+        hyper: &[f32; 6],
+    ) -> Vec<(String, Vec<f32>)> {
+        let NativeStep { layout, actor, q1, q2, scr, bs, .. } = self;
+        let b = *bs;
+        let (o, adim) = (layout.obs_dim, layout.act_dim);
+        let la_off = layout.actor_segment("actor/log_alpha").unwrap().offset;
+        let log_alpha = actor_p[la_off];
+        let alpha = log_alpha.exp();
+        let (lr, tent) = (hyper[0], hyper[3]);
+
+        scr.grads.clear();
+        scr.grads.resize(layout.actor_size, 0.0);
+
+        let out1 = actor.forward(actor_p, s, b);
+        copy_mu_ls(out1, b, adim, &mut scr.mu, &mut scr.ls);
+        head_fwd(&scr.mu, &scr.ls, n1, b, adim, &mut scr.a_pol, &mut scr.logp);
+        let logp_mean = mean(&scr.logp);
+        concat_sa(s, &scr.a_pol, b, o, adim, &mut scr.sa);
+        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
+        let q_mean = mean(&scr.qa);
+        copy_into(q2.forward(critic_p, &scr.sa, b), &mut scr.qb);
+        let mut actor_loss = 0.0f32;
+        scr.da.clear();
+        scr.da.resize(b * adim, 0.0);
+        scr.dsa.resize(b * (o + adim), 0.0);
+        for (pass, qn) in [(&mut *q1, 0usize), (&mut *q2, 1usize)] {
+            scr.dq.resize(b, 0.0);
+            for i in 0..b {
+                let m1 = scr.qa[i] <= scr.qb[i];
+                if qn == 0 {
+                    let mine = if m1 { scr.qa[i] } else { scr.qb[i] };
+                    actor_loss += (alpha * scr.logp[i] - mine) / b as f32;
+                }
+                let on_this = if qn == 0 { m1 } else { !m1 };
+                scr.dq[i] = if on_this { -1.0 / b as f32 } else { 0.0 };
+            }
+            pass.backward(critic_p, &scr.dq, b, None, Some(&mut scr.dsa));
+            for i in 0..b {
+                for j in 0..adim {
+                    scr.da[i * adim + j] += scr.dsa[i * (o + adim) + o + j];
+                }
+            }
+        }
+        let gl = alpha / b as f32;
+        head_bwd(&scr.ls, n1, &scr.a_pol, &scr.da, gl, b, adim, &mut scr.dout);
+        actor.backward(actor_p, &scr.dout, b, Some(&mut scr.grads[..]), None);
+        scr.grads[la_off] += -(logp_mean + tent);
+
+        let metrics = vec![
+            0.0, actor_loss, alpha, q_mean,
+            logp_mean, 0.0, 0.0, -logp_mean,
+        ];
+        let mut p2 = actor_p.to_vec();
+        let mut m2 = m.to_vec();
+        let mut v2 = v.to_vec();
+        adam_step(&mut p2, &scr.grads, &mut m2, &mut v2, lr, step);
+        vec![
+            ("actor_params".into(), p2),
+            ("m".into(), m2),
+            ("v".into(), v2),
+            ("metrics".into(), metrics),
+        ]
+    }
+
+    /// Device-1 half of the model-parallel round — mirrors
+    /// `model.py::sac_critic_step` (TD critic + Polyak targets).
+    #[allow(clippy::too_many_arguments)]
+    fn sac_critic(
+        &mut self,
+        actor_p: &[f32],
+        critic_p: &[f32],
+        targets: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: f32,
+        s: &[f32],
+        a: &[f32],
+        r: &[f32],
+        d: &[f32],
+        s2: &[f32],
+        n2: &[f32],
+        hyper: &[f32; 6],
+    ) -> Vec<(String, Vec<f32>)> {
+        let NativeStep { layout, actor, q1, q2, scr, bs, .. } = self;
+        let b = *bs;
+        let (o, adim) = (layout.obs_dim, layout.act_dim);
+        let la_off = layout.actor_segment("actor/log_alpha").unwrap().offset;
+        let alpha = actor_p[la_off].exp();
+        let (lr, gamma, tau, rs) = (hyper[0], hyper[1], hyper[2], hyper[4]);
+
+        scr.grads.clear();
+        scr.grads.resize(layout.critic_size, 0.0);
+
+        let out2 = actor.forward(actor_p, s2, b);
+        copy_mu_ls(out2, b, adim, &mut scr.mu, &mut scr.ls);
+        head_fwd(&scr.mu, &scr.ls, n2, b, adim, &mut scr.a_pol, &mut scr.logp2);
+        let logp2_mean = mean(&scr.logp2);
+        concat_sa(s2, &scr.a_pol, b, o, adim, &mut scr.sa);
+        copy_into(q1.forward(targets, &scr.sa, b), &mut scr.tq);
+        copy_into(q2.forward(targets, &scr.sa, b), &mut scr.qb);
+        for i in 0..b {
+            let qmin = scr.tq[i].min(scr.qb[i]);
+            scr.tq[i] = r[i] * rs + gamma * (1.0 - d[i]) * (qmin - alpha * scr.logp2[i]);
+        }
+        let tq_mean = mean(&scr.tq);
+
+        concat_sa(s, a, b, o, adim, &mut scr.sa);
+        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
+        let q1_mean = mean(&scr.qa);
+        let mut q_loss = 0.0f32;
+        scr.dq.resize(b, 0.0);
+        for i in 0..b {
+            let e = scr.qa[i] - scr.tq[i];
+            q_loss += e * e / b as f32;
+            scr.dq[i] = 2.0 * e / b as f32;
+        }
+        q1.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[..]), None);
+        copy_into(q2.forward(critic_p, &scr.sa, b), &mut scr.qb);
+        for i in 0..b {
+            let e = scr.qb[i] - scr.tq[i];
+            q_loss += e * e / b as f32;
+            scr.dq[i] = 2.0 * e / b as f32;
+        }
+        q2.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[..]), None);
+
+        let metrics = vec![
+            q_loss, 0.0, alpha, q1_mean,
+            logp2_mean, tq_mean, mean(r), -logp2_mean,
+        ];
+        let mut p2 = critic_p.to_vec();
+        let mut m2 = m.to_vec();
+        let mut v2 = v.to_vec();
+        adam_step(&mut p2, &scr.grads, &mut m2, &mut v2, lr, step);
+        let mut t2 = targets.to_vec();
+        polyak(&p2, &mut t2, tau);
+        vec![
+            ("critic_params".into(), p2),
+            ("targets".into(), t2),
+            ("m".into(), m2),
+            ("v".into(), v2),
+            ("metrics".into(), metrics),
+        ]
+    }
+}
+
+/// Look up a named input slice in manifest order.
+fn get<'a>(meta: &ArtifactMeta, inputs: &[&'a [f32]], name: &str) -> Result<&'a [f32]> {
+    meta.inputs
+        .iter()
+        .position(|(n, _)| n == name)
+        .map(|i| inputs[i])
+        .with_context(|| format!("native step missing input {name:?}"))
+}
+
+fn mean(v: &[f32]) -> f32 {
+    v.iter().sum::<f32>() / v.len() as f32
+}
+
+fn copy_into(src: &[f32], dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.extend_from_slice(src);
+}
+
+/// Split the actor output `[b, 2A]` into mu `[b, A]` and raw (unclamped)
+/// log_std `[b, A]`.
+fn copy_mu_ls(out: &[f32], b: usize, adim: usize, mu: &mut Vec<f32>, ls: &mut Vec<f32>) {
+    mu.clear();
+    ls.clear();
+    for i in 0..b {
+        let row = &out[i * 2 * adim..(i + 1) * 2 * adim];
+        mu.extend_from_slice(&row[..adim]);
+        ls.extend_from_slice(&row[adim..]);
+    }
+}
+
+/// Build `[b, obs+act]` rows from an observation matrix and an action matrix.
+fn concat_sa(obs: &[f32], act: &[f32], b: usize, o: usize, adim: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(b * (o + adim));
+    for i in 0..b {
+        out.extend_from_slice(&obs[i * o..(i + 1) * o]);
+        out.extend_from_slice(&act[i * adim..(i + 1) * adim]);
+    }
+}
+
+/// Tanh-squashed gaussian head forward — mirrors `ref.py::gaussian_head`:
+/// a = tanh(mu + exp(clip(ls)) * n),
+/// logp = Σ_j [-0.5 n² - ls - ½log2π - log(1 - a² + eps)].
+fn head_fwd(
+    mu: &[f32],
+    ls_raw: &[f32],
+    noise: &[f32],
+    b: usize,
+    adim: usize,
+    a_out: &mut Vec<f32>,
+    logp: &mut Vec<f32>,
+) {
+    a_out.clear();
+    a_out.resize(b * adim, 0.0);
+    logp.clear();
+    logp.resize(b, 0.0);
+    for i in 0..b {
+        let mut lp = 0.0f32;
+        for j in 0..adim {
+            let k = i * adim + j;
+            let ls = ls_raw[k].clamp(LOG_STD_MIN, LOG_STD_MAX);
+            let n = noise[k];
+            let a = (mu[k] + ls.exp() * n).tanh();
+            a_out[k] = a;
+            lp += -0.5 * n * n - ls - HALF_LOG_2PI - (1.0 - a * a + SQUASH_EPS).ln();
+        }
+        logp[i] = lp;
+    }
+}
+
+/// Backward of the head into the actor's `[b, 2A]` output gradient:
+/// `da` = dL/d action, `gl` = dL/d logp per row (constant across rows here).
+/// The clip on log_std passes gradient only inside [LOG_STD_MIN, LOG_STD_MAX].
+#[allow(clippy::too_many_arguments)]
+fn head_bwd(
+    ls_raw: &[f32],
+    noise: &[f32],
+    a: &[f32],
+    da: &[f32],
+    gl: f32,
+    b: usize,
+    adim: usize,
+    dout: &mut Vec<f32>,
+) {
+    dout.clear();
+    dout.resize(b * 2 * adim, 0.0);
+    for i in 0..b {
+        for j in 0..adim {
+            let k = i * adim + j;
+            let ls = ls_raw[k].clamp(LOG_STD_MIN, LOG_STD_MAX);
+            let (e, n, av) = (ls.exp(), noise[k], a[k]);
+            let t = 1.0 - av * av; // d tanh
+            let c = 2.0 * av / (t + SQUASH_EPS); // d(-log(1-a²+eps))/da
+            let ga = da[k];
+            let dmu = ga * t + gl * c * t;
+            let mut dls = ga * e * n * t + gl * (-1.0 + c * e * n * t);
+            if ls_raw[k] < LOG_STD_MIN || ls_raw[k] > LOG_STD_MAX {
+                dls = 0.0;
+            }
+            dout[i * 2 * adim + j] = dmu;
+            dout[i * 2 * adim + adim + j] = dls;
+        }
+    }
+}
+
+// ------------------------------------------------------------ manifest
+
+/// Synthesize the manifest the native backend serves: layouts + artifact
+/// metadata for every registered env × {sac, td3} `full` step across
+/// [`NATIVE_BS_LADDER`], plus the SAC `actor`/`critic` split for the
+/// model-parallel mode. The I/O naming matches `python/compile/aot.py`
+/// signatures exactly, so `Learner` / `ModelParallelLearner` drive both
+/// backends through identical wiring.
+pub fn native_manifest() -> Manifest {
+    let mut layouts = BTreeMap::new();
+    let mut artifacts = Vec::new();
+    for env in crate::config::presets::ALL_ENVS {
+        let e = crate::env::registry::make_env(env).expect("registered env constructs");
+        let (obs_dim, act_dim) = (e.spec().obs_dim, e.spec().act_dim);
+        let hidden = if *env == "pendulum" { 64 } else { 256 };
+        for algo in ["sac", "td3"] {
+            let lay = Layout::build_native(env, algo, obs_dim, act_dim, hidden, NATIVE_CHUNK)
+                .expect("native layout builds");
+            for &bs in NATIVE_BS_LADDER {
+                artifacts.push(full_meta(&lay, bs));
+                if algo == "sac" {
+                    artifacts.push(actor_meta(&lay, bs));
+                    artifacts.push(critic_meta(&lay, bs));
+                }
+            }
+            layouts.insert(format!("{env}/{algo}"), lay);
+        }
+    }
+    Manifest { dir: PathBuf::from("native"), layouts, artifacts, native: true }
+}
+
+fn full_meta(lay: &Layout, bs: usize) -> ArtifactMeta {
+    let (o, a, p, t) = (lay.obs_dim, lay.act_dim, lay.param_size, lay.target_size);
+    let mut inputs: Vec<(String, Vec<usize>)> = vec![
+        ("params".into(), vec![p]),
+        ("targets".into(), vec![t]),
+        ("m".into(), vec![p]),
+        ("v".into(), vec![p]),
+        ("step".into(), vec![]),
+        ("s".into(), vec![bs, o]),
+        ("a".into(), vec![bs, a]),
+        ("r".into(), vec![bs]),
+        ("d".into(), vec![bs]),
+        ("s2".into(), vec![bs, o]),
+    ];
+    if lay.algo == "sac" {
+        inputs.push(("noise1".into(), vec![bs, a]));
+        inputs.push(("noise2".into(), vec![bs, a]));
+    } else {
+        inputs.push(("noise2".into(), vec![bs, a]));
+        inputs.push(("update_actor".into(), vec![]));
+    }
+    inputs.push(("hyper".into(), vec![6]));
+    ArtifactMeta {
+        file: format!("native://{}/{}_full_bs{bs}", lay.env, lay.algo),
+        env: lay.env.clone(),
+        algo: lay.algo.clone(),
+        func: "full".into(),
+        bs,
+        inputs,
+        outputs: ["params", "targets", "m", "v", "metrics"].map(String::from).to_vec(),
+    }
+}
+
+fn actor_meta(lay: &Layout, bs: usize) -> ArtifactMeta {
+    let (o, a) = (lay.obs_dim, lay.act_dim);
+    let (pa, pc) = (lay.actor_size, lay.critic_size);
+    ArtifactMeta {
+        file: format!("native://{}/sac_actor_bs{bs}", lay.env),
+        env: lay.env.clone(),
+        algo: "sac".into(),
+        func: "actor".into(),
+        bs,
+        inputs: vec![
+            ("actor_params".into(), vec![pa]),
+            ("critic_params".into(), vec![pc]),
+            ("m".into(), vec![pa]),
+            ("v".into(), vec![pa]),
+            ("step".into(), vec![]),
+            ("s".into(), vec![bs, o]),
+            ("noise1".into(), vec![bs, a]),
+            ("hyper".into(), vec![6]),
+        ],
+        outputs: ["actor_params", "m", "v", "metrics"].map(String::from).to_vec(),
+    }
+}
+
+fn critic_meta(lay: &Layout, bs: usize) -> ArtifactMeta {
+    let (o, a) = (lay.obs_dim, lay.act_dim);
+    let (pa, pc, t) = (lay.actor_size, lay.critic_size, lay.target_size);
+    ArtifactMeta {
+        file: format!("native://{}/sac_critic_bs{bs}", lay.env),
+        env: lay.env.clone(),
+        algo: "sac".into(),
+        func: "critic".into(),
+        bs,
+        inputs: vec![
+            ("actor_params".into(), vec![pa]),
+            ("critic_params".into(), vec![pc]),
+            ("targets".into(), vec![t]),
+            ("m".into(), vec![pc]),
+            ("v".into(), vec![pc]),
+            ("step".into(), vec![]),
+            ("s".into(), vec![bs, o]),
+            ("a".into(), vec![bs, a]),
+            ("r".into(), vec![bs]),
+            ("d".into(), vec![bs]),
+            ("s2".into(), vec![bs, o]),
+            ("noise2".into(), vec![bs, a]),
+            ("hyper".into(), vec![6]),
+        ],
+        outputs: ["critic_params", "targets", "m", "v", "metrics"].map(String::from).to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Segment;
+    use crate::util::rng::Rng;
+
+    // ---------------- f64 oracle (independent of the production kernels)
+
+    fn seg<'a>(segs: &'a [Segment], name: &str) -> &'a Segment {
+        segs.iter().find(|s| s.name == name).unwrap()
+    }
+
+    fn dense64(flat: &[f32], w: &Segment, b: &Segment, x: &[f64], relu: bool) -> Vec<f64> {
+        let (ind, outd) = (w.shape[0], w.shape[1]);
+        let mut y = vec![0.0f64; outd];
+        for (j, yj) in y.iter_mut().enumerate() {
+            let mut acc = flat[b.offset + j] as f64;
+            for (i, &xi) in x.iter().enumerate().take(ind) {
+                acc += xi * flat[w.offset + i * outd + j] as f64;
+            }
+            *yj = if relu { acc.max(0.0) } else { acc };
+        }
+        y
+    }
+
+    fn mlp64(flat: &[f32], segs: &[Segment], p: &str, x: &[f64]) -> Vec<f64> {
+        let lay = |n: &str| seg(segs, &format!("{p}{n}"));
+        let h0 = dense64(flat, lay("w0"), lay("b0"), x, true);
+        let h1 = dense64(flat, lay("w1"), lay("b1"), &h0, true);
+        dense64(flat, lay("w2"), lay("b2"), &h1, false)
+    }
+
+    fn q64(flat: &[f32], segs: &[Segment], q: &str, s: &[f64], a: &[f64]) -> f64 {
+        let mut sa = s.to_vec();
+        sa.extend_from_slice(a);
+        mlp64(flat, segs, q, &sa)[0]
+    }
+
+    /// (action, logp) — ref.py::gaussian_head in f64.
+    fn head64(mu: &[f64], ls_raw: &[f64], n: &[f64]) -> (Vec<f64>, f64) {
+        let mut a = vec![0.0f64; mu.len()];
+        let mut logp = 0.0f64;
+        for j in 0..mu.len() {
+            let ls = ls_raw[j].clamp(LOG_STD_MIN as f64, LOG_STD_MAX as f64);
+            a[j] = (mu[j] + ls.exp() * n[j]).tanh();
+            logp += -0.5 * n[j] * n[j] - ls - 0.918938533204672_f64
+                - (1.0 - a[j] * a[j] + SQUASH_EPS as f64).ln();
+        }
+        (a, logp)
+    }
+
+    fn rows(buf: &[f32], i: usize, dim: usize) -> Vec<f64> {
+        buf[i * dim..(i + 1) * dim].iter().map(|&v| v as f64).collect()
+    }
+
+    struct Batch64<'a> {
+        s: &'a [f32],
+        a: &'a [f32],
+        r: &'a [f32],
+        d: &'a [f32],
+        s2: &'a [f32],
+        n1: &'a [f32],
+        n2: &'a [f32],
+    }
+
+    /// Total SAC loss with the stop-gradient structure made explicit:
+    /// `live` receives gradients, `frozen` is the stop_gradient copy (equal
+    /// at the evaluation point; only `live` is perturbed by FD).
+    #[allow(clippy::too_many_arguments)]
+    fn sac_loss64(
+        lay: &Layout,
+        live: &[f32],
+        frozen: &[f32],
+        targets: &[f32],
+        b: &Batch64,
+        hyper: &[f32; 6],
+        bs: usize,
+    ) -> f64 {
+        let pa = lay.actor_size;
+        let la_off = lay.actor_segment("actor/log_alpha").unwrap().offset;
+        let alpha_f = (frozen[la_off] as f64).exp();
+        let (gamma, tent, rs) = (hyper[1] as f64, hyper[3] as f64, hyper[4] as f64);
+        let (o, adim) = (lay.obs_dim, lay.act_dim);
+        let (mut q_loss, mut actor_loss, mut alpha_loss) = (0.0, 0.0, 0.0);
+        for i in 0..bs {
+            let (srow, arow) = (rows(b.s, i, o), rows(b.a, i, adim));
+            let s2row = rows(b.s2, i, o);
+            let (n1row, n2row) = (rows(b.n1, i, adim), rows(b.n2, i, adim));
+            let (rr, dd) = (b.r[i] as f64, b.d[i] as f64);
+            // TD target: fully frozen
+            let out2 = mlp64(&frozen[..pa], &lay.actor_segments, "actor/", &s2row);
+            let (a2, logp2) = head64(&out2[..adim], &out2[adim..], &n2row);
+            let q1t = q64(targets, &lay.critic_segments, "q1/", &s2row, &a2);
+            let q2t = q64(targets, &lay.critic_segments, "q2/", &s2row, &a2);
+            let tq = rr * rs + gamma * (1.0 - dd) * (q1t.min(q2t) - alpha_f * logp2);
+            // critic loss: live critic
+            let q1 = q64(&live[pa..], &lay.critic_segments, "q1/", &srow, &arow);
+            let q2 = q64(&live[pa..], &lay.critic_segments, "q2/", &srow, &arow);
+            q_loss += ((q1 - tq).powi(2) + (q2 - tq).powi(2)) / bs as f64;
+            // actor loss: live actor, frozen critic, frozen alpha
+            let out1 = mlp64(&live[..pa], &lay.actor_segments, "actor/", &srow);
+            let (a1, logp1) = head64(&out1[..adim], &out1[adim..], &n1row);
+            let q1pi = q64(&frozen[pa..], &lay.critic_segments, "q1/", &srow, &a1);
+            let q2pi = q64(&frozen[pa..], &lay.critic_segments, "q2/", &srow, &a1);
+            actor_loss += (alpha_f * logp1 - q1pi.min(q2pi)) / bs as f64;
+            // temperature loss: live log_alpha, frozen logp1
+            let out1f = mlp64(&frozen[..pa], &lay.actor_segments, "actor/", &srow);
+            let (_, logp1f) = head64(&out1f[..adim], &out1f[adim..], &n1row);
+            alpha_loss += -(live[la_off] as f64) * (logp1f + tent) / bs as f64;
+        }
+        q_loss + actor_loss + alpha_loss
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn td3_loss64(
+        lay: &Layout,
+        live: &[f32],
+        frozen: &[f32],
+        targets: &[f32],
+        b: &Batch64,
+        hyper: &[f32; 6],
+        update_actor: f64,
+        bs: usize,
+    ) -> f64 {
+        let pa = lay.actor_size;
+        let (gamma, rs, pn) = (hyper[1] as f64, hyper[4] as f64, hyper[5] as f64);
+        let (o, adim) = (lay.obs_dim, lay.act_dim);
+        let (mut q_loss, mut actor_loss) = (0.0, 0.0);
+        for i in 0..bs {
+            let (srow, arow) = (rows(b.s, i, o), rows(b.a, i, adim));
+            let s2row = rows(b.s2, i, o);
+            let n2row = rows(b.n2, i, adim);
+            let (rr, dd) = (b.r[i] as f64, b.d[i] as f64);
+            let mu2 = mlp64(&frozen[..pa], &lay.actor_segments, "actor/", &s2row);
+            let a2: Vec<f64> = mu2
+                .iter()
+                .zip(&n2row)
+                .map(|(&mu, &n)| (mu.tanh() + (n * pn).clamp(-0.5, 0.5)).clamp(-1.0, 1.0))
+                .collect();
+            let q1t = q64(targets, &lay.critic_segments, "q1/", &s2row, &a2);
+            let q2t = q64(targets, &lay.critic_segments, "q2/", &s2row, &a2);
+            let tq = rr * rs + gamma * (1.0 - dd) * q1t.min(q2t);
+            let q1 = q64(&live[pa..], &lay.critic_segments, "q1/", &srow, &arow);
+            let q2 = q64(&live[pa..], &lay.critic_segments, "q2/", &srow, &arow);
+            q_loss += ((q1 - tq).powi(2) + (q2 - tq).powi(2)) / bs as f64;
+            let mu1 = mlp64(&live[..pa], &lay.actor_segments, "actor/", &srow);
+            let a1: Vec<f64> = mu1.iter().map(|&m| m.tanh()).collect();
+            let q1pi = q64(&frozen[pa..], &lay.critic_segments, "q1/", &srow, &a1);
+            actor_loss += -q1pi / bs as f64;
+        }
+        q_loss + update_actor * actor_loss
+    }
+
+    // ---------------- fixtures
+
+    struct Fixture {
+        lay: Layout,
+        meta: ArtifactMeta,
+        params: Vec<f32>,
+        targets: Vec<f32>,
+        m: Vec<f32>,
+        v: Vec<f32>,
+        s: Vec<f32>,
+        a: Vec<f32>,
+        r: Vec<f32>,
+        d: Vec<f32>,
+        s2: Vec<f32>,
+        n1: Vec<f32>,
+        n2: Vec<f32>,
+        hyper: [f32; 6],
+        bs: usize,
+    }
+
+    fn fixture(algo: &str, bs: usize) -> Fixture {
+        let lay = Layout::build_native("pendulum", algo, 3, 1, 8, 32).unwrap();
+        let meta = full_meta(&lay, bs);
+        let mut rng = Rng::new(17);
+        let (params, targets) = lay.init_params(&mut rng);
+        let (o, adim) = (lay.obs_dim, lay.act_dim);
+        let mut f = Fixture {
+            m: vec![0.0; lay.param_size],
+            v: vec![0.0; lay.param_size],
+            s: vec![0.0; bs * o],
+            a: vec![0.0; bs * adim],
+            r: vec![0.0; bs],
+            d: vec![0.0; bs],
+            s2: vec![0.0; bs * o],
+            n1: vec![0.0; bs * adim],
+            n2: vec![0.0; bs * adim],
+            hyper: [3e-3, 0.97, 0.01, -1.0, 0.9, 0.2],
+            bs,
+            lay,
+            meta,
+            params,
+            targets,
+        };
+        rng.fill_normal(&mut f.s);
+        rng.fill_normal(&mut f.s2);
+        rng.fill_normal(&mut f.n1);
+        rng.fill_normal(&mut f.n2);
+        rng.fill_uniform(&mut f.a, -1.0, 1.0);
+        rng.fill_uniform(&mut f.r, -2.0, 2.0);
+        for i in 0..bs {
+            f.d[i] = if i % 3 == 0 { 1.0 } else { 0.0 };
+        }
+        f
+    }
+
+    fn run_full(step: &mut NativeStep, f: &Fixture, update_actor: f32) -> Vec<Vec<f32>> {
+        let step_in = [1.0f32];
+        let ua = [update_actor];
+        let mut inputs: Vec<&[f32]> = vec![
+            &f.params, &f.targets, &f.m, &f.v, &step_in,
+            &f.s, &f.a, &f.r, &f.d, &f.s2,
+        ];
+        if f.lay.algo == "sac" {
+            inputs.push(&f.n1);
+            inputs.push(&f.n2);
+        } else {
+            inputs.push(&f.n2);
+            inputs.push(&ua);
+        }
+        inputs.push(&f.hyper);
+        step.run(&f.meta, &inputs).unwrap()
+    }
+
+    fn check_grads(lay: &Layout, grads: &[f32], fd_loss: impl Fn(&[f32]) -> f64, params: &[f32]) {
+        let h = 1e-3f32;
+        let mut checked = 0;
+        for i in 0..lay.param_size {
+            let mut p = params.to_vec();
+            p[i] = params[i] + h;
+            let lp = fd_loss(&p);
+            p[i] = params[i] - h;
+            let lm = fd_loss(&p);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            let tol = 1e-3 + 2e-2 * fd.abs();
+            assert!(
+                (grads[i] - fd).abs() <= tol,
+                "param {i}: analytic {} vs fd {fd}",
+                grads[i]
+            );
+            checked += 1;
+        }
+        assert_eq!(checked, lay.param_size);
+    }
+
+    // ---------------- tests
+
+    #[test]
+    fn sac_full_grads_match_finite_differences() {
+        let f = fixture("sac", 4);
+        let mut step = NativeStep::new(f.lay.clone(), "full", f.bs).unwrap();
+        run_full(&mut step, &f, 1.0);
+        let grads = step.last_grads().to_vec();
+        let b = Batch64 { s: &f.s, a: &f.a, r: &f.r, d: &f.d, s2: &f.s2, n1: &f.n1, n2: &f.n2 };
+        check_grads(
+            &f.lay,
+            &grads,
+            |live| sac_loss64(&f.lay, live, &f.params, &f.targets, &b, &f.hyper, f.bs),
+            &f.params,
+        );
+    }
+
+    #[test]
+    fn td3_full_grads_match_finite_differences() {
+        let f = fixture("td3", 4);
+        let mut step = NativeStep::new(f.lay.clone(), "full", f.bs).unwrap();
+        run_full(&mut step, &f, 1.0);
+        let grads = step.last_grads().to_vec();
+        let b = Batch64 { s: &f.s, a: &f.a, r: &f.r, d: &f.d, s2: &f.s2, n1: &f.n1, n2: &f.n2 };
+        check_grads(
+            &f.lay,
+            &grads,
+            |live| td3_loss64(&f.lay, live, &f.params, &f.targets, &b, &f.hyper, 1.0, f.bs),
+            &f.params,
+        );
+    }
+
+    #[test]
+    fn td3_gated_step_freezes_actor_and_targets() {
+        let f = fixture("td3", 4);
+        let mut step = NativeStep::new(f.lay.clone(), "full", f.bs).unwrap();
+        let outs = run_full(&mut step, &f, 0.0);
+        let pa = f.lay.actor_size;
+        // update_actor = 0: actor half untouched (zero grads + zero Adam
+        // state), targets not interpolated, critic updated
+        assert_eq!(&outs[0][..pa], &f.params[..pa], "actor must not move");
+        assert_eq!(&outs[1][..], &f.targets[..], "targets must not move");
+        assert!(outs[0][pa..] != f.params[pa..], "critic must move");
+        // and with the gate open everything moves
+        let outs = run_full(&mut step, &f, 1.0);
+        assert!(outs[0][..pa] != f.params[..pa]);
+        assert!(outs[1] != f.targets);
+    }
+
+    #[test]
+    fn split_actor_critic_round_matches_full_step() {
+        let f = fixture("sac", 8);
+        let pa = f.lay.actor_size;
+        let mut full = NativeStep::new(f.lay.clone(), "full", f.bs).unwrap();
+        let full_out = run_full(&mut full, &f, 1.0);
+
+        let step_in = [1.0f32];
+        let (actor_p, critic_p) = f.params.split_at(pa);
+        let mut actor = NativeStep::new(f.lay.clone(), "actor", f.bs).unwrap();
+        let am = actor_meta(&f.lay, f.bs);
+        let a_out = actor
+            .run(&am, &[
+                actor_p, critic_p, &f.m[..pa], &f.v[..pa], &step_in,
+                &f.s, &f.n1, &f.hyper,
+            ])
+            .unwrap();
+        let mut critic = NativeStep::new(f.lay.clone(), "critic", f.bs).unwrap();
+        let cm = critic_meta(&f.lay, f.bs);
+        let c_out = critic
+            .run(&cm, &[
+                actor_p, critic_p, &f.targets, &f.m[pa..], &f.v[pa..], &step_in,
+                &f.s, &f.a, &f.r, &f.d, &f.s2, &f.n2, &f.hyper,
+            ])
+            .unwrap();
+
+        // one split round == one full step (the paper's Fig. 3 exchange)
+        let close = |x: &[f32], y: &[f32], what: &str| {
+            assert_eq!(x.len(), y.len(), "{what} length");
+            for (i, (&a, &b)) in x.iter().zip(y).enumerate() {
+                assert!((a - b).abs() <= 1e-6, "{what}[{i}]: {a} vs {b}");
+            }
+        };
+        close(&a_out[0], &full_out[0][..pa], "actor params");
+        close(&c_out[0], &full_out[0][pa..], "critic params");
+        close(&c_out[1], &full_out[1], "targets");
+        close(&a_out[1], &full_out[2][..pa], "actor m");
+        close(&c_out[2], &full_out[2][pa..], "critic m");
+        // metrics recombine across the actor (1,2,4,7) / critic (0,3,5,6)
+        // index split used by ModelParallelLearner
+        let fm = &full_out[4];
+        close(&[a_out[3][1], a_out[3][2], a_out[3][4]], &[fm[1], fm[2], fm[4]], "actor metrics");
+        close(&[c_out[4][0], c_out[4][3], c_out[4][5], c_out[4][6]],
+              &[fm[0], fm[3], fm[5], fm[6]], "critic metrics");
+    }
+
+    #[test]
+    fn native_manifest_covers_registry() {
+        let m = native_manifest();
+        assert!(m.native);
+        for env in crate::config::presets::ALL_ENVS {
+            for algo in ["sac", "td3"] {
+                let lay = m.layout(env, algo).unwrap();
+                let e = crate::env::registry::make_env(env).unwrap();
+                m.check_env(env, algo, e.spec().obs_dim, e.spec().act_dim).unwrap();
+                assert_eq!(m.batch_sizes(env, algo, "full"), NATIVE_BS_LADDER.to_vec());
+                let meta = m.find(env, algo, "full", 256).unwrap();
+                assert_eq!(meta.input_len(0), lay.param_size);
+            }
+            assert_eq!(m.batch_sizes(env, "sac", "actor"), NATIVE_BS_LADDER.to_vec());
+            assert_eq!(m.batch_sizes(env, "sac", "critic"), NATIVE_BS_LADDER.to_vec());
+        }
+    }
+
+    #[test]
+    fn sac_update_reduces_q_loss_on_fixed_batch() {
+        // behavioral sanity: repeated updates on one batch drive q_loss down
+        let f = fixture("sac", 16);
+        let mut step = NativeStep::new(f.lay.clone(), "full", f.bs).unwrap();
+        let mut params = f.params.clone();
+        let mut targets = f.targets.clone();
+        let (mut m, mut v) = (f.m.clone(), f.v.clone());
+        let mut first = f32::NAN;
+        let mut best = f32::INFINITY;
+        for it in 0..200 {
+            let step_in = [(it + 1) as f32];
+            let outs = step
+                .run(&f.meta, &[
+                    &params, &targets, &m, &v, &step_in,
+                    &f.s, &f.a, &f.r, &f.d, &f.s2, &f.n1, &f.n2, &f.hyper,
+                ])
+                .unwrap();
+            let metrics = &outs[4];
+            if it == 0 {
+                first = metrics[0];
+            }
+            best = best.min(metrics[0]);
+            assert!(metrics.iter().all(|x| x.is_finite()), "metrics finite");
+            params = outs[0].clone();
+            targets = outs[1].clone();
+            m = outs[2].clone();
+            v = outs[3].clone();
+        }
+        assert!(first > 0.0, "initial q_loss must be positive, got {first}");
+        assert!(best < first * 0.7, "q_loss should drop: first {first}, best {best}");
+    }
+}

@@ -1,0 +1,152 @@
+//! End-to-end learner tests on the native executor backend — the tests the
+//! PJRT stub could never run (they previously died at `Manifest::load`):
+//! real SAC and TD3 updates through `Learner::try_update`, policy-delay
+//! gating, batch-size switching, and the dual-executor model-parallel round.
+
+use std::sync::Arc;
+
+use spreeze::config::{presets, Algo, TrainConfig};
+use spreeze::coordinator::metrics::MetricsHub;
+use spreeze::learner::model_parallel::ModelParallelLearner;
+use spreeze::learner::{hyper_vec, Learner, METRIC_NAMES};
+use spreeze::replay::shm_ring::ShmSource;
+use spreeze::replay::{FrameSpec, ShmRing, ShmRingOptions};
+use spreeze::runtime::{native_manifest, Manifest};
+use spreeze::util::rng::Rng;
+
+fn filled_source(manifest: &Manifest, env: &str, n: usize) -> Box<ShmSource> {
+    let lay = manifest.layout(env, "sac").unwrap();
+    let spec = FrameSpec { obs_dim: lay.obs_dim, act_dim: lay.act_dim };
+    let ring =
+        Arc::new(ShmRing::create(&ShmRingOptions { capacity: n, spec, shm_name: None }).unwrap());
+    let mut rng = Rng::new(41);
+    let mut frame = vec![0.0f32; spec.f32s()];
+    for i in 0..n {
+        rng.fill_normal(&mut frame);
+        frame[lay.obs_dim + lay.act_dim + 1] = if i % 5 == 0 { 1.0 } else { 0.0 };
+        ring.push_frame(&frame);
+    }
+    Box::new(ShmSource::new(ring))
+}
+
+fn cfg(env: &str, algo: Algo) -> TrainConfig {
+    let mut c = presets::preset(env);
+    c.algo = algo;
+    c
+}
+
+#[test]
+fn sac_try_update_runs_natively_end_to_end() {
+    let manifest = native_manifest();
+    let cfg = cfg("pendulum", Algo::Sac);
+    let source = filled_source(&manifest, "pendulum", 4096);
+    let mut learner = Learner::new(&cfg, &manifest, 64, source).unwrap();
+    let p0 = learner.params.clone();
+    let t0 = learner.targets.clone();
+
+    for _ in 0..5 {
+        assert!(learner.try_update().unwrap(), "batch must be available");
+    }
+    assert_eq!(learner.step, 5);
+    assert!(learner.params != p0, "params must change");
+    assert!(learner.targets != t0, "targets must change");
+    for name in METRIC_NAMES {
+        assert!(learner.metric(name).is_finite(), "metric {name} not finite");
+    }
+    assert!(learner.metric("alpha") > 0.0);
+    assert!(learner.metric("q_loss") > 0.0);
+    // entropy_term is -logp_mean by construction
+    let e = learner.metric("entropy_term") + learner.metric("logp_mean");
+    assert!(e.abs() < 1e-5, "entropy_term must mirror -logp_mean, diff {e}");
+}
+
+#[test]
+fn td3_policy_delay_gates_actor_and_targets() {
+    let manifest = native_manifest();
+    let mut cfg = cfg("pendulum", Algo::Td3);
+    cfg.policy_delay = 2;
+    let source = filled_source(&manifest, "pendulum", 4096);
+    let mut learner = Learner::new(&cfg, &manifest, 64, source).unwrap();
+    let pa = learner.layout.actor_size;
+    let p0 = learner.params.clone();
+    let t0 = learner.targets.clone();
+
+    // step 1: 1 % 2 != 0 -> update_actor = 0: actor + targets frozen
+    assert!(learner.try_update().unwrap());
+    assert_eq!(&learner.params[..pa], &p0[..pa], "actor frozen off-delay");
+    assert_eq!(&learner.targets[..], &t0[..], "targets frozen off-delay");
+    assert!(learner.params[pa..] != p0[pa..], "critic always updates");
+
+    // step 2: gate opens
+    assert!(learner.try_update().unwrap());
+    assert!(learner.params[..pa] != p0[..pa], "actor updates on-delay");
+    assert!(learner.targets != t0, "targets interpolate on-delay");
+    for name in METRIC_NAMES {
+        assert!(learner.metric(name).is_finite(), "metric {name} not finite");
+    }
+}
+
+#[test]
+fn switch_batch_size_preserves_params() {
+    let manifest = native_manifest();
+    let cfg = cfg("pendulum", Algo::Sac);
+    let source = filled_source(&manifest, "pendulum", 4096);
+    let mut learner = Learner::new(&cfg, &manifest, 64, source).unwrap();
+    assert!(learner.try_update().unwrap());
+    let p = learner.params.clone();
+    let t = learner.targets.clone();
+    let (m, v) = (learner.m.clone(), learner.v.clone());
+
+    learner.switch_batch_size(&manifest, 128).unwrap();
+    assert_eq!(learner.batch_size(), 128);
+    assert_eq!(learner.params, p, "params carry over the BS switch");
+    assert_eq!(learner.targets, t);
+    assert_eq!(learner.m, m);
+    assert_eq!(learner.v, v);
+    // and the learner still updates at the new batch size
+    assert!(learner.try_update().unwrap());
+    assert!(learner.params != p);
+}
+
+#[test]
+fn bs_fallback_snaps_to_native_ladder() {
+    let manifest = native_manifest();
+    let cfg = cfg("pendulum", Algo::Sac);
+    let source = filled_source(&manifest, "pendulum", 4096);
+    // 200 is not on the ladder; nearest compiled size is 256
+    let learner = Learner::new_with_bs_fallback(&cfg, &manifest, 200, source).unwrap();
+    assert_eq!(learner.batch_size(), 256);
+}
+
+#[test]
+fn model_parallel_round_runs_natively() {
+    let manifest = native_manifest();
+    let cfg = cfg("pendulum", Algo::Sac);
+    let source = filled_source(&manifest, "pendulum", 4096);
+    let hub = Arc::new(MetricsHub::new());
+    let mut mp = ModelParallelLearner::new(&cfg, &manifest, 64, source, hub).unwrap();
+    let a0 = mp.actor_params.clone();
+    let c0 = mp.critic_params.clone();
+    let t0 = mp.targets.clone();
+    for _ in 0..3 {
+        assert!(mp.try_update().unwrap());
+    }
+    assert!(mp.actor_params != a0, "actor half must update");
+    assert!(mp.critic_params != c0, "critic half must update");
+    assert!(mp.targets != t0, "targets must interpolate");
+    assert!(mp.last_metrics.iter().all(|x| x.is_finite()));
+    assert_eq!(mp.full_params().len(), mp.layout.param_size);
+}
+
+#[test]
+fn hyper_vec_passes_explicit_zero_target_entropy() {
+    let mut c = presets::preset("walker");
+    // auto: -act_dim (walker act_dim = 6)
+    c.target_entropy = None;
+    assert_eq!(hyper_vec(&c, 6)[3], -6.0);
+    // explicit 0.0 must survive (the old 0.0-sentinel bug replaced it)
+    c.target_entropy = Some(0.0);
+    assert_eq!(hyper_vec(&c, 6)[3], 0.0);
+    c.target_entropy = Some(-2.5);
+    assert_eq!(hyper_vec(&c, 6)[3], -2.5);
+}
