@@ -6,6 +6,7 @@
 
 use std::sync::Arc;
 
+use spreeze::bus::{FileBus, PolicyPub, PolicySub, SharedWeightBus, WeightBus};
 use spreeze::env::registry::make_env;
 use spreeze::env::vec::VecEnv;
 use spreeze::env::{Env, StepOut};
@@ -122,6 +123,41 @@ fn scalar_vs_batched(b: &Bench) {
     );
 }
 
+/// The weight-path comparison behind `--weight-transport`: what one sampler
+/// tick pays to poll for fresh weights. The shm bus's no-new-version poll is
+/// an atomic load; the file transport's is a full `policy.bin` read — the
+/// disk round-trip the bus removes from the hot path (and the reason small
+/// `--sync-every` stays cheap on the bus).
+fn weight_poll_cost(b: &Bench) {
+    const N: usize = 4547; // pendulum actor size
+    println!("\n-- weight poll: shm bus vs SSD checkpoint file ({N} params)");
+    let dir = std::env::temp_dir().join(format!("spreeze-bench-bus-{}", std::process::id()));
+    let params: Vec<f32> = (0..N).map(|i| i as f32 * 0.25).collect();
+    let mut buf = Vec::new();
+    // the shm bus is built WITHOUT its persistence sink so the timed loops
+    // measure pure transport cost, not the sink's rate-limited disk writes
+    let shm: Arc<dyn PolicyPub> = Arc::new(SharedWeightBus(Arc::new(WeightBus::new(N))));
+    let file: Arc<dyn PolicyPub> = Arc::new(FileBus::new(&dir, N, "pendulum", "sac").unwrap());
+    for bus in [shm, file] {
+        bus.publish(&params).unwrap();
+        let mut sub = bus.subscribe();
+        sub.poll(&mut buf).unwrap();
+        // steady state: nothing new published (the per-tick common case)
+        b.run(&format!("weight_poll/none/{}", bus.name()), Some(1.0), || {
+            assert!(sub.poll(&mut buf).unwrap().is_none());
+        })
+        .print();
+        // one full round-trip per iteration (the reload_every boundary
+        // case; includes the publish, hence the row name)
+        b.run(&format!("weight_poll/publish+fetch/{}", bus.name()), Some(1.0), || {
+            bus.publish(&params).unwrap();
+            assert!(sub.poll(&mut buf).unwrap().is_some());
+        })
+        .print();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn main() {
     let b = Bench::default();
     println!("== sampling bench ==\n-- env.step cost (random actions)");
@@ -143,6 +179,7 @@ fn main() {
     }
 
     scalar_vs_batched(&b);
+    weight_poll_cost(&b);
 
     let manifest = Manifest::load_or_native(&default_artifacts_dir()).unwrap();
 

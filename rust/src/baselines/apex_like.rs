@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use super::Framework;
-use crate::config::{TrainConfig, Transport};
+use crate::config::{TrainConfig, Transport, WeightTransport};
 use crate::coordinator::{Coordinator, RunSummary};
 
 pub struct ApexLike {
@@ -41,6 +41,10 @@ impl Framework for ApexLike {
         cfg.sync_every = 1;
         // workers poll for new weights aggressively (per-rollout pull)
         cfg.reload_every = 20;
+        // serialize every broadcast through the store (the object-store
+        // pattern's cost) — the in-memory bus would erase exactly the
+        // overhead this baseline exists to measure
+        cfg.weight_transport = WeightTransport::File;
         Coordinator::new(cfg).run()
     }
 }

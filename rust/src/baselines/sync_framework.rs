@@ -4,29 +4,28 @@
 //! overlap, so neither the CPU nor the "GPU" is ever fully utilized. This
 //! is the partial-parallelization mode the paper's Fig. 4 contrasts with
 //! full asynchrony.
+//!
+//! Assembly reuses [`TopologyBuilder`] with the asynchronous sampler pool
+//! and viz disabled — the same transport/bus/learner/eval wiring as Spreeze
+//! proper, minus the parallelism under test.
 
-use std::path::PathBuf;
-use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::Framework;
 use crate::config::TrainConfig;
-use crate::coordinator::metrics::{MetricsHub, Snapshot};
+use crate::coordinator::metrics::Snapshot;
+use crate::coordinator::topology::{target_reached, TopologyBuilder};
 use crate::coordinator::RunSummary;
 use crate::env::registry::make_env;
 use crate::env::vec::VecEnv;
 use crate::env::StepOut;
-use crate::eval::EvalWorker;
-use crate::learner::Learner;
-use crate::nn::{CheckpointStore, GaussianPolicy};
-use crate::replay::shm_ring::ShmSource;
-use crate::replay::{FrameSpec, ShmRing, ShmRingOptions};
-use crate::runtime::{default_artifacts_dir, Manifest};
+use crate::nn::GaussianPolicy;
+use crate::replay::{ExpSink, FrameSpec};
 use crate::util::rng::Rng;
 use crate::util::sysinfo::CpuMonitor;
-use crate::util::timer::{interval_rate, interval_utilization};
+use crate::util::timer::{interval_cycle, interval_rate, interval_utilization};
 
 pub struct SyncFramework {
     /// Envs stepped per collect phase (all on the driver thread).
@@ -50,28 +49,13 @@ impl Framework for SyncFramework {
     }
 
     fn run(&self, cfg: &TrainConfig) -> Result<RunSummary> {
-        let manifest = Manifest::load_or_native(&default_artifacts_dir())?;
-        let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();
-        let run_dir = PathBuf::from(&cfg.run_dir);
-        std::fs::create_dir_all(&run_dir)?;
-        let mut store = CheckpointStore::new(&run_dir.join("ckpt"))?;
-        let hub = Arc::new(MetricsHub::new());
-
+        let mut topo = TopologyBuilder::new(cfg.clone())
+            .samplers(false)
+            .viz(false)
+            .batch_size(self.batch_size)
+            .build()?;
+        let layout = topo.layout.clone();
         let fspec = FrameSpec { obs_dim: layout.obs_dim, act_dim: layout.act_dim };
-        let ring = Arc::new(ShmRing::create(&ShmRingOptions {
-            capacity: cfg.capacity,
-            spec: fspec,
-            shm_name: None,
-        })?);
-        let mut learner = Learner::new_with_bs_fallback(
-            cfg,
-            &manifest,
-            self.batch_size,
-            Box::new(ShmSource::new(ring.clone())),
-        )?;
-
-        let eval = EvalWorker::spawn(cfg, &layout, hub.clone(), store.policy_path.clone())?;
-        store.publish_policy(&cfg.env, cfg.algo.name(), learner.actor_params())?;
 
         let envs: Vec<_> =
             (0..self.n_envs).map(|_| make_env(&cfg.env)).collect::<Result<_>>()?;
@@ -90,21 +74,20 @@ impl Framework for SyncFramework {
         let mut solved_s = None;
         let mut best_return = f64::NEG_INFINITY;
         let mut last_snap = Instant::now();
-        let mut prev_sampled = hub.sampled.snapshot();
-        let mut prev_updates = hub.updates.snapshot();
-        let mut prev_upframes = hub.update_frames.snapshot();
-        let mut prev_busy = hub.exec_busy[0].snapshot();
+        let mut prev_sampled = topo.hub.sampled.snapshot();
+        let mut prev_updates = topo.hub.updates.snapshot();
+        let mut prev_upframes = topo.hub.update_frames.snapshot();
+        let mut prev_busy = topo.hub.exec_busy[0].snapshot();
+        let mut prev_wpubs = topo.hub.weight_pubs.snapshot();
 
         'outer: loop {
             let wall = start.elapsed().as_secs_f64();
-            if wall >= cfg.max_seconds || learner.step >= cfg.max_updates {
+            if wall >= cfg.max_seconds || topo.learner.step() >= cfg.max_updates {
                 break;
             }
-            if let (Some(target), Some(m)) = (cfg.target_return, eval.curve.recent_mean(3)) {
-                if m >= target {
-                    solved_s = Some(wall);
-                    break;
-                }
+            if let Some(t) = target_reached(cfg.target_return, topo.curve.recent_mean(3), wall) {
+                solved_s = Some(t);
+                break;
             }
 
             // ---- phase 1: synchronous collection (learner idle)
@@ -114,11 +97,11 @@ impl Framework for SyncFramework {
                 for i in 0..self.n_envs {
                     let obs = &prev_obs[i * layout.obs_dim..(i + 1) * layout.obs_dim];
                     let act = &mut actions[i * layout.act_dim..(i + 1) * layout.act_dim];
-                    if hub.sampled.count() < cfg.start_steps {
+                    if topo.hub.sampled.count() < cfg.start_steps {
                         rng.fill_uniform(act, -1.0, 1.0);
                     } else {
                         policy.act(
-                            learner.actor_params(),
+                            topo.learner.actor_params(),
                             obs,
                             &mut rng,
                             false,
@@ -136,12 +119,12 @@ impl Framework for SyncFramework {
                     let o2 = &venv.last_obs[i * layout.obs_dim..(i + 1) * layout.obs_dim];
                     let done = outs[i].done && !outs[i].truncated;
                     fspec.pack(o, a, outs[i].reward, done, o2, &mut frame);
-                    ring.push_frame(&frame);
+                    topo.sink.push(&frame);
                 }
                 for r in venv.finished.drain(..) {
-                    hub.push_train_return(r);
+                    topo.hub.push_train_return(r);
                 }
-                hub.sampled.add(self.n_envs as u64);
+                topo.hub.sampled.add(self.n_envs as u64);
                 collected += self.n_envs;
                 if start.elapsed().as_secs_f64() >= cfg.max_seconds {
                     break 'outer;
@@ -149,24 +132,26 @@ impl Framework for SyncFramework {
             }
 
             // ---- phase 2: synchronous updates (samplers idle)
-            if ring.visible_now() >= cfg.update_after {
+            if topo.learner.visible() >= cfg.update_after {
                 for _ in 0..self.updates_per_phase {
                     let t0 = Instant::now();
-                    if learner.try_update()? {
-                        hub.exec_busy[0].add_busy_ns(t0.elapsed().as_nanos() as u64);
-                        hub.updates.add(1);
-                        hub.update_frames.add(learner.batch_size() as u64);
+                    if topo.learner.try_update()? {
+                        topo.hub.exec_busy[0].add_busy_ns(t0.elapsed().as_nanos() as u64);
+                        topo.hub.updates.add(1);
+                        topo.hub.update_frames.add(topo.learner.batch_size() as u64);
                     }
                 }
-                store.publish_policy(&cfg.env, cfg.algo.name(), learner.actor_params())?;
+                topo.publish_policy()?;
             }
 
             if last_snap.elapsed().as_secs_f64() >= 1.0 {
                 last_snap = Instant::now();
-                let now_sampled = hub.sampled.snapshot();
-                let now_updates = hub.updates.snapshot();
-                let now_upframes = hub.update_frames.snapshot();
-                let now_busy = hub.exec_busy[0].snapshot();
+                let now_sampled = topo.hub.sampled.snapshot();
+                let now_updates = topo.hub.updates.snapshot();
+                let now_upframes = topo.hub.update_frames.snapshot();
+                let now_busy = topo.hub.exec_busy[0].snapshot();
+                let now_wpubs = topo.hub.weight_pubs.snapshot();
+                let weight_cycle_s = interval_cycle(prev_wpubs, now_wpubs);
                 snapshots.push(Snapshot {
                     t_s: wall,
                     cpu_usage: cpu_mon.sample(),
@@ -176,25 +161,30 @@ impl Framework for SyncFramework {
                     update_hz: interval_rate(prev_updates, now_updates),
                     transfer_cycle_s: 0.0,
                     loss_fraction: 0.0,
-                    visible: ring.visible_now(),
-                    latest_return: hub.latest_return(),
-                    batch_size: learner.batch_size(),
+                    weight_cycle_s,
+                    // the driver thread samples with the params in hand:
+                    // a synchronous framework is never stale
+                    staleness: 0.0,
+                    visible: topo.learner.visible(),
+                    latest_return: topo.hub.latest_return(),
+                    batch_size: topo.learner.batch_size(),
                     n_samplers: self.n_envs,
                 });
                 prev_sampled = now_sampled;
                 prev_updates = now_updates;
                 prev_upframes = now_upframes;
                 prev_busy = now_busy;
-                if let Some(m) = eval.curve.recent_mean(1) {
+                prev_wpubs = now_wpubs;
+                if let Some(m) = topo.curve.recent_mean(1) {
                     best_return = best_return.max(m);
                 }
             }
         }
 
         let wall_s = start.elapsed().as_secs_f64();
-        let curve = eval.curve.points.lock().unwrap().clone();
-        let final_return = eval.curve.recent_mean(3).unwrap_or(f64::NAN);
-        eval.shutdown();
+        let final_return = topo.curve.recent_mean(3).unwrap_or(f64::NAN);
+        topo.shutdown_services();
+        let curve = topo.curve.points.lock().unwrap().clone();
         let tail = &snapshots[snapshots.len() / 3..];
         let mean = |f: &dyn Fn(&Snapshot) -> f64| {
             if tail.is_empty() {
@@ -207,8 +197,8 @@ impl Framework for SyncFramework {
             env: cfg.env.clone(),
             algo: cfg.algo.name().into(),
             wall_s,
-            updates: learner.step,
-            sampled_frames: hub.sampled.count(),
+            updates: topo.learner.step(),
+            sampled_frames: topo.hub.sampled.count(),
             solved_s,
             final_return,
             best_return,
@@ -219,7 +209,9 @@ impl Framework for SyncFramework {
             gpu_usage: mean(&|s| s.gpu_usage),
             transfer_cycle_s: 0.0,
             loss_fraction: 0.0,
-            batch_size: learner.batch_size(),
+            weight_cycle_s: mean(&|s| s.weight_cycle_s),
+            policy_staleness: 0.0,
+            batch_size: topo.learner.batch_size(),
             n_samplers: self.n_envs,
             curve,
             snapshots,

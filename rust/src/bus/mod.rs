@@ -1,0 +1,553 @@
+//! Versioned weight bus (paper §3.3.1, redesigned): the learner→{sampler,
+//! eval, viz} policy-weight path behind a typed publish/subscribe API.
+//!
+//! The paper's per-data-type transmission argument — bulk tensors through
+//! shared memory, small signals through lightweight channels — applies to
+//! weights just as much as experience. The original SSD checkpoint file is
+//! demoted to one pluggable transport ([`FileBus`], kept for crash recovery
+//! and viz replay); the default is [`WeightBus`], a lock-free in-memory
+//! double buffer with seqlock validation, so subscribers observe fresh
+//! weights with two atomic loads and one buffer copy — no disk round-trip
+//! on the sampling hot path.
+//!
+//! Contract (all transports):
+//! * versions are assigned by the publisher and strictly increase;
+//! * a subscriber never observes a torn parameter vector;
+//! * a subscriber's observed version sequence is strictly increasing
+//!   (polling may legitimately skip intermediate versions).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::config::WeightTransport;
+use crate::nn::checkpoint::{self, CheckpointStore};
+
+/// Publisher side of the weight path (the learner holds one).
+pub trait PolicyPub: Send + Sync {
+    /// Publish fresh actor weights; returns the assigned version (>= 1,
+    /// strictly increasing).
+    fn publish(&self, actor: &[f32]) -> Result<u64>;
+
+    /// Latest published version (0 = nothing published yet). Must be cheap
+    /// enough to call per sampler tick.
+    fn version(&self) -> u64;
+
+    /// Create an independent subscriber cursor (one per worker thread).
+    fn subscribe(&self) -> Box<dyn PolicySub>;
+
+    /// Transport name for logs/snapshots.
+    fn name(&self) -> &'static str;
+}
+
+/// Subscriber side: a cursor over the published version sequence.
+pub trait PolicySub: Send {
+    /// If a version newer than this cursor is available, copy its params
+    /// into `buf` (resizing as needed), advance the cursor, and return
+    /// `Some(version)`. Returns `Ok(None)` when nothing newer exists.
+    fn poll(&mut self, buf: &mut Vec<f32>) -> Result<Option<u64>>;
+
+    /// Newest version the transport currently advertises, without copying.
+    /// File transports return the cursor (a disk peek would defeat the
+    /// point); the in-memory bus returns the true head.
+    fn peek_version(&self) -> u64;
+
+    /// The cursor: last version this subscriber observed.
+    fn version(&self) -> u64;
+}
+
+const WRITING: u64 = u64::MAX;
+
+/// One seqlock-guarded buffer of the double buffer. Elements are f32 bit
+/// patterns in relaxed atomics: a racing publish/poll pair is then a defined
+/// data race (per-element atomicity), and the seq re-check rejects any
+/// cross-version mix — no UB, unlike a plain `&[f32]` copy under a writer.
+/// Relaxed u32 loads/stores compile to plain moves on x86-64/aarch64.
+struct Slot {
+    /// Version stored in this slot when stable; [`WRITING`] mid-publish.
+    seq: AtomicU64,
+    data: Box<[AtomicU32]>,
+}
+
+/// Lock-free in-memory weight transport: double-buffered seqlock publish,
+/// torn-read-free subscribe.
+///
+/// The publisher alternates between two slots (version v lands in slot
+/// v % 2), so a publish never overwrites the buffer a subscriber of the
+/// *previous* head is copying — only a publish two versions later reuses a
+/// slot, and the seqlock check makes the subscriber retry against the new
+/// head in that case.
+pub struct WeightBus {
+    /// Latest fully-published version; slot `version % 2` holds its data.
+    version: AtomicU64,
+    slots: [Slot; 2],
+    size: usize,
+    /// Serializes publishers (there is one learner, but the API allows more).
+    pub_lock: Mutex<()>,
+    /// Optional low-rate persistence sink (crash recovery / viz replay):
+    /// the checkpoint file is *written*, never read, in shm mode.
+    persist: Option<PersistSink>,
+}
+
+struct PersistSink {
+    path: PathBuf,
+    env: String,
+    algo: String,
+    min_interval: Duration,
+    last_write: Mutex<Option<Instant>>,
+}
+
+impl WeightBus {
+    /// `size` = actor parameter count; every published vector must match.
+    pub fn new(size: usize) -> WeightBus {
+        let buf = || (0..size).map(|_| AtomicU32::new(0)).collect::<Box<[AtomicU32]>>();
+        WeightBus {
+            version: AtomicU64::new(0),
+            slots: [
+                Slot { seq: AtomicU64::new(0), data: buf() },
+                Slot { seq: AtomicU64::new(0), data: buf() },
+            ],
+            size,
+            pub_lock: Mutex::new(()),
+            persist: None,
+        }
+    }
+
+    /// Attach a checkpoint-file persistence sink, written at most once per
+    /// `min_interval` (and for the first publish, so a crash before the
+    /// first interval still leaves a loadable policy on disk).
+    pub fn with_persistence(
+        mut self,
+        dir: &Path,
+        env: &str,
+        algo: &str,
+        min_interval: Duration,
+    ) -> Result<WeightBus> {
+        std::fs::create_dir_all(dir)?;
+        self.persist = Some(PersistSink {
+            path: dir.join("policy.bin"),
+            env: env.to_string(),
+            algo: algo.to_string(),
+            min_interval,
+            last_write: Mutex::new(None),
+        });
+        Ok(self)
+    }
+
+    /// Path of the persistence file, if a sink is attached.
+    pub fn persist_path(&self) -> Option<&Path> {
+        self.persist.as_ref().map(|p| p.path.as_path())
+    }
+
+    pub fn publish(&self, actor: &[f32]) -> Result<u64> {
+        ensure!(
+            actor.len() == self.size,
+            "weight bus sized for {} params, got {}",
+            self.size,
+            actor.len()
+        );
+        let _g = self.pub_lock.lock().unwrap();
+        let v = self.version.load(Ordering::Relaxed) + 1;
+        let slot = &self.slots[(v % 2) as usize];
+        slot.seq.store(WRITING, Ordering::Relaxed);
+        // Release fence: the WRITING marker must become visible before any
+        // of the data writes below, so a reader that observes fresh words
+        // cannot still observe the old (stable) seq and accept a torn copy.
+        std::sync::atomic::fence(Ordering::Release);
+        // Seqlock write: subscribers may race this copy element-wise, but
+        // they validate seq on both sides of their read and discard torn
+        // copies; per-element relaxed atomics keep the race well-defined.
+        for (dst, &x) in slot.data.iter().zip(actor) {
+            dst.store(x.to_bits(), Ordering::Relaxed);
+        }
+        slot.seq.store(v, Ordering::Release);
+        self.version.store(v, Ordering::Release);
+        if let Some(sink) = &self.persist {
+            let mut last = sink.last_write.lock().unwrap();
+            let due = match *last {
+                None => true,
+                Some(t) => t.elapsed() >= sink.min_interval,
+            };
+            if due {
+                // The sink is best-effort crash recovery: the in-memory
+                // publish above already succeeded and subscribers can see v,
+                // so a full disk must not abort training. Stamp the attempt
+                // either way to avoid retrying (and warning) every publish.
+                if let Err(e) = checkpoint::save_policy(&sink.path, &sink.env, &sink.algo, v, actor)
+                {
+                    eprintln!("weight bus: persistence sink write failed (non-fatal): {e:#}");
+                }
+                *last = Some(Instant::now());
+            }
+        }
+        Ok(v)
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+}
+
+/// Subscriber over an `Arc<WeightBus>`.
+pub struct WeightBusSub {
+    bus: Arc<WeightBus>,
+    cursor: u64,
+}
+
+impl WeightBusSub {
+    pub fn new(bus: Arc<WeightBus>) -> WeightBusSub {
+        WeightBusSub { bus, cursor: 0 }
+    }
+}
+
+impl PolicySub for WeightBusSub {
+    fn poll(&mut self, buf: &mut Vec<f32>) -> Result<Option<u64>> {
+        loop {
+            let v = self.bus.version.load(Ordering::Acquire);
+            if v == 0 || v == self.cursor {
+                return Ok(None);
+            }
+            let slot = &self.bus.slots[(v % 2) as usize];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 != v {
+                // Slot already claimed by a newer publish (or the head moved
+                // between the two loads): re-read the head and retry.
+                std::hint::spin_loop();
+                continue;
+            }
+            // Seqlock read: this copy may race a publish two versions later
+            // into the same slot; the seq re-check rejects any torn result.
+            buf.clear();
+            buf.extend(slot.data.iter().map(|x| f32::from_bits(x.load(Ordering::Relaxed))));
+            std::sync::atomic::fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Acquire) == v {
+                self.cursor = v;
+                return Ok(Some(v));
+            }
+        }
+    }
+
+    fn peek_version(&self) -> u64 {
+        self.bus.version()
+    }
+
+    fn version(&self) -> u64 {
+        self.cursor
+    }
+}
+
+/// `Arc<WeightBus>` behind the `PolicyPub` object API (`subscribe` needs to
+/// clone the `Arc`, which a bare `&WeightBus` cannot).
+pub struct SharedWeightBus(pub Arc<WeightBus>);
+
+impl PolicyPub for SharedWeightBus {
+    fn publish(&self, actor: &[f32]) -> Result<u64> {
+        self.0.publish(actor)
+    }
+
+    fn version(&self) -> u64 {
+        self.0.version()
+    }
+
+    fn subscribe(&self) -> Box<dyn PolicySub> {
+        Box::new(WeightBusSub::new(self.0.clone()))
+    }
+
+    fn name(&self) -> &'static str {
+        "shm"
+    }
+}
+
+/// The original SSD checkpoint path behind the bus API: publish writes the
+/// versioned policy file atomically; subscribers poll it (paper §3.3.1).
+/// Selected with `--weight-transport file`; also what crash recovery and
+/// offline viz replay read.
+pub struct FileBus {
+    store: Mutex<CheckpointStore>,
+    policy_path: PathBuf,
+    version: AtomicU64,
+    size: usize,
+    env: String,
+    algo: String,
+}
+
+impl FileBus {
+    /// `size` = expected actor parameter count; subscribers reject a
+    /// policy file of any other size (e.g. a stale file from a different
+    /// env left in a reused run dir).
+    pub fn new(dir: &Path, size: usize, env: &str, algo: &str) -> Result<FileBus> {
+        let store = CheckpointStore::new(dir)?;
+        Ok(FileBus {
+            policy_path: store.policy_path.clone(),
+            store: Mutex::new(store),
+            version: AtomicU64::new(0),
+            size,
+            env: env.to_string(),
+            algo: algo.to_string(),
+        })
+    }
+
+    pub fn policy_path(&self) -> &Path {
+        &self.policy_path
+    }
+}
+
+impl PolicyPub for FileBus {
+    fn publish(&self, actor: &[f32]) -> Result<u64> {
+        ensure!(
+            actor.len() == self.size,
+            "file bus sized for {} params, got {}",
+            self.size,
+            actor.len()
+        );
+        let v = self.store.lock().unwrap().publish_policy(&self.env, &self.algo, actor)?;
+        self.version.store(v, Ordering::Release);
+        Ok(v)
+    }
+
+    fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    fn subscribe(&self) -> Box<dyn PolicySub> {
+        Box::new(FileSub::new(self.policy_path.clone(), self.size))
+    }
+
+    fn name(&self) -> &'static str {
+        "file"
+    }
+}
+
+/// File subscriber: one `load_policy` (header version check + full read)
+/// per poll — the disk round-trip the shm bus removes.
+pub struct FileSub {
+    path: PathBuf,
+    size: usize,
+    cursor: u64,
+}
+
+impl FileSub {
+    pub fn new(path: PathBuf, size: usize) -> FileSub {
+        FileSub { path, size, cursor: 0 }
+    }
+}
+
+impl PolicySub for FileSub {
+    fn poll(&mut self, buf: &mut Vec<f32>) -> Result<Option<u64>> {
+        match checkpoint::load_policy(&self.path, self.cursor)? {
+            Some((v, flat)) => {
+                // a stale/foreign file (different env, older layout) must not
+                // resize the caller's actor buffer out from under inference
+                ensure!(
+                    flat.len() == self.size,
+                    "policy file {} has {} params, expected {}",
+                    self.path.display(),
+                    flat.len(),
+                    self.size
+                );
+                self.cursor = v;
+                *buf = flat;
+                Ok(Some(v))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn peek_version(&self) -> u64 {
+        // Peeking would cost the very disk read this API accounts for;
+        // file-mode staleness therefore reads as 0 (documented in README).
+        self.cursor
+    }
+
+    fn version(&self) -> u64 {
+        self.cursor
+    }
+}
+
+/// Build the configured weight transport rooted at `ckpt_dir`.
+///
+/// * `Shm`: in-memory [`WeightBus`] sized for `actor_size`, with the
+///   checkpoint file attached as a write-only persistence sink (at most one
+///   write per second).
+/// * `File`: the classic polled checkpoint file.
+pub fn make_bus(
+    transport: WeightTransport,
+    actor_size: usize,
+    ckpt_dir: &Path,
+    env: &str,
+    algo: &str,
+) -> Result<Arc<dyn PolicyPub>> {
+    Ok(match transport {
+        WeightTransport::Shm => {
+            let bus = WeightBus::new(actor_size).with_persistence(
+                ckpt_dir,
+                env,
+                algo,
+                Duration::from_secs(1),
+            )?;
+            Arc::new(SharedWeightBus(Arc::new(bus)))
+        }
+        WeightTransport::File => Arc::new(FileBus::new(ckpt_dir, actor_size, env, algo)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spreeze-bus-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Deterministic params for version v, exactly representable in f32 and
+    /// summing well below 2^24 — so any torn mix of two versions breaks the
+    /// exact element-wise equality check.
+    fn make_params(v: u64, n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((v * 31 + i as u64) % 8191) as f32).collect()
+    }
+
+    #[test]
+    fn versions_strictly_increase_and_subscriber_sees_latest() {
+        let bus = Arc::new(WeightBus::new(8));
+        let mut sub = WeightBusSub::new(bus.clone());
+        let mut buf = Vec::new();
+        assert_eq!(sub.poll(&mut buf).unwrap(), None, "nothing published yet");
+        assert_eq!(bus.publish(&make_params(1, 8)).unwrap(), 1);
+        assert_eq!(bus.publish(&make_params(2, 8)).unwrap(), 2);
+        // polling skips straight to the head
+        assert_eq!(sub.poll(&mut buf).unwrap(), Some(2));
+        assert_eq!(buf, make_params(2, 8));
+        assert_eq!(sub.poll(&mut buf).unwrap(), None, "no newer version");
+        assert_eq!(sub.peek_version(), 2);
+    }
+
+    #[test]
+    fn publish_rejects_wrong_size() {
+        let bus = WeightBus::new(8);
+        assert!(bus.publish(&[0.0; 7]).is_err());
+    }
+
+    /// One publisher hammering the bus + many concurrent subscribers: no
+    /// subscriber ever observes a torn vector or a non-increasing version.
+    #[test]
+    fn concurrent_subscribers_never_see_torn_reads() {
+        const N: usize = 257; // odd length: no accidental alignment help
+        const PUBS: u64 = 2_000;
+        const SUBS: usize = 4;
+        let bus = Arc::new(WeightBus::new(N));
+        let stop = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..SUBS {
+            let mut sub = WeightBusSub::new(bus.clone());
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut buf = Vec::new();
+                let mut last = 0u64;
+                let mut observed = 0u64;
+                while stop.load(Ordering::Relaxed) == 0 {
+                    if let Some(v) = sub.poll(&mut buf).unwrap() {
+                        assert!(v > last, "version went backwards: {last} -> {v}");
+                        assert_eq!(buf, make_params(v, N), "torn read at version {v}");
+                        last = v;
+                        observed += 1;
+                    }
+                }
+                observed
+            }));
+        }
+        for v in 1..=PUBS {
+            bus.publish(&make_params(v, N)).unwrap();
+        }
+        // let subscribers drain the final version before stopping them
+        std::thread::sleep(Duration::from_millis(50));
+        stop.store(1, Ordering::Relaxed);
+        for h in handles {
+            let observed = h.join().unwrap();
+            assert!(observed > 0, "subscriber never observed a publish");
+        }
+    }
+
+    /// The same published sequence observed through both transports: each
+    /// poll after each publish returns the same (version, params).
+    #[test]
+    fn file_and_shm_transports_observe_the_same_sequence() {
+        let d = tmpdir("equiv");
+        let shm = make_bus(WeightTransport::Shm, 33, &d.join("shm"), "pendulum", "sac").unwrap();
+        let file = make_bus(WeightTransport::File, 33, &d.join("file"), "pendulum", "sac").unwrap();
+        assert_eq!(shm.name(), "shm");
+        assert_eq!(file.name(), "file");
+        let mut shm_sub = shm.subscribe();
+        let mut file_sub = file.subscribe();
+        let (mut b1, mut b2) = (Vec::new(), Vec::new());
+        for v in 1..=10u64 {
+            let p = make_params(v, 33);
+            assert_eq!(shm.publish(&p).unwrap(), v);
+            assert_eq!(file.publish(&p).unwrap(), v);
+            assert_eq!(shm.version(), file.version());
+            let o1 = shm_sub.poll(&mut b1).unwrap();
+            let o2 = file_sub.poll(&mut b2).unwrap();
+            assert_eq!(o1, Some(v));
+            assert_eq!(o1, o2, "transports diverged at version {v}");
+            assert_eq!(b1, b2, "params diverged at version {v}");
+            assert_eq!(b1, p);
+        }
+        // and both report "nothing newer" identically
+        assert_eq!(shm_sub.poll(&mut b1).unwrap(), None);
+        assert_eq!(file_sub.poll(&mut b2).unwrap(), None);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn file_sub_rejects_wrong_size_policy() {
+        let d = tmpdir("size");
+        let bus = FileBus::new(&d, 8, "pendulum", "sac").unwrap();
+        // a foreign/stale policy of a different parameter count on disk
+        checkpoint::save_policy(bus.policy_path(), "walker", "sac", 1, &[0.5; 16]).unwrap();
+        let mut sub = bus.subscribe();
+        let mut buf = Vec::new();
+        assert!(sub.poll(&mut buf).is_err(), "foreign-size policy must be rejected");
+        // the right size goes through
+        bus.publish(&make_params(1, 8)).unwrap();
+        assert!(sub.poll(&mut buf).unwrap().is_some());
+        assert_eq!(buf.len(), 8);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn shm_bus_persists_to_file_sink() {
+        let d = tmpdir("persist");
+        let bus =
+            WeightBus::new(4).with_persistence(&d, "pendulum", "sac", Duration::ZERO).unwrap();
+        let p = make_params(1, 4);
+        bus.publish(&p).unwrap();
+        // the sink is a plain checkpoint file, loadable for crash recovery
+        let path = bus.persist_path().unwrap().to_path_buf();
+        let (v, back) = checkpoint::load_policy(&path, 0).unwrap().unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(back, p);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn persistence_sink_is_rate_limited() {
+        let d = tmpdir("rate");
+        let bus = WeightBus::new(4)
+            .with_persistence(&d, "pendulum", "sac", Duration::from_secs(3600))
+            .unwrap();
+        for v in 1..=5u64 {
+            bus.publish(&make_params(v, 4)).unwrap();
+        }
+        let path = bus.persist_path().unwrap().to_path_buf();
+        // only the first publish hit the disk inside the interval
+        let (v, _) = checkpoint::load_policy(&path, 0).unwrap().unwrap();
+        assert_eq!(v, 1, "sink should not be rewritten within min_interval");
+        assert_eq!(bus.version(), 5, "in-memory head unaffected");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -18,6 +18,35 @@ pub enum Transport {
     Queue(usize),
 }
 
+/// Weight transport between the learner and the sampler/eval/viz workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightTransport {
+    /// In-memory versioned weight bus (`bus::WeightBus`) — the default; the
+    /// checkpoint file is still written as a low-rate persistence sink but
+    /// never read during training.
+    Shm,
+    /// Polled SSD checkpoint file (paper §3.3.1 as written) — kept for the
+    /// ablation and for environments where workers are separate processes.
+    File,
+}
+
+impl WeightTransport {
+    pub fn name(self) -> &'static str {
+        match self {
+            WeightTransport::Shm => "shm",
+            WeightTransport::File => "file",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "shm" => Ok(WeightTransport::Shm),
+            "file" => Ok(WeightTransport::File),
+            _ => bail!("unknown weight transport {s:?} (expected shm|file)"),
+        }
+    }
+}
+
 /// RL algorithm choice (paper §4.2.4 robustness: SAC and TD3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algo {
@@ -75,6 +104,8 @@ pub struct TrainConfig {
     /// Orthogonal to the adaptation SP knob, which parks whole workers.
     pub envs_per_worker: usize,
     pub transport: Transport,
+    /// Weight path from the learner to sampler/eval/viz workers.
+    pub weight_transport: WeightTransport,
     /// Replay capacity in frames.
     pub capacity: usize,
     pub seed: u64,
@@ -131,6 +162,7 @@ impl Default for TrainConfig {
             n_samplers: 0,
             envs_per_worker: 1,
             transport: Transport::Shm,
+            weight_transport: WeightTransport::Shm,
             capacity: 1_000_000,
             seed: 0,
             lr: 3e-4,
@@ -172,6 +204,9 @@ impl TrainConfig {
         self.envs_per_worker = a.usize_or("envs-per-worker", self.envs_per_worker)?.max(1);
         if let Some(qs) = a.str_opt("queue-size") {
             self.transport = Transport::Queue(qs.parse()?);
+        }
+        if let Some(wt) = a.str_opt("weight-transport") {
+            self.weight_transport = WeightTransport::parse(&wt)?;
         }
         self.capacity = a.usize_or("capacity", self.capacity)?;
         self.seed = a.u64_or("seed", self.seed)?;
@@ -232,6 +267,7 @@ impl TrainConfig {
                     Transport::Queue(n) => s(&format!("queue:{n}")),
                 },
             ),
+            ("weight_transport", s(self.weight_transport.name())),
             ("capacity", num(self.capacity as f64)),
             ("seed", num(self.seed as f64)),
             ("lr", num(self.lr)),
@@ -260,6 +296,8 @@ mod tests {
             "td3",
             "--envs-per-worker",
             "8",
+            "--weight-transport",
+            "file",
         ]
         .iter()
         .map(|x| x.to_string())
@@ -272,6 +310,13 @@ mod tests {
         assert_eq!(c.transport, Transport::Queue(5000));
         assert_eq!(c.algo, Algo::Td3);
         assert_eq!(c.envs_per_worker, 8);
+        assert_eq!(c.weight_transport, WeightTransport::File);
+    }
+
+    #[test]
+    fn weight_transport_defaults_to_shm() {
+        assert_eq!(TrainConfig::default().weight_transport, WeightTransport::Shm);
+        assert!(WeightTransport::parse("nope").is_err());
     }
 
     #[test]

@@ -21,6 +21,13 @@ pub struct MetricsHub {
     pub exec_busy: [BusyMeter; 2],
     /// Eval episodes completed.
     pub evals: RateMeter,
+    /// Policy versions published on the weight bus (weight-transfer events).
+    pub weight_pubs: RateMeter,
+    /// Successful subscriber fetches of a newer policy version.
+    pub weight_fetches: RateMeter,
+    /// Frames sampled while a newer policy version was already published
+    /// (policy staleness numerator; `sampled` is the denominator).
+    pub stale_frames: RateMeter,
     /// Latest train episode return ×1000 (atomic fixed-point), for logging.
     latest_return_milli: AtomicU64,
     /// Episode returns from sampler workers (exploration returns).
@@ -42,6 +49,9 @@ impl MetricsHub {
             update_frames: RateMeter::new(),
             exec_busy: [BusyMeter::new(), BusyMeter::new()],
             evals: RateMeter::new(),
+            weight_pubs: RateMeter::new(),
+            weight_fetches: RateMeter::new(),
+            stale_frames: RateMeter::new(),
             latest_return_milli: AtomicU64::new(f64_to_fixed(0.0)),
             train_returns: Mutex::new(Vec::new()),
         }
@@ -83,6 +93,11 @@ pub struct Snapshot {
     pub update_hz: f64,
     pub transfer_cycle_s: f64,
     pub loss_fraction: f64,
+    /// Seconds between weight-bus publishes in this interval (the paper's
+    /// weight-transfer cycle; 0 when nothing was published).
+    pub weight_cycle_s: f64,
+    /// Fraction of this interval's frames sampled on stale weights.
+    pub staleness: f64,
     pub visible: usize,
     pub latest_return: f64,
     pub batch_size: usize,
@@ -92,12 +107,13 @@ pub struct Snapshot {
 impl Snapshot {
     pub fn csv_header() -> &'static str {
         "t_s,cpu_usage,sampling_hz,gpu_usage,update_frame_hz,update_hz,\
-         transfer_cycle_s,loss_fraction,visible,latest_return,batch_size,n_samplers"
+         transfer_cycle_s,loss_fraction,weight_cycle_s,staleness,visible,\
+         latest_return,batch_size,n_samplers"
     }
 
     pub fn csv_row(&self) -> String {
         format!(
-            "{:.2},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4},{},{:.2},{},{}",
+            "{:.2},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4},{:.3},{:.4},{},{:.2},{},{}",
             self.t_s,
             self.cpu_usage,
             self.sampling_hz,
@@ -106,6 +122,8 @@ impl Snapshot {
             self.update_hz,
             self.transfer_cycle_s,
             self.loss_fraction,
+            self.weight_cycle_s,
+            self.staleness,
             self.visible,
             self.latest_return,
             self.batch_size,

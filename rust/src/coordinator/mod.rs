@@ -1,37 +1,26 @@
-//! The Spreeze coordinator — the paper's Fig. 1 topology, wired and run.
+//! The Spreeze coordinator — the paper's Fig. 1 topology, driven.
 //!
-//! Owns process lifecycle: sampler worker pool, the (possibly dual-executor)
-//! learner, the eval and viz workers, the SSD checkpoint store, the metrics
-//! hub, and the hyperparameter adaptation loop. The learner runs on the
-//! coordinator thread; everything else is asynchronous — no component ever
-//! waits on another except through the shared-memory ring and the policy
-//! file (paper Fig. 4b: full asynchronous parallelization).
+//! Assembly lives in [`topology`]: the [`topology::TopologyBuilder`] wires
+//! the experience transport, the versioned weight bus, the (possibly
+//! dual-executor) learner, and the sampler/eval/viz services. `run` builds
+//! one topology and drives the stop/snapshot/adaptation loop. The learner
+//! runs on the coordinator thread; everything else is asynchronous — no
+//! component ever waits on another except through the shared-memory ring
+//! and the weight bus (paper Fig. 4b: full asynchronous parallelization).
 
 pub mod metrics;
+pub mod topology;
 
-use std::path::PathBuf;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::adapt::{Adaptation, Obs};
-use crate::config::{TrainConfig, Transport};
-use crate::coordinator::metrics::{MetricsHub, Snapshot};
-use crate::env::registry::make_env;
-use crate::eval::EvalWorker;
-use crate::learner::model_parallel::ModelParallelLearner;
-use crate::learner::Learner;
-use crate::nn::CheckpointStore;
-use crate::replay::shm_ring::ShmSource;
-use crate::replay::{
-    ExpSink, ExpSource, FrameSpec, QueueBuffer, ShmRing, ShmRingOptions, TransportStats,
-};
-use crate::runtime::{default_artifacts_dir, Manifest};
-use crate::sampler::SamplerPool;
-use crate::util::sysinfo::{self, CpuMonitor};
-use crate::util::timer::{interval_rate, interval_utilization};
-use crate::viz::VizWorker;
+use crate::adapt::Obs;
+use crate::config::TrainConfig;
+use crate::coordinator::metrics::Snapshot;
+use crate::coordinator::topology::{target_reached, TopologyBuilder};
+use crate::util::sysinfo::CpuMonitor;
+use crate::util::timer::{interval_cycle, interval_rate, interval_utilization};
 
 /// Outcome of one training run — the row material for Tables 1–3 / figures.
 #[derive(Clone, Debug)]
@@ -53,60 +42,15 @@ pub struct RunSummary {
     pub gpu_usage: f64,
     pub transfer_cycle_s: f64,
     pub loss_fraction: f64,
+    /// Mean seconds between weight-bus publishes (weight-transfer cycle).
+    pub weight_cycle_s: f64,
+    /// Mean fraction of frames sampled on stale weights.
+    pub policy_staleness: f64,
     pub batch_size: usize,
     pub n_samplers: usize,
     /// Eval curve (t, return, version).
     pub curve: Vec<(f64, f64, u64)>,
     pub snapshots: Vec<Snapshot>,
-}
-
-enum LearnerKind {
-    Single(Learner),
-    ModelParallel(ModelParallelLearner),
-}
-
-impl LearnerKind {
-    fn try_update(&mut self) -> Result<bool> {
-        match self {
-            LearnerKind::Single(l) => l.try_update(),
-            LearnerKind::ModelParallel(l) => l.try_update(),
-        }
-    }
-
-    fn visible(&self) -> usize {
-        match self {
-            LearnerKind::Single(l) => l.source.visible(),
-            LearnerKind::ModelParallel(l) => l.source.visible(),
-        }
-    }
-
-    fn stats(&self) -> TransportStats {
-        match self {
-            LearnerKind::Single(l) => l.source.stats(),
-            LearnerKind::ModelParallel(l) => l.source.stats(),
-        }
-    }
-
-    fn batch_size(&self) -> usize {
-        match self {
-            LearnerKind::Single(l) => l.batch_size(),
-            LearnerKind::ModelParallel(l) => l.batch_size(),
-        }
-    }
-
-    fn actor_params(&self) -> &[f32] {
-        match self {
-            LearnerKind::Single(l) => l.actor_params(),
-            LearnerKind::ModelParallel(l) => l.actor_params(),
-        }
-    }
-
-    fn step(&self) -> u64 {
-        match self {
-            LearnerKind::Single(l) => l.step,
-            LearnerKind::ModelParallel(l) => l.step,
-        }
-    }
 }
 
 pub struct Coordinator {
@@ -121,124 +65,9 @@ impl Coordinator {
     /// Run one full training session to its stop condition.
     pub fn run(&self) -> Result<RunSummary> {
         let cfg = &self.cfg;
-        let artifacts_dir = if cfg.artifacts_dir == "artifacts" {
-            default_artifacts_dir()
-        } else {
-            PathBuf::from(&cfg.artifacts_dir)
-        };
-        let manifest = Manifest::load_or_native(&artifacts_dir)?;
-        if cfg.verbose && manifest.native {
-            println!("backend: native CPU executor (no artifacts manifest)");
-        }
-        let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();
-        // fail fast if Rust env dims drifted from the python presets
-        {
-            let env = make_env(&cfg.env)?;
-            manifest.check_env(
-                &cfg.env,
-                cfg.algo.name(),
-                env.spec().obs_dim,
-                env.spec().act_dim,
-            )?;
-        }
-
-        let run_dir = PathBuf::from(&cfg.run_dir);
-        std::fs::create_dir_all(&run_dir)?;
-        let mut store = CheckpointStore::new(&run_dir.join("ckpt"))?;
-        let hub = Arc::new(MetricsHub::new());
-
-        // --- transport
-        let fspec = FrameSpec { obs_dim: layout.obs_dim, act_dim: layout.act_dim };
-        let (sink, source): (Arc<dyn ExpSink>, Box<dyn ExpSource>) = match cfg.transport {
-            Transport::Shm => {
-                let ring = Arc::new(ShmRing::create(&ShmRingOptions {
-                    capacity: cfg.capacity,
-                    spec: fspec,
-                    shm_name: None,
-                })?);
-                (ring.clone(), Box::new(ShmSource::new(ring)))
-            }
-            Transport::Queue(qs) => {
-                let q = QueueBuffer::new(qs, fspec);
-                let src = crate::replay::queue_buf::QueueSource::new(q.clone(), cfg.capacity);
-                (q, Box::new(src))
-            }
-        };
-
-        // --- batch size: explicit, or ladder default (adaptation refines)
-        let ladder = manifest.batch_sizes(&cfg.env, cfg.algo.name(), "full");
-        let bs0 = if cfg.batch_size > 0 {
-            cfg.batch_size
-        } else if cfg.env == "pendulum" {
-            // small task: start mid-ladder
-            *ladder.iter().find(|&&b| b >= 256).unwrap_or(ladder.last().context("no artifacts")?)
-        } else {
-            *ladder.iter().find(|&&b| b >= 2048).unwrap_or(ladder.last().context("no artifacts")?)
-        };
-
-        // --- learner
-        let use_mp = cfg.model_parallel && cfg.hardware.gpus >= 2;
-        let mut learner = if use_mp {
-            LearnerKind::ModelParallel(ModelParallelLearner::new(
-                cfg,
-                &manifest,
-                bs0,
-                source,
-                hub.clone(),
-            )?)
-        } else {
-            LearnerKind::Single(Learner::new(cfg, &manifest, bs0, source)?)
-        };
-
-        // --- workers
-        let cores = if cfg.hardware.cpu_cores > 0 {
-            cfg.hardware.cpu_cores
-        } else {
-            sysinfo::num_cpus()
-        };
-        let max_workers = cores.max(2);
-        let sp0 = cfg.effective_samplers().min(max_workers);
-        // Each worker steps `envs_per_worker` envs per tick (batched actor
-        // forward + one ring reservation); the adaptation SP knob still
-        // parks whole workers, so Fig. 6b ablation semantics are unchanged
-        // and total concurrent envs = active_workers * envs_per_worker.
-        let pool = SamplerPool::spawn(
-            cfg,
-            &layout,
-            sink.clone(),
-            hub.clone(),
-            store.policy_path.clone(),
-            max_workers,
-            sp0,
-        )?;
-        if cfg.verbose {
-            println!(
-                "topology: {sp0}/{max_workers} sampler workers x {} envs/worker, transport {:?}",
-                cfg.envs_per_worker.max(1),
-                cfg.transport
-            );
-        }
-        let eval = EvalWorker::spawn(cfg, &layout, hub.clone(), store.policy_path.clone())?;
-        let viz = if cfg.viz {
-            Some(VizWorker::spawn(
-                cfg,
-                &layout,
-                store.policy_path.clone(),
-                run_dir.join("viz"),
-            )?)
-        } else {
-            None
-        };
-
-        // publish the random-init policy so eval/viz can start
-        store.publish_policy(&cfg.env, cfg.algo.name(), learner.actor_params())?;
-
-        // --- adaptation
-        let mut adapt = if cfg.adapt && cfg.batch_size == 0 && cfg.n_samplers == 0 {
-            Some(Adaptation::new(max_workers, sp0, ladder.clone(), bs0))
-        } else {
-            None
-        };
+        let mut topo = TopologyBuilder::new(cfg.clone()).build()?;
+        let use_mp = topo.use_mp;
+        let throttle = cfg.hardware.gpu_throttle;
 
         // --- main loop
         let start = Instant::now();
@@ -248,44 +77,32 @@ impl Coordinator {
         let mut best_return = f64::NEG_INFINITY;
         let mut last_snap = Instant::now();
         let mut last_adapt = Instant::now();
-        let mut prev_sampled = hub.sampled.snapshot();
-        let mut prev_updates = hub.updates.snapshot();
-        let mut prev_upframes = hub.update_frames.snapshot();
-        let mut prev_busy0 = hub.exec_busy[0].snapshot();
-        let mut prev_busy1 = hub.exec_busy[1].snapshot();
-        let throttle = cfg.hardware.gpu_throttle;
+        let mut prev_sampled = topo.hub.sampled.snapshot();
+        let mut prev_updates = topo.hub.updates.snapshot();
+        let mut prev_upframes = topo.hub.update_frames.snapshot();
+        let mut prev_busy0 = topo.hub.exec_busy[0].snapshot();
+        let mut prev_busy1 = topo.hub.exec_busy[1].snapshot();
+        let mut prev_wpubs = topo.hub.weight_pubs.snapshot();
+        let mut prev_stale = topo.hub.stale_frames.snapshot();
 
         loop {
             // stop conditions
             let wall = start.elapsed().as_secs_f64();
-            if wall >= cfg.max_seconds || learner.step() >= cfg.max_updates {
+            if wall >= cfg.max_seconds || topo.learner.step() >= cfg.max_updates {
                 break;
             }
-            if let (Some(target), Some(t)) = (cfg.target_return, {
-                if solved_s.is_none() {
-                    eval.curve.recent_mean(3).and_then(|m| {
-                        if m >= cfg.target_return.unwrap_or(f64::INFINITY) {
-                            Some(wall)
-                        } else {
-                            None
-                        }
-                    })
-                } else {
-                    None
-                }
-            }) {
-                let _ = target;
+            if let Some(t) = target_reached(cfg.target_return, topo.curve.recent_mean(3), wall) {
                 solved_s = Some(t);
                 break; // Table-1 semantics: run ends when solved
             }
 
             // learner update (skipped until warmup data is in)
-            let did = if learner.visible() >= cfg.update_after {
+            let did = if topo.learner.visible() >= cfg.update_after {
                 let t0 = Instant::now();
-                let did = learner.try_update()?;
+                let did = topo.learner.try_update()?;
                 if did && !use_mp {
                     let busy = t0.elapsed();
-                    hub.exec_busy[0].add_busy_ns(busy.as_nanos() as u64);
+                    topo.hub.exec_busy[0].add_busy_ns(busy.as_nanos() as u64);
                     if throttle < 1.0 {
                         std::thread::sleep(Duration::from_secs_f64(
                             busy.as_secs_f64() * (1.0 / throttle - 1.0),
@@ -297,10 +114,10 @@ impl Coordinator {
                 false
             };
             if did {
-                hub.updates.add(1);
-                hub.update_frames.add(learner.batch_size() as u64);
-                if learner.step() % cfg.sync_every == 0 {
-                    store.publish_policy(&cfg.env, cfg.algo.name(), learner.actor_params())?;
+                topo.hub.updates.add(1);
+                topo.hub.update_frames.add(topo.learner.batch_size() as u64);
+                if topo.learner.step() % cfg.sync_every == 0 {
+                    topo.publish_policy()?;
                 }
             } else {
                 std::thread::sleep(Duration::from_millis(2));
@@ -309,15 +126,24 @@ impl Coordinator {
             // periodic snapshot (~1 s)
             if last_snap.elapsed() >= Duration::from_secs(1) {
                 last_snap = Instant::now();
-                let now_sampled = hub.sampled.snapshot();
-                let now_updates = hub.updates.snapshot();
-                let now_upframes = hub.update_frames.snapshot();
-                let now_busy0 = hub.exec_busy[0].snapshot();
-                let now_busy1 = hub.exec_busy[1].snapshot();
-                let tstats = learner.stats();
+                let now_sampled = topo.hub.sampled.snapshot();
+                let now_updates = topo.hub.updates.snapshot();
+                let now_upframes = topo.hub.update_frames.snapshot();
+                let now_busy0 = topo.hub.exec_busy[0].snapshot();
+                let now_busy1 = topo.hub.exec_busy[1].snapshot();
+                let now_wpubs = topo.hub.weight_pubs.snapshot();
+                let now_stale = topo.hub.stale_frames.snapshot();
+                let tstats = topo.learner.stats();
                 let gpu0 = interval_utilization(prev_busy0, now_busy0);
                 let gpu1 = interval_utilization(prev_busy1, now_busy1);
                 let gpu = if use_mp { (gpu0 + gpu1) / 2.0 } else { gpu0 };
+                let weight_cycle_s = interval_cycle(prev_wpubs, now_wpubs);
+                let frames = now_sampled.0 - prev_sampled.0;
+                let staleness = if frames > 0 {
+                    (now_stale.0 - prev_stale.0) as f64 / frames as f64
+                } else {
+                    0.0
+                };
                 let snap = Snapshot {
                     t_s: wall,
                     cpu_usage: cpu_mon.sample(),
@@ -327,22 +153,26 @@ impl Coordinator {
                     update_hz: interval_rate(prev_updates, now_updates),
                     transfer_cycle_s: tstats.transfer_cycle_s,
                     loss_fraction: tstats.loss_fraction(),
+                    weight_cycle_s,
+                    staleness,
                     visible: tstats.visible,
-                    latest_return: hub.latest_return(),
-                    batch_size: learner.batch_size(),
-                    n_samplers: pool.active(),
+                    latest_return: topo.hub.latest_return(),
+                    batch_size: topo.learner.batch_size(),
+                    n_samplers: topo.active_samplers(),
                 };
                 prev_sampled = now_sampled;
                 prev_updates = now_updates;
                 prev_upframes = now_upframes;
                 prev_busy0 = now_busy0;
                 prev_busy1 = now_busy1;
-                if let Some(m) = eval.curve.recent_mean(1) {
+                prev_wpubs = now_wpubs;
+                prev_stale = now_stale;
+                if let Some(m) = topo.curve.recent_mean(1) {
                     best_return = best_return.max(m);
                 }
                 if cfg.verbose {
                     println!(
-                        "[{:7.1}s] sample {:8.0}/s | upd {:6.1}/s x bs{} = {:9.0} fr/s | cpu {:4.1}% gpu {:4.1}% | ret {:8.1} | loss {:4.1}%",
+                        "[{:7.1}s] sample {:8.0}/s | upd {:6.1}/s x bs{} = {:9.0} fr/s | cpu {:4.1}% gpu {:4.1}% | ret {:8.1} | loss {:4.1}% | stale {:4.1}%",
                         snap.t_s,
                         snap.sampling_hz,
                         snap.update_hz,
@@ -350,44 +180,40 @@ impl Coordinator {
                         snap.update_frame_hz,
                         snap.cpu_usage * 100.0,
                         snap.gpu_usage * 100.0,
-                        eval.curve.recent_mean(3).unwrap_or(f64::NAN),
-                        snap.loss_fraction * 100.0
+                        topo.curve.recent_mean(3).unwrap_or(f64::NAN),
+                        snap.loss_fraction * 100.0,
+                        snap.staleness * 100.0
                     );
                 }
                 snapshots.push(snap);
             }
 
             // adaptation tick (~3 s windows)
-            if let Some(ad) = adapt.as_mut() {
-                if last_adapt.elapsed() >= Duration::from_secs(3)
-                    && !snapshots.is_empty()
-                    && learner.step() > 0
-                {
-                    last_adapt = Instant::now();
-                    let s = snapshots.last().unwrap();
-                    let new_sp =
-                        ad.sp.observe(Obs { usage: s.cpu_usage, throughput: s.sampling_hz });
+            if topo.adapt.is_some()
+                && last_adapt.elapsed() >= Duration::from_secs(3)
+                && !snapshots.is_empty()
+                && topo.learner.step() > 0
+            {
+                last_adapt = Instant::now();
+                let s = *snapshots.last().unwrap();
+                let ad = topo.adapt.as_mut().unwrap();
+                let new_sp = ad.sp.observe(Obs { usage: s.cpu_usage, throughput: s.sampling_hz });
+                if let Some(pool) = &topo.pool {
                     pool.set_active(new_sp);
-                    let new_bs =
-                        ad.bs.observe(Obs { usage: s.gpu_usage, throughput: s.update_frame_hz });
-                    if new_bs != learner.batch_size() {
-                        if let LearnerKind::Single(l) = &mut learner {
-                            l.switch_batch_size(&manifest, new_bs)?;
-                        }
-                    }
+                }
+                let new_bs =
+                    ad.bs.observe(Obs { usage: s.gpu_usage, throughput: s.update_frame_hz });
+                if new_bs != topo.learner.batch_size() {
+                    topo.learner.switch_batch_size(&topo.manifest, new_bs)?;
                 }
             }
         }
 
         // --- teardown + result assembly
         let wall_s = start.elapsed().as_secs_f64();
-        pool.shutdown();
-        let curve = eval.curve.points.lock().unwrap().clone();
-        let final_return = eval.curve.recent_mean(3).unwrap_or(f64::NAN);
-        eval.shutdown();
-        if let Some(v) = viz {
-            v.shutdown();
-        }
+        let final_return = topo.curve.recent_mean(3).unwrap_or(f64::NAN);
+        topo.shutdown_services();
+        let curve = topo.curve.points.lock().unwrap().clone();
 
         // steady-state = last 2/3 of snapshots
         let tail = &snapshots[snapshots.len() / 3..];
@@ -398,13 +224,13 @@ impl Coordinator {
                 tail.iter().map(|s| f(s)).sum::<f64>() / tail.len() as f64
             }
         };
-        let tstats = learner.stats();
+        let tstats = topo.learner.stats();
         let summary = RunSummary {
             env: cfg.env.clone(),
             algo: cfg.algo.name().into(),
             wall_s,
-            updates: learner.step(),
-            sampled_frames: hub.sampled.count(),
+            updates: topo.learner.step(),
+            sampled_frames: topo.hub.sampled.count(),
             solved_s,
             final_return,
             best_return,
@@ -415,12 +241,14 @@ impl Coordinator {
             gpu_usage: mean(&|s| s.gpu_usage),
             transfer_cycle_s: mean(&|s| s.transfer_cycle_s),
             loss_fraction: tstats.loss_fraction(),
-            batch_size: learner.batch_size(),
+            weight_cycle_s: mean(&|s| s.weight_cycle_s),
+            policy_staleness: mean(&|s| s.staleness),
+            batch_size: topo.learner.batch_size(),
             n_samplers: pool_active_final(&snapshots),
             curve,
             snapshots,
         };
-        self.write_outputs(&run_dir, &summary)?;
+        self.write_outputs(&topo.run_dir, &summary)?;
         Ok(summary)
     }
 
@@ -459,6 +287,8 @@ impl Coordinator {
             ("gpu_usage", num(s.gpu_usage)),
             ("transfer_cycle_s", num(s.transfer_cycle_s)),
             ("loss_fraction", num(s.loss_fraction)),
+            ("weight_cycle_s", num(s.weight_cycle_s)),
+            ("policy_staleness", num(s.policy_staleness)),
             ("batch_size", num(s.batch_size as f64)),
             ("n_samplers", num(s.n_samplers as f64)),
             ("config", self.cfg.to_json()),

@@ -1,0 +1,504 @@
+//! Service topology: the paper's Fig. 1 component graph as a typed,
+//! reusable API instead of a hand-wired monolith.
+//!
+//! [`Service`] is the lifecycle contract every asynchronous component
+//! (sampler pool, eval, viz) satisfies: signal `stop`, then `join`, and
+//! expose a few numeric `stats`. [`TopologyBuilder`] assembles the whole
+//! training graph — experience transport, weight bus, learner (single or
+//! dual-executor), sampler pool, eval, viz, adaptation — so
+//! [`crate::coordinator::Coordinator`], `baselines::SyncFramework`, and the
+//! harness all build the same topology instead of re-wiring it by hand.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::adapt::Adaptation;
+use crate::bus::{make_bus, PolicyPub};
+use crate::config::{TrainConfig, Transport};
+use crate::coordinator::metrics::MetricsHub;
+use crate::env::registry::make_env;
+use crate::eval::{EvalCurve, EvalWorker};
+use crate::learner::model_parallel::ModelParallelLearner;
+use crate::learner::Learner;
+use crate::nn::Layout;
+use crate::replay::shm_ring::ShmSource;
+use crate::replay::{
+    ExpSink, ExpSource, FrameSpec, QueueBuffer, ShmRing, ShmRingOptions, TransportStats,
+};
+use crate::runtime::{default_artifacts_dir, Manifest};
+use crate::sampler::SamplerPool;
+use crate::util::sysinfo;
+use crate::viz::VizWorker;
+
+/// Lifecycle contract for an asynchronous component of the topology.
+pub trait Service {
+    fn service_name(&self) -> &'static str;
+
+    /// Signal the service to stop (non-blocking, idempotent).
+    fn stop_signal(&self);
+
+    /// Join all threads; must be preceded (or accompanied) by `stop_signal`.
+    fn join(self: Box<Self>);
+
+    /// Small numeric stats for logs/debugging.
+    fn stats(&self) -> Vec<(&'static str, f64)> {
+        Vec::new()
+    }
+}
+
+impl Service for SamplerPool {
+    fn service_name(&self) -> &'static str {
+        "samplers"
+    }
+
+    fn stop_signal(&self) {
+        self.signal_stop();
+    }
+
+    fn join(self: Box<Self>) {
+        (*self).shutdown();
+    }
+
+    fn stats(&self) -> Vec<(&'static str, f64)> {
+        vec![("active", self.active() as f64), ("max_workers", self.max_workers as f64)]
+    }
+}
+
+impl Service for EvalWorker {
+    fn service_name(&self) -> &'static str {
+        "eval"
+    }
+
+    fn stop_signal(&self) {
+        self.signal_stop();
+    }
+
+    fn join(self: Box<Self>) {
+        (*self).shutdown();
+    }
+
+    fn stats(&self) -> Vec<(&'static str, f64)> {
+        vec![("episodes", self.curve.points.lock().unwrap().len() as f64)]
+    }
+}
+
+impl Service for VizWorker {
+    fn service_name(&self) -> &'static str {
+        "viz"
+    }
+
+    fn stop_signal(&self) {
+        self.signal_stop();
+    }
+
+    fn join(self: Box<Self>) {
+        (*self).shutdown();
+    }
+}
+
+/// The learner variant behind one dispatch surface (single executor or the
+/// paper's dual-executor actor/critic split).
+pub enum LearnerKind {
+    Single(Learner),
+    ModelParallel(ModelParallelLearner),
+}
+
+impl LearnerKind {
+    pub fn try_update(&mut self) -> Result<bool> {
+        match self {
+            LearnerKind::Single(l) => l.try_update(),
+            LearnerKind::ModelParallel(l) => l.try_update(),
+        }
+    }
+
+    pub fn visible(&self) -> usize {
+        match self {
+            LearnerKind::Single(l) => l.source.visible(),
+            LearnerKind::ModelParallel(l) => l.source.visible(),
+        }
+    }
+
+    pub fn stats(&self) -> TransportStats {
+        match self {
+            LearnerKind::Single(l) => l.source.stats(),
+            LearnerKind::ModelParallel(l) => l.source.stats(),
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        match self {
+            LearnerKind::Single(l) => l.batch_size(),
+            LearnerKind::ModelParallel(l) => l.batch_size(),
+        }
+    }
+
+    pub fn actor_params(&self) -> &[f32] {
+        match self {
+            LearnerKind::Single(l) => l.actor_params(),
+            LearnerKind::ModelParallel(l) => l.actor_params(),
+        }
+    }
+
+    pub fn step(&self) -> u64 {
+        match self {
+            LearnerKind::Single(l) => l.step,
+            LearnerKind::ModelParallel(l) => l.step,
+        }
+    }
+
+    /// BS-ladder switch for either learner kind (paper §3.4): the single
+    /// learner swaps its step executable, the dual-executor learner
+    /// respawns both executors; parameters and optimizer state carry over.
+    pub fn switch_batch_size(&mut self, manifest: &Manifest, bs: usize) -> Result<()> {
+        match self {
+            LearnerKind::Single(l) => l.switch_batch_size(manifest, bs),
+            LearnerKind::ModelParallel(l) => l.switch_batch_size(manifest, bs),
+        }
+    }
+}
+
+/// Builder for the full training topology. All components are optional
+/// except the learner + weight bus, so baselines that drive sampling on the
+/// caller's thread (e.g. `SyncFramework`) reuse the same assembly.
+pub struct TopologyBuilder {
+    cfg: TrainConfig,
+    spawn_samplers: bool,
+    spawn_eval: bool,
+    spawn_viz: Option<bool>,
+    batch_size: Option<usize>,
+    adapt: Option<bool>,
+}
+
+impl TopologyBuilder {
+    pub fn new(cfg: TrainConfig) -> TopologyBuilder {
+        TopologyBuilder {
+            cfg,
+            spawn_samplers: true,
+            spawn_eval: true,
+            spawn_viz: None,
+            batch_size: None,
+            adapt: None,
+        }
+    }
+
+    /// Skip the asynchronous sampler pool (the caller drives sampling).
+    pub fn samplers(mut self, on: bool) -> Self {
+        self.spawn_samplers = on;
+        self
+    }
+
+    pub fn eval(mut self, on: bool) -> Self {
+        self.spawn_eval = on;
+        self
+    }
+
+    /// Override `cfg.viz`.
+    pub fn viz(mut self, on: bool) -> Self {
+        self.spawn_viz = Some(on);
+        self
+    }
+
+    /// Fixed batch size (snapped to the compiled ladder), overriding the
+    /// config/ladder default and disabling BS adaptation.
+    pub fn batch_size(mut self, bs: usize) -> Self {
+        self.batch_size = Some(bs);
+        self
+    }
+
+    /// Override `cfg.adapt`.
+    pub fn adapt(mut self, on: bool) -> Self {
+        self.adapt = Some(on);
+        self
+    }
+
+    pub fn build(self) -> Result<Topology> {
+        let cfg = self.cfg;
+        let artifacts_dir = if cfg.artifacts_dir == "artifacts" {
+            default_artifacts_dir()
+        } else {
+            PathBuf::from(&cfg.artifacts_dir)
+        };
+        let manifest = Manifest::load_or_native(&artifacts_dir)?;
+        if cfg.verbose && manifest.native {
+            println!("backend: native CPU executor (no artifacts manifest)");
+        }
+        let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();
+        // fail fast if Rust env dims drifted from the python presets
+        {
+            let env = make_env(&cfg.env)?;
+            manifest.check_env(
+                &cfg.env,
+                cfg.algo.name(),
+                env.spec().obs_dim,
+                env.spec().act_dim,
+            )?;
+        }
+
+        let run_dir = PathBuf::from(&cfg.run_dir);
+        std::fs::create_dir_all(&run_dir)?;
+        let hub = Arc::new(MetricsHub::new());
+
+        // --- weight bus (policy path learner → workers)
+        let bus = make_bus(
+            cfg.weight_transport,
+            layout.actor_size,
+            &run_dir.join("ckpt"),
+            &cfg.env,
+            cfg.algo.name(),
+        )?;
+
+        // --- experience transport (samplers → learner)
+        let fspec = FrameSpec { obs_dim: layout.obs_dim, act_dim: layout.act_dim };
+        let (sink, source): (Arc<dyn ExpSink>, Box<dyn ExpSource>) = match cfg.transport {
+            Transport::Shm => {
+                let ring = Arc::new(ShmRing::create(&ShmRingOptions {
+                    capacity: cfg.capacity,
+                    spec: fspec,
+                    shm_name: None,
+                })?);
+                (ring.clone(), Box::new(ShmSource::new(ring)))
+            }
+            Transport::Queue(qs) => {
+                let q = QueueBuffer::new(qs, fspec);
+                let src = crate::replay::queue_buf::QueueSource::new(q.clone(), cfg.capacity);
+                (q, Box::new(src))
+            }
+        };
+
+        // --- batch size: explicit, or ladder default (adaptation refines).
+        // Under model parallelism the ladder is restricted to sizes the
+        // split actor/critic steps were also compiled for, so the BS
+        // hill-climber never proposes a rung the dual-executor learner
+        // cannot actually switch to.
+        let use_mp = cfg.model_parallel && cfg.hardware.gpus >= 2;
+        let mut ladder = manifest.batch_sizes(&cfg.env, cfg.algo.name(), "full");
+        if use_mp {
+            let actor = manifest.batch_sizes(&cfg.env, "sac", "actor");
+            let critic = manifest.batch_sizes(&cfg.env, "sac", "critic");
+            ladder.retain(|b| actor.contains(b) && critic.contains(b));
+        }
+        let bs0 = if let Some(bs) = self.batch_size {
+            manifest
+                .nearest_batch_size(&cfg.env, cfg.algo.name(), "full", bs)
+                .context("no full-step artifacts")?
+        } else if cfg.batch_size > 0 {
+            cfg.batch_size
+        } else if cfg.env == "pendulum" {
+            // small task: start mid-ladder
+            *ladder.iter().find(|&&b| b >= 256).unwrap_or(ladder.last().context("no artifacts")?)
+        } else {
+            *ladder.iter().find(|&&b| b >= 2048).unwrap_or(ladder.last().context("no artifacts")?)
+        };
+
+        // --- learner
+        let learner = if use_mp {
+            LearnerKind::ModelParallel(ModelParallelLearner::new(
+                &cfg,
+                &manifest,
+                bs0,
+                source,
+                hub.clone(),
+            )?)
+        } else {
+            LearnerKind::Single(Learner::new(&cfg, &manifest, bs0, source)?)
+        };
+
+        // --- workers
+        let cores = if cfg.hardware.cpu_cores > 0 {
+            cfg.hardware.cpu_cores
+        } else {
+            sysinfo::num_cpus()
+        };
+        let max_workers = cores.max(2);
+        let sp0 = cfg.effective_samplers().min(max_workers);
+        let pool = if self.spawn_samplers {
+            // Each worker steps `envs_per_worker` envs per tick (batched
+            // actor forward + one ring reservation); the adaptation SP knob
+            // still parks whole workers, so Fig. 6b ablation semantics are
+            // unchanged and total envs = active_workers * envs_per_worker.
+            let p = SamplerPool::spawn(
+                &cfg,
+                &layout,
+                sink.clone(),
+                hub.clone(),
+                &bus,
+                max_workers,
+                sp0,
+            )?;
+            if cfg.verbose {
+                println!(
+                    "topology: {sp0}/{max_workers} sampler workers x {} envs/worker, \
+                     transport {:?}, weights {}",
+                    cfg.envs_per_worker.max(1),
+                    cfg.transport,
+                    bus.name()
+                );
+            }
+            Some(p)
+        } else {
+            None
+        };
+        let eval = if self.spawn_eval {
+            Some(EvalWorker::spawn(&cfg, &layout, hub.clone(), &bus)?)
+        } else {
+            None
+        };
+        let viz = if self.spawn_viz.unwrap_or(cfg.viz) {
+            Some(VizWorker::spawn(&cfg, &layout, &bus, run_dir.join("viz"))?)
+        } else {
+            None
+        };
+
+        // --- adaptation (disabled under explicit knobs, as before)
+        let adapt_on = self.adapt.unwrap_or(cfg.adapt)
+            && self.batch_size.is_none()
+            && cfg.batch_size == 0
+            && cfg.n_samplers == 0;
+        let adapt = if adapt_on {
+            Some(Adaptation::new(max_workers, sp0, ladder.clone(), bs0))
+        } else {
+            None
+        };
+
+        let curve = eval.as_ref().map(|e| e.curve.clone()).unwrap_or_default();
+        let mut topo = Topology {
+            cfg,
+            manifest,
+            layout,
+            run_dir,
+            hub,
+            bus,
+            sink,
+            learner,
+            pool,
+            eval,
+            viz,
+            adapt,
+            ladder,
+            use_mp,
+            max_workers,
+            curve,
+        };
+        // publish the random-init policy so eval/viz can start
+        topo.publish_policy()?;
+        Ok(topo)
+    }
+}
+
+/// The assembled training graph plus everything the driver loop needs.
+pub struct Topology {
+    pub cfg: TrainConfig,
+    pub manifest: Manifest,
+    pub layout: Layout,
+    pub run_dir: PathBuf,
+    pub hub: Arc<MetricsHub>,
+    pub bus: Arc<dyn PolicyPub>,
+    pub sink: Arc<dyn ExpSink>,
+    pub learner: LearnerKind,
+    pub pool: Option<SamplerPool>,
+    pub eval: Option<EvalWorker>,
+    pub viz: Option<VizWorker>,
+    pub adapt: Option<Adaptation>,
+    /// Compiled batch-size ladder for BS adaptation.
+    pub ladder: Vec<usize>,
+    pub use_mp: bool,
+    pub max_workers: usize,
+    /// Eval curve handle that stays valid after shutdown.
+    pub curve: Arc<EvalCurve>,
+}
+
+impl Topology {
+    /// Publish the learner's current actor weights on the bus and account
+    /// the weight-transfer event.
+    pub fn publish_policy(&mut self) -> Result<u64> {
+        let v = self.bus.publish(self.learner.actor_params())?;
+        self.hub.weight_pubs.add(1);
+        Ok(v)
+    }
+
+    /// Active sampler workers (0 when the pool was not spawned).
+    pub fn active_samplers(&self) -> usize {
+        self.pool.as_ref().map(|p| p.active()).unwrap_or(0)
+    }
+
+    /// Stop and join every service: stop signals go out to all services
+    /// first, then the joins, so teardown is one pass, not serialized waits.
+    pub fn shutdown_services(&mut self) {
+        let mut services: Vec<Box<dyn Service>> = Vec::new();
+        if let Some(p) = self.pool.take() {
+            services.push(Box::new(p));
+        }
+        if let Some(v) = self.viz.take() {
+            services.push(Box::new(v));
+        }
+        if let Some(e) = self.eval.take() {
+            services.push(Box::new(e));
+        }
+        for s in &services {
+            s.stop_signal();
+        }
+        for s in services {
+            s.join();
+        }
+    }
+}
+
+/// Table-1 stop semantics, untangled: the run is "solved" the first time the
+/// smoothed eval return reaches the target. Returns the solve time to
+/// record, or None to keep training.
+pub fn target_reached(target: Option<f64>, recent_mean: Option<f64>, wall_s: f64) -> Option<f64> {
+    match (target, recent_mean) {
+        (Some(t), Some(m)) if m >= t => Some(wall_s),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_reached_only_when_target_and_mean_agree() {
+        // no target configured → never stops
+        assert_eq!(target_reached(None, Some(1e9), 5.0), None);
+        // no eval window yet → keep training
+        assert_eq!(target_reached(Some(100.0), None, 5.0), None);
+        // below target → keep training
+        assert_eq!(target_reached(Some(100.0), Some(99.9), 5.0), None);
+        // at/above target → solved, stamped with the wall clock
+        assert_eq!(target_reached(Some(100.0), Some(100.0), 5.0), Some(5.0));
+        assert_eq!(target_reached(Some(-200.0), Some(-150.0), 7.5), Some(7.5));
+        // negative targets behave the same (pendulum)
+        assert_eq!(target_reached(Some(-200.0), Some(-250.0), 7.5), None);
+    }
+
+    /// The builder assembles a full native-backend topology and tears it
+    /// down cleanly (services stop/join; eval curve handle survives).
+    #[test]
+    fn builder_assembles_and_shuts_down() {
+        std::env::set_var("SPREEZE_BACKEND", "native");
+        let mut cfg = TrainConfig::default();
+        cfg.env = "pendulum".into();
+        cfg.batch_size = 64;
+        cfg.n_samplers = 1;
+        cfg.hardware.cpu_cores = 2;
+        let run_dir =
+            std::env::temp_dir().join(format!("spreeze-topo-test-{}", std::process::id()));
+        cfg.run_dir = run_dir.to_string_lossy().into_owned();
+        let mut topo = TopologyBuilder::new(cfg).build().unwrap();
+        assert!(topo.pool.is_some());
+        assert!(topo.eval.is_some());
+        assert!(topo.viz.is_none(), "viz off by default");
+        assert_eq!(topo.bus.name(), "shm");
+        assert_eq!(topo.bus.version(), 1, "init policy published");
+        assert_eq!(topo.hub.weight_pubs.count(), 1);
+        let stats = topo.pool.as_ref().unwrap().stats();
+        assert!(stats.iter().any(|(k, v)| *k == "active" && *v >= 1.0));
+        topo.shutdown_services();
+        assert!(topo.pool.is_none() && topo.eval.is_none());
+        let _ = topo.curve.recent_mean(1); // handle survives shutdown
+        let _ = std::fs::remove_dir_all(run_dir);
+    }
+}

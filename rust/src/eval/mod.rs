@@ -3,17 +3,17 @@
 //! curve (the y-axis of every training figure), without ever touching the
 //! experience stream.
 
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::bus::{PolicyPub, PolicySub};
 use crate::config::TrainConfig;
 use crate::coordinator::metrics::MetricsHub;
 use crate::env::registry::make_env;
-use crate::nn::{checkpoint, GaussianPolicy, Layout};
+use crate::nn::{GaussianPolicy, Layout};
 use crate::util::rng::Rng;
 
 /// (wall-clock seconds since start, episode return, policy version)
@@ -57,18 +57,24 @@ impl EvalWorker {
         cfg: &TrainConfig,
         layout: &Layout,
         hub: Arc<MetricsHub>,
-        policy_path: PathBuf,
+        bus: &Arc<dyn PolicyPub>,
     ) -> Result<EvalWorker> {
         let stop = Arc::new(AtomicBool::new(false));
         let curve = Arc::new(EvalCurve::default());
         let (cfg, layout) = (cfg.clone(), layout.clone());
         let (stop2, curve2) = (stop.clone(), curve.clone());
+        let mut sub = bus.subscribe();
         let handle = std::thread::Builder::new().name("eval".into()).spawn(move || {
-            if let Err(e) = eval_loop(&cfg, &layout, &hub, &policy_path, &stop2, &curve2) {
+            if let Err(e) = eval_loop(&cfg, &layout, &hub, sub.as_mut(), &stop2, &curve2) {
                 eprintln!("eval worker: {e:#}");
             }
         })?;
         Ok(EvalWorker { stop, handle: Some(handle), curve })
+    }
+
+    /// Signal the worker to stop without joining (`Service` split lifecycle).
+    pub fn signal_stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
     }
 
     pub fn shutdown(mut self) {
@@ -83,7 +89,7 @@ fn eval_loop(
     cfg: &TrainConfig,
     layout: &Layout,
     hub: &MetricsHub,
-    policy_path: &PathBuf,
+    sub: &mut dyn PolicySub,
     stop: &AtomicBool,
     curve: &EvalCurve,
 ) -> Result<()> {
@@ -98,10 +104,10 @@ fn eval_loop(
 
     while !stop.load(Ordering::Relaxed) {
         // wait for the first policy publish
-        match checkpoint::load_policy(policy_path, version)? {
-            Some((ver, flat)) => {
+        match sub.poll(&mut actor)? {
+            Some(ver) => {
                 version = ver;
-                actor.copy_from_slice(&flat);
+                hub.weight_fetches.add(1);
             }
             None if version == 0 => {
                 std::thread::sleep(std::time::Duration::from_millis(50));

@@ -38,12 +38,13 @@ pub fn run(opts: &HarnessOpts) -> Result<()> {
         opts.budget_s
     );
     println!(
-        "{:<22} {:>6} {:>11} {:>6} {:>13} {:>8} {:>9} {:>7}",
-        "Variant", "CPU%", "Sample Hz", "GPU%", "UpdFrame Hz", "Upd Hz", "Cycle s", "Loss%"
+        "{:<22} {:>6} {:>11} {:>6} {:>13} {:>8} {:>9} {:>7} {:>8} {:>7}",
+        "Variant", "CPU%", "Sample Hz", "GPU%", "UpdFrame Hz", "Upd Hz", "Cycle s", "Loss%",
+        "WCyc s", "Stale%"
     );
     let mut csv = String::from(
         "variant,cpu_usage,sampling_hz,gpu_usage,update_frame_hz,update_hz,\
-         transfer_cycle_s,loss_fraction\n",
+         transfer_cycle_s,loss_fraction,weight_cycle_s,policy_staleness\n",
     );
     for v in variants() {
         let mut cfg = presets::preset("walker");
@@ -63,7 +64,7 @@ pub fn run(opts: &HarnessOpts) -> Result<()> {
             .into_owned();
         let s = Coordinator::new(cfg).run()?;
         println!(
-            "{:<22} {:>5.0}% {:>11.0} {:>5.0}% {:>13.3e} {:>8.1} {:>9.2} {:>6.1}%",
+            "{:<22} {:>5.0}% {:>11.0} {:>5.0}% {:>13.3e} {:>8.1} {:>9.2} {:>6.1}% {:>8.2} {:>6.1}%",
             v.label,
             s.cpu_usage * 100.0,
             s.sampling_hz,
@@ -71,10 +72,12 @@ pub fn run(opts: &HarnessOpts) -> Result<()> {
             s.update_frame_hz,
             s.update_hz,
             s.transfer_cycle_s,
-            s.loss_fraction * 100.0
+            s.loss_fraction * 100.0,
+            s.weight_cycle_s,
+            s.policy_staleness * 100.0
         );
         csv.push_str(&format!(
-            "{},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4}\n",
+            "{},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4},{:.3},{:.4}\n",
             v.label,
             s.cpu_usage,
             s.sampling_hz,
@@ -82,7 +85,9 @@ pub fn run(opts: &HarnessOpts) -> Result<()> {
             s.update_frame_hz,
             s.update_hz,
             s.transfer_cycle_s,
-            s.loss_fraction
+            s.loss_fraction,
+            s.weight_cycle_s,
+            s.policy_staleness
         ));
     }
     std::fs::write(dir.join("table3.csv"), csv)?;

@@ -102,14 +102,10 @@ impl Learner {
         bs: usize,
         source: Box<dyn ExpSource>,
     ) -> Result<Learner> {
-        let ladder = manifest.batch_sizes(&cfg.env, cfg.algo.name(), "full");
-        if ladder.is_empty() {
+        let Some(snapped) = manifest.nearest_batch_size(&cfg.env, cfg.algo.name(), "full", bs)
+        else {
             bail!("no full-step artifacts for {}/{}", cfg.env, cfg.algo.name());
-        }
-        let snapped = *ladder
-            .iter()
-            .min_by_key(|&&b| (b as i64 - bs as i64).unsigned_abs())
-            .unwrap();
+        };
         Self::new(cfg, manifest, snapped, source)
     }
 

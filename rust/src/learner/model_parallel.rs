@@ -39,6 +39,17 @@ struct ExecutorHandle {
     output_names: Vec<String>,
 }
 
+impl Drop for ExecutorHandle {
+    fn drop(&mut self) {
+        // replace the sender so the executor's recv loop ends, then join
+        let (tx, _rx) = channel();
+        self.tx = tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Spawn an executor thread owning its own Engine + compiled artifact.
 #[allow(clippy::too_many_arguments)]
 fn spawn_executor(
@@ -114,6 +125,9 @@ pub struct ModelParallelLearner {
     noise2: Vec<f32>,
     rng: Rng,
     pub last_metrics: [f32; 8],
+    /// Kept to respawn executors on a batch-size switch.
+    hub: Arc<MetricsHub>,
+    throttle: f64,
 }
 
 impl ModelParallelLearner {
@@ -132,7 +146,7 @@ impl ModelParallelLearner {
         let actor_exec =
             spawn_executor(manifest, &cfg.env, "sac", "actor", bs, hub.clone(), 0, throttle)?;
         let critic_exec =
-            spawn_executor(manifest, &cfg.env, "sac", "critic", bs, hub, 1, throttle)?;
+            spawn_executor(manifest, &cfg.env, "sac", "critic", bs, hub.clone(), 1, throttle)?;
         let mut rng = Rng::for_worker(cfg.seed, 0xC0FFEE);
         let (params, targets) = layout.init_params(&mut rng);
         let (pa, pc) = (layout.actor_size, layout.critic_size);
@@ -155,11 +169,63 @@ impl ModelParallelLearner {
             source,
             actor_exec,
             critic_exec,
+            hub,
+            throttle,
         })
     }
 
     pub fn batch_size(&self) -> usize {
         self.batch.bs
+    }
+
+    /// Adaptation knob under dual-executor mode: respawn both executors on
+    /// the artifact compiled for `bs`. Params, targets, and both Adam states
+    /// carry over untouched; only the batch staging buffers resize.
+    ///
+    /// The adaptation ladder comes from the "full"-step artifacts, but this
+    /// learner needs the split actor/critic steps — on a manifest where the
+    /// split was compiled for fewer sizes, snap to the nearest split rung
+    /// (no-op when none exists) instead of aborting the run mid-training.
+    pub fn switch_batch_size(&mut self, manifest: &Manifest, bs: usize) -> Result<()> {
+        let env = self.layout.env.clone();
+        let bs = match (
+            manifest.nearest_batch_size(&env, "sac", "actor", bs),
+            manifest.nearest_batch_size(&env, "sac", "critic", bs),
+        ) {
+            // both halves compiled for the same snapped size
+            (Some(a), Some(c)) if a == c => a,
+            _ => return Ok(()),
+        };
+        if bs == self.batch.bs {
+            return Ok(());
+        }
+        let new_actor = spawn_executor(
+            manifest,
+            &env,
+            "sac",
+            "actor",
+            bs,
+            self.hub.clone(),
+            0,
+            self.throttle,
+        )?;
+        let new_critic = spawn_executor(
+            manifest,
+            &env,
+            "sac",
+            "critic",
+            bs,
+            self.hub.clone(),
+            1,
+            self.throttle,
+        )?;
+        // old handles drop here → their executor threads exit and join
+        self.actor_exec = new_actor;
+        self.critic_exec = new_critic;
+        self.batch = Batch::new(bs, self.layout.obs_dim, self.layout.act_dim);
+        self.noise1 = vec![0.0; bs * self.layout.act_dim];
+        self.noise2 = vec![0.0; bs * self.layout.act_dim];
+        Ok(())
     }
 
     pub fn actor_params(&self) -> &[f32] {
@@ -269,18 +335,3 @@ impl ModelParallelLearner {
     }
 }
 
-impl Drop for ModelParallelLearner {
-    fn drop(&mut self) {
-        // close channels so executor threads exit, then join
-        let (tx, _rx) = channel();
-        self.actor_exec.tx = tx;
-        let (tx, _rx) = channel();
-        self.critic_exec.tx = tx;
-        if let Some(h) = self.actor_exec.handle.take() {
-            let _ = h.join();
-        }
-        if let Some(h) = self.critic_exec.handle.take() {
-            let _ = h.join();
-        }
-    }
-}

@@ -14,9 +14,11 @@
 //!   artifact ([`runtime::Engine`]); with model parallelism, actor and critic
 //!   halves run concurrently on two executor threads
 //!   ([`learner::model_parallel`]).
-//! * Weights travel sampler-ward through **SSD checkpoints**
-//!   ([`nn::checkpoint`]); an **eval** worker draws the return curve and a
-//!   **viz** worker traces rollouts.
+//! * Weights travel sampler-ward through the **versioned weight bus**
+//!   ([`bus`]: lock-free double-buffered publish, torn-read-free subscribe;
+//!   the SSD checkpoint of [`nn::checkpoint`] is demoted to a pluggable
+//!   persistence sink / `--weight-transport file` fallback); an **eval**
+//!   worker draws the return curve and a **viz** worker traces rollouts.
 //! * The **adaptation controller** ([`adapt`]) tunes batch size and sampler
 //!   count from hardware saturation, as in paper §3.4.
 //! * [`baselines`] implements the comparison architectures (queue transport,
@@ -25,6 +27,7 @@
 
 pub mod adapt;
 pub mod baselines;
+pub mod bus;
 pub mod config;
 pub mod coordinator;
 pub mod env;

@@ -144,6 +144,7 @@ COMMANDS
              --algo sac|td3  --bs N (0=adapt)  --sp N (0=adapt)
              --envs-per-worker K (batched sampler: K envs per worker)
              --queue-size N (queue transport instead of shared memory)
+             --weight-transport shm|file (policy weight path; default shm)
              --model-parallel true  --gpus N  --gpu-throttle F
              --cpu-cores N  --seed N  --max-seconds S  --max-updates N
              --target-return R  --adapt true|false  --verbose true

@@ -1,5 +1,9 @@
-//! SSD weight transmission (paper §3.3.1): network weights move between the
-//! learner and the sampler/eval/viz workers through files, not IPC.
+//! SSD checkpoint files (paper §3.3.1 as written). Since the versioned
+//! weight bus ([`crate::bus`]) became the live weight path, this file format
+//! serves as (a) the `--weight-transport file` ablation via
+//! [`crate::bus::FileBus`], (b) the write-only persistence sink the shm bus
+//! keeps for crash recovery / offline viz replay, and (c) full learner-state
+//! save/restore ([`CheckpointStore::save_full`]).
 //!
 //! Format: a single JSON header line (magic, env, algo, version, sizes)
 //! followed by raw little-endian f32 payloads. Writes are atomic

@@ -137,6 +137,22 @@ impl Manifest {
         v
     }
 
+    /// Nearest compiled batch size to `bs` for (env, algo, func); None when
+    /// nothing was built for that function. The single snapping rule shared
+    /// by the topology builder, `Learner::new_with_bs_fallback`, and the
+    /// model-parallel BS switch.
+    pub fn nearest_batch_size(
+        &self,
+        env: &str,
+        algo: &str,
+        func: &str,
+        bs: usize,
+    ) -> Option<usize> {
+        self.batch_sizes(env, algo, func)
+            .into_iter()
+            .min_by_key(|&b| (b as i64 - bs as i64).unsigned_abs())
+    }
+
     /// Fail fast if the Rust env dims drifted from the python presets.
     pub fn check_env(&self, env: &str, algo: &str, obs_dim: usize, act_dim: usize) -> Result<()> {
         let lay = self.layout(env, algo)?;

@@ -6,28 +6,30 @@
 //! matrix-matrix actor forward over all K observations, one vectorized env
 //! step, and one batched transport push (`ExpSink::push_many` — a single
 //! ring reservation covering K slots), never synchronizing with the
-//! learner. Weights arrive through the SSD checkpoint file, polled every
-//! `reload_every` env steps (paper §3.3.1). K = 1 reproduces the scalar
-//! hot path frame-for-frame (tested below).
+//! learner. Weights arrive through a [`crate::bus::PolicySub`] subscription
+//! polled every `reload_every` env steps — two atomic loads + a memcpy on
+//! the default in-memory bus, a disk read only under `--weight-transport
+//! file` (paper §3.3.1 as written). K = 1 reproduces the scalar hot path
+//! frame-for-frame (tested below).
 //!
 //! The pool supports *live resizing*: `set_active(n)` parks workers above
 //! index `n` (the adaptation controller's SP knob, and the Fig. 6b CPU-limit
 //! ablation). Parking operates on whole workers, so the SP knob's semantics
 //! are unchanged by batching — it scales sampling in units of K envs.
 
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::bus::{PolicyPub, PolicySub};
 use crate::config::TrainConfig;
 use crate::coordinator::metrics::MetricsHub;
 use crate::env::registry::make_env;
 use crate::env::vec::VecEnv;
 use crate::env::{Env, StepOut};
-use crate::nn::{checkpoint, GaussianPolicy, Layout};
+use crate::nn::{GaussianPolicy, Layout};
 use crate::replay::{ExpSink, FrameSpec};
 use crate::util::rng::Rng;
 
@@ -46,17 +48,19 @@ struct WorkerCtx {
     hub: Arc<MetricsHub>,
     stop: Arc<AtomicBool>,
     active: Arc<AtomicUsize>,
-    policy_path: PathBuf,
+    /// This worker's private cursor on the weight bus.
+    sub: Box<dyn PolicySub>,
 }
 
 impl SamplerPool {
     /// Spawn `max_workers` worker threads; `initial_active` of them sample.
+    /// Each worker gets its own subscription on the weight bus.
     pub fn spawn(
         cfg: &TrainConfig,
         layout: &Layout,
         sink: Arc<dyn ExpSink>,
         hub: Arc<MetricsHub>,
-        policy_path: PathBuf,
+        bus: &Arc<dyn PolicyPub>,
         max_workers: usize,
         initial_active: usize,
     ) -> Result<SamplerPool> {
@@ -72,7 +76,7 @@ impl SamplerPool {
                 hub: hub.clone(),
                 stop: stop.clone(),
                 active: active.clone(),
-                policy_path: policy_path.clone(),
+                sub: bus.subscribe(),
             };
             handles.push(
                 std::thread::Builder::new()
@@ -92,6 +96,12 @@ impl SamplerPool {
         self.active.load(Ordering::Relaxed)
     }
 
+    /// Signal all workers to stop without joining (the `Service` split
+    /// lifecycle; `shutdown` = signal + join).
+    pub fn signal_stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         for h in self.handles.drain(..) {
@@ -101,12 +111,13 @@ impl SamplerPool {
 }
 
 fn worker_main(ctx: WorkerCtx) {
-    if let Err(e) = worker_loop(&ctx) {
-        eprintln!("sampler-{}: {e:#}", ctx.id);
+    let id = ctx.id;
+    if let Err(e) = worker_loop(ctx) {
+        eprintln!("sampler-{id}: {e:#}");
     }
 }
 
-fn worker_loop(ctx: &WorkerCtx) -> Result<()> {
+fn worker_loop(mut ctx: WorkerCtx) -> Result<()> {
     let k = ctx.cfg.envs_per_worker.max(1);
     let mut rng = Rng::for_worker(ctx.cfg.seed, ctx.id as u64 + 1);
     let envs: Vec<Box<dyn Env>> =
@@ -134,15 +145,16 @@ fn worker_loop(ctx: &WorkerCtx) -> Result<()> {
             continue;
         }
 
-        // periodic SSD weight reload (paper §3.3.1) — one poll per K env
-        // steps' worth of ticks, so the reload branch costs 1/K per frame
+        // periodic weight-bus poll — one per K env steps' worth of ticks, so
+        // the reload branch costs 1/K per frame (and on the shm bus a
+        // no-new-version poll is a single atomic load). Errors are tolerated,
+        // not fatal: a transiently corrupt/foreign policy file under the file
+        // transport must not kill the worker for the rest of the run.
         if steps_since_reload == 0 {
-            if let Ok(Some((ver, flat))) =
-                checkpoint::load_policy(&ctx.policy_path, policy_version)
-            {
+            if let Ok(Some(ver)) = ctx.sub.poll(&mut actor) {
                 policy_version = ver;
-                actor.copy_from_slice(&flat);
                 have_policy = true;
+                ctx.hub.weight_fetches.add(1);
             }
         }
         steps_since_reload += k as u64;
@@ -182,6 +194,12 @@ fn worker_loop(ctx: &WorkerCtx) -> Result<()> {
         // one transport call for the whole tick: a single ring reservation
         ctx.sink.push_many(&frames, k);
         ctx.hub.sampled.add(k as u64);
+        // staleness accounting: these frames were drawn while a newer
+        // policy version was already on the bus (on the file transport
+        // peek == cursor, so this reads 0 — documented in README)
+        if ctx.sub.peek_version() > policy_version {
+            ctx.hub.stale_frames.add(k as u64);
+        }
         for r in venv.finished.drain(..) {
             ctx.hub.push_train_return(r);
         }
@@ -192,7 +210,13 @@ fn worker_loop(ctx: &WorkerCtx) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bus::{SharedWeightBus, WeightBus};
     use crate::replay::{ShmRing, ShmRingOptions};
+
+    /// A fresh in-memory weight bus — no filesystem involved at all.
+    fn mem_bus(actor_size: usize) -> Arc<dyn PolicyPub> {
+        Arc::new(SharedWeightBus(Arc::new(WeightBus::new(actor_size))))
+    }
 
     fn test_layout() -> Layout {
         // pendulum-shaped layout (no manifest needed)
@@ -247,14 +271,13 @@ mod tests {
         let hub = Arc::new(MetricsHub::new());
         let mut cfg = TrainConfig::default();
         cfg.env = "pendulum".into();
-        cfg.start_steps = 1_000_000; // random actions: no policy file needed
-        let dir = std::env::temp_dir().join(format!("spreeze-sampler-test-{}", std::process::id()));
+        cfg.start_steps = 1_000_000; // random actions: no policy needed
         let pool = SamplerPool::spawn(
             &cfg,
             &layout,
             ring.clone() as Arc<dyn ExpSink>,
             hub.clone(),
-            dir.join("policy.bin"),
+            &mem_bus(layout.actor_size),
             4,
             2,
         )
@@ -290,13 +313,12 @@ mod tests {
         cfg.env = "pendulum".into();
         cfg.start_steps = 1_000_000;
         cfg.envs_per_worker = 8;
-        let dir = std::env::temp_dir().join(format!("spreeze-batch-test-{}", std::process::id()));
         let pool = SamplerPool::spawn(
             &cfg,
             &layout,
             ring.clone() as Arc<dyn ExpSink>,
             hub.clone(),
-            dir.join("policy.bin"),
+            &mem_bus(layout.actor_size),
             2,
             2,
         )
@@ -307,6 +329,51 @@ mod tests {
         assert!(pushed >= 8, "batched samplers produced only {pushed} frames");
         assert_eq!(pushed, hub.sampled.count());
         assert_eq!(pushed % 8, 0, "frames should arrive in multiples of K");
+    }
+
+    /// Acceptance for the weight-bus redesign: workers pick up a published
+    /// policy version purely through memory — no checkpoint file exists
+    /// anywhere, yet every active worker fetches the weights.
+    #[test]
+    fn workers_observe_published_version_without_disk() {
+        let layout = test_layout();
+        let ring = Arc::new(
+            ShmRing::create(&ShmRingOptions {
+                capacity: 100_000,
+                spec: FrameSpec { obs_dim: 3, act_dim: 1 },
+                shm_name: None,
+            })
+            .unwrap(),
+        );
+        let hub = Arc::new(MetricsHub::new());
+        let mut cfg = TrainConfig::default();
+        cfg.env = "pendulum".into();
+        cfg.start_steps = 0; // use the policy as soon as it arrives
+        cfg.reload_every = 1; // poll the bus every tick
+        let bus = mem_bus(layout.actor_size);
+        let pool = SamplerPool::spawn(
+            &cfg,
+            &layout,
+            ring.clone() as Arc<dyn ExpSink>,
+            hub.clone(),
+            &bus,
+            2,
+            2,
+        )
+        .unwrap();
+        let actor = vec![0.05f32; layout.actor_size];
+        bus.publish(&actor).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        while hub.weight_fetches.count() < 2 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        pool.shutdown();
+        assert!(
+            hub.weight_fetches.count() >= 2,
+            "both workers should fetch the published version, got {}",
+            hub.weight_fetches.count()
+        );
+        assert!(hub.sampled.count() > 0, "workers stopped sampling");
     }
 
     /// THE batched/scalar contract: with K = 1 and a fixed seed, the batched
@@ -326,13 +393,12 @@ mod tests {
         cfg.seed = 42;
         cfg.start_steps = u64::MAX; // always uniform-random actions
         cfg.envs_per_worker = 1;
-        let dir = std::env::temp_dir().join(format!("spreeze-k1-test-{}", std::process::id()));
         let pool = SamplerPool::spawn(
             &cfg,
             &layout,
             ring.clone() as Arc<dyn ExpSink>,
             hub.clone(),
-            dir.join("policy.bin"),
+            &mem_bus(layout.actor_size),
             1,
             1,
         )

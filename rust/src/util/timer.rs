@@ -59,6 +59,18 @@ pub fn interval_rate(prev: (u64, f64), now: (u64, f64)) -> f64 {
     }
 }
 
+/// Mean seconds per event between two RateMeter snapshots — the "cycle"
+/// form of [`interval_rate`] (e.g. the weight-transfer cycle). 0 when no
+/// events occurred in the interval.
+pub fn interval_cycle(prev: (u64, f64), now: (u64, f64)) -> f64 {
+    let events = now.0 - prev.0;
+    if events == 0 {
+        0.0
+    } else {
+        (now.1 - prev.1) / events as f64
+    }
+}
+
 /// Exponentially-weighted moving average (single-threaded use).
 #[derive(Clone, Copy, Debug)]
 pub struct Ewma {
@@ -176,5 +188,12 @@ mod tests {
     #[test]
     fn interval_rate_math() {
         assert_eq!(interval_rate((0, 0.0), (100, 2.0)), 50.0);
+    }
+
+    #[test]
+    fn interval_cycle_math() {
+        assert_eq!(interval_cycle((0, 0.0), (4, 2.0)), 0.5);
+        // no events in the window -> no cycle, not a division by zero
+        assert_eq!(interval_cycle((7, 1.0), (7, 3.0)), 0.0);
     }
 }

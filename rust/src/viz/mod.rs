@@ -11,9 +11,10 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::bus::{PolicyPub, PolicySub};
 use crate::config::TrainConfig;
 use crate::env::registry::make_env;
-use crate::nn::{checkpoint, GaussianPolicy, Layout};
+use crate::nn::{GaussianPolicy, Layout};
 use crate::util::rng::Rng;
 
 pub struct VizWorker {
@@ -25,17 +26,23 @@ impl VizWorker {
     pub fn spawn(
         cfg: &TrainConfig,
         layout: &Layout,
-        policy_path: PathBuf,
+        bus: &Arc<dyn PolicyPub>,
         out_dir: PathBuf,
     ) -> Result<VizWorker> {
         let stop = Arc::new(AtomicBool::new(false));
         let (cfg, layout, stop2) = (cfg.clone(), layout.clone(), stop.clone());
+        let mut sub = bus.subscribe();
         let handle = std::thread::Builder::new().name("viz".into()).spawn(move || {
-            if let Err(e) = viz_loop(&cfg, &layout, &policy_path, &out_dir, &stop2) {
+            if let Err(e) = viz_loop(&cfg, &layout, sub.as_mut(), &out_dir, &stop2) {
                 eprintln!("viz worker: {e:#}");
             }
         })?;
         Ok(VizWorker { stop, handle: Some(handle) })
+    }
+
+    /// Signal the worker to stop without joining (`Service` split lifecycle).
+    pub fn signal_stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
     }
 
     pub fn shutdown(mut self) {
@@ -49,7 +56,7 @@ impl VizWorker {
 fn viz_loop(
     cfg: &TrainConfig,
     layout: &Layout,
-    policy_path: &PathBuf,
+    sub: &mut dyn PolicySub,
     out_dir: &PathBuf,
     stop: &AtomicBool,
 ) -> Result<()> {
@@ -65,9 +72,8 @@ fn viz_loop(
     let mut episode = 0u64;
 
     while !stop.load(Ordering::Relaxed) {
-        if let Some((ver, flat)) = checkpoint::load_policy(policy_path, version)? {
+        if let Some(ver) = sub.poll(&mut actor)? {
             version = ver;
-            actor.copy_from_slice(&flat);
         }
         if version == 0 {
             std::thread::sleep(std::time::Duration::from_millis(100));

@@ -38,9 +38,18 @@ fn pendulum_trains_end_to_end_within_budget() {
     );
     assert!(s.update_hz > 0.0, "update rate never measured");
     assert_eq!(s.batch_size, 64);
+    // weight-bus accounting: the default shm transport published versions
+    // and measured a finite transfer cycle + staleness fraction
+    assert!(s.weight_cycle_s >= 0.0 && s.weight_cycle_s.is_finite());
+    assert!((0.0..=1.0).contains(&s.policy_staleness), "staleness {}", s.policy_staleness);
     // run artifacts written
     assert!(run_dir.join("curve.csv").exists());
     assert!(run_dir.join("metrics.csv").exists());
     assert!(run_dir.join("summary.json").exists());
+    // the checkpoint file still exists as a write-only persistence sink
+    assert!(
+        run_dir.join("ckpt").join("policy.bin").exists(),
+        "shm mode must still persist a crash-recovery checkpoint"
+    );
     let _ = std::fs::remove_dir_all(run_dir);
 }

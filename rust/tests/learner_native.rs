@@ -138,6 +138,37 @@ fn model_parallel_round_runs_natively() {
     assert_eq!(mp.full_params().len(), mp.layout.param_size);
 }
 
+/// BS adaptation under dual-executor mode (ROADMAP follow-up): switching
+/// respawns both executors at the new batch size while every half of the
+/// parameter/optimizer state carries over, and updates keep running.
+#[test]
+fn model_parallel_switch_batch_size_preserves_state() {
+    let manifest = native_manifest();
+    let cfg = cfg("pendulum", Algo::Sac);
+    let source = filled_source(&manifest, "pendulum", 4096);
+    let hub = Arc::new(MetricsHub::new());
+    let mut mp = ModelParallelLearner::new(&cfg, &manifest, 64, source, hub).unwrap();
+    assert!(mp.try_update().unwrap());
+    let a = mp.actor_params.clone();
+    let c = mp.critic_params.clone();
+    let t = mp.targets.clone();
+    let step = mp.step;
+
+    mp.switch_batch_size(&manifest, 128).unwrap();
+    assert_eq!(mp.batch_size(), 128);
+    assert_eq!(mp.actor_params, a, "actor half carries over the BS switch");
+    assert_eq!(mp.critic_params, c, "critic half carries over the BS switch");
+    assert_eq!(mp.targets, t);
+    assert_eq!(mp.step, step);
+    // same-size switch is a no-op
+    mp.switch_batch_size(&manifest, 128).unwrap();
+    assert_eq!(mp.batch_size(), 128);
+    // and the dual-executor round still runs at the new batch size
+    assert!(mp.try_update().unwrap());
+    assert!(mp.actor_params != a);
+    assert!(mp.last_metrics.iter().all(|x| x.is_finite()));
+}
+
 #[test]
 fn hyper_vec_passes_explicit_zero_target_entropy() {
     let mut c = presets::preset("walker");
