@@ -11,7 +11,7 @@ use spreeze::env::registry::make_env;
 use spreeze::env::vec::VecEnv;
 use spreeze::env::{Env, StepOut};
 use spreeze::nn::layout::{Layout, Segment};
-use spreeze::nn::GaussianPolicy;
+use spreeze::nn::{ops, GaussianPolicy, Mlp};
 use spreeze::replay::{ExpSink, FrameSpec, ShmRing, ShmRingOptions};
 use spreeze::runtime::{default_artifacts_dir, Manifest};
 use spreeze::util::bench::Bench;
@@ -123,6 +123,52 @@ fn scalar_vs_batched(b: &Bench) {
     );
 }
 
+/// Before/after rows for the shared kernel layer under sampler inference:
+/// the seed's naive per-layer loops vs `Mlp::forward_batch` on `nn::ops`,
+/// at a small (in-worker) and a large (eval-sweep-sized) batch.
+fn forward_kernels(b: &Bench) {
+    println!("\n-- batched actor forward: naive seed loops vs nn::ops (pendulum, hidden 64)");
+    let lay = pendulum_layout();
+    let mut rng = Rng::new(13);
+    let (params, _) = lay.init_params(&mut rng);
+    let actor = &params[..lay.actor_size];
+    let seg = |name: &str| lay.actor_segments.iter().find(|s| s.name == name).unwrap();
+    let layer = |wn: &str, bn: &str| {
+        let (w, bseg) = (seg(wn), seg(bn));
+        (
+            &actor[w.offset..w.offset + w.shape[0] * w.shape[1]],
+            &actor[bseg.offset..bseg.offset + bseg.shape[0]],
+            w.shape[0],
+            w.shape[1],
+        )
+    };
+    let (w0, b0, i0, h) = layer("actor/w0", "actor/b0");
+    let (w1, b1, _, _) = layer("actor/w1", "actor/b1");
+    let (w2, b2, _, outd) = layer("actor/w2", "actor/b2");
+    for n in [16usize, 256] {
+        let mut xs = vec![0.0f32; n * i0];
+        rng.fill_normal(&mut xs);
+        let mut h0 = vec![0.0f32; n * h];
+        let mut h1 = vec![0.0f32; n * h];
+        let mut y = vec![0.0f32; n * outd];
+        let naive = b.run(&format!("forward_batch/naive K={n}"), Some(n as f64), || {
+            ops::naive::gemm_nn_bias_act(&xs, w0, Some(b0), n, i0, h, &mut h0, true);
+            ops::naive::gemm_nn_bias_act(&h0, w1, Some(b1), n, h, h, &mut h1, true);
+            ops::naive::gemm_nn_bias_act(&h1, w2, Some(b2), n, h, outd, &mut y, false);
+        });
+        naive.print();
+        let mut mlp = Mlp::actor(&lay).unwrap();
+        let tiled = b.run(&format!("forward_batch/ops   K={n}"), Some(n as f64), || {
+            mlp.forward_batch(actor, &xs, n);
+        });
+        tiled.print();
+        println!(
+            "   K={n}: ops/naive forwards-per-second: {:.2}x",
+            naive.mean_ns / tiled.mean_ns
+        );
+    }
+}
+
 /// The weight-path comparison behind `--weight-transport`: what one sampler
 /// tick pays to poll for fresh weights. The shm bus's no-new-version poll is
 /// an atomic load; the file transport's is a full `policy.bin` read — the
@@ -179,6 +225,7 @@ fn main() {
     }
 
     scalar_vs_batched(&b);
+    forward_kernels(&b);
     weight_poll_cost(&b);
 
     let manifest = Manifest::load_or_native(&default_artifacts_dir()).unwrap();

@@ -14,11 +14,71 @@ use spreeze::config::Algo;
 use spreeze::coordinator::metrics::MetricsHub;
 use spreeze::learner::model_parallel::ModelParallelLearner;
 use spreeze::learner::Learner;
+use spreeze::nn::ops;
 use spreeze::replay::shm_ring::ShmSource;
 use spreeze::replay::{FrameSpec, ShmRing, ShmRingOptions};
 use spreeze::runtime::{default_artifacts_dir, Manifest};
 use spreeze::util::bench::Bench;
 use spreeze::util::rng::Rng;
+
+/// The before/after rows for the `nn::ops` kernel layer: the seed's naive
+/// triple-loop gemm vs the tiled kernel at 1 thread vs the tiled kernel on
+/// the shared pool, at walker-critic-like shapes (k = n = 256) across small
+/// and large batch sizes. `items` = flops, so items/s reads as FLOP/s.
+fn gemm_kernels(b: &Bench, max_bs: usize) {
+    let pool1 = ops::ThreadPool::new(1);
+    let pooled = ops::global();
+    println!(
+        "\n-- nn::ops gemm kernels: naive (seed) vs tiled(1t) vs pooled({}t), k=n=256",
+        pooled.threads()
+    );
+    let (k, n) = (256usize, 256usize);
+    let mut rng = Rng::new(23);
+    for m in [64usize, 256, 2048, 8192] {
+        if m > max_bs {
+            continue;
+        }
+        let mut a = vec![0.0f32; m * k];
+        let mut w = vec![0.0f32; k * n];
+        let mut bias = vec![0.0f32; n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut w);
+        rng.fill_normal(&mut bias);
+        let mut y = vec![0.0f32; m * n];
+        let flops = Some((2 * m * k * n) as f64);
+        let naive = b.run(&format!("gemm_nn/naive/bs{m}"), flops, || {
+            ops::naive::gemm_nn_bias_act(&a, &w, Some(&bias), m, k, n, &mut y, true)
+        });
+        naive.print();
+        let tiled = b.run(&format!("gemm_nn/tiled1/bs{m}"), flops, || {
+            ops::gemm_nn_bias_act(&pool1, &a, &w, Some(&bias), m, k, n, &mut y, true)
+        });
+        tiled.print();
+        let par = b.run(&format!("gemm_nn/pooled/bs{m}"), flops, || {
+            ops::gemm_nn_bias_act(pooled, &a, &w, Some(&bias), m, k, n, &mut y, true)
+        });
+        par.print();
+        println!(
+            "   bs{m}: tiled/naive {:.2}x, pooled/naive {:.2}x",
+            naive.mean_ns / tiled.mean_ns,
+            naive.mean_ns / par.mean_ns
+        );
+        // the weight-gradient shape (xᵀ dY): reduction over the batch
+        let mut g = vec![0.0f32; k * n];
+        let naive_tn = b.run(&format!("gemm_tn/naive/bs{m}"), flops, || {
+            ops::naive::gemm_tn_acc(&a, &y, m, k, n, &mut g)
+        });
+        naive_tn.print();
+        let par_tn = b.run(&format!("gemm_tn/pooled/bs{m}"), flops, || {
+            ops::gemm_tn_acc(pooled, &a, &y, m, k, n, &mut g)
+        });
+        par_tn.print();
+        println!(
+            "   bs{m}: tn pooled/naive {:.2}x",
+            naive_tn.mean_ns / par_tn.mean_ns
+        );
+    }
+}
 
 fn filled_ring(obs_dim: usize, act_dim: usize, n: usize) -> Arc<ShmRing> {
     let spec = FrameSpec { obs_dim, act_dim };
@@ -46,7 +106,9 @@ fn main() {
     let max_bs = if smoke { 512 } else { usize::MAX };
     let b = Bench { window, ..Default::default() };
 
-    println!("== network update bench ({backend} backend) ==\n");
+    println!("== network update bench ({backend} backend) ==");
+    gemm_kernels(&b, max_bs);
+    println!();
     println!(
         "{:<30} {:>12} {:>14} {:>16}",
         "step", "ms/update", "updates/s", "update frames/s"

@@ -169,6 +169,7 @@ impl Framework for SyncFramework {
                     latest_return: topo.hub.latest_return(),
                     batch_size: topo.learner.batch_size(),
                     n_samplers: self.n_envs,
+                    services: topo.service_stats(),
                 });
                 prev_sampled = now_sampled;
                 prev_updates = now_updates;
@@ -183,6 +184,7 @@ impl Framework for SyncFramework {
 
         let wall_s = start.elapsed().as_secs_f64();
         let final_return = topo.curve.recent_mean(3).unwrap_or(f64::NAN);
+        let service_stats = topo.service_stats();
         topo.shutdown_services();
         let curve = topo.curve.points.lock().unwrap().clone();
         let tail = &snapshots[snapshots.len() / 3..];
@@ -213,6 +215,7 @@ impl Framework for SyncFramework {
             policy_staleness: 0.0,
             batch_size: topo.learner.batch_size(),
             n_samplers: self.n_envs,
+            service_stats,
             curve,
             snapshots,
         })

@@ -103,6 +103,10 @@ pub struct TrainConfig {
     /// batched ring push). 1 = the scalar hot path; presets pick 8–16.
     /// Orthogonal to the adaptation SP knob, which parks whole workers.
     pub envs_per_worker: usize,
+    /// Threads for the `nn::ops` kernel pool (tiled gemms, tower-parallel
+    /// backprop, Adam). 0 = auto (`SPREEZE_THREADS` env, else all cores).
+    /// Effective at topology build, before the first kernel runs.
+    pub ops_threads: usize,
     pub transport: Transport,
     /// Weight path from the learner to sampler/eval/viz workers.
     pub weight_transport: WeightTransport,
@@ -161,6 +165,7 @@ impl Default for TrainConfig {
             batch_size: 0,
             n_samplers: 0,
             envs_per_worker: 1,
+            ops_threads: 0,
             transport: Transport::Shm,
             weight_transport: WeightTransport::Shm,
             capacity: 1_000_000,
@@ -202,6 +207,7 @@ impl TrainConfig {
         self.batch_size = a.usize_or("bs", self.batch_size)?;
         self.n_samplers = a.usize_or("sp", self.n_samplers)?;
         self.envs_per_worker = a.usize_or("envs-per-worker", self.envs_per_worker)?.max(1);
+        self.ops_threads = a.usize_or("ops-threads", self.ops_threads)?;
         if let Some(qs) = a.str_opt("queue-size") {
             self.transport = Transport::Queue(qs.parse()?);
         }
@@ -260,6 +266,7 @@ impl TrainConfig {
             ("batch_size", num(self.batch_size as f64)),
             ("n_samplers", num(self.n_samplers as f64)),
             ("envs_per_worker", num(self.envs_per_worker as f64)),
+            ("ops_threads", num(self.ops_threads as f64)),
             (
                 "transport",
                 match self.transport {

@@ -82,8 +82,15 @@ fn fixed_to_f64(x: u64) -> f64 {
     (x as i64) as f64 / 1000.0
 }
 
-/// One periodic snapshot row — the columns of paper Tables 2–3.
-#[derive(Clone, Copy, Debug, Default)]
+/// One service's `Service::stats()` sample: (service name, [(key, value)]).
+pub type ServiceStats = (String, Vec<(&'static str, f64)>);
+
+/// One periodic snapshot row — the columns of paper Tables 2–3, plus the
+/// per-service stats rows sampled at the same instant (carried to library
+/// consumers via `RunSummary::snapshots`; the fixed-column CSV omits them,
+/// and summary.json's `services` object is the teardown-time sample in
+/// `RunSummary::service_stats`).
+#[derive(Clone, Debug, Default)]
 pub struct Snapshot {
     pub t_s: f64,
     pub cpu_usage: f64,
@@ -102,6 +109,9 @@ pub struct Snapshot {
     pub latest_return: f64,
     pub batch_size: usize,
     pub n_samplers: usize,
+    /// Per-service `stats()` rows at snapshot time (`Service` lifecycle);
+    /// not in the CSV — read them from `RunSummary::snapshots`.
+    pub services: Vec<ServiceStats>,
 }
 
 impl Snapshot {

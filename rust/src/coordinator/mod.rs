@@ -17,7 +17,7 @@ use anyhow::Result;
 
 use crate::adapt::Obs;
 use crate::config::TrainConfig;
-use crate::coordinator::metrics::Snapshot;
+use crate::coordinator::metrics::{ServiceStats, Snapshot};
 use crate::coordinator::topology::{target_reached, TopologyBuilder};
 use crate::util::sysinfo::CpuMonitor;
 use crate::util::timer::{interval_cycle, interval_rate, interval_utilization};
@@ -48,6 +48,8 @@ pub struct RunSummary {
     pub policy_staleness: f64,
     pub batch_size: usize,
     pub n_samplers: usize,
+    /// Final per-service `Service::stats()` rows (sampled before shutdown).
+    pub service_stats: Vec<ServiceStats>,
     /// Eval curve (t, return, version).
     pub curve: Vec<(f64, f64, u64)>,
     pub snapshots: Vec<Snapshot>,
@@ -159,6 +161,7 @@ impl Coordinator {
                     latest_return: topo.hub.latest_return(),
                     batch_size: topo.learner.batch_size(),
                     n_samplers: topo.active_samplers(),
+                    services: topo.service_stats(),
                 };
                 prev_sampled = now_sampled;
                 prev_updates = now_updates;
@@ -195,7 +198,7 @@ impl Coordinator {
                 && topo.learner.step() > 0
             {
                 last_adapt = Instant::now();
-                let s = *snapshots.last().unwrap();
+                let s = snapshots.last().unwrap().clone();
                 let ad = topo.adapt.as_mut().unwrap();
                 let new_sp = ad.sp.observe(Obs { usage: s.cpu_usage, throughput: s.sampling_hz });
                 if let Some(pool) = &topo.pool {
@@ -212,6 +215,7 @@ impl Coordinator {
         // --- teardown + result assembly
         let wall_s = start.elapsed().as_secs_f64();
         let final_return = topo.curve.recent_mean(3).unwrap_or(f64::NAN);
+        let service_stats = topo.service_stats();
         topo.shutdown_services();
         let curve = topo.curve.points.lock().unwrap().clone();
 
@@ -245,6 +249,7 @@ impl Coordinator {
             policy_staleness: mean(&|s| s.staleness),
             batch_size: topo.learner.batch_size(),
             n_samplers: pool_active_final(&snapshots),
+            service_stats,
             curve,
             snapshots,
         };
@@ -291,6 +296,15 @@ impl Coordinator {
             ("policy_staleness", num(s.policy_staleness)),
             ("batch_size", num(s.batch_size as f64)),
             ("n_samplers", num(s.n_samplers as f64)),
+            (
+                "services",
+                obj(s.service_stats
+                    .iter()
+                    .map(|(name, kvs)| {
+                        (name.as_str(), obj(kvs.iter().map(|(k, v)| (*k, num(*v))).collect()))
+                    })
+                    .collect()),
+            ),
             ("config", self.cfg.to_json()),
         ]);
         std::fs::write(run_dir.join("summary.json"), j.to_string())?;

@@ -17,7 +17,7 @@ use anyhow::{Context, Result};
 use crate::adapt::Adaptation;
 use crate::bus::{make_bus, PolicyPub};
 use crate::config::{TrainConfig, Transport};
-use crate::coordinator::metrics::MetricsHub;
+use crate::coordinator::metrics::{MetricsHub, ServiceStats};
 use crate::env::registry::make_env;
 use crate::eval::{EvalCurve, EvalWorker};
 use crate::learner::model_parallel::ModelParallelLearner;
@@ -215,6 +215,11 @@ impl TopologyBuilder {
 
     pub fn build(self) -> Result<Topology> {
         let cfg = self.cfg;
+        // size the shared kernel pool before anything runs a kernel
+        // (SPREEZE_THREADS in the environment still wins over the config)
+        if cfg.ops_threads > 0 {
+            crate::nn::ops::configure_threads(cfg.ops_threads);
+        }
         let artifacts_dir = if cfg.artifacts_dir == "artifacts" {
             default_artifacts_dir()
         } else {
@@ -222,7 +227,11 @@ impl TopologyBuilder {
         };
         let manifest = Manifest::load_or_native(&artifacts_dir)?;
         if cfg.verbose && manifest.native {
-            println!("backend: native CPU executor (no artifacts manifest)");
+            println!(
+                "backend: native CPU executor (no artifacts manifest), \
+                 nn::ops pool: {} threads",
+                crate::nn::ops::global().threads()
+            );
         }
         let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();
         // fail fast if Rust env dims drifted from the python presets
@@ -421,6 +430,24 @@ impl Topology {
     /// Active sampler workers (0 when the pool was not spawned).
     pub fn active_samplers(&self) -> usize {
         self.pool.as_ref().map(|p| p.active()).unwrap_or(0)
+    }
+
+    /// Per-service `Service::stats()` samples for every live service, as
+    /// `(service_name, [(key, value)])` rows — surfaced in each `Snapshot`
+    /// and in `summary.json` (the PR-3 follow-up).
+    pub fn service_stats(&self) -> Vec<ServiceStats> {
+        let mut rows = Vec::new();
+        let mut push = |s: &dyn Service| rows.push((s.service_name().to_string(), s.stats()));
+        if let Some(p) = &self.pool {
+            push(p);
+        }
+        if let Some(e) = &self.eval {
+            push(e);
+        }
+        if let Some(v) = &self.viz {
+            push(v);
+        }
+        rows
     }
 
     /// Stop and join every service: stop signals go out to all services

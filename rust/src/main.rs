@@ -143,6 +143,7 @@ COMMANDS
              --env pendulum|walker|cheetah|ant|humanoid|humanoid_flagrun
              --algo sac|td3  --bs N (0=adapt)  --sp N (0=adapt)
              --envs-per-worker K (batched sampler: K envs per worker)
+             --ops-threads N (nn::ops kernel pool width; 0 = auto)
              --queue-size N (queue transport instead of shared memory)
              --weight-transport shm|file (policy weight path; default shm)
              --model-parallel true  --gpus N  --gpu-throttle F

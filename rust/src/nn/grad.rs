@@ -1,20 +1,24 @@
-//! Backward pass + optimizer kernels for the native update backend.
+//! Backward pass for the native update backend.
 //!
 //! [`MlpGrad`] is the training-side sibling of [`crate::nn::Mlp`]: the same
 //! 3-layer ReLU MLP read out of a flat parameter slice, but `forward` caches
 //! activations so `backward` can accumulate weight gradients into a flat
 //! gradient vector (same segment offsets) and/or propagate input gradients.
-//! [`adam_step`] and [`polyak`] mirror `python/compile/kernels/ref.py`
-//! (`adam_update` / `polyak`) so native updates and the AOT artifacts agree
-//! on optimizer numerics.
+//!
+//! Every matrix kernel lives in the shared layer ([`crate::nn::ops`]): the
+//! forward is one fused bias+ReLU gemm per layer, the backward is one
+//! `gemm_tn_acc` (weight grad), one `colsum_acc` (bias grad) and one
+//! `gemm_nt` with the ReLU gradient mask fused as its epilogue per layer.
+//! The optimizer kernels ([`adam_step`] / [`polyak`], re-exported from
+//! `ops`) mirror `python/compile/kernels/ref.py` (`adam_update` /
+//! `polyak`) so native updates and the AOT artifacts agree on numerics.
 
 use anyhow::{Context, Result};
 
 use crate::nn::layout::Segment;
+use crate::nn::ops;
 
-pub const ADAM_BETA1: f32 = 0.9;
-pub const ADAM_BETA2: f32 = 0.999;
-pub const ADAM_EPS: f32 = 1e-8;
+pub use crate::nn::ops::{adam_step, polyak, ADAM_BETA1, ADAM_BETA2, ADAM_EPS};
 
 /// One dense layer's placement inside a flat parameter slice.
 #[derive(Clone, Copy, Debug)]
@@ -23,67 +27,6 @@ pub struct DenseDef {
     pub b_off: usize,
     pub in_dim: usize,
     pub out_dim: usize,
-}
-
-/// out[m,n] = a[m,k] @ b[k,n]
-fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    out[..m * n].fill(0.0);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (l, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue; // ReLU sparsity
-            }
-            let brow = &b[l * n..(l + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// out[m,n] += a[bdim,m]^T @ b[bdim,n] — weight-gradient shape (x^T dY).
-fn gemm_tn_acc(a: &[f32], b: &[f32], bdim: usize, m: usize, n: usize, out: &mut [f32]) {
-    for r in 0..bdim {
-        let arow = &a[r * m..(r + 1) * m];
-        let brow = &b[r * n..(r + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// out[m,k] = a[m,n] @ b[k,n]^T — input-gradient shape (dY W^T).
-fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let orow = &mut out[i * k..(i + 1) * k];
-        for (l, o) in orow.iter_mut().enumerate() {
-            let brow = &b[l * n..(l + 1) * n];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            *o = acc;
-        }
-    }
-}
-
-/// out[n] += column sums of a[bdim,n] — bias gradient.
-fn colsum_acc(a: &[f32], bdim: usize, n: usize, out: &mut [f32]) {
-    for r in 0..bdim {
-        let arow = &a[r * n..(r + 1) * n];
-        for (o, &av) in out.iter_mut().zip(arow) {
-            *o += av;
-        }
-    }
 }
 
 /// 3-layer ReLU MLP (in → h → h → out, linear head) with cached activations
@@ -145,17 +88,22 @@ impl MlpGrad {
     /// [`MlpGrad::backward`]. Returns the `[n, out_dim]` output slice
     /// (valid until the next forward).
     pub fn forward(&mut self, flat: &[f32], xs: &[f32], n: usize) -> &[f32] {
-        let (ind, h) = (self.layers[0].in_dim, self.layers[0].out_dim);
-        let outd = self.layers[2].out_dim;
+        let [l0, l1, l2] = self.layers;
+        let (ind, h) = (l0.in_dim, l0.out_dim);
+        let outd = l2.out_dim;
         debug_assert_eq!(xs.len(), n * ind);
+        let pool = ops::global();
         self.x.clear();
         self.x.extend_from_slice(xs);
-        self.h0.resize(n * h, 0.0);
-        self.h1.resize(n * h, 0.0);
-        self.out.resize(n * outd, 0.0);
-        dense_fwd(flat, &self.layers[0], xs, n, &mut self.h0, true);
-        dense_fwd(flat, &self.layers[1], &self.h0, n, &mut self.h1, true);
-        dense_fwd(flat, &self.layers[2], &self.h1, n, &mut self.out, false);
+        let h0 = ops::grown(&mut self.h0, n * h);
+        let (w, b) = (wslice(flat, &l0), bslice(flat, &l0));
+        ops::gemm_nn_bias_act(pool, xs, w, Some(b), n, ind, h, h0, true);
+        let h1 = ops::grown(&mut self.h1, n * h);
+        let (w, b) = (wslice(flat, &l1), bslice(flat, &l1));
+        ops::gemm_nn_bias_act(pool, h0, w, Some(b), n, h, h, h1, true);
+        let out = ops::grown(&mut self.out, n * outd);
+        let (w, b) = (wslice(flat, &l2), bslice(flat, &l2));
+        ops::gemm_nn_bias_act(pool, h1, w, Some(b), n, h, outd, out, false);
         &self.out[..n * outd]
     }
 
@@ -172,94 +120,109 @@ impl MlpGrad {
         mut gflat: Option<&mut [f32]>,
         dx: Option<&mut [f32]>,
     ) {
-        let h = self.layers[0].out_dim;
-        debug_assert_eq!(dy.len(), n * self.layers[2].out_dim);
-        self.d1.resize(n * h, 0.0);
-        self.d0.resize(n * h, 0.0);
+        let [l0, l1, l2] = self.layers;
+        let h = l0.out_dim;
+        debug_assert_eq!(dy.len(), n * l2.out_dim);
+        let pool = ops::global();
+        ops::grown(&mut self.d1, n * h);
+        ops::grown(&mut self.d0, n * h);
 
         // layer 2 (linear head)
-        let l2 = self.layers[2];
         if let Some(g) = gflat.as_deref_mut() {
-            let w = &mut g[l2.w_off..l2.w_off + l2.in_dim * l2.out_dim];
-            gemm_tn_acc(&self.h1, dy, n, l2.in_dim, l2.out_dim, w);
-            colsum_acc(dy, n, l2.out_dim, &mut g[l2.b_off..l2.b_off + l2.out_dim]);
+            ops::gemm_tn_acc(
+                pool,
+                &self.h1[..n * h],
+                dy,
+                n,
+                l2.in_dim,
+                l2.out_dim,
+                &mut g[l2.w_off..l2.w_off + l2.in_dim * l2.out_dim],
+            );
+            ops::colsum_acc(dy, n, l2.out_dim, &mut g[l2.b_off..l2.b_off + l2.out_dim]);
         }
-        let w2 = &flat[l2.w_off..l2.w_off + l2.in_dim * l2.out_dim];
-        gemm_nt(dy, w2, n, l2.out_dim, l2.in_dim, &mut self.d1);
-        relu_mask(&mut self.d1[..n * h], &self.h1);
+        ops::gemm_nt(
+            pool,
+            dy,
+            wslice(flat, &l2),
+            n,
+            l2.out_dim,
+            l2.in_dim,
+            &mut self.d1[..n * h],
+            Some(&self.h1[..n * h]),
+        );
 
         // layer 1
-        let l1 = self.layers[1];
         if let Some(g) = gflat.as_deref_mut() {
-            let w = &mut g[l1.w_off..l1.w_off + l1.in_dim * l1.out_dim];
-            gemm_tn_acc(&self.h0, &self.d1, n, l1.in_dim, l1.out_dim, w);
-            colsum_acc(&self.d1, n, l1.out_dim, &mut g[l1.b_off..l1.b_off + l1.out_dim]);
+            ops::gemm_tn_acc(
+                pool,
+                &self.h0[..n * h],
+                &self.d1[..n * h],
+                n,
+                l1.in_dim,
+                l1.out_dim,
+                &mut g[l1.w_off..l1.w_off + l1.in_dim * l1.out_dim],
+            );
+            ops::colsum_acc(
+                &self.d1[..n * h],
+                n,
+                l1.out_dim,
+                &mut g[l1.b_off..l1.b_off + l1.out_dim],
+            );
         }
-        let w1 = &flat[l1.w_off..l1.w_off + l1.in_dim * l1.out_dim];
-        gemm_nt(&self.d1, w1, n, l1.out_dim, l1.in_dim, &mut self.d0);
-        relu_mask(&mut self.d0[..n * h], &self.h0);
+        ops::gemm_nt(
+            pool,
+            &self.d1[..n * h],
+            wslice(flat, &l1),
+            n,
+            l1.out_dim,
+            l1.in_dim,
+            &mut self.d0[..n * h],
+            Some(&self.h0[..n * h]),
+        );
 
         // layer 0
-        let l0 = self.layers[0];
         if let Some(g) = gflat.as_deref_mut() {
-            let w = &mut g[l0.w_off..l0.w_off + l0.in_dim * l0.out_dim];
-            gemm_tn_acc(&self.x, &self.d0, n, l0.in_dim, l0.out_dim, w);
-            colsum_acc(&self.d0, n, l0.out_dim, &mut g[l0.b_off..l0.b_off + l0.out_dim]);
+            ops::gemm_tn_acc(
+                pool,
+                &self.x,
+                &self.d0[..n * h],
+                n,
+                l0.in_dim,
+                l0.out_dim,
+                &mut g[l0.w_off..l0.w_off + l0.in_dim * l0.out_dim],
+            );
+            ops::colsum_acc(
+                &self.d0[..n * h],
+                n,
+                l0.out_dim,
+                &mut g[l0.b_off..l0.b_off + l0.out_dim],
+            );
         }
         if let Some(dx) = dx {
-            let w0 = &flat[l0.w_off..l0.w_off + l0.in_dim * l0.out_dim];
-            gemm_nt(&self.d0, w0, n, l0.out_dim, l0.in_dim, dx);
+            ops::gemm_nt(
+                pool,
+                &self.d0[..n * h],
+                wslice(flat, &l0),
+                n,
+                l0.out_dim,
+                l0.in_dim,
+                dx,
+                None,
+            );
         }
     }
 }
 
-/// dH *= (H > 0) — ReLU gradient through the cached post-activation
-/// (gradient at exactly 0 is taken as 0, matching `jnp.maximum(x, 0)` up to
-/// the measure-zero tie).
-fn relu_mask(dh: &mut [f32], h: &[f32]) {
-    for (d, &hv) in dh.iter_mut().zip(h) {
-        if hv <= 0.0 {
-            *d = 0.0;
-        }
-    }
+/// Weight view of one layer inside a flat parameter slice.
+#[inline]
+fn wslice<'a>(flat: &'a [f32], l: &DenseDef) -> &'a [f32] {
+    &flat[l.w_off..l.w_off + l.in_dim * l.out_dim]
 }
 
-/// y = act(x @ W + b) for one layer out of a flat parameter slice.
-fn dense_fwd(flat: &[f32], l: &DenseDef, x: &[f32], n: usize, y: &mut [f32], relu: bool) {
-    let w = &flat[l.w_off..l.w_off + l.in_dim * l.out_dim];
-    let b = &flat[l.b_off..l.b_off + l.out_dim];
-    gemm_nn(x, w, n, l.in_dim, l.out_dim, y);
-    for r in 0..n {
-        let row = &mut y[r * l.out_dim..(r + 1) * l.out_dim];
-        for (v, &bv) in row.iter_mut().zip(b) {
-            *v += bv;
-            if relu {
-                *v = v.max(0.0);
-            }
-        }
-    }
-}
-
-/// Standard Adam with bias correction at integer step `t >= 1`, in place —
-/// mirrors `ref.py::adam_update` (m̂/(√v̂ + eps), eps outside the sqrt).
-pub fn adam_step(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32, t: f32) {
-    let c1 = 1.0 / (1.0 - ADAM_BETA1.powf(t));
-    let c2 = 1.0 / (1.0 - ADAM_BETA2.powf(t));
-    for i in 0..p.len() {
-        let gi = g[i];
-        let m2 = ADAM_BETA1 * m[i] + (1.0 - ADAM_BETA1) * gi;
-        let v2 = ADAM_BETA2 * v[i] + (1.0 - ADAM_BETA2) * gi * gi;
-        m[i] = m2;
-        v[i] = v2;
-        p[i] -= lr * (m2 * c1) / ((v2 * c2).sqrt() + ADAM_EPS);
-    }
-}
-
-/// Soft target update t' = tau * p + (1 - tau) * t, in place on `t`.
-pub fn polyak(p: &[f32], t: &mut [f32], tau: f32) {
-    for (ti, &pi) in t.iter_mut().zip(p) {
-        *ti = tau * pi + (1.0 - tau) * *ti;
-    }
+/// Bias view of one layer inside a flat parameter slice.
+#[inline]
+fn bslice<'a>(flat: &'a [f32], l: &DenseDef) -> &'a [f32] {
+    &flat[l.b_off..l.b_off + l.out_dim]
 }
 
 #[cfg(test)]
@@ -372,8 +335,9 @@ mod tests {
 
     #[test]
     fn forward_matches_inference_mlp() {
-        // MlpGrad::forward must agree with the sampler-side Mlp on the same
-        // flat actor vector (the two forward implementations stay in sync).
+        // MlpGrad::forward and the sampler-side Mlp now share the exact
+        // same ops kernels, so on the same flat actor vector they must
+        // agree bitwise — not just to tolerance.
         let lay = crate::nn::layout::Layout::build_native("pendulum", "sac", 3, 1, 8, 64).unwrap();
         let mut rng = Rng::new(3);
         let (params, _) = lay.init_params(&mut rng);
@@ -384,9 +348,7 @@ mod tests {
         rng.fill_normal(&mut xs);
         let ya = a.forward_batch(&params[..lay.actor_size], &xs, n).to_vec();
         let yb = b.forward(&params[..lay.actor_size], &xs, n);
-        for (i, (&u, &v)) in ya.iter().zip(yb).enumerate() {
-            assert!((u - v).abs() < 1e-5, "out {i}: {u} vs {v}");
-        }
+        assert_eq!(&ya[..], yb, "shared-kernel forwards diverged");
     }
 
     #[test]

@@ -8,8 +8,15 @@
 //! processes. Numerics match `python/compile/model.py::policy_act` (same
 //! clipping, same tanh-gaussian head) — asserted against the `policy_act`
 //! artifact in `rust/tests/integration.rs`.
+//!
+//! The dense layers run on the shared kernel layer ([`crate::nn::ops`]):
+//! one fused bias+ReLU gemm per layer, bitwise identical whether the
+//! kernel tiles, packs, or row-partitions across the ops thread pool —
+//! which is why `forward` is literally `forward_batch` at n = 1 and the
+//! K = 1 sampler stream stays frame-for-frame reproducible.
 
 use crate::nn::layout::Layout;
+use crate::nn::ops;
 use crate::util::rng::Rng;
 
 pub const LOG_STD_MIN: f32 = -5.0;
@@ -25,98 +32,22 @@ struct Dense {
 }
 
 /// MLP with two ReLU hidden layers and a linear head, evaluated out of a
-/// flat parameter slice. Scratch buffers are owned and grown on demand for
-/// batched calls, so `forward` / `forward_batch` are allocation-free at
-/// steady state.
+/// flat parameter slice through the shared [`ops`] kernels. Activations
+/// live in a reusable [`ops::Scratch`] arena grown on demand, so `forward`
+/// / `forward_batch` are allocation-free at steady state.
 #[derive(Clone, Debug)]
 pub struct Mlp {
     layers: [Dense; 3],
-    h0: Vec<f32>,
-    h1: Vec<f32>,
-    out: Vec<f32>,
+    scr: ops::Scratch,
 }
 
-/// y = x @ W + b (W row-major (in,out)), optionally ReLU'd.
+/// (weights, bias) views of one layer inside the flat parameter slice.
 #[inline]
-fn dense(flat: &[f32], layer: &Dense, x: &[f32], y: &mut [f32], relu: bool) {
-    let w = &flat[layer.w_off..layer.w_off + layer.in_dim * layer.out_dim];
-    let b = &flat[layer.b_off..layer.b_off + layer.out_dim];
-    let y = &mut y[..layer.out_dim];
-    y.copy_from_slice(b);
-    for (i, &xi) in x[..layer.in_dim].iter().enumerate() {
-        if xi == 0.0 {
-            continue; // ReLU sparsity: skip dead rows
-        }
-        let row = &w[i * layer.out_dim..(i + 1) * layer.out_dim];
-        for (yj, &wij) in y.iter_mut().zip(row) {
-            *yj += xi * wij;
-        }
-    }
-    if relu {
-        for v in y.iter_mut() {
-            *v = v.max(0.0);
-        }
-    }
-}
-
-/// Batched y = x @ W + b over `n` row-major samples (matrix-matrix).
-///
-/// Accumulation order per output element is ascending over the input index,
-/// exactly like the scalar [`dense`], so results match `forward` per row
-/// (bitwise up to the sign of zero). Rows are processed in tiles of 4 so
-/// each weight row is loaded once per 4 samples — the cache/ILP win the
-/// per-frame scalar kernel cannot get.
-fn dense_batch(flat: &[f32], layer: &Dense, xs: &[f32], n: usize, ys: &mut [f32], relu: bool) {
-    let (ind, outd) = (layer.in_dim, layer.out_dim);
-    let w = &flat[layer.w_off..layer.w_off + ind * outd];
-    let b = &flat[layer.b_off..layer.b_off + outd];
-    for r in 0..n {
-        ys[r * outd..(r + 1) * outd].copy_from_slice(b);
-    }
-    let mut r = 0;
-    while r + 4 <= n {
-        let tile = &mut ys[r * outd..(r + 4) * outd];
-        let (y0, t) = tile.split_at_mut(outd);
-        let (y1, t) = t.split_at_mut(outd);
-        let (y2, y3) = t.split_at_mut(outd);
-        for i in 0..ind {
-            let x0 = xs[r * ind + i];
-            let x1 = xs[(r + 1) * ind + i];
-            let x2 = xs[(r + 2) * ind + i];
-            let x3 = xs[(r + 3) * ind + i];
-            if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
-                continue; // ReLU sparsity: whole tile dead on this input
-            }
-            let row = &w[i * outd..(i + 1) * outd];
-            for j in 0..outd {
-                let wij = row[j];
-                y0[j] += x0 * wij;
-                y1[j] += x1 * wij;
-                y2[j] += x2 * wij;
-                y3[j] += x3 * wij;
-            }
-        }
-        r += 4;
-    }
-    // remainder rows: the scalar kernel verbatim
-    while r < n {
-        let y = &mut ys[r * outd..(r + 1) * outd];
-        for (i, &xi) in xs[r * ind..(r + 1) * ind].iter().enumerate() {
-            if xi == 0.0 {
-                continue;
-            }
-            let row = &w[i * outd..(i + 1) * outd];
-            for (yj, &wij) in y.iter_mut().zip(row) {
-                *yj += xi * wij;
-            }
-        }
-        r += 1;
-    }
-    if relu {
-        for v in ys[..n * outd].iter_mut() {
-            *v = v.max(0.0);
-        }
-    }
+fn wb<'a>(flat: &'a [f32], l: &Dense) -> (&'a [f32], &'a [f32]) {
+    (
+        &flat[l.w_off..l.w_off + l.in_dim * l.out_dim],
+        &flat[l.b_off..l.b_off + l.out_dim],
+    )
 }
 
 impl Mlp {
@@ -133,38 +64,37 @@ impl Mlp {
         }
         let layers: [Dense; 3] =
             layers.try_into().map_err(|_| anyhow::anyhow!("actor MLP must have 3 layers"))?;
-        let h = layout.hidden;
-        Ok(Mlp { layers, h0: vec![0.0; h], h1: vec![0.0; h], out: vec![0.0; layout.actor_out()] })
+        Ok(Mlp { layers, scr: ops::Scratch::new() })
     }
 
     /// Forward pass; returns the output slice (valid until next call).
-    /// `flat` is the actor parameter vector.
+    /// `flat` is the actor parameter vector. Exactly `forward_batch` at
+    /// n = 1 — same kernel, same accumulation order, same bits.
     pub fn forward(&mut self, flat: &[f32], x: &[f32]) -> &[f32] {
-        debug_assert_eq!(x.len(), self.layers[0].in_dim);
-        dense(flat, &self.layers[0], x, &mut self.h0, true);
-        dense(flat, &self.layers[1], &self.h0, &mut self.h1, true);
-        dense(flat, &self.layers[2], &self.h1, &mut self.out, false);
-        &self.out[..self.layers[2].out_dim]
+        self.forward_batch(flat, x, 1)
     }
 
     /// Batched forward over `n` row-major inputs `[n, in_dim]`; returns the
     /// row-major output `[n, out_dim]` (valid until next call). Matches `n`
-    /// independent [`Mlp::forward`] calls per row to f32 exactness.
+    /// independent [`Mlp::forward`] calls per row bitwise: the [`ops`]
+    /// kernels accumulate each output element in a fixed order regardless
+    /// of batch tiling or pool width.
     pub fn forward_batch(&mut self, flat: &[f32], xs: &[f32], n: usize) -> &[f32] {
-        debug_assert_eq!(xs.len(), n * self.layers[0].in_dim);
-        let h = self.layers[0].out_dim;
-        let out_dim = self.layers[2].out_dim;
-        if self.h0.len() < n * h {
-            self.h0.resize(n * h, 0.0);
-            self.h1.resize(n * h, 0.0);
-        }
-        if self.out.len() < n * out_dim {
-            self.out.resize(n * out_dim, 0.0);
-        }
-        dense_batch(flat, &self.layers[0], xs, n, &mut self.h0, true);
-        dense_batch(flat, &self.layers[1], &self.h0, n, &mut self.h1, true);
-        dense_batch(flat, &self.layers[2], &self.h1, n, &mut self.out, false);
-        &self.out[..n * out_dim]
+        let [l0, l1, l2] = &self.layers;
+        debug_assert_eq!(xs.len(), n * l0.in_dim);
+        let pool = ops::global();
+        let h = l0.out_dim;
+        let out_dim = l2.out_dim;
+        let h0 = ops::grown(&mut self.scr.a, n * h);
+        let (w, b) = wb(flat, l0);
+        ops::gemm_nn_bias_act(pool, xs, w, Some(b), n, l0.in_dim, h, h0, true);
+        let h1 = ops::grown(&mut self.scr.b, n * h);
+        let (w, b) = wb(flat, l1);
+        ops::gemm_nn_bias_act(pool, h0, w, Some(b), n, l1.in_dim, h, h1, true);
+        let out = ops::grown(&mut self.scr.c, n * out_dim);
+        let (w, b) = wb(flat, l2);
+        ops::gemm_nn_bias_act(pool, h1, w, Some(b), n, l2.in_dim, out_dim, out, false);
+        &self.scr.c[..n * out_dim]
     }
 }
 

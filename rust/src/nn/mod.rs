@@ -1,15 +1,17 @@
 //! Native neural-network support: flat parameter layout (mirroring
-//! `python/compile/layout.py` via the manifest or built natively), an MLP
-//! forward pass for sampler-side policy inference, backward/Adam/Polyak
-//! kernels for the native update backend, and SSD checkpoint transmission
-//! (paper §3.3.1).
+//! `python/compile/layout.py` via the manifest or built natively), the
+//! shared tiled/parallel kernel layer ([`ops`]), an MLP forward pass for
+//! sampler-side policy inference, backward/Adam/Polyak kernels for the
+//! native update backend, and SSD checkpoint transmission (paper §3.3.1).
 
 pub mod checkpoint;
 pub mod grad;
 pub mod layout;
 pub mod mlp;
+pub mod ops;
 
 pub use checkpoint::{load_policy, save_policy, CheckpointStore};
 pub use grad::{adam_step, polyak, MlpGrad};
 pub use layout::{Layout, Segment};
 pub use mlp::{GaussianPolicy, Mlp};
+pub use ops::ThreadPool;

@@ -1,0 +1,1024 @@
+//! `nn::ops` — the shared tiled/parallel kernel layer under every matrix
+//! hot path in the framework.
+//!
+//! Before this module existed the same triple-loop gemms lived three times:
+//! in `nn::mlp` (sampler/eval inference), in `nn::grad` (backprop), and
+//! implicitly in `runtime::native` (which composed the former two). All
+//! matrix kernels now live here, in three shapes:
+//!
+//! * [`gemm_nn_bias_act`] — `out[m,n] = act(a[m,k] @ b[k,n] + bias)`, the
+//!   forward dense layer with the bias+activation epilogue fused into the
+//!   kernel (no second pass over `out`);
+//! * [`gemm_nt`] — `out[m,kk] = a[m,n] @ b[kk,n]ᵀ`, the input-gradient
+//!   shape, with the ReLU gradient mask fused as an epilogue;
+//! * [`gemm_tn_acc`] — `out[m,n] += a[bdim,m]ᵀ @ b[bdim,n]`, the
+//!   weight-gradient shape (accumulating, caller zeroes per step).
+//!
+//! **Determinism invariant.** Every kernel accumulates each output element
+//! in a fixed order (strictly ascending reduction index, bias first), and
+//! the thread pool only ever partitions *output rows* — so the tiled,
+//! packed, and pooled paths are all **bitwise identical** to the naive
+//! reference loops in [`naive`] (up to the sign of zero, as with the
+//! historical batched kernel), at any thread count. That is what lets the
+//! K=1 sampler-stream test, the FD gradient checks, and the split-vs-full
+//! step equivalence keep passing unchanged while the kernels underneath get
+//! blocked and parallelized.
+//!
+//! **Threading.** [`ThreadPool`] is a tiny std-only pool (no rayon): one
+//! job slot, workers parked on a condvar, parts claimed with an atomic
+//! counter. A second submitter (another sampler worker, the dual
+//! executors) finds the slot busy and simply runs serially — kernels never
+//! queue behind each other, and nested submissions (tower-level parallelism
+//! in `runtime::native` wrapping row-parallel gemms) degrade to serial
+//! inner loops instead of deadlocking. The global pool is sized from
+//! `SPREEZE_THREADS`, else [`configure_threads`] (wired to
+//! `TrainConfig::ops_threads`), else `std::thread::available_parallelism`.
+//!
+//! Scratch is thread-local ([`with_pack`]) or caller-owned ([`Scratch`]):
+//! the hot path performs no per-call allocation at steady state.
+
+use std::cell::RefCell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+pub const ADAM_BETA1: f32 = 0.9;
+pub const ADAM_BETA2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Kernels below this flop count (2·m·k·n) always run on the caller's
+/// thread: the pool's wakeup latency would dominate.
+const PAR_FLOPS_MIN: usize = 1 << 17;
+/// Minimum output rows per parallel part. Also the serial gate: anything
+/// under `2 * PART_ROWS_MIN` rows runs on the caller, so sampler-sized
+/// forwards (K ≤ 63 envs per worker) never touch the pool and cannot
+/// contend with the learner for the single job slot.
+const PART_ROWS_MIN: usize = 32;
+/// Minimum element count for parallel elementwise kernels (Adam/Polyak).
+const PAR_ELEMS_MIN: usize = 1 << 15;
+/// Hard cap on pool width (available_parallelism on exotic machines).
+const MAX_THREADS: usize = 64;
+
+// --------------------------------------------------------------- thread pool
+
+/// Raw pointer to a borrowed `Fn(usize)` job closure. Only dereferenced for
+/// parts claimed while `next < nparts`, all of which complete before
+/// [`ThreadPool::run`] returns — so the erased borrow never dangles.
+#[derive(Clone, Copy)]
+struct Task(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for Task {}
+unsafe impl Sync for Task {}
+
+struct Job {
+    task: Task,
+    nparts: usize,
+    /// Next part index to claim (may overshoot `nparts`).
+    next: AtomicUsize,
+    /// Completed parts; the submitter waits for `done == nparts`.
+    done: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+struct JobSlot {
+    seq: u64,
+    job: Option<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<JobSlot>,
+    start: Condvar,
+    /// Single-submitter latch: held for the duration of one `run`; a loser
+    /// of the CAS executes its job serially instead of queueing.
+    submitting: AtomicBool,
+}
+
+/// Persistent worker pool for the kernels in this module (std-only).
+///
+/// `run(nparts, f)` executes `f(0) .. f(nparts-1)` across the caller plus
+/// the pool workers, returning once every part has finished. Parts must
+/// write disjoint data (the kernels partition output rows). Re-entrant or
+/// concurrent `run` calls execute serially on their own thread — by design,
+/// never an error or a deadlock.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    threads: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Pool that brings `threads` total execution lanes to a `run` call
+    /// (the submitting thread participates, so `threads - 1` workers spawn;
+    /// `threads <= 1` spawns nothing and every `run` is serial).
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.clamp(1, MAX_THREADS);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(JobSlot { seq: 0, job: None, shutdown: false }),
+            start: Condvar::new(),
+            submitting: AtomicBool::new(false),
+        });
+        let mut handles = Vec::new();
+        for i in 1..threads {
+            let sh = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ops-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn nn::ops worker"),
+            );
+        }
+        ThreadPool { shared, threads, handles }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(part)` for every `part in 0..nparts`, possibly in parallel.
+    /// Returns after **all** parts have completed.
+    pub fn run(&self, nparts: usize, f: &(dyn Fn(usize) + Sync)) {
+        if nparts == 0 {
+            return;
+        }
+        if self.threads <= 1
+            || nparts == 1
+            || self
+                .shared
+                .submitting
+                .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+        {
+            for p in 0..nparts {
+                f(p);
+            }
+            return;
+        }
+        // SAFETY: lifetime erasure only; see `Task`. We block below until
+        // every claimed part has executed, then release the latch.
+        let task = Task(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(f)
+        });
+        let job = Arc::new(Job {
+            task,
+            nparts,
+            next: AtomicUsize::new(0),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut g = self.shared.slot.lock().unwrap();
+            g.seq += 1;
+            g.job = Some(job.clone());
+        }
+        // bounded wake: a 3-part tower job on a wide pool must not stampede
+        // every parked worker (non-parked workers re-check seq on their own)
+        for _ in 0..(nparts - 1).min(self.threads - 1) {
+            self.shared.start.notify_one();
+        }
+        // the guard waits out the job and releases the latch even if the
+        // caller's own part panics mid-unwind — the borrowed closure cannot
+        // be unwound away while a worker still runs it, and later `run`
+        // calls degrade to serial instead of silently losing the pool
+        let _guard = SubmitGuard { shared: &*self.shared, job: &*job };
+        run_parts(&job);
+    }
+
+    /// Run two independent tasks concurrently (tower-level parallelism).
+    /// Falls back to in-order serial execution on a busy or 1-thread pool.
+    pub fn join2<A, B>(&self, a: A, b: B)
+    where
+        A: FnOnce() + Send,
+        B: FnOnce() + Send,
+    {
+        let (a, b) = (Mutex::new(Some(a)), Mutex::new(Some(b)));
+        self.run(2, &|p| match p {
+            0 => {
+                if let Some(f) = a.lock().unwrap().take() {
+                    f()
+                }
+            }
+            _ => {
+                if let Some(f) = b.lock().unwrap().take() {
+                    f()
+                }
+            }
+        });
+    }
+
+    /// Run three independent tasks concurrently (the q1/q2/actor towers of
+    /// a full SAC/TD3 step). Same fallback semantics as [`Self::join2`].
+    pub fn join3<A, B, C>(&self, a: A, b: B, c: C)
+    where
+        A: FnOnce() + Send,
+        B: FnOnce() + Send,
+        C: FnOnce() + Send,
+    {
+        let (a, b, c) = (Mutex::new(Some(a)), Mutex::new(Some(b)), Mutex::new(Some(c)));
+        self.run(3, &|p| match p {
+            0 => {
+                if let Some(f) = a.lock().unwrap().take() {
+                    f()
+                }
+            }
+            1 => {
+                if let Some(f) = b.lock().unwrap().take() {
+                    f()
+                }
+            }
+            _ => {
+                if let Some(f) = c.lock().unwrap().take() {
+                    f()
+                }
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.slot.lock().unwrap();
+            g.shutdown = true;
+        }
+        self.shared.start.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut g = shared.slot.lock().unwrap();
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                if g.seq != seen {
+                    break;
+                }
+                g = shared.start.wait(g).unwrap();
+            }
+            seen = g.seq;
+            match &g.job {
+                Some(j) => j.clone(),
+                None => continue,
+            }
+        };
+        run_parts(&job);
+    }
+}
+
+fn run_parts(job: &Job) {
+    loop {
+        let part = job.next.fetch_add(1, Ordering::Relaxed);
+        if part >= job.nparts {
+            return;
+        }
+        // counted via a drop guard so a panicking part still completes the
+        // job's accounting: the submitter must never hang on a dead part (a
+        // panicked worker thread dies afterwards, shrinking the pool but
+        // not deadlocking it)
+        let _done = DoneGuard(job);
+        // SAFETY: a part can only be claimed before the submitter returns
+        // (it waits for `done == nparts`), so the task pointer is live.
+        unsafe { (*job.task.0)(part) };
+    }
+}
+
+/// Counts one claimed part as finished on drop — including unwinds.
+struct DoneGuard<'a>(&'a Job);
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        let mut d = self.0.done.lock().unwrap();
+        *d += 1;
+        if *d == self.0.nparts {
+            self.0.done_cv.notify_all();
+        }
+    }
+}
+
+/// Blocks until every part of `job` has finished, then releases the
+/// single-submitter latch — on both the normal path and submitter unwinds.
+struct SubmitGuard<'a> {
+    shared: &'a Shared,
+    job: &'a Job,
+}
+
+impl Drop for SubmitGuard<'_> {
+    fn drop(&mut self) {
+        let mut d = self.job.done.lock().unwrap();
+        while *d < self.job.nparts {
+            d = self.job.done_cv.wait(d).unwrap();
+        }
+        drop(d);
+        self.shared.submitting.store(false, Ordering::Release);
+    }
+}
+
+// ------------------------------------------------------------- global pool
+
+static CONFIGURED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the pool width used by [`global`] (0 = auto). Effective only before
+/// the first kernel runs; `SPREEZE_THREADS` in the environment wins over
+/// this. Wired to `TrainConfig::ops_threads` by the topology builder.
+pub fn configure_threads(n: usize) {
+    CONFIGURED_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The process-wide kernel pool. Sized, in priority order, from
+/// `SPREEZE_THREADS`, [`configure_threads`], then
+/// `std::thread::available_parallelism()`.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::env::var("SPREEZE_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .or_else(|| match CONFIGURED_THREADS.load(Ordering::Relaxed) {
+                0 => None,
+                n => Some(n),
+            })
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        ThreadPool::new(n)
+    })
+}
+
+// ---------------------------------------------------------------- utilities
+
+/// `p`-th of `nparts` near-equal contiguous subranges of `0..len`.
+fn part_range(len: usize, nparts: usize, p: usize) -> Range<usize> {
+    let base = len / nparts;
+    let rem = len % nparts;
+    let start = p * base + p.min(rem);
+    start..start + base + usize::from(p < rem)
+}
+
+/// Part count for a row-partitioned kernel: 1 (serial) for small problems,
+/// else a few parts per thread so the atomic claim balances uneven finishes.
+fn row_parts(pool: &ThreadPool, rows: usize, flops: usize) -> usize {
+    if pool.threads() <= 1 || flops < PAR_FLOPS_MIN || rows < 2 * PART_ROWS_MIN {
+        1
+    } else {
+        (rows / PART_ROWS_MIN).min(pool.threads() * 4).max(1)
+    }
+}
+
+/// Mutable f32 base pointer that may cross into pool workers. Soundness:
+/// every kernel hands each part a disjoint row range, reconstructed with
+/// `from_raw_parts_mut` inside the part.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+thread_local! {
+    /// Per-thread packing panel (grow-only; no per-call allocation).
+    static PACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Borrow this thread's packing panel at `len` elements.
+fn with_pack<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    PACK.with(|c| {
+        let mut v = c.borrow_mut();
+        if v.len() < len {
+            v.resize(len, 0.0);
+        }
+        f(&mut v[..len])
+    })
+}
+
+/// Grow-only reusable buffer: resize `v` to at least `len` and return the
+/// `len` prefix. The building block of [`Scratch`].
+pub fn grown(v: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+    &mut v[..len]
+}
+
+/// Three-slot grow-only scratch arena for layered forwards (h0 / h1 / out).
+/// Owned by the caller (e.g. `nn::Mlp`) so batched inference stays
+/// allocation-free at steady state.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub c: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
+// ------------------------------------------------------------------ kernels
+
+/// `out[m,n] = act(a[m,k] @ b[k,n] + bias)` with `b` row-major `(k,n)` and
+/// the bias + activation epilogue fused (bias seeds the accumulator, so the
+/// summation order is bias-first then ascending `k` — the historical
+/// inference-kernel order). `bias = None` seeds zero (pure gemm). Large
+/// problems are row-partitioned across the pool.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_bias_act(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    relu: bool,
+) {
+    debug_assert!(a.len() >= m * k, "gemm_nn a too short");
+    debug_assert!(b.len() >= k * n, "gemm_nn b too short");
+    debug_assert!(out.len() >= m * n, "gemm_nn out too short");
+    let nparts = row_parts(pool, m, 2 * m * k * n);
+    if nparts <= 1 {
+        nn_rows(&a[..m * k], b, bias, k, n, relu, &mut out[..m * n]);
+        return;
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(nparts, &|p| {
+        let rows = part_range(m, nparts, p);
+        // SAFETY: parts cover disjoint row ranges of `out`.
+        let part = unsafe {
+            std::slice::from_raw_parts_mut(optr.0.add(rows.start * n), rows.len() * n)
+        };
+        nn_rows(&a[rows.start * k..rows.end * k], b, bias, k, n, relu, part);
+    });
+}
+
+/// Serial row kernel behind [`gemm_nn_bias_act`]: 4-row register tiles over
+/// a packed `[k][4]` A panel, ReLU-sparsity skip for all-zero inputs,
+/// strictly ascending `k` per output element.
+fn nn_rows(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    k: usize,
+    n: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    let m = if n == 0 { 0 } else { out.len() / n };
+    match bias {
+        Some(bias) => {
+            for r in 0..m {
+                out[r * n..(r + 1) * n].copy_from_slice(&bias[..n]);
+            }
+        }
+        None => out[..m * n].fill(0.0),
+    }
+    let mut r = 0;
+    if m >= 4 {
+        with_pack(4 * k, |pack| {
+            while r + 4 <= m {
+                // pack the 4-row A tile column-interleaved: one contiguous
+                // stream of (x0,x1,x2,x3) per input index
+                for l in 0..k {
+                    pack[4 * l] = a[r * k + l];
+                    pack[4 * l + 1] = a[(r + 1) * k + l];
+                    pack[4 * l + 2] = a[(r + 2) * k + l];
+                    pack[4 * l + 3] = a[(r + 3) * k + l];
+                }
+                let tile = &mut out[r * n..(r + 4) * n];
+                let (y0, t) = tile.split_at_mut(n);
+                let (y1, t) = t.split_at_mut(n);
+                let (y2, y3) = t.split_at_mut(n);
+                for l in 0..k {
+                    let x0 = pack[4 * l];
+                    let x1 = pack[4 * l + 1];
+                    let x2 = pack[4 * l + 2];
+                    let x3 = pack[4 * l + 3];
+                    if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                        continue; // ReLU sparsity: whole tile dead on this input
+                    }
+                    let brow = &b[l * n..(l + 1) * n];
+                    for j in 0..n {
+                        let w = brow[j];
+                        y0[j] += x0 * w;
+                        y1[j] += x1 * w;
+                        y2[j] += x2 * w;
+                        y3[j] += x3 * w;
+                    }
+                }
+                r += 4;
+            }
+        });
+    }
+    // remainder rows: the scalar kernel, same accumulation order
+    while r < m {
+        let y = &mut out[r * n..(r + 1) * n];
+        for (l, &x) in a[r * k..(r + 1) * k].iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            for (yj, &w) in y.iter_mut().zip(brow) {
+                *yj += x * w;
+            }
+        }
+        r += 1;
+    }
+    if relu {
+        for v in out[..m * n].iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+}
+
+/// `out[m,kk] = a[m,n] @ b[kk,n]ᵀ` — the input-gradient shape `dY Wᵀ`.
+/// When `mask` (the cached post-ReLU activation `[m,kk]`) is given, the
+/// ReLU gradient gate is fused as an epilogue: `out[i,l] = 0` wherever
+/// `mask[i,l] <= 0`. Dot products reduce ascending `n`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    kk: usize,
+    out: &mut [f32],
+    mask: Option<&[f32]>,
+) {
+    debug_assert!(a.len() >= m * n, "gemm_nt a too short");
+    debug_assert!(b.len() >= kk * n, "gemm_nt b too short");
+    debug_assert!(out.len() >= m * kk, "gemm_nt out too short");
+    if let Some(mask) = mask {
+        debug_assert!(mask.len() >= m * kk, "gemm_nt mask too short");
+    }
+    let nparts = row_parts(pool, m, 2 * m * n * kk);
+    if nparts <= 1 {
+        nt_rows(&a[..m * n], b, n, kk, &mut out[..m * kk], mask.map(|h| &h[..m * kk]));
+        return;
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(nparts, &|p| {
+        let rows = part_range(m, nparts, p);
+        // SAFETY: parts cover disjoint row ranges of `out`.
+        let part = unsafe {
+            std::slice::from_raw_parts_mut(optr.0.add(rows.start * kk), rows.len() * kk)
+        };
+        nt_rows(
+            &a[rows.start * n..rows.end * n],
+            b,
+            n,
+            kk,
+            part,
+            mask.map(|h| &h[rows.start * kk..rows.end * kk]),
+        );
+    });
+}
+
+fn nt_rows(a: &[f32], b: &[f32], n: usize, kk: usize, out: &mut [f32], mask: Option<&[f32]>) {
+    let m = if kk == 0 { 0 } else { out.len() / kk };
+    let mut r = 0;
+    while r + 4 <= m {
+        let a0 = &a[r * n..(r + 1) * n];
+        let a1 = &a[(r + 1) * n..(r + 2) * n];
+        let a2 = &a[(r + 2) * n..(r + 3) * n];
+        let a3 = &a[(r + 3) * n..(r + 4) * n];
+        for l in 0..kk {
+            let brow = &b[l * n..(l + 1) * n];
+            let mut s0 = 0.0f32;
+            let mut s1 = 0.0f32;
+            let mut s2 = 0.0f32;
+            let mut s3 = 0.0f32;
+            for j in 0..n {
+                let w = brow[j];
+                s0 += a0[j] * w;
+                s1 += a1[j] * w;
+                s2 += a2[j] * w;
+                s3 += a3[j] * w;
+            }
+            out[r * kk + l] = s0;
+            out[(r + 1) * kk + l] = s1;
+            out[(r + 2) * kk + l] = s2;
+            out[(r + 3) * kk + l] = s3;
+        }
+        r += 4;
+    }
+    while r < m {
+        let arow = &a[r * n..(r + 1) * n];
+        let orow = &mut out[r * kk..(r + 1) * kk];
+        for (l, o) in orow.iter_mut().enumerate() {
+            let brow = &b[l * n..(l + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o = acc;
+        }
+        r += 1;
+    }
+    if let Some(mask) = mask {
+        for (o, &h) in out[..m * kk].iter_mut().zip(mask) {
+            if h <= 0.0 {
+                *o = 0.0;
+            }
+        }
+    }
+}
+
+/// `out[m,n] += a[bdim,m]ᵀ @ b[bdim,n]` — the weight-gradient shape
+/// `xᵀ dY`. The reduction over `bdim` runs strictly ascending per output
+/// element; the pool partitions output rows (`m`), so pooled and serial
+/// results are bitwise identical.
+pub fn gemm_tn_acc(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    bdim: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(a.len() >= bdim * m, "gemm_tn a too short");
+    debug_assert!(b.len() >= bdim * n, "gemm_tn b too short");
+    debug_assert!(out.len() >= m * n, "gemm_tn out too short");
+    let nparts = row_parts(pool, m, 2 * bdim * m * n);
+    if nparts <= 1 {
+        tn_cols(a, b, bdim, m, n, 0..m, &mut out[..m * n]);
+        return;
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(nparts, &|p| {
+        let cols = part_range(m, nparts, p);
+        // SAFETY: parts cover disjoint row ranges of `out`.
+        let part = unsafe {
+            std::slice::from_raw_parts_mut(optr.0.add(cols.start * n), cols.len() * n)
+        };
+        tn_cols(a, b, bdim, m, n, cols, part);
+    });
+}
+
+/// `out_part` covers output rows `cols` (i.e. columns `cols` of `a`).
+fn tn_cols(
+    a: &[f32],
+    b: &[f32],
+    bdim: usize,
+    m: usize,
+    n: usize,
+    cols: Range<usize>,
+    out_part: &mut [f32],
+) {
+    for r in 0..bdim {
+        let arow = &a[r * m + cols.start..r * m + cols.end];
+        let brow = &b[r * n..(r + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // ReLU sparsity of the cached activation
+            }
+            let orow = &mut out_part[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[n] += column sums of a[bdim,n]` — the bias gradient. Cheap next to
+/// the gemms (1/m of the flops), so it stays serial and deterministic.
+pub fn colsum_acc(a: &[f32], bdim: usize, n: usize, out: &mut [f32]) {
+    for r in 0..bdim {
+        let arow = &a[r * n..(r + 1) * n];
+        for (o, &av) in out.iter_mut().zip(arow) {
+            *o += av;
+        }
+    }
+}
+
+// --------------------------------------------------------- optimizer kernels
+
+/// Standard Adam with bias correction at integer step `t >= 1`, in place —
+/// mirrors `ref.py::adam_update` (m̂/(√v̂ + eps), eps outside the sqrt).
+/// Elementwise, so the global pool chunks it with no ordering concerns.
+pub fn adam_step(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32, t: f32) {
+    let c1 = 1.0 / (1.0 - ADAM_BETA1.powf(t));
+    let c2 = 1.0 / (1.0 - ADAM_BETA2.powf(t));
+    let len = p.len();
+    debug_assert!(g.len() >= len && m.len() >= len && v.len() >= len);
+    let pool = global();
+    if pool.threads() <= 1 || len < PAR_ELEMS_MIN {
+        adam_chunk(p, &g[..len], m, v, lr, c1, c2);
+        return;
+    }
+    let nparts = pool.threads();
+    let pp = SendPtr(p.as_mut_ptr());
+    let mm = SendPtr(m.as_mut_ptr());
+    let vv = SendPtr(v.as_mut_ptr());
+    pool.run(nparts, &|part| {
+        let r = part_range(len, nparts, part);
+        // SAFETY: parts cover disjoint element ranges of p/m/v.
+        let (ps, ms, vs) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(pp.0.add(r.start), r.len()),
+                std::slice::from_raw_parts_mut(mm.0.add(r.start), r.len()),
+                std::slice::from_raw_parts_mut(vv.0.add(r.start), r.len()),
+            )
+        };
+        adam_chunk(ps, &g[r], ms, vs, lr, c1, c2);
+    });
+}
+
+fn adam_chunk(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32, c1: f32, c2: f32) {
+    for i in 0..p.len() {
+        let gi = g[i];
+        let m2 = ADAM_BETA1 * m[i] + (1.0 - ADAM_BETA1) * gi;
+        let v2 = ADAM_BETA2 * v[i] + (1.0 - ADAM_BETA2) * gi * gi;
+        m[i] = m2;
+        v[i] = v2;
+        p[i] -= lr * (m2 * c1) / ((v2 * c2).sqrt() + ADAM_EPS);
+    }
+}
+
+/// Soft target update `t' = tau * p + (1 - tau) * t`, in place on `t`.
+pub fn polyak(p: &[f32], t: &mut [f32], tau: f32) {
+    let len = t.len();
+    debug_assert!(p.len() >= len);
+    let pool = global();
+    if pool.threads() <= 1 || len < PAR_ELEMS_MIN {
+        polyak_chunk(&p[..len], t, tau);
+        return;
+    }
+    let nparts = pool.threads();
+    let tp = SendPtr(t.as_mut_ptr());
+    pool.run(nparts, &|part| {
+        let r = part_range(len, nparts, part);
+        // SAFETY: parts cover disjoint element ranges of `t`.
+        let ts = unsafe { std::slice::from_raw_parts_mut(tp.0.add(r.start), r.len()) };
+        polyak_chunk(&p[r], ts, tau);
+    });
+}
+
+fn polyak_chunk(p: &[f32], t: &mut [f32], tau: f32) {
+    for (ti, &pi) in t.iter_mut().zip(p) {
+        *ti = tau * pi + (1.0 - tau) * *ti;
+    }
+}
+
+// ---------------------------------------------------------------- reference
+
+/// The seed implementation: plain triple loops with the exact accumulation
+/// contract the tiled kernels must reproduce bitwise. Kept as the oracle
+/// for equivalence tests and the "before" rows in the kernel benches.
+pub mod naive {
+    /// `out[m,n] = act(a[m,k] @ b[k,n] + bias)` (bias-first, ascending k).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_nn_bias_act(
+        a: &[f32],
+        b: &[f32],
+        bias: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+        relu: bool,
+    ) {
+        for r in 0..m {
+            let y = &mut out[r * n..(r + 1) * n];
+            match bias {
+                Some(bias) => y.copy_from_slice(&bias[..n]),
+                None => y.fill(0.0),
+            }
+            for (l, &x) in a[r * k..(r + 1) * k].iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let brow = &b[l * n..(l + 1) * n];
+                for (yj, &w) in y.iter_mut().zip(brow) {
+                    *yj += x * w;
+                }
+            }
+            if relu {
+                for v in y.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+        }
+    }
+
+    /// `out[m,kk] = a[m,n] @ b[kk,n]ᵀ`, optional fused ReLU mask.
+    pub fn gemm_nt(
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        kk: usize,
+        out: &mut [f32],
+        mask: Option<&[f32]>,
+    ) {
+        for i in 0..m {
+            let arow = &a[i * n..(i + 1) * n];
+            let orow = &mut out[i * kk..(i + 1) * kk];
+            for (l, o) in orow.iter_mut().enumerate() {
+                let brow = &b[l * n..(l + 1) * n];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *o = acc;
+            }
+        }
+        if let Some(mask) = mask {
+            for (o, &h) in out[..m * kk].iter_mut().zip(mask) {
+                if h <= 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+
+    /// `out[m,n] += a[bdim,m]ᵀ @ b[bdim,n]` (ascending `bdim`).
+    pub fn gemm_tn_acc(a: &[f32], b: &[f32], bdim: usize, m: usize, n: usize, out: &mut [f32]) {
+        for r in 0..bdim {
+            let arow = &a[r * m..(r + 1) * m];
+            let brow = &b[r * n..(r + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fill(rng: &mut Rng, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        rng.fill_uniform(&mut v, -1.0, 1.0);
+        // sprinkle exact zeros so the sparsity skips are exercised
+        for i in (0..len).step_by(7) {
+            v[i] = 0.0;
+        }
+        v
+    }
+
+    #[test]
+    fn part_range_covers_everything_once() {
+        for len in [0usize, 1, 5, 16, 17, 100] {
+            for nparts in [1usize, 2, 3, 7, 16] {
+                let mut seen = vec![false; len];
+                for p in 0..nparts {
+                    for i in part_range(len, nparts, p) {
+                        assert!(!seen[i], "index {i} covered twice");
+                        seen[i] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "len {len} nparts {nparts}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_every_part_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let counts: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            pool.run(counts.len(), &|p| {
+                counts[p].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 50, "part {i}");
+        }
+    }
+
+    #[test]
+    fn nested_and_concurrent_runs_fall_back_to_serial() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            // nested submission: must execute inline, not deadlock
+            pool.run(3, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn join3_runs_all_three() {
+        let pool = ThreadPool::new(2);
+        let (mut a, mut b, mut c) = (0u32, 0u32, 0u32);
+        pool.join3(|| a = 1, || b = 2, || c = 3);
+        assert_eq!((a, b, c), (1, 2, 3));
+        let (mut x, mut y) = (0u32, 0u32);
+        pool.join2(|| x = 7, || y = 9);
+        assert_eq!((x, y), (7, 9));
+    }
+
+    #[test]
+    fn tiled_gemms_match_naive_bitwise_on_ragged_shapes() {
+        let mut rng = Rng::new(41);
+        let pool = ThreadPool::new(1);
+        for &(m, k, n) in
+            &[(1usize, 3usize, 2usize), (3, 5, 3), (4, 4, 4), (7, 9, 5), (33, 17, 6), (50, 8, 1)]
+        {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            let bias = fill(&mut rng, n);
+            let mut y1 = vec![0.0f32; m * n];
+            let mut y2 = vec![7.0f32; m * n];
+            gemm_nn_bias_act(&pool, &a, &b, Some(&bias), m, k, n, &mut y1, true);
+            naive::gemm_nn_bias_act(&a, &b, Some(&bias), m, k, n, &mut y2, true);
+            assert_eq!(y1, y2, "nn ({m},{k},{n})");
+
+            let g = fill(&mut rng, m * n);
+            let mask = fill(&mut rng, m * k);
+            let mut d1 = vec![0.0f32; m * k];
+            let mut d2 = vec![-1.0f32; m * k];
+            gemm_nt(&pool, &g, &b, m, n, k, &mut d1, Some(&mask));
+            naive::gemm_nt(&g, &b, m, n, k, &mut d2, Some(&mask));
+            assert_eq!(d1, d2, "nt ({m},{k},{n})");
+
+            // weight-grad shape: bdim = m, out (k, n)
+            let mut w1 = fill(&mut rng, k * n);
+            let mut w2 = w1.clone();
+            gemm_tn_acc(&pool, &mask, &g, m, k, n, &mut w1);
+            naive::gemm_tn_acc(&mask, &g, m, k, n, &mut w2);
+            assert_eq!(w1, w2, "tn ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn pooled_kernels_are_bitwise_deterministic() {
+        // large enough that row_parts goes parallel on the 4-thread pool
+        let (m, k, n) = (256usize, 64usize, 64usize);
+        let mut rng = Rng::new(17);
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let bias = fill(&mut rng, n);
+        let serial = ThreadPool::new(1);
+        let pooled = ThreadPool::new(4);
+        let mut y1 = vec![0.0f32; m * n];
+        let mut y2 = vec![0.0f32; m * n];
+        gemm_nn_bias_act(&serial, &a, &b, Some(&bias), m, k, n, &mut y1, false);
+        gemm_nn_bias_act(&pooled, &a, &b, Some(&bias), m, k, n, &mut y2, false);
+        assert_eq!(y1, y2, "nn pooled vs serial");
+
+        let mut d1 = vec![0.0f32; m * k];
+        let mut d2 = vec![0.0f32; m * k];
+        gemm_nt(&serial, &y1, &b, m, n, k, &mut d1, None);
+        gemm_nt(&pooled, &y1, &b, m, n, k, &mut d2, None);
+        assert_eq!(d1, d2, "nt pooled vs serial");
+
+        let mut w1 = vec![0.0f32; k * n];
+        let mut w2 = vec![0.0f32; k * n];
+        gemm_tn_acc(&serial, &a, &y1, m, k, n, &mut w1);
+        gemm_tn_acc(&pooled, &a, &y1, m, k, n, &mut w2);
+        assert_eq!(w1, w2, "tn pooled vs serial");
+    }
+
+    #[test]
+    fn adam_and_polyak_match_scalar_reference() {
+        let mut rng = Rng::new(5);
+        let len = 40_000; // above PAR_ELEMS_MIN so the pooled path runs
+        let g = fill(&mut rng, len);
+        let mut p = fill(&mut rng, len);
+        let mut m = vec![0.0f32; len];
+        let mut v = vec![0.0f32; len];
+        let (mut pr, mut mr, mut vr) = (p.clone(), m.clone(), v.clone());
+        adam_step(&mut p, &g, &mut m, &mut v, 1e-2, 3.0);
+        let c1 = 1.0 / (1.0 - ADAM_BETA1.powf(3.0));
+        let c2 = 1.0 / (1.0 - ADAM_BETA2.powf(3.0));
+        adam_chunk(&mut pr, &g, &mut mr, &mut vr, 1e-2, c1, c2);
+        assert_eq!(p, pr);
+        assert_eq!(m, mr);
+        assert_eq!(v, vr);
+
+        let mut t = fill(&mut rng, len);
+        let mut tr = t.clone();
+        polyak(&p, &mut t, 0.01);
+        polyak_chunk(&p, &mut tr, 0.01);
+        assert_eq!(t, tr);
+    }
+
+    #[test]
+    fn scratch_grows_and_reuses() {
+        let mut s = Scratch::new();
+        grown(&mut s.a, 10)[9] = 3.0;
+        assert_eq!(grown(&mut s.a, 5).len(), 5);
+        assert_eq!(s.a.len(), 10, "grow-only");
+        assert_eq!(s.a[9], 3.0);
+    }
+}

@@ -10,6 +10,15 @@
 //! `python/compile/model.py` / `kernels/ref.py` (same gaussian head, same
 //! stop-gradient structure, same Adam bias correction). Gradient correctness
 //! is pinned by finite-difference tests against an independent f64 oracle.
+//!
+//! All matrix work runs on the shared kernel layer ([`crate::nn::ops`]):
+//! the serial phases (TD target, optimizer) row-partition their gemms and
+//! elementwise kernels across the ops pool, while the three backward
+//! towers of a full step (q1 critic loss, q2 critic loss, actor policy
+//! loss) run **concurrently** via `join3` — the rayon-free multithreaded
+//! backprop the roadmap called for. Tower results merge deterministically
+//! (disjoint gradient segments; fixed add order), so pooled steps are
+//! bitwise reproducible at any thread count.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -18,6 +27,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::nn::grad::{adam_step, polyak, MlpGrad};
 use crate::nn::mlp::{LOG_STD_MAX, LOG_STD_MIN};
+use crate::nn::ops;
 use crate::nn::Layout;
 
 use super::artifacts::{ArtifactMeta, Manifest};
@@ -43,28 +53,64 @@ enum StepFunc {
     SacCritic,
 }
 
-/// Scratch buffers reused across updates (steady-state allocation-free on
-/// the forward/backward path; only the returned state vectors are fresh).
+/// One critic tower's scratch: its q values and loss gradient.
 #[derive(Default)]
-struct Scratch {
-    sa: Vec<f32>,
+struct CriticScr {
+    q: Vec<f32>,
+    dq: Vec<f32>,
+}
+
+/// The actor tower's scratch: the full policy-loss chain (head forward,
+/// frozen-critic q's, input grads, head backward, actor output grads).
+#[derive(Default)]
+struct ActorScr {
     mu: Vec<f32>,
     ls: Vec<f32>,
     a_pol: Vec<f32>,
     logp: Vec<f32>,
-    logp2: Vec<f32>,
-    tq: Vec<f32>,
+    sa: Vec<f32>,
     qa: Vec<f32>,
     qb: Vec<f32>,
     dq: Vec<f32>,
     dsa: Vec<f32>,
     da: Vec<f32>,
     dout: Vec<f32>,
+}
+
+/// Scratch buffers reused across updates (steady-state allocation-free on
+/// the forward/backward path; only the returned state vectors are fresh).
+/// Split per tower so the q1 / q2 / actor backward passes of a full step
+/// can run concurrently on the ops pool.
+#[derive(Default)]
+struct Scratch {
+    /// Shared (s,a) rows for the critic towers / (s2,a2) for the TD target.
+    sa: Vec<f32>,
+    // TD-target head buffers (serial phase)
+    mu: Vec<f32>,
+    ls: Vec<f32>,
+    a_pol: Vec<f32>,
+    logp2: Vec<f32>,
+    tq: Vec<f32>,
+    tq2: Vec<f32>,
+    /// Assembled flat gradient of the last step (actor ‖ critic for `full`).
     grads: Vec<f32>,
+    /// The q2 tower's local critic gradient buffer: q1 and q2 write
+    /// disjoint segments, but the borrow checker cannot see that, so q2
+    /// accumulates here and is merged after the towers join.
+    g2: Vec<f32>,
+    c1: CriticScr,
+    c2: CriticScr,
+    pi: ActorScr,
 }
 
 /// One native step function instance (the native analogue of a compiled
 /// `StepExe` executable).
+///
+/// Holds five [`MlpGrad`] towers: `q1`/`q2` carry the critic-loss passes,
+/// `q1_pi`/`q2_pi` carry the policy-loss passes through the *frozen* critic
+/// (input gradients only) — separate objects so their activation caches
+/// never collide and the three backward towers of a full step can run
+/// concurrently on the [`ops`] pool.
 pub struct NativeStep {
     layout: Layout,
     func: StepFunc,
@@ -72,6 +118,8 @@ pub struct NativeStep {
     actor: MlpGrad,
     q1: MlpGrad,
     q2: MlpGrad,
+    q1_pi: MlpGrad,
+    q2_pi: MlpGrad,
     scr: Scratch,
 }
 
@@ -87,7 +135,9 @@ impl NativeStep {
         let actor = MlpGrad::from_segments(&layout.actor_segments, "actor/")?;
         let q1 = MlpGrad::from_segments(&layout.critic_segments, "q1/")?;
         let q2 = MlpGrad::from_segments(&layout.critic_segments, "q2/")?;
-        Ok(NativeStep { layout, func, bs, actor, q1, q2, scr: Scratch::default() })
+        let q1_pi = MlpGrad::from_segments(&layout.critic_segments, "q1/")?;
+        let q2_pi = MlpGrad::from_segments(&layout.critic_segments, "q2/")?;
+        Ok(NativeStep { layout, func, bs, actor, q1, q2, q1_pi, q2_pi, scr: Scratch::default() })
     }
 
     /// Execute one step; `inputs` are in `meta` order (validated upstream by
@@ -137,7 +187,11 @@ impl NativeStep {
         &self.scr.grads
     }
 
-    /// Single-device SAC update — mirrors `model.py::sac_full_step`.
+    /// Single-device SAC update — mirrors `model.py::sac_full_step`. The TD
+    /// target runs first (its gemms row-partition across the ops pool); the
+    /// q1, q2, and actor backward towers then run **concurrently** via
+    /// [`ops::ThreadPool::join3`], each accumulating into its own gradient
+    /// buffer, merged deterministically afterwards.
     #[allow(clippy::too_many_arguments)]
     fn sac_full(
         &mut self,
@@ -155,7 +209,7 @@ impl NativeStep {
         n2: &[f32],
         hyper: &[f32; 6],
     ) -> Vec<(String, Vec<f32>)> {
-        let NativeStep { layout, actor, q1, q2, scr, bs, .. } = self;
+        let NativeStep { layout, actor, q1, q2, q1_pi, q2_pi, scr, bs, .. } = self;
         let b = *bs;
         let (o, adim) = (layout.obs_dim, layout.act_dim);
         let pa = layout.actor_size;
@@ -164,80 +218,58 @@ impl NativeStep {
         let log_alpha = actor_p[la_off];
         let alpha = log_alpha.exp();
         let (lr, gamma, tau, tent, rs) = (hyper[0], hyper[1], hyper[2], hyper[3], hyper[4]);
+        let Scratch { sa, mu, ls, a_pol, logp2, tq, tq2, grads, g2, c1, c2, pi } = scr;
 
-        scr.grads.clear();
-        scr.grads.resize(layout.param_size, 0.0);
+        grads.clear();
+        grads.resize(layout.param_size, 0.0);
 
         // --- TD target (everything frozen): a2, logp2 ~ pi(s2); q from targets
         let out2 = actor.forward(actor_p, s2, b);
-        copy_mu_ls(out2, b, adim, &mut scr.mu, &mut scr.ls);
-        head_fwd(&scr.mu, &scr.ls, n2, b, adim, &mut scr.a_pol, &mut scr.logp2);
-        concat_sa(s2, &scr.a_pol, b, o, adim, &mut scr.sa);
-        copy_into(q1.forward(targets, &scr.sa, b), &mut scr.tq);
-        copy_into(q2.forward(targets, &scr.sa, b), &mut scr.qb);
+        copy_mu_ls(out2, b, adim, mu, ls);
+        head_fwd(mu, ls, n2, b, adim, a_pol, logp2);
+        concat_sa(s2, a_pol, b, o, adim, sa);
+        copy_into(q1.forward(targets, sa, b), tq);
+        copy_into(q2.forward(targets, sa, b), tq2);
         for i in 0..b {
-            let qmin = scr.tq[i].min(scr.qb[i]);
-            scr.tq[i] = r[i] * rs + gamma * (1.0 - d[i]) * (qmin - alpha * scr.logp2[i]);
+            let qmin = tq[i].min(tq2[i]);
+            tq[i] = r[i] * rs + gamma * (1.0 - d[i]) * (qmin - alpha * logp2[i]);
         }
-        let tq_mean = mean(&scr.tq);
+        let tq_mean = mean(tq);
 
-        // --- critic loss on (s, a): grads into the critic half
-        concat_sa(s, a, b, o, adim, &mut scr.sa);
-        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
-        let q1_mean = mean(&scr.qa);
-        let mut q_loss = 0.0f32;
-        scr.dq.resize(b, 0.0);
-        for i in 0..b {
-            let e = scr.qa[i] - scr.tq[i];
-            q_loss += e * e / b as f32;
-            scr.dq[i] = 2.0 * e / b as f32;
+        // --- the three towers, concurrently (inner gemms go serial per
+        // tower; the pool's lanes are spent on tower concurrency here)
+        concat_sa(s, a, b, o, adim, sa);
+        let (ga, gc) = grads.split_at_mut(pa);
+        let CriticScr { q: q1v, dq: dq1 } = c1;
+        let CriticScr { q: q2v, dq: dq2 } = c2;
+        g2.clear();
+        g2.resize(layout.critic_size, 0.0);
+        let sa_ro: &[f32] = sa;
+        let tq_ro: &[f32] = tq;
+        let mut loss1 = (0.0f32, 0.0f32); // (q1 loss part, q1_mean)
+        let mut loss2 = (0.0f32, 0.0f32);
+        let mut pi_out = (0.0f32, 0.0f32, 0.0f32); // (actor_loss, logp_mean, _)
+        let pool = ops::global();
+        pool.join3(
+            || loss1 = critic_tower(q1, q1v, dq1, critic_p, sa_ro, tq_ro, b, &mut gc[..]),
+            || loss2 = critic_tower(q2, q2v, dq2, critic_p, sa_ro, tq_ro, b, &mut g2[..]),
+            || {
+                // actor loss on s (critic frozen): a1, logp1 ~ pi(s)
+                pi_out = sac_actor_tower(
+                    actor, q1_pi, q2_pi, pi, actor_p, critic_p, s, n1, b, o, adim, alpha,
+                    &mut ga[..],
+                );
+            },
+        );
+        // deterministic merge: q2's tower-local critic grads (disjoint
+        // segments from q1's, but the borrow checker cannot see that)
+        for (gd, &x) in gc.iter_mut().zip(g2.iter()) {
+            *gd += x;
         }
-        q1.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[pa..]), None);
-        copy_into(q2.forward(critic_p, &scr.sa, b), &mut scr.qb);
-        for i in 0..b {
-            let e = scr.qb[i] - scr.tq[i];
-            q_loss += e * e / b as f32;
-            scr.dq[i] = 2.0 * e / b as f32;
-        }
-        q2.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[pa..]), None);
-
-        // --- actor loss on s (critic frozen): a1, logp1 ~ pi(s)
-        let out1 = actor.forward(actor_p, s, b);
-        copy_mu_ls(out1, b, adim, &mut scr.mu, &mut scr.ls);
-        head_fwd(&scr.mu, &scr.ls, n1, b, adim, &mut scr.a_pol, &mut scr.logp);
-        let logp_mean = mean(&scr.logp);
-        concat_sa(s, &scr.a_pol, b, o, adim, &mut scr.sa);
-        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
-        copy_into(q2.forward(critic_p, &scr.sa, b), &mut scr.qb);
-        let mut actor_loss = 0.0f32;
-        scr.da.clear();
-        scr.da.resize(b * adim, 0.0);
-        scr.dsa.resize(b * (o + adim), 0.0);
-        // d(-mean(min(q1pi, q2pi)))/dq through each net, then to the action
-        for (pass, qn) in [(&mut *q1, 0usize), (&mut *q2, 1usize)] {
-            scr.dq.resize(b, 0.0);
-            for i in 0..b {
-                let m1 = scr.qa[i] <= scr.qb[i];
-                let mine = if m1 { scr.qa[i] } else { scr.qb[i] };
-                if qn == 0 {
-                    actor_loss += (alpha * scr.logp[i] - mine) / b as f32;
-                }
-                let on_this = if qn == 0 { m1 } else { !m1 };
-                scr.dq[i] = if on_this { -1.0 / b as f32 } else { 0.0 };
-            }
-            pass.backward(critic_p, &scr.dq, b, None, Some(&mut scr.dsa));
-            for i in 0..b {
-                for j in 0..adim {
-                    scr.da[i * adim + j] += scr.dsa[i * (o + adim) + o + j];
-                }
-            }
-        }
-        // chain through the tanh-gaussian head into the actor output grads
-        let gl = alpha / b as f32; // d actor_loss / d logp1 per row
-        head_bwd(&scr.ls, n1, &scr.a_pol, &scr.da, gl, b, adim, &mut scr.dout);
-        actor.backward(actor_p, &scr.dout, b, Some(&mut scr.grads[..pa]), None);
         // temperature: d(-mean(log_alpha * (sg(logp1) + tent)))/d log_alpha
-        scr.grads[la_off] += -(logp_mean + tent);
+        let (q_loss, q1_mean) = (loss1.0 + loss2.0, loss1.1);
+        let (actor_loss, logp_mean, _) = pi_out;
+        ga[la_off] += -(logp_mean + tent);
 
         let metrics = vec![
             q_loss, actor_loss, alpha, q1_mean,
@@ -248,7 +280,7 @@ impl NativeStep {
         let mut p2 = params.to_vec();
         let mut m2 = m.to_vec();
         let mut v2 = v.to_vec();
-        adam_step(&mut p2, &scr.grads, &mut m2, &mut v2, lr, step);
+        adam_step(&mut p2, grads, &mut m2, &mut v2, lr, step);
         let mut t2 = targets.to_vec();
         polyak(&p2[pa..], &mut t2, tau);
         vec![
@@ -280,74 +312,79 @@ impl NativeStep {
         update_actor: f32,
         hyper: &[f32; 6],
     ) -> Vec<(String, Vec<f32>)> {
-        let NativeStep { layout, actor, q1, q2, scr, bs, .. } = self;
+        let NativeStep { layout, actor, q1, q2, q1_pi, scr, bs, .. } = self;
         let b = *bs;
         let (o, adim) = (layout.obs_dim, layout.act_dim);
         let pa = layout.actor_size;
         let (actor_p, critic_p) = params.split_at(pa);
         let (lr, gamma, tau, rs, pn) = (hyper[0], hyper[1], hyper[2], hyper[4], hyper[5]);
+        let Scratch { sa, a_pol, tq, tq2, grads, g2, c1, c2, pi, .. } = scr;
 
-        scr.grads.clear();
-        scr.grads.resize(layout.param_size, 0.0);
+        grads.clear();
+        grads.resize(layout.param_size, 0.0);
 
         // --- TD target with target policy smoothing (all frozen)
         let mu2 = actor.forward(actor_p, s2, b);
-        scr.a_pol.clear();
-        scr.a_pol.extend(mu2.iter().zip(n2).map(|(&mu, &n)| {
+        a_pol.clear();
+        a_pol.extend(mu2.iter().zip(n2).map(|(&mu, &n)| {
             let eps = (n * pn).clamp(-0.5, 0.5);
             (mu.tanh() + eps).clamp(-1.0, 1.0)
         }));
-        concat_sa(s2, &scr.a_pol, b, o, adim, &mut scr.sa);
-        copy_into(q1.forward(targets, &scr.sa, b), &mut scr.tq);
-        copy_into(q2.forward(targets, &scr.sa, b), &mut scr.qb);
+        concat_sa(s2, a_pol, b, o, adim, sa);
+        copy_into(q1.forward(targets, sa, b), tq);
+        copy_into(q2.forward(targets, sa, b), tq2);
         for i in 0..b {
-            let qmin = scr.tq[i].min(scr.qb[i]);
-            scr.tq[i] = r[i] * rs + gamma * (1.0 - d[i]) * qmin;
+            let qmin = tq[i].min(tq2[i]);
+            tq[i] = r[i] * rs + gamma * (1.0 - d[i]) * qmin;
         }
-        let tq_mean = mean(&scr.tq);
+        let tq_mean = mean(tq);
 
-        // --- critic loss on (s, a)
-        concat_sa(s, a, b, o, adim, &mut scr.sa);
-        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
-        let q1_mean = mean(&scr.qa);
-        let mut q_loss = 0.0f32;
-        scr.dq.resize(b, 0.0);
-        for i in 0..b {
-            let e = scr.qa[i] - scr.tq[i];
-            q_loss += e * e / b as f32;
-            scr.dq[i] = 2.0 * e / b as f32;
-        }
-        q1.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[pa..]), None);
-        copy_into(q2.forward(critic_p, &scr.sa, b), &mut scr.qb);
-        for i in 0..b {
-            let e = scr.qb[i] - scr.tq[i];
-            q_loss += e * e / b as f32;
-            scr.dq[i] = 2.0 * e / b as f32;
-        }
-        q2.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[pa..]), None);
-
-        // --- (delayed) deterministic actor loss: -mean(q1(s, tanh(mu)))
-        let mu1 = actor.forward(actor_p, s, b);
-        scr.a_pol.clear();
-        scr.a_pol.extend(mu1.iter().map(|&mu| mu.tanh()));
-        concat_sa(s, &scr.a_pol, b, o, adim, &mut scr.sa);
-        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
-        let actor_loss = -mean(&scr.qa);
-        if update_actor != 0.0 {
-            scr.dq.resize(b, 0.0);
-            scr.dq.fill(-update_actor / b as f32);
-            scr.dsa.resize(b * (o + adim), 0.0);
-            q1.backward(critic_p, &scr.dq, b, None, Some(&mut scr.dsa));
-            scr.dout.clear();
-            scr.dout.resize(b * adim, 0.0);
-            for i in 0..b {
-                for j in 0..adim {
-                    let av = scr.a_pol[i * adim + j];
-                    scr.dout[i * adim + j] = scr.dsa[i * (o + adim) + o + j] * (1.0 - av * av);
+        // --- q1/q2/actor towers, concurrently (as in `sac_full`)
+        concat_sa(s, a, b, o, adim, sa);
+        let (ga, gc) = grads.split_at_mut(pa);
+        let CriticScr { q: q1v, dq: dq1 } = c1;
+        let CriticScr { q: q2v, dq: dq2 } = c2;
+        g2.clear();
+        g2.resize(layout.critic_size, 0.0);
+        let sa_ro: &[f32] = sa;
+        let tq_ro: &[f32] = tq;
+        let mut loss1 = (0.0f32, 0.0f32);
+        let mut loss2 = (0.0f32, 0.0f32);
+        let mut actor_loss = 0.0f32;
+        let pool = ops::global();
+        pool.join3(
+            || loss1 = critic_tower(q1, q1v, dq1, critic_p, sa_ro, tq_ro, b, &mut gc[..]),
+            || loss2 = critic_tower(q2, q2v, dq2, critic_p, sa_ro, tq_ro, b, &mut g2[..]),
+            || {
+                // (delayed) deterministic actor loss: -mean(q1(s, tanh(mu)))
+                let ActorScr { a_pol, sa, qa, dq, dsa, dout, .. } = pi;
+                let mu1 = actor.forward(actor_p, s, b);
+                a_pol.clear();
+                a_pol.extend(mu1.iter().map(|&mu| mu.tanh()));
+                concat_sa(s, a_pol, b, o, adim, sa);
+                copy_into(q1_pi.forward(critic_p, sa, b), qa);
+                actor_loss = -mean(qa);
+                if update_actor != 0.0 {
+                    dq.resize(b, 0.0);
+                    dq.fill(-update_actor / b as f32);
+                    dsa.resize(b * (o + adim), 0.0);
+                    q1_pi.backward(critic_p, dq, b, None, Some(&mut dsa[..]));
+                    dout.clear();
+                    dout.resize(b * adim, 0.0);
+                    for i in 0..b {
+                        for j in 0..adim {
+                            let av = a_pol[i * adim + j];
+                            dout[i * adim + j] = dsa[i * (o + adim) + o + j] * (1.0 - av * av);
+                        }
+                    }
+                    actor.backward(actor_p, dout, b, Some(&mut ga[..]), None);
                 }
-            }
-            actor.backward(actor_p, &scr.dout, b, Some(&mut scr.grads[..pa]), None);
+            },
+        );
+        for (gd, &x) in gc.iter_mut().zip(g2.iter()) {
+            *gd += x;
         }
+        let (q_loss, q1_mean) = (loss1.0 + loss2.0, loss1.1);
 
         let metrics = vec![
             q_loss, actor_loss, 0.0, q1_mean,
@@ -357,7 +394,7 @@ impl NativeStep {
         let mut p2 = params.to_vec();
         let mut m2 = m.to_vec();
         let mut v2 = v.to_vec();
-        adam_step(&mut p2, &scr.grads, &mut m2, &mut v2, lr, step);
+        adam_step(&mut p2, grads, &mut m2, &mut v2, lr, step);
         let mut t2 = targets.to_vec();
         polyak(&p2[pa..], &mut t2, tau * update_actor);
         vec![
@@ -383,7 +420,7 @@ impl NativeStep {
         n1: &[f32],
         hyper: &[f32; 6],
     ) -> Vec<(String, Vec<f32>)> {
-        let NativeStep { layout, actor, q1, q2, scr, bs, .. } = self;
+        let NativeStep { layout, actor, q1_pi, q2_pi, scr, bs, .. } = self;
         let b = *bs;
         let (o, adim) = (layout.obs_dim, layout.act_dim);
         let la_off = layout.actor_segment("actor/log_alpha").unwrap().offset;
@@ -394,39 +431,23 @@ impl NativeStep {
         scr.grads.clear();
         scr.grads.resize(layout.actor_size, 0.0);
 
-        let out1 = actor.forward(actor_p, s, b);
-        copy_mu_ls(out1, b, adim, &mut scr.mu, &mut scr.ls);
-        head_fwd(&scr.mu, &scr.ls, n1, b, adim, &mut scr.a_pol, &mut scr.logp);
-        let logp_mean = mean(&scr.logp);
-        concat_sa(s, &scr.a_pol, b, o, adim, &mut scr.sa);
-        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
-        let q_mean = mean(&scr.qa);
-        copy_into(q2.forward(critic_p, &scr.sa, b), &mut scr.qb);
-        let mut actor_loss = 0.0f32;
-        scr.da.clear();
-        scr.da.resize(b * adim, 0.0);
-        scr.dsa.resize(b * (o + adim), 0.0);
-        for (pass, qn) in [(&mut *q1, 0usize), (&mut *q2, 1usize)] {
-            scr.dq.resize(b, 0.0);
-            for i in 0..b {
-                let m1 = scr.qa[i] <= scr.qb[i];
-                if qn == 0 {
-                    let mine = if m1 { scr.qa[i] } else { scr.qb[i] };
-                    actor_loss += (alpha * scr.logp[i] - mine) / b as f32;
-                }
-                let on_this = if qn == 0 { m1 } else { !m1 };
-                scr.dq[i] = if on_this { -1.0 / b as f32 } else { 0.0 };
-            }
-            pass.backward(critic_p, &scr.dq, b, None, Some(&mut scr.dsa));
-            for i in 0..b {
-                for j in 0..adim {
-                    scr.da[i * adim + j] += scr.dsa[i * (o + adim) + o + j];
-                }
-            }
-        }
-        let gl = alpha / b as f32;
-        head_bwd(&scr.ls, n1, &scr.a_pol, &scr.da, gl, b, adim, &mut scr.dout);
-        actor.backward(actor_p, &scr.dout, b, Some(&mut scr.grads[..]), None);
+        // the split step runs the tower alone, so its internal gemms get
+        // the whole ops pool (row-partitioned) instead of tower concurrency
+        let (actor_loss, logp_mean, q_mean) = sac_actor_tower(
+            actor,
+            q1_pi,
+            q2_pi,
+            &mut scr.pi,
+            actor_p,
+            critic_p,
+            s,
+            n1,
+            b,
+            o,
+            adim,
+            alpha,
+            &mut scr.grads[..],
+        );
         scr.grads[la_off] += -(logp_mean + tent);
 
         let metrics = vec![
@@ -470,41 +491,42 @@ impl NativeStep {
         let la_off = layout.actor_segment("actor/log_alpha").unwrap().offset;
         let alpha = actor_p[la_off].exp();
         let (lr, gamma, tau, rs) = (hyper[0], hyper[1], hyper[2], hyper[4]);
+        let Scratch { sa, mu, ls, a_pol, logp2, tq, tq2, grads, g2, c1, c2, .. } = scr;
 
-        scr.grads.clear();
-        scr.grads.resize(layout.critic_size, 0.0);
+        grads.clear();
+        grads.resize(layout.critic_size, 0.0);
 
         let out2 = actor.forward(actor_p, s2, b);
-        copy_mu_ls(out2, b, adim, &mut scr.mu, &mut scr.ls);
-        head_fwd(&scr.mu, &scr.ls, n2, b, adim, &mut scr.a_pol, &mut scr.logp2);
-        let logp2_mean = mean(&scr.logp2);
-        concat_sa(s2, &scr.a_pol, b, o, adim, &mut scr.sa);
-        copy_into(q1.forward(targets, &scr.sa, b), &mut scr.tq);
-        copy_into(q2.forward(targets, &scr.sa, b), &mut scr.qb);
+        copy_mu_ls(out2, b, adim, mu, ls);
+        head_fwd(mu, ls, n2, b, adim, a_pol, logp2);
+        let logp2_mean = mean(logp2);
+        concat_sa(s2, a_pol, b, o, adim, sa);
+        copy_into(q1.forward(targets, sa, b), tq);
+        copy_into(q2.forward(targets, sa, b), tq2);
         for i in 0..b {
-            let qmin = scr.tq[i].min(scr.qb[i]);
-            scr.tq[i] = r[i] * rs + gamma * (1.0 - d[i]) * (qmin - alpha * scr.logp2[i]);
+            let qmin = tq[i].min(tq2[i]);
+            tq[i] = r[i] * rs + gamma * (1.0 - d[i]) * (qmin - alpha * logp2[i]);
         }
-        let tq_mean = mean(&scr.tq);
+        let tq_mean = mean(tq);
 
-        concat_sa(s, a, b, o, adim, &mut scr.sa);
-        copy_into(q1.forward(critic_p, &scr.sa, b), &mut scr.qa);
-        let q1_mean = mean(&scr.qa);
-        let mut q_loss = 0.0f32;
-        scr.dq.resize(b, 0.0);
-        for i in 0..b {
-            let e = scr.qa[i] - scr.tq[i];
-            q_loss += e * e / b as f32;
-            scr.dq[i] = 2.0 * e / b as f32;
+        // --- the two critic towers, concurrently
+        concat_sa(s, a, b, o, adim, sa);
+        let CriticScr { q: q1v, dq: dq1 } = c1;
+        let CriticScr { q: q2v, dq: dq2 } = c2;
+        g2.clear();
+        g2.resize(layout.critic_size, 0.0);
+        let sa_ro: &[f32] = sa;
+        let tq_ro: &[f32] = tq;
+        let mut loss1 = (0.0f32, 0.0f32);
+        let mut loss2 = (0.0f32, 0.0f32);
+        ops::global().join2(
+            || loss1 = critic_tower(q1, q1v, dq1, critic_p, sa_ro, tq_ro, b, &mut grads[..]),
+            || loss2 = critic_tower(q2, q2v, dq2, critic_p, sa_ro, tq_ro, b, &mut g2[..]),
+        );
+        for (gd, &x) in grads.iter_mut().zip(g2.iter()) {
+            *gd += x;
         }
-        q1.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[..]), None);
-        copy_into(q2.forward(critic_p, &scr.sa, b), &mut scr.qb);
-        for i in 0..b {
-            let e = scr.qb[i] - scr.tq[i];
-            q_loss += e * e / b as f32;
-            scr.dq[i] = 2.0 * e / b as f32;
-        }
-        q2.backward(critic_p, &scr.dq, b, Some(&mut scr.grads[..]), None);
+        let (q_loss, q1_mean) = (loss1.0 + loss2.0, loss1.1);
 
         let metrics = vec![
             q_loss, 0.0, alpha, q1_mean,
@@ -513,7 +535,7 @@ impl NativeStep {
         let mut p2 = critic_p.to_vec();
         let mut m2 = m.to_vec();
         let mut v2 = v.to_vec();
-        adam_step(&mut p2, &scr.grads, &mut m2, &mut v2, lr, step);
+        adam_step(&mut p2, grads, &mut m2, &mut v2, lr, step);
         let mut t2 = targets.to_vec();
         polyak(&p2, &mut t2, tau);
         vec![
@@ -564,6 +586,91 @@ fn concat_sa(obs: &[f32], act: &[f32], b: usize, o: usize, adim: usize, out: &mu
         out.extend_from_slice(&obs[i * o..(i + 1) * o]);
         out.extend_from_slice(&act[i * adim..(i + 1) * adim]);
     }
+}
+
+/// One critic-loss tower: forward on (s,a), squared TD error against `tq`,
+/// backward into `gout` (the shared critic gradient vector for q1, a
+/// tower-local buffer for q2 so both towers can run concurrently).
+/// Returns (q-loss contribution, mean q).
+#[allow(clippy::too_many_arguments)]
+fn critic_tower(
+    qnet: &mut MlpGrad,
+    qv: &mut Vec<f32>,
+    dq: &mut Vec<f32>,
+    critic_p: &[f32],
+    sa: &[f32],
+    tq: &[f32],
+    b: usize,
+    gout: &mut [f32],
+) -> (f32, f32) {
+    copy_into(qnet.forward(critic_p, sa, b), qv);
+    dq.resize(b, 0.0);
+    let mut ql = 0.0f32;
+    for i in 0..b {
+        let e = qv[i] - tq[i];
+        ql += e * e / b as f32;
+        dq[i] = 2.0 * e / b as f32;
+    }
+    qnet.backward(critic_p, dq, b, Some(gout), None);
+    (ql, mean(qv))
+}
+
+/// The SAC policy-loss tower: head forward, frozen-critic min-q through the
+/// dedicated `q1_pi`/`q2_pi` towers (input gradients only), head backward,
+/// actor backward into `ga` (the actor half's gradient slice).
+/// Returns (actor_loss, logp_mean, mean q1(s, a_pi)).
+#[allow(clippy::too_many_arguments)]
+fn sac_actor_tower(
+    actor: &mut MlpGrad,
+    q1_pi: &mut MlpGrad,
+    q2_pi: &mut MlpGrad,
+    pi: &mut ActorScr,
+    actor_p: &[f32],
+    critic_p: &[f32],
+    s: &[f32],
+    n1: &[f32],
+    b: usize,
+    o: usize,
+    adim: usize,
+    alpha: f32,
+    ga: &mut [f32],
+) -> (f32, f32, f32) {
+    let ActorScr { mu, ls, a_pol, logp, sa, qa, qb, dq, dsa, da, dout } = pi;
+    copy_mu_ls(actor.forward(actor_p, s, b), b, adim, mu, ls);
+    head_fwd(mu, ls, n1, b, adim, a_pol, logp);
+    let logp_mean = mean(logp);
+    concat_sa(s, a_pol, b, o, adim, sa);
+    copy_into(q1_pi.forward(critic_p, sa, b), qa);
+    let q_mean = mean(qa);
+    copy_into(q2_pi.forward(critic_p, sa, b), qb);
+    let mut actor_loss = 0.0f32;
+    da.clear();
+    da.resize(b * adim, 0.0);
+    dsa.resize(b * (o + adim), 0.0);
+    // d(-mean(min(q1pi, q2pi)))/dq through each net, then to the action
+    for (pass, qn) in [(&mut *q1_pi, 0usize), (&mut *q2_pi, 1usize)] {
+        dq.resize(b, 0.0);
+        for i in 0..b {
+            let m1 = qa[i] <= qb[i];
+            let mine = if m1 { qa[i] } else { qb[i] };
+            if qn == 0 {
+                actor_loss += (alpha * logp[i] - mine) / b as f32;
+            }
+            let on_this = if qn == 0 { m1 } else { !m1 };
+            dq[i] = if on_this { -1.0 / b as f32 } else { 0.0 };
+        }
+        pass.backward(critic_p, dq, b, None, Some(&mut dsa[..]));
+        for i in 0..b {
+            for j in 0..adim {
+                da[i * adim + j] += dsa[i * (o + adim) + o + j];
+            }
+        }
+    }
+    // chain through the tanh-gaussian head into the actor output grads
+    let gl = alpha / b as f32; // d actor_loss / d logp1 per row
+    head_bwd(ls, n1, a_pol, da, gl, b, adim, dout);
+    actor.backward(actor_p, dout, b, Some(ga), None);
+    (actor_loss, logp_mean, q_mean)
 }
 
 /// Tanh-squashed gaussian head forward — mirrors `ref.py::gaussian_head`:

@@ -1,0 +1,214 @@
+//! Integration coverage for the shared `nn::ops` kernel layer:
+//! tiled-vs-naive equivalence on ragged shapes at pool-engaging sizes,
+//! single-thread-vs-pooled bitwise determinism, FD gradient checks on a
+//! batch large enough that the pooled gemm path actually runs, and
+//! run-to-run determinism of the tower-parallel native full step.
+//!
+//! The CI matrix re-runs this whole suite (and the in-module FD tests)
+//! under `SPREEZE_THREADS=1` and `SPREEZE_THREADS=4`, so both the serial
+//! and the pooled global-pool paths are exercised.
+
+use spreeze::nn::layout::Segment;
+use spreeze::nn::{ops, MlpGrad, ThreadPool};
+use spreeze::runtime::{native_manifest, NativeStep};
+use spreeze::util::rng::Rng;
+
+fn filled(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    rng.fill_uniform(&mut v, -1.0, 1.0);
+    for i in (0..len).step_by(11) {
+        v[i] = 0.0; // exercise the ReLU-sparsity skips
+    }
+    v
+}
+
+/// Large + ragged shapes (not multiples of the 4-row tile or the part
+/// size), compared bitwise against the naive reference on a wide pool.
+#[test]
+fn pooled_tiled_kernels_match_naive_on_large_ragged_shapes() {
+    let pool = ThreadPool::new(4);
+    let mut rng = Rng::new(91);
+    for &(m, k, n) in &[(1021usize, 37usize, 63usize), (513, 127, 33), (2048, 64, 64)] {
+        let a = filled(&mut rng, m * k);
+        let w = filled(&mut rng, k * n);
+        let bias = filled(&mut rng, n);
+        let mut y1 = vec![0.0f32; m * n];
+        let mut y2 = vec![0.0f32; m * n];
+        ops::gemm_nn_bias_act(&pool, &a, &w, Some(&bias), m, k, n, &mut y1, true);
+        ops::naive::gemm_nn_bias_act(&a, &w, Some(&bias), m, k, n, &mut y2, true);
+        assert_eq!(y1, y2, "nn ({m},{k},{n})");
+
+        let mut d1 = vec![0.0f32; m * k];
+        let mut d2 = vec![0.0f32; m * k];
+        ops::gemm_nt(&pool, &y1, &w, m, n, k, &mut d1, Some(&a));
+        ops::naive::gemm_nt(&y1, &w, m, n, k, &mut d2, Some(&a));
+        assert_eq!(d1, d2, "nt ({m},{k},{n})");
+
+        let mut w1 = vec![0.0f32; k * n];
+        let mut w2 = vec![0.0f32; k * n];
+        ops::gemm_tn_acc(&pool, &a, &y1, m, k, n, &mut w1);
+        ops::naive::gemm_tn_acc(&a, &y1, m, k, n, &mut w2);
+        assert_eq!(w1, w2, "tn ({m},{k},{n})");
+    }
+}
+
+/// 1-thread pool vs 4-thread pool, repeated: row partitioning with dynamic
+/// part claiming must never change a single bit.
+#[test]
+fn pool_width_and_reruns_do_not_change_bits() {
+    let serial = ThreadPool::new(1);
+    let pooled = ThreadPool::new(4);
+    let mut rng = Rng::new(5);
+    let (m, k, n) = (777usize, 129usize, 65usize);
+    let a = filled(&mut rng, m * k);
+    let w = filled(&mut rng, k * n);
+    let mut base = vec![0.0f32; m * n];
+    ops::gemm_nn_bias_act(&serial, &a, &w, None, m, k, n, &mut base, false);
+    for round in 0..5 {
+        let mut y = vec![0.0f32; m * n];
+        ops::gemm_nn_bias_act(&pooled, &a, &w, None, m, k, n, &mut y, false);
+        assert_eq!(y, base, "round {round} diverged from the serial result");
+    }
+}
+
+fn toy_segments(ind: usize, h: usize, outd: usize) -> Vec<Segment> {
+    let shapes = [
+        ("w0", vec![ind, h]),
+        ("b0", vec![h]),
+        ("w1", vec![h, h]),
+        ("b1", vec![h]),
+        ("w2", vec![h, outd]),
+        ("b2", vec![outd]),
+    ];
+    let mut off = 0;
+    shapes
+        .into_iter()
+        .map(|(n, shape)| {
+            let s = Segment { name: format!("net/{n}"), shape, offset: off };
+            off += s.size();
+            s
+        })
+        .collect()
+}
+
+/// FD gradient check at a batch size / width where the pooled gemm path is
+/// actually engaged (48 × 64 × 64 is above the parallel thresholds), on the
+/// process-global pool — so the `SPREEZE_THREADS` CI matrix re-runs the
+/// check under both the serial and the pooled backend. Parameters are
+/// sampled (stride 13 + every bias) to keep the f64 oracle affordable.
+#[test]
+fn fd_gradients_hold_on_pool_engaging_shapes() {
+    let (ind, h, outd) = (9usize, 64usize, 2usize);
+    let segs = toy_segments(ind, h, outd);
+    let psize = segs.iter().map(|s| s.offset + s.size()).max().unwrap();
+    let mut rng = Rng::new(77);
+    let mut flat = vec![0.0f32; psize];
+    rng.fill_uniform(&mut flat, -0.4, 0.4);
+    let n = 64; // 64 rows / 524k flops in the h×h layer → above both parallel gates
+    let mut xs = vec![0.0f32; n * ind];
+    rng.fill_normal(&mut xs);
+    let mut cy = vec![0.0f32; n * outd];
+    rng.fill_uniform(&mut cy, -1.0, 1.0);
+
+    // f64 oracle: L = sum(y * cy) on the same 3-layer ReLU MLP
+    let seg = |name: &str| segs.iter().find(|s| s.name == format!("net/{name}")).unwrap();
+    let oracle = |flat: &[f32]| -> f64 {
+        let dense = |x: &[f64], ind: usize, outd: usize, wn: &str, bn: &str, relu: bool| {
+            let (w, b) = (seg(wn), seg(bn));
+            let mut y = vec![0.0f64; n * outd];
+            for r in 0..n {
+                for j in 0..outd {
+                    let mut acc = flat[b.offset + j] as f64;
+                    for i in 0..ind {
+                        acc += x[r * ind + i] * flat[w.offset + i * outd + j] as f64;
+                    }
+                    y[r * outd + j] = if relu { acc.max(0.0) } else { acc };
+                }
+            }
+            y
+        };
+        let x: Vec<f64> = xs.iter().map(|&v| v as f64).collect();
+        let h0 = dense(&x, ind, h, "w0", "b0", true);
+        let h1 = dense(&h0, h, h, "w1", "b1", true);
+        let y = dense(&h1, h, outd, "w2", "b2", false);
+        y.iter().zip(&cy).map(|(&yv, &c)| yv * c as f64).sum()
+    };
+
+    let mut mlp = MlpGrad::from_segments(&segs, "net/").unwrap();
+    mlp.forward(&flat, &xs, n);
+    let mut g = vec![0.0f32; psize];
+    mlp.backward(&flat, &cy, n, Some(&mut g), None);
+
+    let eps = 1e-3f32;
+    let biases: Vec<usize> = ["b0", "b1", "b2"]
+        .iter()
+        .flat_map(|b| {
+            let s = seg(b);
+            s.offset..s.offset + s.size()
+        })
+        .collect();
+    let sampled: Vec<usize> = (0..psize).step_by(23).chain(biases).collect();
+    let mut checked = 0;
+    for i in sampled {
+        let mut fp = flat.clone();
+        fp[i] = flat[i] + eps;
+        let lp = oracle(&fp);
+        fp[i] = flat[i] - eps;
+        let lm = oracle(&fp);
+        let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+        assert!(
+            (g[i] - fd).abs() <= 1e-2 * fd.abs().max(1.0),
+            "param {i}: analytic {} vs fd {fd}",
+            g[i]
+        );
+        checked += 1;
+    }
+    assert!(checked > 300, "sampled too few parameters: {checked}");
+}
+
+/// The tower-parallel native full step must be bitwise reproducible: same
+/// inputs → same outputs, across repeated runs of one step instance and
+/// across freshly-built instances (the q1/q2/actor towers race on wall
+/// clock, never on data).
+#[test]
+fn native_full_step_is_bitwise_deterministic() {
+    let manifest = native_manifest();
+    let bs = 256;
+    let meta = manifest.find("pendulum", "sac", "full", bs).unwrap();
+    let layout = manifest.layout("pendulum", "sac").unwrap().clone();
+    let mut rng = Rng::new(3);
+    let (params, targets) = layout.init_params(&mut rng);
+    let step_in = [1.0f32];
+    let hyper = [3e-4f32, 0.99, 0.005, -1.0, 1.0, 0.2];
+    let mut named: Vec<(String, Vec<f32>)> = Vec::new();
+    for (name, shape) in &meta.inputs {
+        let len: usize = shape.iter().product::<usize>().max(1);
+        let buf = match name.as_str() {
+            "params" => params.clone(),
+            "targets" => targets.clone(),
+            "step" => step_in.to_vec(),
+            "hyper" => hyper.to_vec(),
+            "m" | "v" => vec![0.0f32; len],
+            _ => {
+                let mut b = vec![0.0f32; len];
+                rng.fill_uniform(&mut b, -0.5, 0.5);
+                b
+            }
+        };
+        named.push((name.clone(), buf));
+    }
+    let inputs: Vec<&[f32]> = named.iter().map(|(_, b)| b.as_slice()).collect();
+
+    let mut step = NativeStep::new(layout.clone(), "full", bs).unwrap();
+    let first = step.run(meta, &inputs).unwrap();
+    for round in 0..3 {
+        let again = step.run(meta, &inputs).unwrap();
+        assert_eq!(first, again, "rerun {round} diverged");
+    }
+    let mut fresh = NativeStep::new(layout, "full", bs).unwrap();
+    let other = fresh.run(meta, &inputs).unwrap();
+    assert_eq!(first, other, "fresh instance diverged");
+    for (i, out) in first.iter().enumerate() {
+        assert!(out.iter().all(|x| x.is_finite()), "output {i} not finite");
+    }
+}
