@@ -1,0 +1,489 @@
+//! Multi-knob adaptation controller (paper §3.4, generalized).
+//!
+//! The paper adapts two knobs (SP, BS) with bespoke wiring; this module is
+//! the registry form of the same idea: a [`Controller`] owns one
+//! [`HillClimber`] per [`Knob`], consumes one [`Telemetry`] struct per
+//! adaptation window (assembled by the coordinator from `Snapshot` /
+//! `Service::stats()`), and emits [`KnobCommand`]s that the topology
+//! applies through `Service::reconfigure` / `Topology::reconfigure`.
+//!
+//! Inter-knob interaction rules:
+//!
+//! * **Signal groups.** Knobs that share a throughput signal (SP and K both
+//!   chase `sampling_hz`; BS and ops-threads both chase `update_frame_hz`)
+//!   take turns round-robin within their group, so each climber's
+//!   consecutive observations bracket its *own* last move — coordinate
+//!   descent instead of two climbers pulling on the same signal at once.
+//! * **One structural move per window.** A [`ApplyCost::Structural`] apply
+//!   (the BS executor swap) disturbs the pipeline; at most one lands per
+//!   window. A structural knob whose turn is pre-empted keeps its turn for
+//!   the next window. Cheap knobs (atomic stores: SP parking, the K cell,
+//!   the ops-threads cap) never compete for that budget.
+//! * **Cooldown after any apply.** After a window that emitted commands the
+//!   controller sits out `cooldown_windows` windows without feeding any
+//!   climber, so the next observation each climber sees is a settled
+//!   throughput, not the transient of the apply itself.
+//!
+//! Every window — command, cooldown, or idle — appends a [`WindowRecord`]
+//! to [`Controller::trace`]; the coordinator carries the trace into
+//! `RunSummary::knob_trace` and `summary.json`.
+
+use super::{HillClimber, Obs};
+
+/// The knobs the framework exposes to online adaptation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KnobId {
+    /// Active sampler workers (SP) — `SamplerPool::set_active`.
+    Samplers,
+    /// Envs per sampler worker (K) — the shared `KnobCell`, applied by
+    /// workers at tick boundaries without a respawn.
+    EnvsPerWorker,
+    /// Learner batch size (BS) — the compiled-ladder executor switch.
+    BatchSize,
+    /// `nn::ops` kernel-pool width — `ThreadPool::set_threads`.
+    OpsThreads,
+}
+
+impl KnobId {
+    pub fn name(self) -> &'static str {
+        match self {
+            KnobId::Samplers => "sp",
+            KnobId::EnvsPerWorker => "k",
+            KnobId::BatchSize => "bs",
+            KnobId::OpsThreads => "ops",
+        }
+    }
+}
+
+/// How disruptive applying a knob change is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApplyCost {
+    /// An atomic store; takes effect without disturbing the pipeline.
+    Cheap,
+    /// Swaps an executor / reshapes the learner batch; pollutes the next
+    /// window's throughput attribution and is budgeted one per window.
+    Structural,
+}
+
+/// Which telemetry pair feeds a knob's climber.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Signal {
+    /// CPU saturation vs sampling frame rate (SP, K).
+    Sampling,
+    /// Executor saturation vs update frame rate (BS).
+    UpdatePath,
+    /// CPU saturation (the kernel pool competes with samplers for cores)
+    /// vs update frame rate (ops-threads).
+    KernelPool,
+}
+
+/// Number of round-robin signal groups (`Signal::group` values).
+const N_GROUPS: usize = 2;
+
+impl Signal {
+    pub fn obs(self, t: &Telemetry) -> Obs {
+        match self {
+            Signal::Sampling => Obs { usage: t.cpu_usage, throughput: t.sampling_hz },
+            Signal::UpdatePath => Obs { usage: t.gpu_usage, throughput: t.update_frame_hz },
+            Signal::KernelPool => Obs { usage: t.cpu_usage, throughput: t.update_frame_hz },
+        }
+    }
+
+    /// Knobs sharing a throughput signal take turns within one group.
+    pub fn group(self) -> usize {
+        match self {
+            Signal::Sampling => 0,
+            Signal::UpdatePath | Signal::KernelPool => 1,
+        }
+    }
+}
+
+/// One registered knob: identity, apply-cost class, signal, climber.
+#[derive(Debug)]
+pub struct Knob {
+    pub id: KnobId,
+    pub cost: ApplyCost,
+    pub signal: Signal,
+    pub climber: HillClimber,
+}
+
+/// Per-window telemetry, assembled from `Snapshot` by the coordinator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Telemetry {
+    pub cpu_usage: f64,
+    pub gpu_usage: f64,
+    pub sampling_hz: f64,
+    pub update_hz: f64,
+    pub update_frame_hz: f64,
+}
+
+/// One knob move for the topology to apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KnobCommand {
+    pub id: KnobId,
+    pub value: usize,
+}
+
+/// One adaptation window's full record (the knob-trace row).
+#[derive(Clone, Debug)]
+pub struct WindowRecord {
+    pub t_s: f64,
+    pub telemetry: Telemetry,
+    /// True when this window was a post-apply settling window (no climber
+    /// was fed, no command could be emitted).
+    pub cooldown: bool,
+    pub commands: Vec<KnobCommand>,
+    /// Knob settings in effect after this window's commands.
+    pub settings: Vec<(KnobId, usize)>,
+}
+
+/// The knob-registry controller. See the module docs for the interaction
+/// rules it enforces.
+pub struct Controller {
+    knobs: Vec<Knob>,
+    /// Settling windows skipped after any window that emitted commands.
+    cooldown_windows: u32,
+    cooldown_left: u32,
+    /// Per-signal-group round-robin cursor.
+    cursors: [usize; N_GROUPS],
+    /// Rotates which group is served first, so a structural knob pre-empted
+    /// by the one-structural-move budget is first in line next window.
+    group_rr: usize,
+    /// Full per-window history (telemetry, decisions, settings).
+    pub trace: Vec<WindowRecord>,
+}
+
+impl Controller {
+    pub fn new(knobs: Vec<Knob>, cooldown_windows: u32) -> Controller {
+        Controller {
+            knobs,
+            cooldown_windows,
+            cooldown_left: 0,
+            cursors: [0; N_GROUPS],
+            group_rr: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.knobs.is_empty()
+    }
+
+    pub fn knobs(&self) -> &[Knob] {
+        &self.knobs
+    }
+
+    /// Current setting of a registered knob.
+    pub fn current(&self, id: KnobId) -> Option<usize> {
+        self.knobs.iter().find(|k| k.id == id).map(|k| k.climber.current())
+    }
+
+    /// All knob settings, in registry order.
+    pub fn settings(&self) -> Vec<(KnobId, usize)> {
+        self.knobs.iter().map(|k| (k.id, k.climber.current())).collect()
+    }
+
+    /// Feed one adaptation window; returns the commands to apply.
+    pub fn observe(&mut self, t_s: f64, tel: Telemetry) -> Vec<KnobCommand> {
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            self.push_record(t_s, tel, true, Vec::new());
+            return Vec::new();
+        }
+        let mut cmds: Vec<KnobCommand> = Vec::new();
+        let mut structural_used = false;
+        let first = self.group_rr;
+        self.group_rr = (self.group_rr + 1) % N_GROUPS;
+        for gi in 0..N_GROUPS {
+            let g = (first + gi) % N_GROUPS;
+            let members: Vec<usize> = self
+                .knobs
+                .iter()
+                .enumerate()
+                .filter(|(_, kn)| kn.signal.group() == g && !kn.climber.locked)
+                .map(|(i, _)| i)
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            let pick = members[self.cursors[g] % members.len()];
+            if self.knobs[pick].cost == ApplyCost::Structural && structural_used {
+                // the structural budget is spent: this knob keeps its turn
+                // (cursor not advanced) and goes first next window
+                continue;
+            }
+            self.cursors[g] += 1;
+            let kn = &mut self.knobs[pick];
+            let window_obs = kn.signal.obs(&tel);
+            let before = kn.climber.current();
+            let after = kn.climber.observe(window_obs);
+            if after != before {
+                structural_used |= kn.cost == ApplyCost::Structural;
+                cmds.push(KnobCommand { id: kn.id, value: after });
+            }
+        }
+        if !cmds.is_empty() {
+            self.cooldown_left = self.cooldown_windows;
+        }
+        self.push_record(t_s, tel, false, cmds.clone());
+        cmds
+    }
+
+    fn push_record(
+        &mut self,
+        t_s: f64,
+        telemetry: Telemetry,
+        cooldown: bool,
+        commands: Vec<KnobCommand>,
+    ) {
+        let settings = self.settings();
+        self.trace.push(WindowRecord { t_s, telemetry, cooldown, commands, settings });
+    }
+}
+
+/// Power-of-two ladder `[1, 2, 4, ...]` capped at `max`, always containing
+/// `include` (a preset/CLI start value must be a rung, not get snapped) and
+/// `max` itself. Used for the K and ops-threads ladders.
+pub fn pow2_ladder(max: usize, include: usize) -> Vec<usize> {
+    let max = max.max(1);
+    let mut v: Vec<usize> = std::iter::successors(Some(1usize), |&x| x.checked_mul(2))
+        .take_while(|&x| x <= max)
+        .collect();
+    v.push(max);
+    if include >= 1 && include <= max {
+        v.push(include);
+    }
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knob(
+        id: KnobId,
+        cost: ApplyCost,
+        signal: Signal,
+        ladder: Vec<usize>,
+        start: usize,
+        lo: f64,
+        hi: f64,
+    ) -> Knob {
+        Knob { id, cost, signal, climber: HillClimber::new(ladder, start, lo, hi) }
+    }
+
+    /// Convex update-frame-rate surface, peak at bs=1024.
+    fn up_tput(bs: usize) -> f64 {
+        bs as f64 / (1.0 + (bs as f64 / 1024.0).powi(2))
+    }
+
+    /// Convex sampling surface over total envs E = sp * k, peak at E=64.
+    fn samp_tput(envs: usize) -> f64 {
+        envs as f64 / (1.0 + (envs as f64 / 64.0).powi(2))
+    }
+
+    /// Trace invariants shared by the simulations: at most one structural
+    /// command per window, and every command window is followed by exactly
+    /// `cooldown` settling windows that emit nothing.
+    fn assert_invariants(ctl: &Controller, cooldown: u32) {
+        let mut settle_due = 0u32;
+        for (i, w) in ctl.trace.iter().enumerate() {
+            let structural = w
+                .commands
+                .iter()
+                .filter(|c| {
+                    ctl.knobs().iter().any(|k| k.id == c.id && k.cost == ApplyCost::Structural)
+                })
+                .count();
+            assert!(structural <= 1, "window {i}: {structural} structural moves");
+            if settle_due > 0 {
+                assert!(w.cooldown, "window {i}: expected cooldown");
+                assert!(w.commands.is_empty(), "window {i}: commands during cooldown");
+                settle_due -= 1;
+            } else {
+                assert!(!w.cooldown, "window {i}: unexpected cooldown");
+                if !w.commands.is_empty() {
+                    settle_due = cooldown;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bs_knob_converges_to_convex_peak() {
+        // single structural BS knob on the production bands: grows while the
+        // frame rate improves, hovers within one rung of the peak (1024)
+        let mut ctl = Controller::new(
+            vec![knob(
+                KnobId::BatchSize,
+                ApplyCost::Structural,
+                Signal::UpdatePath,
+                vec![128, 256, 512, 1024, 2048, 4096, 8192],
+                128,
+                1.0,
+                1.01,
+            )],
+            1,
+        );
+        let mut bs = 128usize;
+        for w in 0..60 {
+            let tel = Telemetry {
+                gpu_usage: 0.99,
+                update_frame_hz: up_tput(bs),
+                ..Default::default()
+            };
+            for cmd in ctl.observe(w as f64, tel) {
+                assert_eq!(cmd.id, KnobId::BatchSize);
+                bs = cmd.value;
+            }
+        }
+        assert!(
+            [512, 1024, 2048].contains(&bs),
+            "bs should hover within one rung of the 1024 peak, got {bs}"
+        );
+        assert_eq!(ctl.trace.len(), 60, "one record per window");
+        assert_invariants(&ctl, 1);
+    }
+
+    #[test]
+    fn sampling_knobs_climb_joint_convex_surface() {
+        // SP and K share the sampling signal: round-robin coordinate
+        // descent over a surface whose peak is at sp*k = 64 total envs.
+        // From E=2 the controller must climb into the peak's neighborhood.
+        let mut ctl = Controller::new(
+            vec![
+                knob(
+                    KnobId::Samplers,
+                    ApplyCost::Cheap,
+                    Signal::Sampling,
+                    (1..=16).collect(),
+                    2,
+                    0.75,
+                    0.95,
+                ),
+                knob(
+                    KnobId::EnvsPerWorker,
+                    ApplyCost::Cheap,
+                    Signal::Sampling,
+                    vec![1, 2, 4, 8, 16, 32],
+                    1,
+                    0.75,
+                    0.95,
+                ),
+            ],
+            1,
+        );
+        let (mut sp, mut k) = (2usize, 1usize);
+        let mut moved = 0;
+        for w in 0..80 {
+            let envs = sp * k;
+            let tel = Telemetry {
+                cpu_usage: (envs as f64 * 0.9 / 256.0).min(1.0),
+                sampling_hz: samp_tput(envs),
+                ..Default::default()
+            };
+            for cmd in ctl.observe(w as f64, tel) {
+                moved += 1;
+                match cmd.id {
+                    KnobId::Samplers => sp = cmd.value,
+                    KnobId::EnvsPerWorker => k = cmd.value,
+                    other => panic!("unexpected knob {other:?}"),
+                }
+            }
+        }
+        let envs = sp * k;
+        assert!(moved >= 3, "controller barely moved ({moved} commands)");
+        assert!(
+            (8..=384).contains(&envs),
+            "sp*k should settle near the 64-env peak (factor-of-a-few band), got sp={sp} k={k}"
+        );
+        assert_invariants(&ctl, 1);
+    }
+
+    #[test]
+    fn one_structural_move_per_window_with_rotation() {
+        // two structural knobs in different signal groups: the per-window
+        // structural budget admits one, and the group rotation guarantees
+        // the pre-empted knob goes first next window (no starvation).
+        let mut ctl = Controller::new(
+            vec![
+                knob(
+                    KnobId::Samplers,
+                    ApplyCost::Structural,
+                    Signal::Sampling,
+                    (1..=4).collect(),
+                    1,
+                    0.75,
+                    0.95,
+                ),
+                knob(
+                    KnobId::BatchSize,
+                    ApplyCost::Structural,
+                    Signal::UpdatePath,
+                    vec![128, 256],
+                    128,
+                    0.75,
+                    0.95,
+                ),
+            ],
+            1,
+        );
+        for w in 0..12 {
+            // both signals underused with flat throughput: both knobs want
+            // to grow every time they are fed
+            let tel = Telemetry {
+                cpu_usage: 0.2,
+                gpu_usage: 0.2,
+                sampling_hz: 100.0,
+                update_frame_hz: 100.0,
+                ..Default::default()
+            };
+            ctl.observe(w as f64, tel);
+        }
+        assert_invariants(&ctl, 1);
+        let commanded: std::collections::HashSet<KnobId> = ctl
+            .trace
+            .iter()
+            .flat_map(|w| w.commands.iter().map(|c| c.id))
+            .collect();
+        assert!(commanded.contains(&KnobId::Samplers), "sp never moved");
+        assert!(commanded.contains(&KnobId::BatchSize), "bs starved by the structural budget");
+    }
+
+    #[test]
+    fn cooldown_skips_feed_entirely() {
+        // with a 2-window cooldown, a command window is followed by exactly
+        // two settling records in which settings do not change
+        let mut ctl = Controller::new(
+            vec![knob(
+                KnobId::OpsThreads,
+                ApplyCost::Cheap,
+                Signal::KernelPool,
+                vec![1, 2, 4, 8],
+                1,
+                0.75,
+                0.95,
+            )],
+            2,
+        );
+        let tel = Telemetry { cpu_usage: 0.2, update_frame_hz: 100.0, ..Default::default() };
+        let c0 = ctl.observe(0.0, tel);
+        assert_eq!(c0.len(), 1, "first window should grow the underused knob");
+        assert!(ctl.observe(1.0, tel).is_empty());
+        assert!(ctl.observe(2.0, tel).is_empty());
+        assert!(ctl.trace[1].cooldown && ctl.trace[2].cooldown);
+        assert_eq!(ctl.trace[1].settings, ctl.trace[2].settings);
+        assert_invariants(&ctl, 2);
+    }
+
+    #[test]
+    fn pow2_ladder_includes_start_and_max() {
+        assert_eq!(pow2_ladder(64, 12), vec![1, 2, 4, 8, 12, 16, 32, 64]);
+        assert_eq!(pow2_ladder(6, 6), vec![1, 2, 4, 6]);
+        assert_eq!(pow2_ladder(1, 1), vec![1]);
+        // out-of-range include values are ignored, max is always a rung
+        assert_eq!(pow2_ladder(10, 99), vec![1, 2, 4, 8, 10]);
+    }
+}

@@ -1,15 +1,19 @@
-//! Hyperparameter adaptation (paper §3.4): tune the number of sampling
-//! processes (SP) from CPU saturation and the batch size (BS) from executor
-//! ("GPU") saturation, exploiting that both throughput responses are convex
-//! in their knob.
+//! Hyperparameter adaptation (paper §3.4): online tuning of every
+//! throughput knob the framework exposes, exploiting that each knob's
+//! throughput response is convex.
 //!
-//! SP: integer hill-climb — grow while CPU has headroom AND sampling
-//! throughput keeps improving; shrink when the CPU saturates past the
-//! target band (which starves the learner — paper Table 3 SP16 row).
-//!
-//! BS: climb a discrete ladder (the batch sizes that were AOT-compiled) —
-//! grow while the executor is saturated and update *frame* rate improves;
-//! shrink when update frequency collapses without frame-rate gain.
+//! This module holds the primitives — [`Obs`], the generic [`HillClimber`]
+//! over a discrete ladder, and the [`KnobCell`] atomic that carries a cheap
+//! knob's live value to workers. The [`controller`] submodule composes them
+//! into the multi-knob [`controller::Controller`] that `coordinator` drives:
+//! a knob registry (SP, K = `envs_per_worker`, BS, ops-threads) fed by one
+//! [`controller::Telemetry`] struct per adaptation window, emitting
+//! [`controller::KnobCommand`]s that the topology applies through
+//! `Service::reconfigure`.
+
+pub mod controller;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// One knob observation.
 #[derive(Clone, Copy, Debug)]
@@ -18,6 +22,28 @@ pub struct Obs {
     pub usage: f64,
     /// The throughput this knob maximizes (frames/s).
     pub throughput: f64,
+}
+
+/// Shared live value of a cheap knob (e.g. `envs_per_worker`): the
+/// adaptation controller stores, workers load at tick boundaries. Readers
+/// tolerate picking the new value up a tick late; release/acquire keeps the
+/// cell coherent with any flag published after it (e.g. a `set_k` followed
+/// by an unpark must never be observed unpark-first on weak memory).
+#[derive(Debug)]
+pub struct KnobCell(AtomicUsize);
+
+impl KnobCell {
+    pub fn new(v: usize) -> KnobCell {
+        KnobCell(AtomicUsize::new(v))
+    }
+
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Acquire)
+    }
+
+    pub fn set(&self, v: usize) {
+        self.0.store(v, Ordering::Release);
+    }
 }
 
 /// Generic convex hill-climber over a discrete ladder of settings.
@@ -37,12 +63,18 @@ pub struct HillClimber {
 }
 
 impl HillClimber {
+    /// `start` snaps to the **nearest** rung (the same rule as
+    /// `Manifest::nearest_batch_size`: minimum absolute distance, lower rung
+    /// on ties) — an out-of-ladder start must not silently jump to the top
+    /// of the ladder.
     pub fn new(ladder: Vec<usize>, start: usize, lo: f64, hi: f64) -> Self {
         assert!(!ladder.is_empty());
         let idx = ladder
             .iter()
-            .position(|&x| x >= start)
-            .unwrap_or(ladder.len() - 1);
+            .enumerate()
+            .min_by_key(|&(_, &x)| (x as i64 - start as i64).unsigned_abs())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
         HillClimber {
             ladder,
             idx,
@@ -111,30 +143,6 @@ impl HillClimber {
         }
         self.idx = (self.idx as i64 + dir as i64).clamp(0, self.ladder.len() as i64 - 1) as usize;
         self.current()
-    }
-}
-
-/// The two Spreeze knobs bundled (paper §3.4.2).
-#[derive(Debug)]
-pub struct Adaptation {
-    pub sp: HillClimber,
-    pub bs: HillClimber,
-}
-
-impl Adaptation {
-    /// `sp_max` = worker pool size; `bs_ladder` = AOT-compiled batch sizes.
-    pub fn new(sp_max: usize, sp_start: usize, bs_ladder: Vec<usize>, bs_start: usize) -> Self {
-        let sp_ladder: Vec<usize> = (1..=sp_max.max(1)).collect();
-        Adaptation {
-            // CPU band: the paper settles ~75% usage; >95% starves the learner
-            sp: HillClimber::new(sp_ladder, sp_start, 0.75, 0.95),
-            // BS: a busy executor is *expected* (the learner loop is
-            // update-bound); the controller climbs on update-frame-rate
-            // improvement alone and backs off on regression, never on
-            // saturation (lo=1.0 -> always "room to grow", hi>1 -> never
-            // "too saturated").
-            bs: HillClimber::new(bs_ladder, bs_start, 1.0, 1.01),
-        }
     }
 }
 
@@ -219,13 +227,34 @@ mod tests {
     }
 
     #[test]
-    fn bs_ladder_is_discrete() {
-        let mut a = Adaptation::new(8, 4, vec![128, 512, 2048, 8192], 512);
-        assert_eq!(a.bs.current(), 512);
-        // saturated executor + improving frame rate -> climb to 2048
-        a.bs.observe(Obs { usage: 0.99, throughput: 1e5 });
-        let v = a.bs.observe(Obs { usage: 0.60, throughput: 2e5 });
-        assert!(v == 2048 || v == 8192 || v == 512, "{v}");
-        assert!([128usize, 512, 2048, 8192].contains(&a.bs.current()));
+    fn start_snaps_to_nearest_rung_not_last() {
+        // 200 is nearer 128 than 512: must start at 128 (the old rule
+        // snapped to the first rung >= start, i.e. 512)
+        let hc = HillClimber::new(vec![128, 512, 2048], 200, 0.5, 0.9);
+        assert_eq!(hc.current(), 128);
+        // 1000 is nearer 512 than 2048
+        let hc = HillClimber::new(vec![128, 512, 2048], 1000, 0.5, 0.9);
+        assert_eq!(hc.current(), 512);
+        // above the top rung: clamp to the last
+        let hc = HillClimber::new(vec![128, 512, 2048], 100_000, 0.5, 0.9);
+        assert_eq!(hc.current(), 2048);
+        // below the bottom rung: clamp to the first
+        let hc = HillClimber::new(vec![128, 512, 2048], 1, 0.5, 0.9);
+        assert_eq!(hc.current(), 128);
+        // exact midpoint tie resolves to the lower rung, like
+        // Manifest::nearest_batch_size (min_by_key keeps the first minimum)
+        let hc = HillClimber::new(vec![4, 8], 6, 0.5, 0.9);
+        assert_eq!(hc.current(), 4);
+        // on-ladder start is untouched
+        let hc = HillClimber::new(vec![128, 512, 2048], 512, 0.5, 0.9);
+        assert_eq!(hc.current(), 512);
+    }
+
+    #[test]
+    fn knob_cell_roundtrips() {
+        let c = KnobCell::new(8);
+        assert_eq!(c.get(), 8);
+        c.set(2);
+        assert_eq!(c.get(), 2);
     }
 }

@@ -169,6 +169,8 @@ impl Framework for SyncFramework {
                     latest_return: topo.hub.latest_return(),
                     batch_size: topo.learner.batch_size(),
                     n_samplers: self.n_envs,
+                    envs_per_worker: 1,
+                    ops_threads: crate::nn::ops::global().threads(),
                     services: topo.service_stats(),
                 });
                 prev_sampled = now_sampled;
@@ -215,7 +217,10 @@ impl Framework for SyncFramework {
             policy_staleness: 0.0,
             batch_size: topo.learner.batch_size(),
             n_samplers: self.n_envs,
+            envs_per_worker: 1,
+            ops_threads: crate::nn::ops::global().threads(),
             service_stats,
+            knob_trace: Vec::new(),
             curve,
             snapshots,
         })

@@ -149,6 +149,17 @@ pub struct TrainConfig {
     pub hardware: HardwareProfile,
     pub model_parallel: bool,
     pub adapt: bool,
+    /// Adaptation window length in seconds (one controller observation per
+    /// window).
+    pub adapt_window_s: f64,
+    /// Settling windows the controller sits out after any knob apply, so
+    /// throughput attribution is not polluted by the apply transient.
+    pub adapt_cooldown: u32,
+    /// Comma list of knobs the controller may tune ("sp,k,bs,ops"). An
+    /// explicit `--bs`/`--sp` still disables the whole controller (the
+    /// pre-controller gate, unchanged); `--ops-threads`/`SPREEZE_THREADS`
+    /// pins just the ops knob.
+    pub adapt_knobs: String,
     pub artifacts_dir: String,
     pub run_dir: String,
     /// Print progress lines.
@@ -189,6 +200,9 @@ impl Default for TrainConfig {
             hardware: HardwareProfile::default(),
             model_parallel: false,
             adapt: true,
+            adapt_window_s: 3.0,
+            adapt_cooldown: 1,
+            adapt_knobs: "sp,k,bs,ops".into(),
             artifacts_dir: "artifacts".into(),
             run_dir: "results/run".into(),
             verbose: false,
@@ -233,6 +247,16 @@ impl TrainConfig {
         }
         self.model_parallel = a.bool_or("model-parallel", self.model_parallel)?;
         self.adapt = a.bool_or("adapt", self.adapt)?;
+        self.adapt_window_s = a.f64_or("adapt-window", self.adapt_window_s)?;
+        self.adapt_cooldown = a.u64_or("adapt-cooldown", self.adapt_cooldown as u64)? as u32;
+        self.adapt_knobs = a.str_or("adapt-knobs", &self.adapt_knobs);
+        // a typo here would otherwise silently disable adaptation (an empty
+        // knob registry maps to "controller off"): fail fast instead
+        for tok in self.adapt_knobs.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            if !matches!(tok, "sp" | "k" | "bs" | "ops") {
+                bail!("unknown --adapt-knobs entry {tok:?} (expected sp|k|bs|ops)");
+            }
+        }
         self.hardware.cpu_cores = a.usize_or("cpu-cores", self.hardware.cpu_cores)?;
         self.hardware.gpus = a.usize_or("gpus", self.hardware.gpus)?;
         self.hardware.gpu_throttle = a.f64_or("gpu-throttle", self.hardware.gpu_throttle)?;
@@ -282,6 +306,9 @@ impl TrainConfig {
             ("tau", num(self.tau)),
             ("model_parallel", Value::Bool(self.model_parallel)),
             ("adapt", Value::Bool(self.adapt)),
+            ("adapt_window_s", num(self.adapt_window_s)),
+            ("adapt_cooldown", num(self.adapt_cooldown as f64)),
+            ("adapt_knobs", s(&self.adapt_knobs)),
         ])
     }
 }
@@ -318,6 +345,37 @@ mod tests {
         assert_eq!(c.algo, Algo::Td3);
         assert_eq!(c.envs_per_worker, 8);
         assert_eq!(c.weight_transport, WeightTransport::File);
+    }
+
+    #[test]
+    fn adapt_flags_parse() {
+        let argv: Vec<String> = [
+            "--adapt-window",
+            "1.5",
+            "--adapt-cooldown",
+            "2",
+            "--adapt-knobs",
+            "sp,bs",
+        ]
+        .iter()
+        .map(|x| x.to_string())
+        .collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = TrainConfig::default();
+        assert_eq!(c.adapt_window_s, 3.0);
+        assert_eq!(c.adapt_cooldown, 1);
+        assert_eq!(c.adapt_knobs, "sp,k,bs,ops");
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.adapt_window_s, 1.5);
+        assert_eq!(c.adapt_cooldown, 2);
+        assert_eq!(c.adapt_knobs, "sp,bs");
+
+        // a typo must error, not silently disable adaptation
+        let argv: Vec<String> =
+            ["--adapt-knobs", "sp,nope"].iter().map(|x| x.to_string()).collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&a).is_err());
     }
 
     #[test]

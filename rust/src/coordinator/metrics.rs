@@ -109,6 +109,11 @@ pub struct Snapshot {
     pub latest_return: f64,
     pub batch_size: usize,
     pub n_samplers: usize,
+    /// Live envs per sampler worker (the adaptation K knob) at snapshot
+    /// time.
+    pub envs_per_worker: usize,
+    /// Effective `nn::ops` kernel-pool width (the ops-threads knob).
+    pub ops_threads: usize,
     /// Per-service `stats()` rows at snapshot time (`Service` lifecycle);
     /// not in the CSV — read them from `RunSummary::snapshots`.
     pub services: Vec<ServiceStats>,
@@ -118,12 +123,12 @@ impl Snapshot {
     pub fn csv_header() -> &'static str {
         "t_s,cpu_usage,sampling_hz,gpu_usage,update_frame_hz,update_hz,\
          transfer_cycle_s,loss_fraction,weight_cycle_s,staleness,visible,\
-         latest_return,batch_size,n_samplers"
+         latest_return,batch_size,n_samplers,envs_per_worker,ops_threads"
     }
 
     pub fn csv_row(&self) -> String {
         format!(
-            "{:.2},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4},{:.3},{:.4},{},{:.2},{},{}",
+            "{:.2},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4},{:.3},{:.4},{},{:.2},{},{},{},{}",
             self.t_s,
             self.cpu_usage,
             self.sampling_hz,
@@ -137,7 +142,9 @@ impl Snapshot {
             self.visible,
             self.latest_return,
             self.batch_size,
-            self.n_samplers
+            self.n_samplers,
+            self.envs_per_worker,
+            self.ops_threads
         )
     }
 }

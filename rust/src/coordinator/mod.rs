@@ -7,6 +7,11 @@
 //! runs on the coordinator thread; everything else is asynchronous — no
 //! component ever waits on another except through the shared-memory ring
 //! and the weight bus (paper Fig. 4b: full asynchronous parallelization).
+//!
+//! Adaptation is delegated to [`crate::adapt::controller::Controller`]: the
+//! driver loop only assembles a [`Telemetry`] struct per window and routes
+//! the returned [`KnobCommand`]s through [`topology::Topology::reconfigure`]
+//! — no per-knob special cases live here anymore.
 
 pub mod metrics;
 pub mod topology;
@@ -15,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::adapt::Obs;
+use crate::adapt::controller::{Telemetry, WindowRecord};
 use crate::config::TrainConfig;
 use crate::coordinator::metrics::{ServiceStats, Snapshot};
 use crate::coordinator::topology::{target_reached, TopologyBuilder};
@@ -48,8 +53,15 @@ pub struct RunSummary {
     pub policy_staleness: f64,
     pub batch_size: usize,
     pub n_samplers: usize,
+    /// Final live envs per sampler worker (the adaptation K knob).
+    pub envs_per_worker: usize,
+    /// Final effective `nn::ops` kernel-pool width (the ops-threads knob).
+    pub ops_threads: usize,
     /// Final per-service `Service::stats()` rows (sampled before shutdown).
     pub service_stats: Vec<ServiceStats>,
+    /// Full adaptation trace: one record per window (telemetry, commands,
+    /// settings) — empty when the controller was off.
+    pub knob_trace: Vec<WindowRecord>,
     /// Eval curve (t, return, version).
     pub curve: Vec<(f64, f64, u64)>,
     pub snapshots: Vec<Snapshot>,
@@ -70,6 +82,11 @@ impl Coordinator {
         let mut topo = TopologyBuilder::new(cfg.clone()).build()?;
         let use_mp = topo.use_mp;
         let throttle = cfg.hardware.gpu_throttle;
+        // the ops-threads knob acts on the process-global kernel pool: the
+        // guard restores the entry width on every exit path (including `?`
+        // errors and panics) so back-to-back runs in one process (harness
+        // variants, test binaries) never inherit this run's adapted width
+        let _ops_width_guard = OpsWidthGuard(crate::nn::ops::global().threads());
 
         // --- main loop
         let start = Instant::now();
@@ -79,6 +96,9 @@ impl Coordinator {
         let mut best_return = f64::NEG_INFINITY;
         let mut last_snap = Instant::now();
         let mut last_adapt = Instant::now();
+        // timestamp of the snapshot last fed to the controller: each
+        // snapshot feeds at most one window (see the adaptation tick)
+        let mut last_fed_snap_t = f64::NEG_INFINITY;
         let mut prev_sampled = topo.hub.sampled.snapshot();
         let mut prev_updates = topo.hub.updates.snapshot();
         let mut prev_upframes = topo.hub.update_frames.snapshot();
@@ -161,6 +181,8 @@ impl Coordinator {
                     latest_return: topo.hub.latest_return(),
                     batch_size: topo.learner.batch_size(),
                     n_samplers: topo.active_samplers(),
+                    envs_per_worker: topo.envs_per_worker(),
+                    ops_threads: crate::nn::ops::global().threads(),
                     services: topo.service_stats(),
                 };
                 prev_sampled = now_sampled;
@@ -191,23 +213,34 @@ impl Coordinator {
                 snapshots.push(snap);
             }
 
-            // adaptation tick (~3 s windows)
-            if topo.adapt.is_some()
-                && last_adapt.elapsed() >= Duration::from_secs(3)
-                && !snapshots.is_empty()
+            // adaptation tick: one telemetry window to the controller, its
+            // commands back through the topology (no per-knob plumbing
+            // here). Each snapshot feeds at most one window — a window
+            // shorter than the ~1 s snapshot cadence must not duplicate
+            // telemetry, or the flat repeats would strike climbers into
+            // spurious convergence locks.
+            if topo.controller.is_some()
+                && last_adapt.elapsed() >= Duration::from_secs_f64(cfg.adapt_window_s.max(0.5))
                 && topo.learner.step() > 0
             {
-                last_adapt = Instant::now();
-                let s = snapshots.last().unwrap().clone();
-                let ad = topo.adapt.as_mut().unwrap();
-                let new_sp = ad.sp.observe(Obs { usage: s.cpu_usage, throughput: s.sampling_hz });
-                if let Some(pool) = &topo.pool {
-                    pool.set_active(new_sp);
-                }
-                let new_bs =
-                    ad.bs.observe(Obs { usage: s.gpu_usage, throughput: s.update_frame_hz });
-                if new_bs != topo.learner.batch_size() {
-                    topo.learner.switch_batch_size(&topo.manifest, new_bs)?;
+                let fresh = snapshots.last().filter(|s| s.t_s > last_fed_snap_t);
+                if let Some(s) = fresh {
+                    last_fed_snap_t = s.t_s;
+                    last_adapt = Instant::now();
+                    let tel = Telemetry {
+                        cpu_usage: s.cpu_usage,
+                        gpu_usage: s.gpu_usage,
+                        sampling_hz: s.sampling_hz,
+                        update_hz: s.update_hz,
+                        update_frame_hz: s.update_frame_hz,
+                    };
+                    let cmds = topo.controller.as_mut().unwrap().observe(wall, tel);
+                    for cmd in &cmds {
+                        if cfg.verbose {
+                            println!("[{:7.1}s] adapt: {} -> {}", wall, cmd.id.name(), cmd.value);
+                        }
+                        topo.reconfigure(cmd)?;
+                    }
                 }
             }
         }
@@ -216,6 +249,15 @@ impl Coordinator {
         let wall_s = start.elapsed().as_secs_f64();
         let final_return = topo.curve.recent_mean(3).unwrap_or(f64::NAN);
         let service_stats = topo.service_stats();
+        let envs_per_worker = topo.envs_per_worker();
+        // live final values, not the last snapshot's: a command applied
+        // after the final 1 s snapshot must still agree with knob_trace
+        let n_samplers_final = topo
+            .pool
+            .as_ref()
+            .map(|p| p.active())
+            .unwrap_or_else(|| pool_active_final(&snapshots));
+        let knob_trace = topo.controller.as_ref().map(|c| c.trace.clone()).unwrap_or_default();
         topo.shutdown_services();
         let curve = topo.curve.points.lock().unwrap().clone();
 
@@ -248,8 +290,11 @@ impl Coordinator {
             weight_cycle_s: mean(&|s| s.weight_cycle_s),
             policy_staleness: mean(&|s| s.staleness),
             batch_size: topo.learner.batch_size(),
-            n_samplers: pool_active_final(&snapshots),
+            n_samplers: n_samplers_final,
+            envs_per_worker,
+            ops_threads: crate::nn::ops::global().threads(),
             service_stats,
+            knob_trace,
             curve,
             snapshots,
         };
@@ -296,6 +341,9 @@ impl Coordinator {
             ("policy_staleness", num(s.policy_staleness)),
             ("batch_size", num(s.batch_size as f64)),
             ("n_samplers", num(s.n_samplers as f64)),
+            ("envs_per_worker", num(s.envs_per_worker as f64)),
+            ("ops_threads", num(s.ops_threads as f64)),
+            ("knob_trace", knob_trace_json(&s.knob_trace)),
             (
                 "services",
                 obj(s.service_stats
@@ -314,4 +362,54 @@ impl Coordinator {
 
 fn pool_active_final(snaps: &[Snapshot]) -> usize {
     snaps.last().map(|s| s.n_samplers).unwrap_or(0)
+}
+
+/// Restores the global `nn::ops` pool width on drop — the ops-threads knob
+/// must not leak one run's adapted width into the next run in this process,
+/// on any exit path.
+struct OpsWidthGuard(usize);
+
+impl Drop for OpsWidthGuard {
+    fn drop(&mut self) {
+        crate::nn::ops::global().set_threads(self.0);
+    }
+}
+
+/// Serialize the adaptation trace for `summary.json`: one object per
+/// window with the telemetry fed to the controller, the commands it
+/// emitted, and the settings in effect afterwards.
+fn knob_trace_json(trace: &[WindowRecord]) -> crate::util::json::Value {
+    use crate::util::json::{arr, num, obj, s as js, Value};
+    arr(trace
+        .iter()
+        .map(|w| {
+            obj(vec![
+                ("t_s", num(w.t_s)),
+                ("cooldown", Value::Bool(w.cooldown)),
+                (
+                    "telemetry",
+                    obj(vec![
+                        ("cpu_usage", num(w.telemetry.cpu_usage)),
+                        ("gpu_usage", num(w.telemetry.gpu_usage)),
+                        ("sampling_hz", num(w.telemetry.sampling_hz)),
+                        ("update_hz", num(w.telemetry.update_hz)),
+                        ("update_frame_hz", num(w.telemetry.update_frame_hz)),
+                    ]),
+                ),
+                (
+                    "commands",
+                    arr(w.commands
+                        .iter()
+                        .map(|c| {
+                            obj(vec![("knob", js(c.id.name())), ("value", num(c.value as f64))])
+                        })
+                        .collect()),
+                ),
+                (
+                    "settings",
+                    obj(w.settings.iter().map(|(id, v)| (id.name(), num(*v as f64))).collect()),
+                ),
+            ])
+        })
+        .collect())
 }

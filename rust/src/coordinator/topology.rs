@@ -14,7 +14,10 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::adapt::Adaptation;
+use crate::adapt::controller::{
+    pow2_ladder, ApplyCost, Controller, Knob, KnobCommand, KnobId, Signal,
+};
+use crate::adapt::HillClimber;
 use crate::bus::{make_bus, PolicyPub};
 use crate::config::{TrainConfig, Transport};
 use crate::coordinator::metrics::{MetricsHub, ServiceStats};
@@ -46,6 +49,13 @@ pub trait Service {
     fn stats(&self) -> Vec<(&'static str, f64)> {
         Vec::new()
     }
+
+    /// Apply a live knob command from the adaptation controller; returns
+    /// true when this service owns the knob and handled it. Default: not
+    /// this service's knob.
+    fn reconfigure(&self, _cmd: &KnobCommand) -> bool {
+        false
+    }
 }
 
 impl Service for SamplerPool {
@@ -62,7 +72,28 @@ impl Service for SamplerPool {
     }
 
     fn stats(&self) -> Vec<(&'static str, f64)> {
-        vec![("active", self.active() as f64), ("max_workers", self.max_workers as f64)]
+        vec![
+            ("active", self.active() as f64),
+            ("max_workers", self.max_workers as f64),
+            ("envs_per_worker", self.envs_per_worker() as f64),
+            // constant for the life of the pool: knob applies never respawn
+            // workers (asserted by the e2e adaptation smoke)
+            ("workers_spawned", self.workers_spawned() as f64),
+        ]
+    }
+
+    fn reconfigure(&self, cmd: &KnobCommand) -> bool {
+        match cmd.id {
+            KnobId::Samplers => {
+                self.set_active(cmd.value);
+                true
+            }
+            KnobId::EnvsPerWorker => {
+                self.set_envs_per_worker(cmd.value);
+                true
+            }
+            _ => false,
+        }
     }
 }
 
@@ -360,13 +391,19 @@ impl TopologyBuilder {
             None
         };
 
-        // --- adaptation (disabled under explicit knobs, as before)
+        // --- adaptation (disabled under explicit BS/SP knobs, as before;
+        // individual knobs the config pins are excluded from the registry)
         let adapt_on = self.adapt.unwrap_or(cfg.adapt)
             && self.batch_size.is_none()
             && cfg.batch_size == 0
             && cfg.n_samplers == 0;
-        let adapt = if adapt_on {
-            Some(Adaptation::new(max_workers, sp0, ladder.clone(), bs0))
+        let controller = if adapt_on {
+            let c = default_controller(&cfg, pool.is_some(), max_workers, sp0, &ladder, bs0);
+            if c.is_empty() {
+                None
+            } else {
+                Some(c)
+            }
         } else {
             None
         };
@@ -384,7 +421,7 @@ impl TopologyBuilder {
             pool,
             eval,
             viz,
-            adapt,
+            controller,
             ladder,
             use_mp,
             max_workers,
@@ -394,6 +431,76 @@ impl TopologyBuilder {
         topo.publish_policy()?;
         Ok(topo)
     }
+}
+
+/// Assemble the default knob registry (paper §3.4, generalized): every
+/// throughput knob the config does not pin, with ladders sized to this
+/// topology. `cfg.adapt_knobs` ("sp,k,bs,ops") selects which knobs may
+/// register at all.
+fn default_controller(
+    cfg: &TrainConfig,
+    have_pool: bool,
+    max_workers: usize,
+    sp0: usize,
+    bs_ladder: &[usize],
+    bs0: usize,
+) -> Controller {
+    let on = |name: &str| cfg.adapt_knobs.split(',').any(|s| s.trim() == name);
+    let mut knobs = Vec::new();
+    if have_pool && on("sp") {
+        knobs.push(Knob {
+            id: KnobId::Samplers,
+            cost: ApplyCost::Cheap,
+            signal: Signal::Sampling,
+            // CPU band: the paper settles ~75% usage; >95% starves the learner
+            climber: HillClimber::new((1..=max_workers.max(1)).collect(), sp0, 0.75, 0.95),
+        });
+    }
+    if have_pool && on("k") {
+        // K rides the same CPU/sampling signal as SP but scales batching
+        // per worker instead of workers; the pow2 ladder always contains
+        // the preset/CLI start (the cap stretches to it when a config
+        // exceeds 64) so enabling adaptation never moves K by itself.
+        let k0 = cfg.envs_per_worker.max(1);
+        knobs.push(Knob {
+            id: KnobId::EnvsPerWorker,
+            cost: ApplyCost::Cheap,
+            signal: Signal::Sampling,
+            climber: HillClimber::new(pow2_ladder(64.max(k0), k0), k0, 0.75, 0.95),
+        });
+    }
+    if on("bs") && !bs_ladder.is_empty() {
+        knobs.push(Knob {
+            id: KnobId::BatchSize,
+            cost: ApplyCost::Structural,
+            signal: Signal::UpdatePath,
+            // a busy executor is *expected* (the learner loop is
+            // update-bound); the controller climbs on update-frame-rate
+            // improvement alone and backs off on regression, never on
+            // saturation (lo=1.0 -> always "room to grow", hi>1 -> never
+            // "too saturated").
+            climber: HillClimber::new(bs_ladder.to_vec(), bs0, 1.0, 1.01),
+        });
+    }
+    // ops-threads: only when neither SPREEZE_THREADS nor the config pinned
+    // the pool width (both are explicit operator choices)
+    if on("ops") && cfg.ops_threads == 0 && std::env::var("SPREEZE_THREADS").is_err() {
+        let pool = crate::nn::ops::global();
+        if pool.max_threads() > 1 {
+            knobs.push(Knob {
+                id: KnobId::OpsThreads,
+                cost: ApplyCost::Cheap,
+                signal: Signal::KernelPool,
+                climber: HillClimber::new(
+                    pow2_ladder(pool.max_threads(), pool.threads()),
+                    pool.threads(),
+                    0.75,
+                    0.95,
+                ),
+            });
+        }
+    }
+    Controller::new(knobs, cfg.adapt_cooldown)
 }
 
 /// The assembled training graph plus everything the driver loop needs.
@@ -409,7 +516,9 @@ pub struct Topology {
     pub pool: Option<SamplerPool>,
     pub eval: Option<EvalWorker>,
     pub viz: Option<VizWorker>,
-    pub adapt: Option<Adaptation>,
+    /// Multi-knob adaptation controller (None when adaptation is off or
+    /// every knob is pinned).
+    pub controller: Option<Controller>,
     /// Compiled batch-size ladder for BS adaptation.
     pub ladder: Vec<usize>,
     pub use_mp: bool,
@@ -430,6 +539,37 @@ impl Topology {
     /// Active sampler workers (0 when the pool was not spawned).
     pub fn active_samplers(&self) -> usize {
         self.pool.as_ref().map(|p| p.active()).unwrap_or(0)
+    }
+
+    /// Live envs per sampler worker (the K knob's shared cell when the
+    /// pool exists, else the configured value).
+    pub fn envs_per_worker(&self) -> usize {
+        self.pool
+            .as_ref()
+            .map(|p| p.envs_per_worker())
+            .unwrap_or_else(|| self.cfg.envs_per_worker.max(1))
+    }
+
+    /// Apply one adaptation command through the topology — the single
+    /// reconfiguration path for every knob, replacing the coordinator's
+    /// old per-knob special cases. Sampler-side knobs route through
+    /// [`Service::reconfigure`]; the learner keeps its BS-ladder executor
+    /// switch; the kernel pool resizes in place.
+    pub fn reconfigure(&mut self, cmd: &KnobCommand) -> Result<()> {
+        match cmd.id {
+            KnobId::BatchSize => {
+                if cmd.value != self.learner.batch_size() {
+                    self.learner.switch_batch_size(&self.manifest, cmd.value)?;
+                }
+            }
+            KnobId::OpsThreads => crate::nn::ops::global().set_threads(cmd.value),
+            KnobId::Samplers | KnobId::EnvsPerWorker => {
+                if let Some(p) = &self.pool {
+                    Service::reconfigure(p, cmd);
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Per-service `Service::stats()` samples for every live service, as
@@ -499,6 +639,62 @@ mod tests {
         assert_eq!(target_reached(Some(-200.0), Some(-150.0), 7.5), Some(7.5));
         // negative targets behave the same (pendulum)
         assert_eq!(target_reached(Some(-200.0), Some(-250.0), 7.5), None);
+    }
+
+    /// With no pinned knobs the builder registers the multi-knob controller
+    /// and every command routes through the topology's reconfigure path —
+    /// the sampler-side knobs land on the pool via `Service::reconfigure`.
+    #[test]
+    fn controller_registers_and_reconfigures_through_services() {
+        std::env::set_var("SPREEZE_BACKEND", "native");
+        let mut cfg = TrainConfig::default();
+        cfg.env = "pendulum".into();
+        cfg.hardware.cpu_cores = 2;
+        cfg.envs_per_worker = 4;
+        let run_dir =
+            std::env::temp_dir().join(format!("spreeze-topo-ctl-test-{}", std::process::id()));
+        cfg.run_dir = run_dir.to_string_lossy().into_owned();
+        let mut topo = TopologyBuilder::new(cfg).build().unwrap();
+        {
+            let ctl = topo.controller.as_ref().expect("controller on by default");
+            assert!(ctl.current(KnobId::Samplers).is_some(), "sp knob registered");
+            assert_eq!(
+                ctl.current(KnobId::EnvsPerWorker),
+                Some(4),
+                "K knob starts at the configured value (a pow2 ladder rung is added for it)"
+            );
+            assert!(ctl.current(KnobId::BatchSize).is_some(), "bs knob registered");
+        }
+        topo.reconfigure(&KnobCommand { id: KnobId::EnvsPerWorker, value: 8 }).unwrap();
+        assert_eq!(topo.pool.as_ref().unwrap().envs_per_worker(), 8);
+        assert_eq!(topo.envs_per_worker(), 8);
+        topo.reconfigure(&KnobCommand { id: KnobId::Samplers, value: 1 }).unwrap();
+        assert_eq!(topo.active_samplers(), 1);
+        // pool stats surface the live knob values for snapshots
+        let stats = topo.pool.as_ref().unwrap().stats();
+        assert!(stats.iter().any(|(k, v)| *k == "envs_per_worker" && *v == 8.0));
+        assert!(stats.iter().any(|(k, v)| *k == "workers_spawned" && *v >= 1.0));
+        topo.shutdown_services();
+        let _ = std::fs::remove_dir_all(run_dir);
+    }
+
+    /// Pinning BS/SP (explicit knobs) disables the controller entirely, as
+    /// the pre-controller adaptation gate did.
+    #[test]
+    fn pinned_knobs_disable_the_controller() {
+        std::env::set_var("SPREEZE_BACKEND", "native");
+        let mut cfg = TrainConfig::default();
+        cfg.env = "pendulum".into();
+        cfg.batch_size = 64;
+        cfg.n_samplers = 1;
+        cfg.hardware.cpu_cores = 2;
+        let run_dir =
+            std::env::temp_dir().join(format!("spreeze-topo-pin-test-{}", std::process::id()));
+        cfg.run_dir = run_dir.to_string_lossy().into_owned();
+        let mut topo = TopologyBuilder::new(cfg).build().unwrap();
+        assert!(topo.controller.is_none());
+        topo.shutdown_services();
+        let _ = std::fs::remove_dir_all(run_dir);
     }
 
     /// The builder assembles a full native-backend topology and tears it

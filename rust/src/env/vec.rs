@@ -7,6 +7,8 @@
 //! driven by a sampler worker consumes exactly the same stream as the old
 //! scalar loop — the batched/scalar equivalence tests rely on this.
 
+use anyhow::Result;
+
 use super::{Env, StepOut};
 use crate::util::rng::Rng;
 
@@ -51,6 +53,39 @@ impl VecEnv {
 
     pub fn len(&self) -> usize {
         self.envs.len()
+    }
+
+    /// Hot-resize to `k` envs (the adaptation controller's K knob, applied
+    /// by sampler workers at tick boundaries). The first `min(old, k)` rows
+    /// keep their env state, observations, and in-progress returns —
+    /// surviving episodes continue exactly where they left off. Shrinking
+    /// drops the tail rows (their partial episodes go unreported, like a
+    /// parked worker's); growing appends fresh envs reset from `rng`.
+    pub fn resize(
+        &mut self,
+        k: usize,
+        rng: &mut Rng,
+        mut mk: impl FnMut() -> Result<Box<dyn Env>>,
+    ) -> Result<()> {
+        let k = k.max(1);
+        let od = self.obs_dim;
+        if k <= self.envs.len() {
+            self.envs.truncate(k);
+            self.returns.truncate(k);
+            self.obs.truncate(k * od);
+            self.last_obs.truncate(k * od);
+        } else {
+            while self.envs.len() < k {
+                let mut e = mk()?;
+                let i = self.envs.len();
+                self.obs.resize((i + 1) * od, 0.0);
+                e.reset(rng, &mut self.obs[i * od..(i + 1) * od]);
+                self.last_obs.extend_from_slice(&self.obs[i * od..(i + 1) * od]);
+                self.envs.push(e);
+                self.returns.push(0.0);
+            }
+        }
+        Ok(())
     }
 
     pub fn is_empty(&self) -> bool {
@@ -129,6 +164,49 @@ mod tests {
                 "row {i}: reset obs should differ from the terminal obs"
             );
         }
+    }
+
+    #[test]
+    fn resize_preserves_surviving_rows_and_resets_new_ones() {
+        let envs: Vec<Box<dyn Env>> = (0..2).map(|_| Box::new(Pendulum::new()) as _).collect();
+        let mut rng = Rng::new(11);
+        let mut v = VecEnv::new(envs, &mut rng);
+        let mut outs = vec![StepOut::default(); 2];
+        let actions2 = vec![0.3f32; 2 * v.act_dim];
+        for _ in 0..10 {
+            v.step(&actions2, &mut rng, &mut outs);
+        }
+        let row0: Vec<f32> = v.obs[..v.obs_dim].to_vec();
+        let row1: Vec<f32> = v.obs[v.obs_dim..2 * v.obs_dim].to_vec();
+
+        // grow 2 -> 4: rows 0/1 untouched, rows 2/3 freshly reset
+        v.resize(4, &mut rng, || Ok(Box::new(Pendulum::new()) as Box<dyn Env>)).unwrap();
+        assert_eq!(v.len(), 4);
+        assert_eq!(&v.obs[..v.obs_dim], &row0[..]);
+        assert_eq!(&v.obs[v.obs_dim..2 * v.obs_dim], &row1[..]);
+        assert_eq!(v.obs.len(), 4 * v.obs_dim);
+        assert_eq!(v.last_obs.len(), 4 * v.obs_dim);
+        assert!(v.obs.iter().all(|x| x.is_finite()));
+
+        // the resized batch steps normally
+        let actions4 = vec![0.3f32; 4 * v.act_dim];
+        let mut outs4 = vec![StepOut::default(); 4];
+        v.step(&actions4, &mut rng, &mut outs4);
+
+        // shrink 4 -> 1: row 0 keeps its (stepped) state
+        let row0b: Vec<f32> = v.obs[..v.obs_dim].to_vec();
+        v.resize(1, &mut rng, || Ok(Box::new(Pendulum::new()) as Box<dyn Env>)).unwrap();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v.obs, row0b);
+        assert_eq!(v.last_obs.len(), v.obs_dim);
+
+        // a surviving episode's return keeps accumulating across resizes
+        let actions1 = vec![0.3f32; v.act_dim];
+        let mut outs1 = vec![StepOut::default(); 1];
+        for _ in 0..200 {
+            v.step(&actions1, &mut rng, &mut outs1);
+        }
+        assert_eq!(v.finished.len(), 1, "row 0's episode should have completed");
     }
 
     #[test]

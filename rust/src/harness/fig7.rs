@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use super::{write_curve, HarnessOpts};
+use super::{knob_trace_digest, write_curve, write_knob_trace, HarnessOpts};
 use crate::config::presets;
 use crate::coordinator::{Coordinator, RunSummary};
 use crate::runtime::{default_artifacts_dir, Manifest};
@@ -36,6 +36,10 @@ pub fn run(opts: &HarnessOpts) -> Result<()> {
 
     println!("== Fig 7a: batch size sweep (walker, ladder {ladder:?}) ==");
     let mut a = vec![("auto".to_string(), one("auto", 0, 0, true)?)];
+    // the "auto" row replays the same multi-knob controller Coordinator
+    // drives in training; its flight recording is the figure's baseline
+    println!("   auto adaptation: {}", knob_trace_digest(&a[0].1));
+    write_knob_trace(&dir.join("fig7_auto_knob_trace.csv"), &a[0].1)?;
     for &bs in &ladder {
         a.push((format!("bs{bs}"), one(&format!("bs{bs}"), bs, 0, false)?));
     }

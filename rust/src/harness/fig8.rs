@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use super::{write_curve, HarnessOpts};
+use super::{knob_trace_digest, write_curve, write_knob_trace, HarnessOpts};
 use crate::config::presets;
 use crate::config::{Algo, HardwareProfile};
 use crate::coordinator::{Coordinator, RunSummary};
@@ -47,10 +47,14 @@ pub fn run(opts: &HarnessOpts, part: &str) -> Result<()> {
                         .to_string_lossy()
                         .into_owned();
                     let s = Coordinator::new(cfg).run()?;
+                    // the per-device knobs are whatever the shared controller
+                    // picked for this profile — the figure's whole point
                     println!(
-                        "   {label:10} final {:8.1}  adapted bs={} sp={}",
-                        s.final_return, s.batch_size, s.n_samplers
+                        "   {label:10} final {:8.1}  adapted bs={} sp={} k={} ops={}",
+                        s.final_return, s.batch_size, s.n_samplers, s.envs_per_worker, s.ops_threads
                     );
+                    println!("   {label:10} trace: {}", knob_trace_digest(&s));
+                    write_knob_trace(&dir.join(format!("fig8a_{label}_knob_trace.csv")), &s)?;
                     out.push((label.to_string(), s));
                 }
                 let refs: Vec<(String, &RunSummary)> =

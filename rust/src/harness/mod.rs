@@ -65,3 +65,57 @@ pub fn write_curve(path: &std::path::Path, runs: &[(String, &RunSummary)]) -> Re
 pub fn pm(xs: &[f64]) -> String {
     format!("{:.1} ± {:.1}", crate::util::stats::mean(xs), crate::util::stats::std(xs))
 }
+
+/// Write one run's adaptation trace as CSV: per window the telemetry fed to
+/// the controller, the live settings, and the commands it emitted. The
+/// harnesses replay the *same* controller `Coordinator::run` drives — this
+/// is its flight recording, the artifact behind the fig7/fig8 "auto" rows.
+pub fn write_knob_trace(path: &std::path::Path, r: &RunSummary) -> Result<()> {
+    use crate::adapt::controller::KnobId;
+    let mut out = String::from(
+        "window,t_s,cooldown,cpu_usage,gpu_usage,sampling_hz,update_hz,\
+         update_frame_hz,sp,k,bs,ops,commands\n",
+    );
+    for (i, w) in r.knob_trace.iter().enumerate() {
+        let setting = |id: KnobId| {
+            w.settings
+                .iter()
+                .find(|(k, _)| *k == id)
+                .map(|(_, v)| v.to_string())
+                .unwrap_or_default()
+        };
+        let cmds: Vec<String> =
+            w.commands.iter().map(|c| format!("{}:{}", c.id.name(), c.value)).collect();
+        out.push_str(&format!(
+            "{i},{:.2},{},{:.3},{:.3},{:.1},{:.2},{:.1},{},{},{},{},{}\n",
+            w.t_s,
+            w.cooldown,
+            w.telemetry.cpu_usage,
+            w.telemetry.gpu_usage,
+            w.telemetry.sampling_hz,
+            w.telemetry.update_hz,
+            w.telemetry.update_frame_hz,
+            setting(KnobId::Samplers),
+            setting(KnobId::EnvsPerWorker),
+            setting(KnobId::BatchSize),
+            setting(KnobId::OpsThreads),
+            cmds.join(" ")
+        ));
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// One-line knob-trace digest for harness stdout.
+pub fn knob_trace_digest(r: &RunSummary) -> String {
+    let moves: usize = r.knob_trace.iter().map(|w| w.commands.len()).sum();
+    format!(
+        "{} windows, {} moves, final sp={} k={} bs={} ops={}",
+        r.knob_trace.len(),
+        moves,
+        r.n_samplers,
+        r.envs_per_worker,
+        r.batch_size,
+        r.ops_threads
+    )
+}

@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use super::HarnessOpts;
+use super::{knob_trace_digest, write_knob_trace, HarnessOpts};
 use crate::config::presets;
 use crate::config::Transport;
 use crate::coordinator::Coordinator;
@@ -15,19 +15,34 @@ struct Variant {
     bs: usize,
     sp: usize,
     transport: Transport,
+    /// The adaptive row replays the real multi-knob controller instead of a
+    /// hand-pinned "auto" setting; fixed rows pin their knobs as before.
+    adapt: bool,
 }
 
 fn variants() -> Vec<Variant> {
     use Transport::*;
     vec![
-        Variant { label: "Spreeze (auto ~8192)", bs: 8192, sp: 0, transport: Shm },
-        Variant { label: "Spreeze-BS32768", bs: 32768, sp: 0, transport: Shm },
-        Variant { label: "Spreeze-BS128", bs: 128, sp: 0, transport: Shm },
-        Variant { label: "Spreeze-SP16", bs: 8192, sp: 16, transport: Shm },
-        Variant { label: "Spreeze-SP2", bs: 8192, sp: 2, transport: Shm },
-        Variant { label: "Spreeze-QS5000", bs: 8192, sp: 0, transport: Queue(5_000) },
-        Variant { label: "Spreeze-QS20000", bs: 8192, sp: 0, transport: Queue(20_000) },
-        Variant { label: "Spreeze-QS50000", bs: 8192, sp: 0, transport: Queue(50_000) },
+        Variant { label: "Spreeze (adaptive)", bs: 0, sp: 0, transport: Shm, adapt: true },
+        Variant { label: "Spreeze-BS32768", bs: 32768, sp: 0, transport: Shm, adapt: false },
+        Variant { label: "Spreeze-BS128", bs: 128, sp: 0, transport: Shm, adapt: false },
+        Variant { label: "Spreeze-SP16", bs: 8192, sp: 16, transport: Shm, adapt: false },
+        Variant { label: "Spreeze-SP2", bs: 8192, sp: 2, transport: Shm, adapt: false },
+        Variant { label: "Spreeze-QS5000", bs: 8192, sp: 0, transport: Queue(5_000), adapt: false },
+        Variant {
+            label: "Spreeze-QS20000",
+            bs: 8192,
+            sp: 0,
+            transport: Queue(20_000),
+            adapt: false,
+        },
+        Variant {
+            label: "Spreeze-QS50000",
+            bs: 8192,
+            sp: 0,
+            transport: Queue(50_000),
+            adapt: false,
+        },
     ]
 }
 
@@ -54,7 +69,7 @@ pub fn run(opts: &HarnessOpts) -> Result<()> {
         cfg.batch_size = v.bs;
         cfg.n_samplers = v.sp;
         cfg.transport = v.transport;
-        cfg.adapt = false;
+        cfg.adapt = v.adapt;
         cfg.verbose = opts.verbose;
         cfg.run_dir = opts
             .out_dir
@@ -63,6 +78,10 @@ pub fn run(opts: &HarnessOpts) -> Result<()> {
             .to_string_lossy()
             .into_owned();
         let s = Coordinator::new(cfg).run()?;
+        if v.adapt {
+            println!("   (adaptive trace: {})", knob_trace_digest(&s));
+            write_knob_trace(&dir.join("table3_adaptive_knob_trace.csv"), &s)?;
+        }
         println!(
             "{:<22} {:>5.0}% {:>11.0} {:>5.0}% {:>13.3e} {:>8.1} {:>9.2} {:>6.1}% {:>8.2} {:>6.1}%",
             v.label,

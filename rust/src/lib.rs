@@ -19,8 +19,11 @@
 //!   the SSD checkpoint of [`nn::checkpoint`] is demoted to a pluggable
 //!   persistence sink / `--weight-transport file` fallback); an **eval**
 //!   worker draws the return curve and a **viz** worker traces rollouts.
-//! * The **adaptation controller** ([`adapt`]) tunes batch size and sampler
-//!   count from hardware saturation, as in paper §3.4.
+//! * The **adaptation controller** ([`adapt::controller`]) tunes every
+//!   throughput knob online from live service telemetry — sampler count
+//!   (SP), envs per worker (K), batch size (BS), and the kernel-pool width
+//!   (ops-threads) — generalizing paper §3.4's two-knob scheme into a knob
+//!   registry whose commands act through `Service::reconfigure`.
 //! * [`baselines`] implements the comparison architectures (queue transport,
 //!   APE-X-like, synchronous) for Tables 1–2, and [`harness`] regenerates
 //!   every table and figure of the paper's evaluation.

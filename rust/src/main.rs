@@ -149,6 +149,9 @@ COMMANDS
              --model-parallel true  --gpus N  --gpu-throttle F
              --cpu-cores N  --seed N  --max-seconds S  --max-updates N
              --target-return R  --adapt true|false  --verbose true
+             --adapt-window S (adaptation window seconds; default 3)
+             --adapt-cooldown N (settling windows after a knob apply; default 1)
+             --adapt-knobs sp,k,bs,ops (knobs the controller may tune)
   table1   time-to-solve matrix            [--budget S] [--seeds 0,1,2] [--env e1,e2]
   table2   hardware usage & throughput     [--budget S]
   table3   hyperparameter impact           [--budget S]

@@ -101,9 +101,20 @@ struct Shared {
 /// write disjoint data (the kernels partition output rows). Re-entrant or
 /// concurrent `run` calls execute serially on their own thread — by design,
 /// never an error or a deadlock.
+///
+/// The pool is **resizable in place** ([`ThreadPool::set_threads`], the
+/// adaptation controller's ops-threads knob): worker threads are created
+/// once at construction ([`ThreadPool::max_threads`] lanes) and never
+/// respawned; shrinking just caps how many lanes a `run` call recruits
+/// (width-1 wakeups + the caller). A worker still draining a previous job
+/// may transiently join one more job past a shrink — harmless, because
+/// results are bitwise independent of how many lanes execute the parts.
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    threads: usize,
+    /// Lanes created at construction (worker threads + the caller).
+    lanes: usize,
+    /// Effective lanes a `run` call recruits (`<= lanes`).
+    active: AtomicUsize,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -128,11 +139,25 @@ impl ThreadPool {
                     .expect("spawn nn::ops worker"),
             );
         }
-        ThreadPool { shared, threads, handles }
+        ThreadPool { shared, lanes: threads, active: AtomicUsize::new(threads), handles }
     }
 
+    /// Effective lanes (the live ops-threads setting).
     pub fn threads(&self) -> usize {
-        self.threads
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// Lanes created at construction — the ceiling for [`Self::set_threads`]
+    /// and the top rung of the ops-threads adaptation ladder.
+    pub fn max_threads(&self) -> usize {
+        self.lanes
+    }
+
+    /// Resize the pool in place to `n` effective lanes (clamped to
+    /// `1..=max_threads`). No threads are spawned or joined; in-flight
+    /// `run` calls are unaffected.
+    pub fn set_threads(&self, n: usize) {
+        self.active.store(n.clamp(1, self.lanes), Ordering::Relaxed);
     }
 
     /// Run `f(part)` for every `part in 0..nparts`, possibly in parallel.
@@ -141,7 +166,8 @@ impl ThreadPool {
         if nparts == 0 {
             return;
         }
-        if self.threads <= 1
+        let width = self.threads();
+        if width <= 1
             || nparts == 1
             || self
                 .shared
@@ -172,8 +198,9 @@ impl ThreadPool {
             g.job = Some(job.clone());
         }
         // bounded wake: a 3-part tower job on a wide pool must not stampede
-        // every parked worker (non-parked workers re-check seq on their own)
-        for _ in 0..(nparts - 1).min(self.threads - 1) {
+        // every parked worker (non-parked workers re-check seq on their own),
+        // and a shrunk pool recruits only its effective width
+        for _ in 0..(nparts - 1).min(width - 1) {
             self.shared.start.notify_one();
         }
         // the guard waits out the job and releases the latch even if the
@@ -901,6 +928,32 @@ mod tests {
         for (i, c) in counts.iter().enumerate() {
             assert_eq!(c.load(Ordering::Relaxed), 50, "part {i}");
         }
+    }
+
+    #[test]
+    fn pool_resizes_in_place_without_respawn() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        assert_eq!(pool.max_threads(), 4);
+        let hits = AtomicUsize::new(0);
+        // shrink to serial: every part still runs exactly once
+        pool.set_threads(1);
+        assert_eq!(pool.threads(), 1);
+        pool.run(8, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+        // grow requests clamp to the lanes created at construction
+        pool.set_threads(64);
+        assert_eq!(pool.threads(), 4);
+        pool.run(8, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+        // zero clamps to 1 (the pool can never disappear)
+        pool.set_threads(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.max_threads(), 4);
     }
 
     #[test]

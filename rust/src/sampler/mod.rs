@@ -12,10 +12,19 @@
 //! file` (paper §3.3.1 as written). K = 1 reproduces the scalar hot path
 //! frame-for-frame (tested below).
 //!
-//! The pool supports *live resizing*: `set_active(n)` parks workers above
-//! index `n` (the adaptation controller's SP knob, and the Fig. 6b CPU-limit
-//! ablation). Parking operates on whole workers, so the SP knob's semantics
-//! are unchanged by batching — it scales sampling in units of K envs.
+//! The pool supports *live resizing* on two axes:
+//!
+//! * `set_active(n)` parks workers above index `n` (the adaptation
+//!   controller's SP knob, and the Fig. 6b CPU-limit ablation). Parking
+//!   operates on whole workers, so the SP knob's semantics are unchanged by
+//!   batching — it scales sampling in units of K envs.
+//! * `set_envs_per_worker(k)` writes the shared [`KnobCell`] every worker
+//!   reads at its tick boundary (the controller's K knob). A worker applies
+//!   the change between ticks — never mid-reservation, so in-flight ring
+//!   pushes stay intact — by resizing its `VecEnv` batch in place:
+//!   surviving env rows continue their episodes, new rows reset fresh, and
+//!   no worker thread is ever respawned. Presets, the CLI, and adaptation
+//!   all act on the same cell, so the live K is one value, not three.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -23,6 +32,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::adapt::KnobCell;
 use crate::bus::{PolicyPub, PolicySub};
 use crate::config::TrainConfig;
 use crate::coordinator::metrics::MetricsHub;
@@ -36,7 +46,12 @@ use crate::util::rng::Rng;
 pub struct SamplerPool {
     stop: Arc<AtomicBool>,
     active: Arc<AtomicUsize>,
+    /// Live `envs_per_worker` (K) knob, shared with every worker.
+    envs_per_worker: Arc<KnobCell>,
     handles: Vec<JoinHandle<()>>,
+    /// Worker threads created at spawn — never respawned (K changes apply
+    /// in place), so this equals `max_workers` for the life of the pool.
+    spawned: usize,
     pub max_workers: usize,
 }
 
@@ -48,6 +63,8 @@ struct WorkerCtx {
     hub: Arc<MetricsHub>,
     stop: Arc<AtomicBool>,
     active: Arc<AtomicUsize>,
+    /// Live K value, read once per tick at the tick boundary.
+    k_cell: Arc<KnobCell>,
     /// This worker's private cursor on the weight bus.
     sub: Box<dyn PolicySub>,
 }
@@ -66,6 +83,7 @@ impl SamplerPool {
     ) -> Result<SamplerPool> {
         let stop = Arc::new(AtomicBool::new(false));
         let active = Arc::new(AtomicUsize::new(initial_active.min(max_workers)));
+        let envs_per_worker = Arc::new(KnobCell::new(cfg.envs_per_worker.max(1)));
         let mut handles = Vec::new();
         for id in 0..max_workers {
             let ctx = WorkerCtx {
@@ -76,6 +94,7 @@ impl SamplerPool {
                 hub: hub.clone(),
                 stop: stop.clone(),
                 active: active.clone(),
+                k_cell: envs_per_worker.clone(),
                 sub: bus.subscribe(),
             };
             handles.push(
@@ -84,16 +103,36 @@ impl SamplerPool {
                     .spawn(move || worker_main(ctx))?,
             );
         }
-        Ok(SamplerPool { stop, active, handles, max_workers })
+        let spawned = handles.len();
+        Ok(SamplerPool { stop, active, envs_per_worker, handles, spawned, max_workers })
     }
 
-    /// Adaptation knob: number of concurrently sampling workers.
+    /// Adaptation knob: number of concurrently sampling workers. Release
+    /// ordering: anything written before an unpark (e.g. a new K in the
+    /// knob cell) is visible to a worker that observes itself unparked —
+    /// the hot-K-resize test relies on "resume implies fresh K".
     pub fn set_active(&self, n: usize) {
-        self.active.store(n.min(self.max_workers), Ordering::Relaxed);
+        self.active.store(n.min(self.max_workers), Ordering::Release);
     }
 
     pub fn active(&self) -> usize {
         self.active.load(Ordering::Relaxed)
+    }
+
+    /// Adaptation knob: live envs per worker (K). Workers pick the new
+    /// value up at their next tick boundary — no respawn, no mid-tick
+    /// reservation is ever affected.
+    pub fn set_envs_per_worker(&self, k: usize) {
+        self.envs_per_worker.set(k.max(1));
+    }
+
+    pub fn envs_per_worker(&self) -> usize {
+        self.envs_per_worker.get()
+    }
+
+    /// Worker threads created at spawn (never respawned).
+    pub fn workers_spawned(&self) -> usize {
+        self.spawned
     }
 
     /// Signal all workers to stop without joining (the `Service` split
@@ -118,7 +157,10 @@ fn worker_main(ctx: WorkerCtx) {
 }
 
 fn worker_loop(mut ctx: WorkerCtx) -> Result<()> {
-    let k = ctx.cfg.envs_per_worker.max(1);
+    // K comes from the shared knob cell — never from a config field read
+    // once at spawn — so presets, the CLI, and the adaptation controller
+    // all act on the same live value.
+    let mut k = ctx.k_cell.get().max(1);
     let mut rng = Rng::for_worker(ctx.cfg.seed, ctx.id as u64 + 1);
     let envs: Vec<Box<dyn Env>> =
         (0..k).map(|_| make_env(&ctx.cfg.env)).collect::<Result<Vec<_>>>()?;
@@ -139,10 +181,27 @@ fn worker_loop(mut ctx: WorkerCtx) -> Result<()> {
     let mut steps_since_reload = 0u64;
 
     while !ctx.stop.load(Ordering::Relaxed) {
-        // live-resize parking: workers above the active count idle
-        if ctx.id >= ctx.active.load(Ordering::Relaxed) {
+        // live-resize parking: workers above the active count idle.
+        // Acquire pairs with `set_active`'s release store so an unparked
+        // worker also sees every knob value written before the unpark.
+        if ctx.id >= ctx.active.load(Ordering::Acquire) {
             std::thread::sleep(std::time::Duration::from_millis(20));
             continue;
+        }
+
+        // hot K-resize at the tick boundary: a tick is one complete
+        // forward + env step + `push_many` reservation, so applying the
+        // new K here can never corrupt an in-flight reservation. Surviving
+        // env rows continue their episodes in place; the worker thread is
+        // not restarted.
+        let want = ctx.k_cell.get().max(1);
+        if want != k {
+            venv.resize(want, &mut rng, || make_env(&ctx.cfg.env))?;
+            k = want;
+            prev_obs.resize(k * spec.obs_dim, 0.0);
+            acts.resize(k * spec.act_dim, 0.0);
+            outs.resize(k, StepOut::default());
+            frames.resize(k * frame_len, 0.0);
         }
 
         // periodic weight-bus poll — one per K env steps' worth of ticks, so
@@ -374,6 +433,136 @@ mod tests {
             hub.weight_fetches.count()
         );
         assert!(hub.sampled.count() > 0, "workers stopped sampling");
+    }
+
+    /// THE hot K-resize contract: one worker resized K = 1 → 8 → 2 mid-run
+    /// (no respawn) keeps its frame stream seqlock-valid and per-env
+    /// s2-continuous — surviving env rows continue their episodes exactly
+    /// where they left off, new rows start from a reset, and every resize
+    /// lands on a tick boundary (segments are multiples of K frames).
+    /// Mirrors `k1_batched_worker_matches_scalar_reference_stream`, which
+    /// pins the constant-K stream content.
+    #[test]
+    fn hot_k_resize_keeps_stream_continuity() {
+        let layout = test_layout();
+        let spec = FrameSpec { obs_dim: 3, act_dim: 1 };
+        let capacity = 1 << 21; // never wraps within this test
+        let ring = Arc::new(
+            ShmRing::create(&ShmRingOptions { capacity, spec, shm_name: None }).unwrap(),
+        );
+        let hub = Arc::new(MetricsHub::new());
+        let mut cfg = TrainConfig::default();
+        cfg.env = "pendulum".into();
+        cfg.seed = 7;
+        cfg.start_steps = u64::MAX; // always uniform-random actions
+        cfg.envs_per_worker = 1;
+        let pool = SamplerPool::spawn(
+            &cfg,
+            &layout,
+            ring.clone() as Arc<dyn ExpSink>,
+            hub.clone(),
+            &mem_bus(layout.actor_size),
+            1,
+            1,
+        )
+        .unwrap();
+
+        // Park the worker and wait for the push counter to go quiet, so the
+        // segment boundary (= the exact frame count) is race-free.
+        let settle = |pool: &SamplerPool| -> usize {
+            pool.set_active(0);
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+            let mut last = ring.ring_stats().pushed;
+            let mut quiet = 0;
+            while quiet < 3 && std::time::Instant::now() < deadline {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                let now = ring.ring_stats().pushed;
+                if now == last {
+                    quiet += 1;
+                } else {
+                    quiet = 0;
+                    last = now;
+                }
+            }
+            last as usize
+        };
+
+        wait_for_frames(&hub, 50);
+        let n1 = settle(&pool);
+        pool.set_envs_per_worker(8);
+        pool.set_active(1);
+        wait_for_frames(&hub, n1 as u64 + 64);
+        let n2 = settle(&pool);
+        pool.set_envs_per_worker(2);
+        pool.set_active(1);
+        wait_for_frames(&hub, n2 as u64 + 32);
+        let n3 = settle(&pool);
+
+        assert_eq!(pool.envs_per_worker(), 2);
+        assert_eq!(pool.workers_spawned(), 1, "K changes must never respawn workers");
+        pool.shutdown();
+
+        assert!(n1 >= 50 && n2 - n1 >= 64 && n3 - n2 >= 32, "{n1}/{n2}/{n3}");
+        assert!(n3 < capacity, "ring wrapped; grow capacity for this test");
+        // resizes apply at tick boundaries: each segment is whole K-ticks
+        assert_eq!((n2 - n1) % 8, 0, "K=8 segment not tick-aligned");
+        assert_eq!((n3 - n2) % 2, 0, "K=2 segment not tick-aligned");
+
+        // Walk the stream. Within a constant-K segment frame i belongs to
+        // env row (i - seg_start) % K; across segments rows < min(K_old,
+        // K_new) persist. Pendulum truncates at exactly 200 steps and never
+        // terminates early, so a per-row step counter predicts every reset;
+        // everywhere else the next frame's s must equal the row's last s2
+        // bitwise.
+        let segs = [(0usize, n1, 1usize), (n1, n2, 8), (n2, n3, 2)];
+        let mut frame = vec![0.0f32; spec.f32s()];
+        let mut ep_steps = [0u32; 8];
+        let mut last_s2: Vec<Option<[f32; 3]>> = vec![None; 8];
+        let mut prev_k = 0usize;
+        let mut continuous = 0u64;
+        for &(start, end, k) in &segs {
+            // rows created by this grow start fresh; rows dropped by a
+            // shrink simply stop being checked
+            for r in prev_k..k {
+                ep_steps[r] = 0;
+                last_s2[r] = None;
+            }
+            for i in start..end {
+                let r = (i - start) % k;
+                assert!(ring.read_slot(i, &mut frame), "slot {i} unreadable (torn frame)");
+                let (s, rest) = frame.split_at(3);
+                let (ad, rest) = rest.split_at(2); // action, reward
+                let done = rest[0];
+                let s2 = &rest[1..4];
+                assert!(
+                    (s[0] * s[0] + s[1] * s[1] - 1.0).abs() < 1e-3,
+                    "slot {i}: s off the unit circle"
+                );
+                assert!(
+                    (s2[0] * s2[0] + s2[1] * s2[1] - 1.0).abs() < 1e-3,
+                    "slot {i}: s2 off the unit circle"
+                );
+                assert!(ad.iter().all(|x| x.is_finite()), "slot {i}: non-finite act/reward");
+                assert_eq!(done, 0.0, "slot {i}: pendulum never true-terminates");
+                if let Some(prev) = last_s2[r] {
+                    if ep_steps[r] != 0 {
+                        assert_eq!(
+                            s,
+                            &prev[..],
+                            "row {r} discontinuous at slot {i} (segment K={k})"
+                        );
+                        continuous += 1;
+                    }
+                }
+                ep_steps[r] += 1;
+                if ep_steps[r] == 200 {
+                    ep_steps[r] = 0; // truncation auto-reset after this frame
+                }
+                last_s2[r] = Some([s2[0], s2[1], s2[2]]);
+            }
+            prev_k = k;
+        }
+        assert!(continuous > 100, "too few continuity checks ran: {continuous}");
     }
 
     /// THE batched/scalar contract: with K = 1 and a fixed seed, the batched

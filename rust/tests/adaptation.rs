@@ -1,0 +1,88 @@
+//! End-to-end multi-knob adaptation: a real pendulum run on the native
+//! backend with the controller enabled (nothing pinned) must drive the
+//! whole loop — telemetry windows in, `KnobCommand`s out through
+//! `Topology::reconfigure` — and leave a complete knob trace in
+//! `RunSummary` and `summary.json`, while K changes apply without ever
+//! respawning a sampler worker.
+
+use spreeze::adapt::controller::KnobId;
+use spreeze::config::presets;
+use spreeze::coordinator::Coordinator;
+
+#[test]
+fn controller_tunes_knobs_and_traces_every_window() {
+    std::env::set_var("SPREEZE_BACKEND", "native");
+    let mut cfg = presets::preset("pendulum");
+    cfg.seed = 3;
+    cfg.max_seconds = 12.0;
+    // the preset pins a small BS for the tiny task; un-pin everything so
+    // the controller owns all knobs
+    cfg.batch_size = 0;
+    cfg.n_samplers = 0;
+    cfg.adapt = true;
+    cfg.adapt_window_s = 1.0;
+    cfg.target_return = None;
+    cfg.hardware.cpu_cores = 4; // bound the pool for CI machines
+    let run_dir = std::env::temp_dir().join(format!("spreeze-adapt-e2e-{}", std::process::id()));
+    cfg.run_dir = run_dir.to_string_lossy().into_owned();
+    let s = Coordinator::new(cfg).run().unwrap();
+
+    // the controller observed windows and recorded every one of them
+    assert!(!s.knob_trace.is_empty(), "knob trace empty: controller never ticked");
+    assert!(s.updates > 0 && s.sampled_frames > 0);
+
+    // per-window invariants: at most one structural (BS) move, and any
+    // command window is followed by a settling window that emits nothing
+    // (cfg.adapt_cooldown = 1 by default)
+    let mut prev_had_cmds = false;
+    for (i, w) in s.knob_trace.iter().enumerate() {
+        let structural = w.commands.iter().filter(|c| c.id == KnobId::BatchSize).count();
+        assert!(structural <= 1, "window {i}: {structural} structural moves");
+        if prev_had_cmds {
+            assert!(w.cooldown, "window {i}: missing post-apply cooldown");
+            assert!(w.commands.is_empty(), "window {i}: commands during cooldown");
+        }
+        prev_had_cmds = !w.cooldown && !w.commands.is_empty();
+        // the settings row always carries every registered knob
+        assert!(w.settings.iter().any(|(id, _)| *id == KnobId::Samplers));
+        assert!(w.settings.iter().any(|(id, _)| *id == KnobId::EnvsPerWorker));
+        assert!(w.settings.iter().any(|(id, _)| *id == KnobId::BatchSize));
+    }
+
+    // K rides the shared knob cell: whatever the controller last set is
+    // what the pool (and hence RunSummary) reports
+    let last = s.knob_trace.last().unwrap();
+    let k_final = last
+        .settings
+        .iter()
+        .find(|(id, _)| *id == KnobId::EnvsPerWorker)
+        .map(|(_, v)| *v)
+        .unwrap();
+    assert_eq!(s.envs_per_worker, k_final, "RunSummary K != controller's final K");
+
+    // no worker restarts: the pool spawned its threads exactly once
+    let samplers = s
+        .service_stats
+        .iter()
+        .find(|(name, _)| name == "samplers")
+        .expect("sampler service stats");
+    let stat = |key: &str| {
+        samplers.1.iter().find(|(k, _)| *k == key).map(|(_, v)| *v).unwrap_or(f64::NAN)
+    };
+    assert_eq!(
+        stat("workers_spawned"),
+        stat("max_workers"),
+        "K adaptation must never respawn sampler workers"
+    );
+
+    // summary.json carries the same trace for offline analysis
+    let txt = std::fs::read_to_string(run_dir.join("summary.json")).unwrap();
+    let j = spreeze::util::json::parse(&txt).unwrap();
+    let trace = j.get("knob_trace").unwrap().as_arr().unwrap();
+    assert_eq!(trace.len(), s.knob_trace.len());
+    let w0 = &trace[0];
+    assert!(w0.get("telemetry").is_ok());
+    assert!(w0.get("commands").unwrap().as_arr().is_ok());
+    assert!(w0.get("settings").is_ok());
+    let _ = std::fs::remove_dir_all(run_dir);
+}
