@@ -205,7 +205,14 @@ fn weight_poll_cost(b: &Bench) {
 }
 
 fn main() {
-    let b = Bench::default();
+    // SPREEZE_BENCH_SMOKE=1 shrinks the window so CI can exercise the whole
+    // bench in seconds (matching the update bench's smoke mode)
+    let window = if std::env::var("SPREEZE_BENCH_SMOKE").is_ok() {
+        std::time::Duration::from_millis(100)
+    } else {
+        std::time::Duration::from_secs(1)
+    };
+    let b = Bench { window, json_group: Some("sampling"), ..Default::default() };
     println!("== sampling bench ==\n-- env.step cost (random actions)");
     for env_name in ["pendulum", "walker", "cheetah", "ant", "humanoid"] {
         let mut env = make_env(env_name).unwrap();

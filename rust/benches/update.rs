@@ -104,7 +104,7 @@ fn main() {
         std::time::Duration::from_secs(3)
     };
     let max_bs = if smoke { 512 } else { usize::MAX };
-    let b = Bench { window, ..Default::default() };
+    let b = Bench { window, json_group: Some("update"), ..Default::default() };
 
     println!("== network update bench ({backend} backend) ==");
     gemm_kernels(&b, max_bs);

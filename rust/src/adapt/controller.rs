@@ -190,6 +190,21 @@ impl Controller {
             self.push_record(t_s, tel, true, Vec::new());
             return Vec::new();
         }
+        // Drift watch: locked climbers are out of the round-robin but must
+        // keep seeing telemetry, or the drift unlock in `HillClimber` could
+        // never fire. Feeding a locked climber cannot move its setting this
+        // window (it returns `current()` even as it unlocks), so this emits
+        // no commands; a climber that unlocks here re-enters the rotation
+        // NEXT window — it is excluded from `members` below to avoid being
+        // fed the same telemetry twice.
+        let mut watched: Vec<usize> = Vec::new();
+        for i in 0..self.knobs.len() {
+            if self.knobs[i].climber.locked {
+                let obs = self.knobs[i].signal.obs(&tel);
+                self.knobs[i].climber.observe(obs);
+                watched.push(i);
+            }
+        }
         let mut cmds: Vec<KnobCommand> = Vec::new();
         let mut structural_used = false;
         let first = self.group_rr;
@@ -200,7 +215,9 @@ impl Controller {
                 .knobs
                 .iter()
                 .enumerate()
-                .filter(|(_, kn)| kn.signal.group() == g && !kn.climber.locked)
+                .filter(|(i, kn)| {
+                    kn.signal.group() == g && !kn.climber.locked && !watched.contains(i)
+                })
                 .map(|(i, _)| i)
                 .collect();
             if members.is_empty() {
@@ -476,6 +493,72 @@ mod tests {
         assert!(ctl.trace[1].cooldown && ctl.trace[2].cooldown);
         assert_eq!(ctl.trace[1].settings, ctl.trace[2].settings);
         assert_invariants(&ctl, 2);
+    }
+
+    #[test]
+    fn locked_knob_reopens_on_telemetry_drift_and_reconverges() {
+        // Full regime-change simulation through the controller (not the bare
+        // climber): one BS knob converges and locks on a surface peaking at
+        // 1024; then "hardware contention" halves the achievable rate and
+        // moves the peak to 256. The drift watch must keep feeding the
+        // locked climber, re-open it, and the controller must then walk it
+        // to the new peak's neighborhood.
+        let mut ctl = Controller::new(
+            vec![knob(
+                KnobId::BatchSize,
+                ApplyCost::Structural,
+                Signal::UpdatePath,
+                vec![128, 256, 512, 1024, 2048, 4096],
+                128,
+                1.0,
+                1.01,
+            )],
+            1,
+        );
+        let mut bs = 128usize;
+        fn drive(
+            ctl: &mut Controller,
+            bs: &mut usize,
+            windows: usize,
+            t0: usize,
+            surface: &dyn Fn(usize) -> f64,
+        ) {
+            for w in 0..windows {
+                let tel = Telemetry {
+                    gpu_usage: 0.99,
+                    update_frame_hz: surface(*bs),
+                    ..Default::default()
+                };
+                for cmd in ctl.observe((t0 + w) as f64, tel) {
+                    assert_eq!(cmd.id, KnobId::BatchSize);
+                    *bs = cmd.value;
+                }
+            }
+        }
+        // phase 1: a flat plateau — moves stop paying off, so strikes
+        // accumulate and the climber locks in
+        drive(&mut ctl, &mut bs, 12, 0, &|_| 100.0);
+        assert!(ctl.knobs()[0].climber.locked, "flat surface should lock (bs={bs})");
+        let locked_bs = bs;
+        // phase 2: sustained contention — throughput collapses onto a convex
+        // surface peaking at bs=256 at a fraction of the old rate. The drift
+        // watch (not the round-robin, which skips locked knobs) must carry
+        // this telemetry to the climber and re-open it.
+        let shifted = |b: usize| 0.25 * b as f64 / (1.0 + (b as f64 / 256.0).powi(2));
+        drive(&mut ctl, &mut bs, 2, 12, &shifted);
+        assert!(
+            !ctl.knobs()[0].climber.locked,
+            "sustained telemetry drift must re-open the locked knob"
+        );
+        assert_eq!(bs, locked_bs, "unlocking itself must not move the setting");
+        // phase 3: the re-opened knob climbs toward the new peak
+        drive(&mut ctl, &mut bs, 60, 15, &shifted);
+        assert!(
+            (128..=512).contains(&bs),
+            "re-opened knob should walk toward the shifted 256 peak, got {bs} \
+             (was locked at {locked_bs})"
+        );
+        assert_invariants(&ctl, 1);
     }
 
     #[test]

@@ -60,7 +60,21 @@ pub struct HillClimber {
     /// consecutive non-improving moves before we lock in
     strikes: u32,
     pub locked: bool,
+    /// Throughput at the moment of convergence lock: the drift baseline.
+    locked_at: Option<f64>,
+    /// Consecutive locked windows with throughput drifted past
+    /// [`DRIFT_FRAC`] of the baseline.
+    drift_windows: u32,
 }
+
+/// Relative throughput shift (vs. the locked-in baseline) that counts as
+/// telemetry drift: the convex surface the climber converged on no longer
+/// exists (e.g. mid-run hardware contention), so the lock must re-open.
+const DRIFT_FRAC: f64 = 0.30;
+
+/// Consecutive drifted windows required to unlock — one window of noise
+/// (a GC pause, an eval burst) must not discard a good convergence.
+const DRIFT_UNLOCK_WINDOWS: u32 = 2;
 
 impl HillClimber {
     /// `start` snaps to the **nearest** rung (the same rule as
@@ -84,6 +98,8 @@ impl HillClimber {
             last_direction: 1,
             strikes: 0,
             locked: false,
+            locked_at: None,
+            drift_windows: 0,
         }
     }
 
@@ -94,6 +110,25 @@ impl HillClimber {
     /// Feed one observation window; returns the new setting.
     pub fn observe(&mut self, obs: Obs) -> usize {
         if self.locked {
+            // Drift watch: the lock is a bet that the throughput surface is
+            // stationary. If telemetry shifts sharply and stays shifted, the
+            // bet is off — re-open the knob and climb again from here.
+            let base = self.locked_at.unwrap_or(obs.throughput);
+            let drifted = base > 0.0 && ((obs.throughput - base) / base).abs() > DRIFT_FRAC;
+            if drifted {
+                self.drift_windows += 1;
+            } else {
+                self.drift_windows = 0;
+            }
+            if self.drift_windows >= DRIFT_UNLOCK_WINDOWS {
+                self.locked = false;
+                self.locked_at = None;
+                self.drift_windows = 0;
+                self.strikes = 0;
+                // forget the stale baseline: the next window starts a fresh
+                // climb instead of reading the shift as one huge gain/loss
+                self.last_throughput = None;
+            }
             return self.current();
         }
         let improved = match self.last_throughput {
@@ -131,6 +166,8 @@ impl HillClimber {
 
         if self.strikes >= 3 {
             self.locked = true; // converged (convex response: we are at peak)
+            self.locked_at = Some(obs.throughput); // drift baseline
+            self.drift_windows = 0;
             return self.current();
         }
         // Record the *attempted* direction even when the move clamps at a
@@ -190,8 +227,50 @@ mod tests {
         }
         assert!(hc.locked);
         let s = hc.current();
-        for _ in 0..5 {
-            assert_eq!(hc.observe(Obs { usage: 0.2, throughput: 1e9 }), s);
+        // stable telemetry (within the drift band): the lock holds
+        for i in 0..5 {
+            let t = 100.0 + if i % 2 == 0 { 10.0 } else { -10.0 };
+            assert_eq!(hc.observe(Obs { usage: 0.2, throughput: t }), s);
+            assert!(hc.locked, "in-band telemetry must not unlock");
+        }
+    }
+
+    #[test]
+    fn sharp_drift_reopens_a_locked_climber() {
+        let mut hc = HillClimber::new((1..=4).collect(), 2, 0.5, 0.9);
+        for _ in 0..20 {
+            hc.observe(Obs { usage: 0.7, throughput: 100.0 });
+        }
+        assert!(hc.locked);
+        // throughput collapses (e.g. a co-tenant grabs the cores) and STAYS
+        // collapsed: after DRIFT_UNLOCK_WINDOWS the knob re-opens
+        hc.observe(Obs { usage: 0.7, throughput: 40.0 });
+        assert!(hc.locked, "one drifted window is noise, not a regime change");
+        hc.observe(Obs { usage: 0.7, throughput: 40.0 });
+        assert!(!hc.locked, "sustained drift must unlock");
+        // and the climber actually moves again on the next windows
+        let before = hc.current();
+        let mut setting = before;
+        for _ in 0..6 {
+            let usage = if setting >= 3 { 0.95 } else { 0.7 };
+            setting = hc.observe(Obs { usage, throughput: 40.0 + setting as f64 });
+        }
+        assert!(hc.last_throughput.is_some(), "unlocked climber must observe again");
+    }
+
+    #[test]
+    fn transient_drift_spike_does_not_unlock() {
+        let mut hc = HillClimber::new((1..=4).collect(), 2, 0.5, 0.9);
+        for _ in 0..20 {
+            hc.observe(Obs { usage: 0.7, throughput: 100.0 });
+        }
+        assert!(hc.locked);
+        // spike, recover, spike, recover: never two drifted windows in a row
+        for _ in 0..4 {
+            hc.observe(Obs { usage: 0.7, throughput: 300.0 });
+            assert!(hc.locked);
+            hc.observe(Obs { usage: 0.7, throughput: 100.0 });
+            assert!(hc.locked, "recovered telemetry must reset the drift count");
         }
     }
 

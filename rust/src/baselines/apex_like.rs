@@ -36,7 +36,7 @@ impl Framework for ApexLike {
         cfg.adapt = false;
         // warmup can never exceed what the transfer queue can deliver
         // before its first drain
-        cfg.update_after = cfg.update_after.min(self.queue_size);
+        cfg.update_after = cfg.effective_update_after().min(self.queue_size).max(1);
         // eager weight broadcast after every update
         cfg.sync_every = 1;
         // workers poll for new weights aggressively (per-rollout pull)

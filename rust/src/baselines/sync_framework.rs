@@ -132,7 +132,7 @@ impl Framework for SyncFramework {
             }
 
             // ---- phase 2: synchronous updates (samplers idle)
-            if topo.learner.visible() >= cfg.update_after {
+            if topo.learner.visible() >= cfg.effective_update_after() {
                 for _ in 0..self.updates_per_phase {
                     let t0 = Instant::now();
                     if topo.learner.try_update()? {

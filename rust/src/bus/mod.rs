@@ -5,10 +5,12 @@
 //! shared memory, small signals through lightweight channels — applies to
 //! weights just as much as experience. The original SSD checkpoint file is
 //! demoted to one pluggable transport ([`FileBus`], kept for crash recovery
-//! and viz replay); the default is [`WeightBus`], a lock-free in-memory
-//! double buffer with seqlock validation, so subscribers observe fresh
-//! weights with two atomic loads and one buffer copy — no disk round-trip
-//! on the sampling hot path.
+//! and viz replay); the default is [`WeightBus`], a lock-free double buffer
+//! with seqlock validation over one `mmap(MAP_SHARED)` region (anonymous
+//! in-process, or a named /dev/shm segment for process topologies), so
+//! subscribers observe fresh weights with two atomic loads and one buffer
+//! copy — no disk round-trip on the sampling hot path, same protocol on
+//! both sides of a process boundary.
 //!
 //! Contract (all transports):
 //! * versions are assigned by the publisher and strictly increase;
@@ -21,10 +23,11 @@ use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::config::WeightTransport;
 use crate::nn::checkpoint::{self, CheckpointStore};
+use crate::util::shm::{shm_path, Mapping};
 
 /// Publisher side of the weight path (the learner holds one).
 pub trait PolicyPub: Send + Sync {
@@ -61,19 +64,27 @@ pub trait PolicySub: Send {
 
 const WRITING: u64 = u64::MAX;
 
-/// One seqlock-guarded buffer of the double buffer. Elements are f32 bit
-/// patterns in relaxed atomics: a racing publish/poll pair is then a defined
-/// data race (per-element atomicity), and the seq re-check rejects any
-/// cross-version mix — no UB, unlike a plain `&[f32]` copy under a writer.
-/// Relaxed u32 loads/stores compile to plain moves on x86-64/aarch64.
-struct Slot {
-    /// Version stored in this slot when stable; [`WRITING`] mid-publish.
-    seq: AtomicU64,
-    data: Box<[AtomicU32]>,
-}
+const WB_MAGIC: u64 = 0x5350_5245_455A_4557; // "SPREEZEW"
+const WB_HDR_U64S: usize = 8; // magic, size, head, seq0, seq1, 3 spare
 
-/// Lock-free in-memory weight transport: double-buffered seqlock publish,
-/// torn-read-free subscribe.
+/// Lock-free weight transport over a shared mapping: double-buffered seqlock
+/// publish, torn-read-free subscribe. The whole bus — head version, both
+/// slot sequence words, and both parameter buffers — lives in one
+/// `mmap(MAP_SHARED)` region (anonymous for thread topologies, /dev/shm
+/// file-backed for process topologies), so the identical protocol works
+/// across process boundaries:
+///
+/// ```text
+/// header      : magic, size (params), head version, seq[0], seq[1]
+/// slot0 [size]: f32 bit patterns (64-byte aligned)
+/// slot1 [size]: f32 bit patterns (64-byte aligned)
+/// ```
+///
+/// Elements are f32 bit patterns in relaxed atomics: a racing publish/poll
+/// pair is then a defined data race (per-element atomicity), and the seq
+/// re-check rejects any cross-version mix — no UB, unlike a plain `&[f32]`
+/// copy under a writer. Relaxed u32 loads/stores compile to plain moves on
+/// x86-64/aarch64.
 ///
 /// The publisher alternates between two slots (version v lands in slot
 /// v % 2), so a publish never overwrites the buffer a subscriber of the
@@ -81,11 +92,12 @@ struct Slot {
 /// slot, and the seqlock check makes the subscriber retry against the new
 /// head in that case.
 pub struct WeightBus {
-    /// Latest fully-published version; slot `version % 2` holds its data.
-    version: AtomicU64,
-    slots: [Slot; 2],
+    map: Mapping,
     size: usize,
-    /// Serializes publishers (there is one learner, but the API allows more).
+    slot_off: [usize; 2],
+    /// Serializes publishers *within this process*. Cross-process topologies
+    /// have exactly one publishing process (the learner side); attached
+    /// workers only subscribe.
     pub_lock: Mutex<()>,
     /// Optional low-rate persistence sink (crash recovery / viz replay):
     /// the checkpoint file is *written*, never read, in shm mode.
@@ -100,19 +112,88 @@ struct PersistSink {
     last_write: Mutex<Option<Instant>>,
 }
 
+/// (slot0_off, slot1_off, total_bytes) for a `size`-param bus.
+fn wb_layout(size: usize) -> (usize, usize, usize) {
+    let hdr_end = WB_HDR_U64S * 8;
+    let slot0 = (hdr_end + 63) & !63;
+    let slot1 = (slot0 + size * 4 + 63) & !63;
+    let total = slot1 + size * 4;
+    (slot0, slot1, total)
+}
+
 impl WeightBus {
+    fn over(map: Mapping, size: usize) -> WeightBus {
+        let (s0, s1, _) = wb_layout(size);
+        WeightBus { map, size, slot_off: [s0, s1], pub_lock: Mutex::new(()), persist: None }
+    }
+
     /// `size` = actor parameter count; every published vector must match.
+    /// Anonymous mapping: in-process (thread-topology) use.
     pub fn new(size: usize) -> WeightBus {
-        let buf = || (0..size).map(|_| AtomicU32::new(0)).collect::<Box<[AtomicU32]>>();
-        WeightBus {
-            version: AtomicU64::new(0),
-            slots: [
-                Slot { seq: AtomicU64::new(0), data: buf() },
-                Slot { seq: AtomicU64::new(0), data: buf() },
-            ],
-            size,
-            pub_lock: Mutex::new(()),
-            persist: None,
+        let (_, _, total) = wb_layout(size);
+        let map = Mapping::anon(total).expect("anonymous weight-bus mapping");
+        let bus = Self::over(map, size);
+        bus.hdr(0).store(WB_MAGIC, Ordering::Relaxed);
+        bus.hdr(1).store(size as u64, Ordering::Relaxed);
+        bus
+    }
+
+    /// Create a named /dev/shm segment other processes can attach to. The
+    /// creator owns the file; it is unlinked when this bus drops.
+    pub fn create_named(name: &str, size: usize) -> Result<WeightBus> {
+        let (_, _, total) = wb_layout(size);
+        let map = Mapping::create(&shm_path(name), total)?;
+        let bus = Self::over(map, size);
+        bus.hdr(0).store(WB_MAGIC, Ordering::Relaxed);
+        bus.hdr(1).store(size as u64, Ordering::Relaxed);
+        Ok(bus)
+    }
+
+    /// Attach to a segment created by [`WeightBus::create_named`] in another
+    /// process. Validates magic and parameter count against the creator's
+    /// header; `Mapping::attach` refuses files shorter than the layout.
+    pub fn attach_named(name: &str, size: usize) -> Result<WeightBus> {
+        let (_, _, total) = wb_layout(size);
+        let map = Mapping::attach(&shm_path(name), total)?;
+        let bus = Self::over(map, size);
+        if bus.hdr(0).load(Ordering::Relaxed) != WB_MAGIC {
+            bail!("weight bus {name:?}: bad magic");
+        }
+        let created = bus.hdr(1).load(Ordering::Relaxed);
+        if created != size as u64 {
+            bail!(
+                "weight bus {name:?}: size mismatch (segment holds {created} params, \
+                 attacher expects {size})"
+            );
+        }
+        Ok(bus)
+    }
+
+    #[inline]
+    fn hdr(&self, i: usize) -> &AtomicU64 {
+        debug_assert!(i < WB_HDR_U64S);
+        unsafe { &*(self.map.ptr().add(i * 8) as *const AtomicU64) }
+    }
+
+    /// Head-version word (hdr index 2).
+    #[inline]
+    fn head(&self) -> &AtomicU64 {
+        self.hdr(2)
+    }
+
+    /// Version stored in slot `s` when stable; [`WRITING`] mid-publish.
+    #[inline]
+    fn seq(&self, s: usize) -> &AtomicU64 {
+        self.hdr(3 + s)
+    }
+
+    #[inline]
+    fn data(&self, s: usize) -> &[AtomicU32] {
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.ptr().add(self.slot_off[s]) as *const AtomicU32,
+                self.size,
+            )
         }
     }
 
@@ -150,9 +231,9 @@ impl WeightBus {
             actor.len()
         );
         let _g = self.pub_lock.lock().unwrap();
-        let v = self.version.load(Ordering::Relaxed) + 1;
-        let slot = &self.slots[(v % 2) as usize];
-        slot.seq.store(WRITING, Ordering::Relaxed);
+        let v = self.head().load(Ordering::Relaxed) + 1;
+        let slot = (v % 2) as usize;
+        self.seq(slot).store(WRITING, Ordering::Relaxed);
         // Release fence: the WRITING marker must become visible before any
         // of the data writes below, so a reader that observes fresh words
         // cannot still observe the old (stable) seq and accept a torn copy.
@@ -160,11 +241,11 @@ impl WeightBus {
         // Seqlock write: subscribers may race this copy element-wise, but
         // they validate seq on both sides of their read and discard torn
         // copies; per-element relaxed atomics keep the race well-defined.
-        for (dst, &x) in slot.data.iter().zip(actor) {
+        for (dst, &x) in self.data(slot).iter().zip(actor) {
             dst.store(x.to_bits(), Ordering::Relaxed);
         }
-        slot.seq.store(v, Ordering::Release);
-        self.version.store(v, Ordering::Release);
+        self.seq(slot).store(v, Ordering::Release);
+        self.head().store(v, Ordering::Release);
         if let Some(sink) = &self.persist {
             let mut last = sink.last_write.lock().unwrap();
             let due = match *last {
@@ -187,7 +268,12 @@ impl WeightBus {
     }
 
     pub fn version(&self) -> u64 {
-        self.version.load(Ordering::Acquire)
+        self.head().load(Ordering::Acquire)
+    }
+
+    /// Parameter count this bus is sized for.
+    pub fn size(&self) -> usize {
+        self.size
     }
 }
 
@@ -206,12 +292,12 @@ impl WeightBusSub {
 impl PolicySub for WeightBusSub {
     fn poll(&mut self, buf: &mut Vec<f32>) -> Result<Option<u64>> {
         loop {
-            let v = self.bus.version.load(Ordering::Acquire);
+            let v = self.bus.head().load(Ordering::Acquire);
             if v == 0 || v == self.cursor {
                 return Ok(None);
             }
-            let slot = &self.bus.slots[(v % 2) as usize];
-            let s1 = slot.seq.load(Ordering::Acquire);
+            let slot = (v % 2) as usize;
+            let s1 = self.bus.seq(slot).load(Ordering::Acquire);
             if s1 != v {
                 // Slot already claimed by a newer publish (or the head moved
                 // between the two loads): re-read the head and retry.
@@ -221,9 +307,11 @@ impl PolicySub for WeightBusSub {
             // Seqlock read: this copy may race a publish two versions later
             // into the same slot; the seq re-check rejects any torn result.
             buf.clear();
-            buf.extend(slot.data.iter().map(|x| f32::from_bits(x.load(Ordering::Relaxed))));
+            buf.extend(
+                self.bus.data(slot).iter().map(|x| f32::from_bits(x.load(Ordering::Relaxed))),
+            );
             std::sync::atomic::fence(Ordering::Acquire);
-            if slot.seq.load(Ordering::Acquire) == v {
+            if self.bus.seq(slot).load(Ordering::Acquire) == v {
                 self.cursor = v;
                 return Ok(Some(v));
             }
@@ -532,6 +620,36 @@ mod tests {
         assert_eq!(v, 1);
         assert_eq!(back, p);
         let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn named_bus_create_attach_share_publishes() {
+        let name = format!("spreeze-test-bus-{}", std::process::id());
+        let a = WeightBus::create_named(&name, 16).unwrap();
+        let b = Arc::new(WeightBus::attach_named(&name, 16).unwrap());
+        let mut sub = WeightBusSub::new(b.clone());
+        let mut buf = Vec::new();
+        assert_eq!(sub.poll(&mut buf).unwrap(), None);
+        for v in 1..=5u64 {
+            assert_eq!(a.publish(&make_params(v, 16)).unwrap(), v);
+            assert_eq!(b.version(), v, "attached bus must see the new head");
+            assert_eq!(sub.poll(&mut buf).unwrap(), Some(v));
+            assert_eq!(buf, make_params(v, 16), "attached subscriber read torn data");
+        }
+        drop(b);
+        drop(a); // creator drop unlinks the segment
+        assert!(WeightBus::attach_named(&name, 16).is_err());
+    }
+
+    #[test]
+    fn named_bus_attach_rejects_size_mismatch() {
+        let name = format!("spreeze-test-bus-size-{}", std::process::id());
+        let _a = WeightBus::create_named(&name, 64).unwrap();
+        // smaller attacher passes the length check but must fail the header
+        let err = WeightBus::attach_named(&name, 32).unwrap_err().to_string();
+        assert!(err.contains("size mismatch"), "unexpected error: {err}");
+        // larger attacher fails before any header deref, on the length check
+        assert!(WeightBus::attach_named(&name, 4096).is_err());
     }
 
     #[test]

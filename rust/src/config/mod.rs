@@ -47,6 +47,32 @@ impl WeightTransport {
     }
 }
 
+/// Where sampler services run: worker threads in the coordinator process
+/// (default, zero-setup) or real OS processes attached to named /dev/shm
+/// segments (independent fault domains, supervised respawn).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyMode {
+    Threads,
+    Procs,
+}
+
+impl TopologyMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            TopologyMode::Threads => "threads",
+            TopologyMode::Procs => "procs",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "threads" => Ok(TopologyMode::Threads),
+            "procs" => Ok(TopologyMode::Procs),
+            _ => bail!("unknown topology {s:?} (expected threads|procs)"),
+        }
+    }
+}
+
 /// RL algorithm choice (paper §4.2.4 robustness: SAC and TD3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algo {
@@ -110,6 +136,13 @@ pub struct TrainConfig {
     pub transport: Transport,
     /// Weight path from the learner to sampler/eval/viz workers.
     pub weight_transport: WeightTransport,
+    /// Sampler service placement: in-process threads or supervised OS
+    /// processes over named shm segments.
+    pub topology: TopologyMode,
+    /// Name prefix for /dev/shm segments in procs mode ("" = auto, a
+    /// per-run unique prefix). Segments are `<prefix>-ring`, `<prefix>-bus`,
+    /// `<prefix>-ctl`.
+    pub shm_prefix: String,
     /// Replay capacity in frames.
     pub capacity: usize,
     pub seed: u64,
@@ -129,7 +162,10 @@ pub struct TrainConfig {
     // schedule
     /// Uniform-random warmup actions before using the policy.
     pub start_steps: u64,
-    /// Frames required in the buffer before updates begin.
+    /// Frames required in the buffer before updates begin. 0 = auto: follow
+    /// `start_steps` (the common case — start updating when warmup ends).
+    /// Set explicitly (e.g. `--update-after 1`) to gate the first update
+    /// independently of the warmup-action schedule.
     pub update_after: usize,
     /// Learner checkpoint ("SSD weight transmission") period, in updates.
     pub sync_every: u64,
@@ -179,6 +215,8 @@ impl Default for TrainConfig {
             ops_threads: 0,
             transport: Transport::Shm,
             weight_transport: WeightTransport::Shm,
+            topology: TopologyMode::Threads,
+            shm_prefix: String::new(),
             capacity: 1_000_000,
             seed: 0,
             lr: 3e-4,
@@ -189,7 +227,7 @@ impl Default for TrainConfig {
             policy_noise: 0.2,
             policy_delay: 2,
             start_steps: 2_000,
-            update_after: 2_000,
+            update_after: 0,
             sync_every: 10,
             reload_every: 200,
             eval_period_s: 2.0,
@@ -228,6 +266,10 @@ impl TrainConfig {
         if let Some(wt) = a.str_opt("weight-transport") {
             self.weight_transport = WeightTransport::parse(&wt)?;
         }
+        if let Some(t) = a.str_opt("topology") {
+            self.topology = TopologyMode::parse(&t)?;
+        }
+        self.shm_prefix = a.str_or("shm-prefix", &self.shm_prefix);
         self.capacity = a.usize_or("capacity", self.capacity)?;
         self.seed = a.u64_or("seed", self.seed)?;
         self.lr = a.f64_or("lr", self.lr)?;
@@ -282,6 +324,18 @@ impl TrainConfig {
         cores.saturating_sub(2).max(1)
     }
 
+    /// First-update gate in frames: an explicit `--update-after` wins,
+    /// otherwise it follows `start_steps` (updates begin when the warmup
+    /// random-action phase ends). This keeps the two schedules independently
+    /// configurable without presets having to pin both.
+    pub fn effective_update_after(&self) -> usize {
+        if self.update_after > 0 {
+            self.update_after
+        } else {
+            self.start_steps as usize
+        }
+    }
+
     pub fn to_json(&self) -> Value {
         use crate::util::json::{num, obj, s};
         obj(vec![
@@ -299,6 +353,7 @@ impl TrainConfig {
                 },
             ),
             ("weight_transport", s(self.weight_transport.name())),
+            ("topology", s(self.topology.name())),
             ("capacity", num(self.capacity as f64)),
             ("seed", num(self.seed as f64)),
             ("lr", num(self.lr)),
@@ -392,6 +447,31 @@ mod tests {
         let mut c = TrainConfig::default();
         c.apply_args(&a).unwrap();
         assert_eq!(c.envs_per_worker, 1);
+    }
+
+    #[test]
+    fn topology_flag_parses_and_defaults_to_threads() {
+        assert_eq!(TrainConfig::default().topology, TopologyMode::Threads);
+        let argv: Vec<String> =
+            ["--topology", "procs", "--shm-prefix", "t7"].iter().map(|x| x.to_string()).collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.topology, TopologyMode::Procs);
+        assert_eq!(c.shm_prefix, "t7");
+        assert!(TopologyMode::parse("nope").is_err());
+    }
+
+    #[test]
+    fn update_after_auto_follows_start_steps() {
+        let mut c = TrainConfig::default();
+        c.start_steps = 5_000;
+        assert_eq!(c.update_after, 0, "default is the auto sentinel");
+        assert_eq!(c.effective_update_after(), 5_000);
+        // an explicit gate decouples the two schedules
+        c.update_after = 1;
+        assert_eq!(c.effective_update_after(), 1);
+        assert_eq!(c.start_steps, 5_000, "warmup schedule untouched");
     }
 
     #[test]

@@ -33,7 +33,6 @@ pub fn preset(env: &str) -> TrainConfig {
     match env {
         "pendulum" => {
             c.start_steps = 1_000;
-            c.update_after = 1_000;
             c.capacity = 200_000;
             c.reward_scale = 0.1; // rewards in [-16, 0]
             // tiny task: update *frequency* dominates; fix a small batch
@@ -45,17 +44,14 @@ pub fn preset(env: &str) -> TrainConfig {
         }
         "walker" | "cheetah" => {
             c.start_steps = 4_000;
-            c.update_after = 4_000;
             c.envs_per_worker = 8;
         }
         "ant" => {
             c.start_steps = 6_000;
-            c.update_after = 6_000;
             c.envs_per_worker = 8;
         }
         "humanoid" | "humanoid_flagrun" => {
             c.start_steps = 8_000;
-            c.update_after = 8_000;
             c.reward_scale = 0.5;
             c.envs_per_worker = 8;
         }
@@ -74,6 +70,10 @@ mod tests {
             let c = preset(env);
             assert_eq!(&c.env, env);
             assert!(c.capacity > 0);
+            // presets pin only the warmup schedule; the first-update gate
+            // auto-follows it and stays independently overridable
+            assert_eq!(c.update_after, 0, "{env}: preset must not pin update_after");
+            assert_eq!(c.effective_update_after() as u64, c.start_steps);
             // every preset opts into the batched sampler hot path
             assert!(
                 (8..=16).contains(&c.envs_per_worker),

@@ -119,7 +119,7 @@ impl Coordinator {
             }
 
             // learner update (skipped until warmup data is in)
-            let did = if topo.learner.visible() >= cfg.update_after {
+            let did = if topo.learner.visible() >= cfg.effective_update_after() {
                 let t0 = Instant::now();
                 let did = topo.learner.try_update()?;
                 if did && !use_mp {

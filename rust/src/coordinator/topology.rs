@@ -10,16 +10,18 @@
 //! harness all build the same topology instead of re-wiring it by hand.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::adapt::controller::{
     pow2_ladder, ApplyCost, Controller, Knob, KnobCommand, KnobId, Signal,
 };
 use crate::adapt::HillClimber;
-use crate::bus::{make_bus, PolicyPub};
-use crate::config::{TrainConfig, Transport};
+use crate::bus::{make_bus, PolicyPub, SharedWeightBus, WeightBus};
+use crate::config::{TopologyMode, TrainConfig, Transport, WeightTransport};
 use crate::coordinator::metrics::{MetricsHub, ServiceStats};
 use crate::env::registry::make_env;
 use crate::eval::{EvalCurve, EvalWorker};
@@ -31,6 +33,7 @@ use crate::replay::{
     ExpSink, ExpSource, FrameSpec, QueueBuffer, ShmRing, ShmRingOptions, TransportStats,
 };
 use crate::runtime::{default_artifacts_dir, Manifest};
+use crate::sampler::proc::{ProcControl, ProcSamplerPool};
 use crate::sampler::SamplerPool;
 use crate::util::sysinfo;
 use crate::viz::VizWorker;
@@ -58,28 +61,105 @@ pub trait Service {
     }
 }
 
-impl Service for SamplerPool {
+/// The sampler service behind one dispatch surface: in-process worker
+/// threads (default) or supervised worker processes over named shm
+/// segments (`--topology procs`). Both expose the same live knobs, so the
+/// adaptation controller and the coordinator never branch on the mode.
+pub enum SamplerService {
+    Threads(SamplerPool),
+    Procs(ProcSamplerPool),
+}
+
+impl SamplerService {
+    pub fn active(&self) -> usize {
+        match self {
+            SamplerService::Threads(p) => p.active(),
+            SamplerService::Procs(p) => p.active(),
+        }
+    }
+
+    pub fn set_active(&self, n: usize) {
+        match self {
+            SamplerService::Threads(p) => p.set_active(n),
+            SamplerService::Procs(p) => p.set_active(n),
+        }
+    }
+
+    pub fn envs_per_worker(&self) -> usize {
+        match self {
+            SamplerService::Threads(p) => p.envs_per_worker(),
+            SamplerService::Procs(p) => p.envs_per_worker(),
+        }
+    }
+
+    pub fn set_envs_per_worker(&self, k: usize) {
+        match self {
+            SamplerService::Threads(p) => p.set_envs_per_worker(k),
+            SamplerService::Procs(p) => p.set_envs_per_worker(k),
+        }
+    }
+
+    pub fn max_workers(&self) -> usize {
+        match self {
+            SamplerService::Threads(p) => p.max_workers,
+            SamplerService::Procs(p) => p.max_workers,
+        }
+    }
+
+    pub fn workers_spawned(&self) -> usize {
+        match self {
+            SamplerService::Threads(p) => p.workers_spawned(),
+            SamplerService::Procs(p) => p.workers_spawned(),
+        }
+    }
+
+    /// The process pool when running `--topology procs` (chaos tests reach
+    /// worker PIDs and restart counts through this).
+    pub fn as_procs(&self) -> Option<&ProcSamplerPool> {
+        match self {
+            SamplerService::Threads(_) => None,
+            SamplerService::Procs(p) => Some(p),
+        }
+    }
+
+    pub fn stats(&self) -> Vec<(&'static str, f64)> {
+        let mut rows = vec![
+            ("active", self.active() as f64),
+            ("max_workers", self.max_workers() as f64),
+            ("envs_per_worker", self.envs_per_worker() as f64),
+            // constant for the life of the pool: knob applies never respawn
+            // workers (asserted by the e2e adaptation smoke)
+            ("workers_spawned", self.workers_spawned() as f64),
+        ];
+        if let SamplerService::Procs(p) = self {
+            // supervisor respawns of dead worker processes (0 = healthy run)
+            rows.push(("restarts", p.restarts() as f64));
+        }
+        rows
+    }
+}
+
+impl Service for SamplerService {
     fn service_name(&self) -> &'static str {
         "samplers"
     }
 
     fn stop_signal(&self) {
-        self.signal_stop();
+        match self {
+            SamplerService::Threads(p) => p.signal_stop(),
+            SamplerService::Procs(p) => p.signal_stop(),
+        }
     }
 
     fn join(self: Box<Self>) {
-        (*self).shutdown();
+        match *self {
+            SamplerService::Threads(p) => p.shutdown(),
+            SamplerService::Procs(p) => p.shutdown(),
+        }
     }
 
     fn stats(&self) -> Vec<(&'static str, f64)> {
-        vec![
-            ("active", self.active() as f64),
-            ("max_workers", self.max_workers as f64),
-            ("envs_per_worker", self.envs_per_worker() as f64),
-            // constant for the life of the pool: knob applies never respawn
-            // workers (asserted by the e2e adaptation smoke)
-            ("workers_spawned", self.workers_spawned() as f64),
-        ]
+        SamplerService::stats(self)
     }
 
     fn reconfigure(&self, cmd: &KnobCommand) -> bool {
@@ -280,24 +360,71 @@ impl TopologyBuilder {
         std::fs::create_dir_all(&run_dir)?;
         let hub = Arc::new(MetricsHub::new());
 
+        // --- process topology prelude: every shared segment goes to a
+        // named /dev/shm file (`<prefix>-{ring,bus,ctl}`) so worker
+        // processes can attach. Thread mode keeps anonymous mappings and is
+        // byte-for-byte unaffected by this branch.
+        let use_procs = cfg.topology == TopologyMode::Procs;
+        if use_procs {
+            ensure!(
+                cfg.transport == Transport::Shm,
+                "--topology procs requires the shm experience transport \
+                 (worker processes attach the named ring)"
+            );
+            ensure!(
+                cfg.weight_transport == WeightTransport::Shm,
+                "--topology procs requires the shm weight transport \
+                 (worker processes attach the named bus)"
+            );
+        }
+        let prefix = if !use_procs {
+            String::new()
+        } else if cfg.shm_prefix.is_empty() {
+            // unique per topology build, so concurrent runs (and tests) on
+            // one host never collide in /dev/shm
+            static RUN_SEQ: AtomicU64 = AtomicU64::new(0);
+            format!(
+                "spreeze-{}-{}",
+                std::process::id(),
+                RUN_SEQ.fetch_add(1, Ordering::Relaxed)
+            )
+        } else {
+            cfg.shm_prefix.clone()
+        };
+
         // --- weight bus (policy path learner → workers)
-        let bus = make_bus(
-            cfg.weight_transport,
-            layout.actor_size,
-            &run_dir.join("ckpt"),
-            &cfg.env,
-            cfg.algo.name(),
-        )?;
+        let bus: Arc<dyn PolicyPub> = if use_procs {
+            let wb = WeightBus::create_named(&format!("{prefix}-bus"), layout.actor_size)?
+                .with_persistence(
+                    &run_dir.join("ckpt"),
+                    &cfg.env,
+                    cfg.algo.name(),
+                    Duration::from_secs(1),
+                )?;
+            Arc::new(SharedWeightBus(Arc::new(wb)))
+        } else {
+            make_bus(
+                cfg.weight_transport,
+                layout.actor_size,
+                &run_dir.join("ckpt"),
+                &cfg.env,
+                cfg.algo.name(),
+            )?
+        };
 
         // --- experience transport (samplers → learner)
         let fspec = FrameSpec { obs_dim: layout.obs_dim, act_dim: layout.act_dim };
+        let mut named_ring: Option<Arc<ShmRing>> = None;
         let (sink, source): (Arc<dyn ExpSink>, Box<dyn ExpSource>) = match cfg.transport {
             Transport::Shm => {
                 let ring = Arc::new(ShmRing::create(&ShmRingOptions {
                     capacity: cfg.capacity,
                     spec: fspec,
-                    shm_name: None,
+                    shm_name: use_procs.then(|| format!("{prefix}-ring")),
                 })?);
+                if use_procs {
+                    named_ring = Some(ring.clone());
+                }
                 (ring.clone(), Box::new(ShmSource::new(ring)))
             }
             Transport::Queue(qs) => {
@@ -358,19 +485,41 @@ impl TopologyBuilder {
             // actor forward + one ring reservation); the adaptation SP knob
             // still parks whole workers, so Fig. 6b ablation semantics are
             // unchanged and total envs = active_workers * envs_per_worker.
-            let p = SamplerPool::spawn(
-                &cfg,
-                &layout,
-                sink.clone(),
-                hub.clone(),
-                &bus,
-                max_workers,
-                sp0,
-            )?;
+            let p = if use_procs {
+                let ring = named_ring
+                    .clone()
+                    .context("procs topology without a named ring (transport changed?)")?;
+                let ctl = Arc::new(ProcControl::create(
+                    &format!("{prefix}-ctl"),
+                    max_workers,
+                    sp0,
+                    cfg.envs_per_worker.max(1),
+                )?);
+                SamplerService::Procs(ProcSamplerPool::spawn(
+                    &cfg,
+                    &artifacts_dir,
+                    &prefix,
+                    ring,
+                    hub.clone(),
+                    ctl,
+                    max_workers,
+                )?)
+            } else {
+                SamplerService::Threads(SamplerPool::spawn(
+                    &cfg,
+                    &layout,
+                    sink.clone(),
+                    hub.clone(),
+                    &bus,
+                    max_workers,
+                    sp0,
+                )?)
+            };
             if cfg.verbose {
                 println!(
-                    "topology: {sp0}/{max_workers} sampler workers x {} envs/worker, \
+                    "topology: {sp0}/{max_workers} sampler workers ({}) x {} envs/worker, \
                      transport {:?}, weights {}",
+                    cfg.topology.name(),
                     cfg.envs_per_worker.max(1),
                     cfg.transport,
                     bus.name()
@@ -513,7 +662,7 @@ pub struct Topology {
     pub bus: Arc<dyn PolicyPub>,
     pub sink: Arc<dyn ExpSink>,
     pub learner: LearnerKind,
-    pub pool: Option<SamplerPool>,
+    pub pool: Option<SamplerService>,
     pub eval: Option<EvalWorker>,
     pub viz: Option<VizWorker>,
     /// Multi-knob adaptation controller (None when adaptation is off or

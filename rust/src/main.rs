@@ -125,6 +125,15 @@ fn run() -> Result<()> {
                 );
             }
         }
+        // hidden: child entrypoint exec'd by ProcSamplerPool (`--topology
+        // procs`); attaches the named shm segments and runs one worker
+        "sampler-worker" => {
+            spreeze::sampler::proc::worker_entry(&a)?;
+        }
+        // hidden: cross-process shm protocol stress child (integration tests)
+        "shm-child" => {
+            spreeze::sampler::proc::shm_stress_entry(&a)?;
+        }
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
         }
@@ -146,6 +155,9 @@ COMMANDS
              --ops-threads N (nn::ops kernel pool width; 0 = auto)
              --queue-size N (queue transport instead of shared memory)
              --weight-transport shm|file (policy weight path; default shm)
+             --topology threads|procs (sampler workers as threads or
+               supervised OS processes over named /dev/shm segments)
+             --shm-prefix NAME (procs mode segment prefix; default auto)
              --model-parallel true  --gpus N  --gpu-throttle F
              --cpu-cores N  --seed N  --max-seconds S  --max-updates N
              --target-return R  --adapt true|false  --verbose true

@@ -21,7 +21,6 @@
 //! Loss accounting: a slot overwritten before it was ever sampled counts as
 //! a lost frame (paper's "experience transmission loss").
 
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
@@ -29,84 +28,10 @@ use anyhow::{bail, Result};
 use super::transport::{Batch, ExpSink, ExpSource, TransportStats};
 use super::FrameSpec;
 use crate::util::rng::Rng;
+use crate::util::shm::{shm_path, Mapping};
 
 const MAGIC: u64 = 0x5350_5245_455A_4531; // "SPREEZE1"
 const HDR_U64S: usize = 8; // magic, capacity, frame, cursor, lost, sampled, 2 spare
-
-/// Raw shared mapping (anonymous or /dev/shm file-backed).
-struct Mapping {
-    ptr: *mut u8,
-    len: usize,
-    /// Some(path) if we own a /dev/shm file to unlink on drop.
-    owned_path: Option<PathBuf>,
-}
-
-unsafe impl Send for Mapping {}
-unsafe impl Sync for Mapping {}
-
-impl Mapping {
-    fn anon(len: usize) -> Result<Mapping> {
-        let ptr = unsafe {
-            libc::mmap(
-                std::ptr::null_mut(),
-                len,
-                libc::PROT_READ | libc::PROT_WRITE,
-                libc::MAP_SHARED | libc::MAP_ANONYMOUS,
-                -1,
-                0,
-            )
-        };
-        if ptr == libc::MAP_FAILED {
-            bail!("mmap(anon, {len}) failed: {}", std::io::Error::last_os_error());
-        }
-        Ok(Mapping { ptr: ptr as *mut u8, len, owned_path: None })
-    }
-
-    fn file(path: &std::path::Path, len: usize, create: bool) -> Result<Mapping> {
-        use std::os::unix::ffi::OsStrExt;
-        let cpath = std::ffi::CString::new(path.as_os_str().as_bytes())?;
-        let flags = if create { libc::O_RDWR | libc::O_CREAT } else { libc::O_RDWR };
-        let fd = unsafe { libc::open(cpath.as_ptr(), flags, 0o600) };
-        if fd < 0 {
-            bail!("open {} failed: {}", path.display(), std::io::Error::last_os_error());
-        }
-        if create {
-            let rc = unsafe { libc::ftruncate(fd, len as libc::off_t) };
-            if rc != 0 {
-                unsafe { libc::close(fd) };
-                bail!("ftruncate failed: {}", std::io::Error::last_os_error());
-            }
-        }
-        let ptr = unsafe {
-            libc::mmap(
-                std::ptr::null_mut(),
-                len,
-                libc::PROT_READ | libc::PROT_WRITE,
-                libc::MAP_SHARED,
-                fd,
-                0,
-            )
-        };
-        unsafe { libc::close(fd) };
-        if ptr == libc::MAP_FAILED {
-            bail!("mmap({}) failed: {}", path.display(), std::io::Error::last_os_error());
-        }
-        Ok(Mapping {
-            ptr: ptr as *mut u8,
-            len,
-            owned_path: if create { Some(path.to_path_buf()) } else { None },
-        })
-    }
-}
-
-impl Drop for Mapping {
-    fn drop(&mut self) {
-        unsafe { libc::munmap(self.ptr as *mut libc::c_void, self.len) };
-        if let Some(p) = &self.owned_path {
-            let _ = std::fs::remove_file(p);
-        }
-    }
-}
 
 #[derive(Clone, Debug)]
 pub struct ShmRingOptions {
@@ -144,7 +69,7 @@ impl ShmRing {
         let (seq_off, flag_off, data_off, total) = Self::layout(opts.capacity, frame);
         let map = match &opts.shm_name {
             None => Mapping::anon(total)?,
-            Some(name) => Mapping::file(&PathBuf::from("/dev/shm").join(name), total, true)?,
+            Some(name) => Mapping::create(&shm_path(name), total)?,
         };
         let ring = ShmRing {
             map,
@@ -163,10 +88,13 @@ impl ShmRing {
     }
 
     /// Attach to an existing /dev/shm ring created by another process.
+    /// Validates magic, capacity, and frame size against the creator's
+    /// header (a frame mismatch would silently mis-stride every slot), and
+    /// `Mapping::attach` refuses files shorter than the computed layout.
     pub fn attach(name: &str, capacity: usize, spec: FrameSpec) -> Result<ShmRing> {
         let frame = spec.f32s();
         let (seq_off, flag_off, data_off, total) = Self::layout(capacity, frame);
-        let map = Mapping::file(&PathBuf::from("/dev/shm").join(name), total, false)?;
+        let map = Mapping::attach(&shm_path(name), total)?;
         let ring = ShmRing { map, capacity, frame, spec, seq_off, flag_off, data_off };
         if ring.hdr(0).load(Ordering::Relaxed) != MAGIC {
             bail!("shm ring {name:?}: bad magic");
@@ -174,28 +102,35 @@ impl ShmRing {
         if ring.hdr(1).load(Ordering::Relaxed) != capacity as u64 {
             bail!("shm ring {name:?}: capacity mismatch");
         }
+        let created_frame = ring.hdr(2).load(Ordering::Relaxed);
+        if created_frame != frame as u64 {
+            bail!(
+                "shm ring {name:?}: frame size mismatch (segment has {created_frame} f32s \
+                 per frame, attacher expects {frame}; FrameSpec obs/act dims differ)"
+            );
+        }
         Ok(ring)
     }
 
     #[inline]
     fn hdr(&self, i: usize) -> &AtomicU64 {
         debug_assert!(i < HDR_U64S);
-        unsafe { &*(self.map.ptr.add(i * 8) as *const AtomicU64) }
+        unsafe { &*(self.map.ptr().add(i * 8) as *const AtomicU64) }
     }
 
     #[inline]
     fn seq(&self, slot: usize) -> &AtomicU64 {
-        unsafe { &*(self.map.ptr.add(self.seq_off + slot * 8) as *const AtomicU64) }
+        unsafe { &*(self.map.ptr().add(self.seq_off + slot * 8) as *const AtomicU64) }
     }
 
     #[inline]
     fn flag(&self, slot: usize) -> &AtomicU32 {
-        unsafe { &*(self.map.ptr.add(self.flag_off + slot * 4) as *const AtomicU32) }
+        unsafe { &*(self.map.ptr().add(self.flag_off + slot * 4) as *const AtomicU32) }
     }
 
     #[inline]
     fn data(&self, slot: usize) -> *mut f32 {
-        unsafe { self.map.ptr.add(self.data_off + slot * self.frame * 4) as *mut f32 }
+        unsafe { self.map.ptr().add(self.data_off + slot * self.frame * 4) as *mut f32 }
     }
 
     pub fn spec(&self) -> FrameSpec {
@@ -567,5 +502,36 @@ mod tests {
         drop(b);
         drop(a); // unlinks
         assert!(ShmRing::attach(&name, 8, sp).is_err());
+    }
+
+    #[test]
+    fn attach_rejects_mismatched_frame_spec() {
+        let name = format!("spreeze-test-frame-{}", std::process::id());
+        let _a = ShmRing::create(&ShmRingOptions {
+            capacity: 8,
+            spec: spec(),
+            shm_name: Some(name.clone()),
+        })
+        .unwrap();
+        // same total byte budget cannot save a wrong FrameSpec: the header
+        // records the creator's frame size and the attach must bail
+        let wrong = FrameSpec { obs_dim: 2, act_dim: 2 };
+        let err = ShmRing::attach(&name, 8, wrong).unwrap_err().to_string();
+        assert!(err.contains("frame size mismatch"), "unexpected error: {err}");
+        // larger frame also fails, before any deref, on the length check
+        let bigger = FrameSpec { obs_dim: 64, act_dim: 8 };
+        assert!(ShmRing::attach(&name, 8, bigger).is_err());
+    }
+
+    #[test]
+    fn attach_rejects_truncated_segment() {
+        let name = format!("spreeze-test-trunc-{}", std::process::id());
+        let path = crate::util::shm::shm_path(&name);
+        // a stray 64-byte file where a ring is expected: attach must fail on
+        // the length check instead of faulting on a header read
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        let err = ShmRing::attach(&name, 1024, spec()).unwrap_err().to_string();
+        assert!(err.contains("expected at least"), "unexpected error: {err}");
+        std::fs::remove_file(&path).unwrap();
     }
 }

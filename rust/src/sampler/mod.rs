@@ -26,6 +26,8 @@
 //!   no worker thread is ever respawned. Presets, the CLI, and adaptation
 //!   all act on the same cell, so the live K is one value, not three.
 
+pub mod proc;
+
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -222,8 +224,12 @@ fn worker_loop(mut ctx: WorkerCtx) -> Result<()> {
         }
 
         // actions: uniform random during warmup / before the first publish,
-        // otherwise one matrix-matrix forward over all K observations
-        let total = ctx.hub.sampled.count();
+        // otherwise one matrix-matrix forward over all K observations.
+        // The warmup total is the transport's global push cursor, not the
+        // local hub counter: in a process topology every worker process
+        // shares the ring cursor, so `start_steps` stays a run-global
+        // schedule (in thread mode the two counts are identical).
+        let total = ctx.sink.stats().pushed;
         if !have_policy || total < ctx.cfg.start_steps {
             rng.fill_uniform(&mut acts, -1.0, 1.0);
         } else {

@@ -1,0 +1,564 @@
+//! Process-backed sampler workers (the multi-process topology).
+//!
+//! `--topology procs` promotes each sampler worker from a thread to a real
+//! OS process — an independent fault domain, which is what the paper's
+//! shared-memory transport argument is actually about: the experience ring
+//! and the weight bus already speak seqlock protocols over `MAP_SHARED`
+//! regions, so a worker process attaches to the named /dev/shm segments and
+//! runs the *same* `worker_loop` as a thread would. Three segments per run:
+//!
+//! * `<prefix>-ring` — the experience ring ([`ShmRing`], created by the
+//!   coordinator, attached by workers as their [`ExpSink`]);
+//! * `<prefix>-bus`  — the weight bus ([`WeightBus`], coordinator publishes,
+//!   workers subscribe);
+//! * `<prefix>-ctl`  — the control block ([`ProcControl`]): stop word, live
+//!   SP/K knob values, and per-worker frame counters.
+//!
+//! All three are owned (created + unlinked) by the coordinator process;
+//! worker lifetime is strictly inside coordinator lifetime, enforced by the
+//! [`ProcSamplerPool`] supervisor, which also *respawns* a worker that dies
+//! (crash, OOM-kill, SIGKILL). A respawned worker re-attaches and its fresh
+//! weight-bus cursor re-subscribes at the current head version — it resumes
+//! sampling with the newest policy, not a stale one.
+//!
+//! Control flows parent→child exclusively through the ctl words (no pipes,
+//! no signals except the last-resort kill on shutdown timeout), so a
+//! mid-write crash can never wedge the channel: every word is a single
+//! atomic.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::bus::{PolicyPub, PolicySub, SharedWeightBus, WeightBus, WeightBusSub};
+use crate::config::{Algo, TrainConfig};
+use crate::coordinator::metrics::MetricsHub;
+use crate::replay::{ExpSink, FrameSpec, ShmRing};
+use crate::runtime::{default_artifacts_dir, Manifest};
+use crate::util::cli::Args;
+use crate::util::shm::{shm_path, Mapping};
+
+use super::SamplerPool;
+
+const CTL_MAGIC: u64 = 0x5350_5245_455A_4354; // "SPREEZCT"
+/// magic, max_workers, stop, active, envs_per_worker, 3 spare — then one
+/// frame counter per worker slot.
+const CTL_HDR_U64S: usize = 8;
+
+/// Cross-process control block: the small-signal channel of the paper's
+/// per-data-type transmission argument (bulk tensors ride the ring/bus;
+/// knobs and the stop flag ride these words).
+pub struct ProcControl {
+    map: Mapping,
+    max_workers: usize,
+}
+
+impl ProcControl {
+    fn bytes(max_workers: usize) -> usize {
+        (CTL_HDR_U64S + max_workers) * 8
+    }
+
+    pub fn create(name: &str, max_workers: usize, active: usize, k: usize) -> Result<ProcControl> {
+        ensure!(max_workers >= 1, "control block needs at least one worker slot");
+        let map = Mapping::create(&shm_path(name), Self::bytes(max_workers))?;
+        let ctl = ProcControl { map, max_workers };
+        ctl.word(0).store(CTL_MAGIC, Ordering::Relaxed);
+        ctl.word(1).store(max_workers as u64, Ordering::Relaxed);
+        ctl.word(3).store(active.min(max_workers) as u64, Ordering::Relaxed);
+        ctl.word(4).store(k.max(1) as u64, Ordering::Relaxed);
+        Ok(ctl)
+    }
+
+    pub fn attach(name: &str, max_workers: usize) -> Result<ProcControl> {
+        let map = Mapping::attach(&shm_path(name), Self::bytes(max_workers))?;
+        let ctl = ProcControl { map, max_workers };
+        if ctl.word(0).load(Ordering::Relaxed) != CTL_MAGIC {
+            bail!("control block {name:?}: bad magic");
+        }
+        let created = ctl.word(1).load(Ordering::Relaxed);
+        if created != max_workers as u64 {
+            bail!(
+                "control block {name:?}: worker-count mismatch (segment has {created} \
+                 slots, attacher expects {max_workers})"
+            );
+        }
+        Ok(ctl)
+    }
+
+    #[inline]
+    fn word(&self, i: usize) -> &AtomicU64 {
+        debug_assert!(i < CTL_HDR_U64S + self.max_workers);
+        unsafe { &*(self.map.ptr().add(i * 8) as *const AtomicU64) }
+    }
+
+    pub fn stop(&self) {
+        self.word(2).store(1, Ordering::Release);
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.word(2).load(Ordering::Acquire) != 0
+    }
+
+    /// Live SP knob: workers with id >= active park.
+    pub fn set_active(&self, n: usize) {
+        self.word(3).store(n.min(self.max_workers) as u64, Ordering::Release);
+    }
+
+    pub fn active(&self) -> usize {
+        (self.word(3).load(Ordering::Acquire) as usize).min(self.max_workers)
+    }
+
+    /// Live K knob, mirrored by each worker into its local `KnobCell`.
+    pub fn set_envs_per_worker(&self, k: usize) {
+        self.word(4).store(k.max(1) as u64, Ordering::Release);
+    }
+
+    pub fn envs_per_worker(&self) -> usize {
+        (self.word(4).load(Ordering::Acquire) as usize).max(1)
+    }
+
+    /// Per-worker frame accounting (written by the worker, read by the
+    /// supervisor and the chaos test — survives a respawn because the
+    /// counter lives in the segment, not the process).
+    pub fn add_frames(&self, worker: usize, n: u64) {
+        self.word(CTL_HDR_U64S + worker).fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn frames(&self, worker: usize) -> u64 {
+        self.word(CTL_HDR_U64S + worker).load(Ordering::Relaxed)
+    }
+}
+
+/// Resolve the binary to exec for worker processes: `SPREEZE_WORKER_BIN`
+/// (integration tests point it at the built `spreeze` binary; the test
+/// harness binary itself has no `sampler-worker` command) or the current
+/// executable.
+fn worker_bin() -> Result<PathBuf> {
+    if let Some(p) = std::env::var_os("SPREEZE_WORKER_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    std::env::current_exe().context("cannot resolve the executable to spawn sampler workers")
+}
+
+fn spawn_worker(program: &Path, base: &[String], id: usize) -> Result<Child> {
+    Command::new(program)
+        .args(base)
+        .arg("--worker-id")
+        .arg(id.to_string())
+        .stdin(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning sampler worker {id} ({})", program.display()))
+}
+
+/// A worker that exits within this window of its spawn counts toward the
+/// crash-loop detector; [`CRASH_LOOP_LIMIT`] consecutive fast exits retire
+/// the slot instead of respawning forever (e.g. a bad worker binary).
+const CRASH_LOOP_WINDOW: Duration = Duration::from_millis(250);
+const CRASH_LOOP_LIMIT: u32 = 5;
+
+/// The process-backed sampler pool: spawns one worker process per slot,
+/// supervises them (reap + respawn + crash-loop backoff), and mirrors the
+/// shared ring's global push cursor into the coordinator's metrics hub so
+/// snapshots and the adaptation controller see the same sampling telemetry
+/// as in thread mode.
+pub struct ProcSamplerPool {
+    ctl: Arc<ProcControl>,
+    children: Arc<Mutex<Vec<Option<Child>>>>,
+    restarts: Arc<AtomicU64>,
+    stopping: Arc<AtomicBool>,
+    supervisor: Option<JoinHandle<()>>,
+    pub max_workers: usize,
+}
+
+impl ProcSamplerPool {
+    pub fn spawn(
+        cfg: &TrainConfig,
+        artifacts_dir: &Path,
+        prefix: &str,
+        ring: Arc<ShmRing>,
+        hub: Arc<MetricsHub>,
+        ctl: Arc<ProcControl>,
+        max_workers: usize,
+    ) -> Result<ProcSamplerPool> {
+        let program = worker_bin()?;
+        let base: Vec<String> = vec![
+            "sampler-worker".into(),
+            "--max-workers".into(),
+            max_workers.to_string(),
+            "--shm-prefix".into(),
+            prefix.to_string(),
+            "--env".into(),
+            cfg.env.clone(),
+            "--algo".into(),
+            cfg.algo.name().into(),
+            "--seed".into(),
+            cfg.seed.to_string(),
+            "--start-steps".into(),
+            cfg.start_steps.to_string(),
+            "--reload-every".into(),
+            cfg.reload_every.to_string(),
+            "--expl-noise".into(),
+            cfg.expl_noise.to_string(),
+            "--capacity".into(),
+            cfg.capacity.to_string(),
+            "--artifacts".into(),
+            artifacts_dir.to_string_lossy().into_owned(),
+        ];
+        let mut kids: Vec<Option<Child>> = Vec::with_capacity(max_workers);
+        for id in 0..max_workers {
+            kids.push(Some(spawn_worker(&program, &base, id)?));
+        }
+        let children = Arc::new(Mutex::new(kids));
+        let restarts = Arc::new(AtomicU64::new(0));
+        let stopping = Arc::new(AtomicBool::new(false));
+        let supervisor = {
+            let children = children.clone();
+            let restarts = restarts.clone();
+            let stopping = stopping.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("sampler-supervisor".into())
+                    .spawn(move || {
+                        supervise(children, restarts, stopping, ring, hub, program, base)
+                    })?,
+            )
+        };
+        Ok(ProcSamplerPool { ctl, children, restarts, stopping, supervisor, max_workers })
+    }
+
+    pub fn set_active(&self, n: usize) {
+        self.ctl.set_active(n);
+    }
+
+    pub fn active(&self) -> usize {
+        self.ctl.active()
+    }
+
+    pub fn set_envs_per_worker(&self, k: usize) {
+        self.ctl.set_envs_per_worker(k);
+    }
+
+    pub fn envs_per_worker(&self) -> usize {
+        self.ctl.envs_per_worker()
+    }
+
+    /// Worker *slots* (processes may be respawned into a slot; the slot
+    /// count never changes).
+    pub fn workers_spawned(&self) -> usize {
+        self.max_workers
+    }
+
+    /// Supervisor respawns so far (0 in a healthy run).
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Frames pushed by the worker in `slot`, across respawns (the counter
+    /// lives in the ctl segment).
+    pub fn frames_for(&self, slot: usize) -> u64 {
+        self.ctl.frames(slot)
+    }
+
+    /// PID of the process currently occupying `slot` (None between a death
+    /// and its respawn, or after the slot was retired).
+    pub fn worker_pid(&self, slot: usize) -> Option<u32> {
+        self.children.lock().unwrap().get(slot).and_then(|c| c.as_ref().map(Child::id))
+    }
+
+    /// Non-blocking stop: raise the shared stop word (workers drain and
+    /// exit) and tell the supervisor to stand down (no more respawns).
+    pub fn signal_stop(&self) {
+        self.stopping.store(true, Ordering::Relaxed);
+        self.ctl.stop();
+    }
+
+    pub fn shutdown(mut self) {
+        self.signal_stop();
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut kids = self.children.lock().unwrap();
+        for slot in kids.iter_mut() {
+            if let Some(c) = slot {
+                // graceful first — the stop word already told the child to
+                // drain and exit; kill only past the deadline
+                loop {
+                    match c.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        _ => {
+                            let _ = c.kill();
+                            let _ = c.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+            *slot = None;
+        }
+    }
+}
+
+impl Drop for ProcSamplerPool {
+    fn drop(&mut self) {
+        // defensive: never leak worker processes past the pool (normal
+        // teardown goes through `shutdown`, which leaves no children)
+        self.stopping.store(true, Ordering::Relaxed);
+        self.ctl.stop();
+        if let Ok(mut kids) = self.children.lock() {
+            for slot in kids.iter_mut() {
+                if let Some(c) = slot.as_mut() {
+                    if !matches!(c.try_wait(), Ok(Some(_))) {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                }
+                *slot = None;
+            }
+        }
+    }
+}
+
+fn supervise(
+    children: Arc<Mutex<Vec<Option<Child>>>>,
+    restarts: Arc<AtomicU64>,
+    stopping: Arc<AtomicBool>,
+    ring: Arc<ShmRing>,
+    hub: Arc<MetricsHub>,
+    program: PathBuf,
+    base: Vec<String>,
+) {
+    let n = children.lock().unwrap().len();
+    let mut spawn_time: Vec<Instant> = vec![Instant::now(); n];
+    let mut fast_exits = vec![0u32; n];
+    let mut mirrored = ring.ring_stats().pushed;
+    loop {
+        // mirror the shared ring's global cursor into the coordinator's hub:
+        // worker processes count frames in their own address spaces, so this
+        // is where thread-mode sampling telemetry is reconstructed
+        let pushed = ring.ring_stats().pushed;
+        if pushed > mirrored {
+            hub.sampled.add(pushed - mirrored);
+            mirrored = pushed;
+        }
+        if stopping.load(Ordering::Relaxed) {
+            break;
+        }
+        {
+            let mut kids = children.lock().unwrap();
+            for id in 0..n {
+                let exited = match kids[id].as_mut() {
+                    Some(c) => c.try_wait().ok().flatten(),
+                    None => None,
+                };
+                let Some(status) = exited else { continue };
+                kids[id] = None;
+                if stopping.load(Ordering::Relaxed) {
+                    continue;
+                }
+                if spawn_time[id].elapsed() < CRASH_LOOP_WINDOW {
+                    fast_exits[id] += 1;
+                } else {
+                    fast_exits[id] = 0;
+                }
+                if fast_exits[id] >= CRASH_LOOP_LIMIT {
+                    eprintln!(
+                        "sampler-supervisor: worker {id} crash-looping ({status}); \
+                         retiring the slot"
+                    );
+                    continue;
+                }
+                eprintln!("sampler-supervisor: worker {id} died ({status}); respawning");
+                match spawn_worker(&program, &base, id) {
+                    Ok(c) => {
+                        spawn_time[id] = Instant::now();
+                        kids[id] = Some(c);
+                        restarts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        eprintln!("sampler-supervisor: respawn of worker {id} failed: {e:#}")
+                    }
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    // final mirror so teardown accounting is exact
+    let pushed = ring.ring_stats().pushed;
+    if pushed > mirrored {
+        hub.sampled.add(pushed - mirrored);
+    }
+}
+
+/// Child-process entry for the hidden `sampler-worker` command: attach the
+/// named segments, run an ordinary single-worker [`SamplerPool`] over them
+/// (the exact `worker_loop` the thread topology runs), and bridge the ctl
+/// words to the pool's knobs until the stop word rises.
+pub fn worker_entry(a: &Args) -> Result<()> {
+    let id = a.usize_or("worker-id", 0)?;
+    let max_workers = a.usize_or("max-workers", 1)?;
+    let prefix = a.str_or("shm-prefix", "");
+    ensure!(!prefix.is_empty(), "sampler-worker requires --shm-prefix");
+    ensure!(id < max_workers, "worker id {id} out of range (max-workers {max_workers})");
+    let mut cfg = TrainConfig::default();
+    cfg.env = a.str_or("env", &cfg.env);
+    cfg.algo = Algo::parse(&a.str_or("algo", cfg.algo.name()))?;
+    // decorrelate worker RNG streams across processes: each local pool has
+    // one worker (local id 0), so the stream offset must come from the slot
+    cfg.seed = a.u64_or("seed", 0)?.wrapping_add(id as u64 * 0x9E37_79B9);
+    cfg.start_steps = a.u64_or("start-steps", cfg.start_steps)?;
+    cfg.reload_every = a.u64_or("reload-every", cfg.reload_every)?;
+    cfg.expl_noise = a.f64_or("expl-noise", cfg.expl_noise)?;
+    cfg.capacity = a.usize_or("capacity", cfg.capacity)?;
+    cfg.artifacts_dir = a.str_or("artifacts", &cfg.artifacts_dir);
+    a.finish()?;
+
+    let artifacts_dir = if cfg.artifacts_dir == "artifacts" {
+        default_artifacts_dir()
+    } else {
+        PathBuf::from(&cfg.artifacts_dir)
+    };
+    let manifest = Manifest::load_or_native(&artifacts_dir)?;
+    let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();
+    let spec = FrameSpec { obs_dim: layout.obs_dim, act_dim: layout.act_dim };
+
+    let ring = Arc::new(ShmRing::attach(&format!("{prefix}-ring"), cfg.capacity, spec)?);
+    let wb = Arc::new(WeightBus::attach_named(&format!("{prefix}-bus"), layout.actor_size)?);
+    let bus: Arc<dyn PolicyPub> = Arc::new(SharedWeightBus(wb));
+    let ctl = ProcControl::attach(&format!("{prefix}-ctl"), max_workers)?;
+
+    cfg.envs_per_worker = ctl.envs_per_worker();
+    let hub = Arc::new(MetricsHub::new());
+    let sink: Arc<dyn ExpSink> = ring;
+    // start parked: the first bridge tick applies the live SP value
+    let pool = SamplerPool::spawn(&cfg, &layout, sink, hub.clone(), &bus, 1, 0)?;
+
+    let mut reported = 0u64;
+    while !ctl.stopped() {
+        pool.set_envs_per_worker(ctl.envs_per_worker());
+        pool.set_active(usize::from(id < ctl.active()));
+        let sampled = hub.sampled.count();
+        if sampled > reported {
+            ctl.add_frames(id, sampled - reported);
+            reported = sampled;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    pool.shutdown();
+    let sampled = hub.sampled.count();
+    if sampled > reported {
+        ctl.add_frames(id, sampled - reported);
+    }
+    Ok(())
+}
+
+/// Child-process entry for the hidden `shm-child` command (cross-process
+/// protocol test harness): attach a named ring + weight bus, push
+/// constant-valued tagged frames, and interleave weight polls that verify
+/// the two seqlock contracts across the process boundary — no torn reads
+/// (every polled vector is element-wise constant, equal to its version) and
+/// strictly increasing observed versions. Any violation exits non-zero.
+pub fn shm_stress_entry(a: &Args) -> Result<()> {
+    let prefix = a.str_or("shm-prefix", "");
+    ensure!(!prefix.is_empty(), "shm-child requires --shm-prefix");
+    let capacity = a.usize_or("capacity", 1024)?;
+    let obs_dim = a.usize_or("obs", 3)?;
+    let act_dim = a.usize_or("act", 2)?;
+    let params = a.usize_or("params", 257)?;
+    let frames = a.u64_or("frames", 10_000)?;
+    let tag = a.u64_or("tag", 0)?;
+    a.finish()?;
+
+    let spec = FrameSpec { obs_dim, act_dim };
+    let ring = ShmRing::attach(&format!("{prefix}-ring"), capacity, spec)?;
+    let bus = Arc::new(WeightBus::attach_named(&format!("{prefix}-bus"), params)?);
+    let mut sub = WeightBusSub::new(bus);
+    let mut buf: Vec<f32> = Vec::new();
+    let mut last_version = 0u64;
+    let mut polls_seen = 0u64;
+
+    let mut frame = vec![0.0f32; spec.f32s()];
+    for i in 0..frames {
+        // constant-valued frame: the parent detects torn ring reads by
+        // asserting element-wise constancy of every sampled frame
+        let val = (tag * 1_000_000 + (i % 100_000)) as f32;
+        for x in frame.iter_mut() {
+            *x = val;
+        }
+        ring.push_frame(&frame);
+        if i % 16 == 0 {
+            if let Some(v) = sub.poll(&mut buf)? {
+                ensure!(
+                    v > last_version,
+                    "weight version not strictly increasing across processes: \
+                     {last_version} -> {v}"
+                );
+                ensure!(buf.len() == params, "short weight vector: {}", buf.len());
+                let head = buf[0];
+                ensure!(
+                    buf.iter().all(|&x| x == head),
+                    "torn weight read at version {v} (vector not constant)"
+                );
+                ensure!(
+                    head == v as f32,
+                    "weight payload {head} does not match its version {v}"
+                );
+                last_version = v;
+                polls_seen += 1;
+            }
+        }
+    }
+    // report totals on stdout for the parent test to scrape
+    println!("shm-child pushed={frames} polls={polls_seen} last_version={last_version}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proc_control_roundtrips_knobs_and_counters() {
+        let name = format!("spreeze-test-ctl-{}", std::process::id());
+        let a = ProcControl::create(&name, 3, 2, 8).unwrap();
+        let b = ProcControl::attach(&name, 3).unwrap();
+        assert_eq!(b.active(), 2);
+        assert_eq!(b.envs_per_worker(), 8);
+        assert!(!b.stopped());
+        a.set_active(1);
+        a.set_envs_per_worker(16);
+        assert_eq!(b.active(), 1);
+        assert_eq!(b.envs_per_worker(), 16);
+        b.add_frames(2, 40);
+        b.add_frames(2, 2);
+        assert_eq!(a.frames(2), 42);
+        assert_eq!(a.frames(0), 0);
+        a.stop();
+        assert!(b.stopped());
+        // worker-count mismatch is a hard error, not silent mis-addressing
+        assert!(ProcControl::attach(&name, 2).is_err());
+        drop(b);
+        drop(a); // creator drop unlinks
+        assert!(ProcControl::attach(&name, 3).is_err());
+    }
+
+    #[test]
+    fn ctl_clamps_active_and_k() {
+        let name = format!("spreeze-test-ctl-clamp-{}", std::process::id());
+        let ctl = ProcControl::create(&name, 2, 99, 0).unwrap();
+        assert_eq!(ctl.active(), 2, "active clamps to max_workers");
+        assert_eq!(ctl.envs_per_worker(), 1, "k clamps to >= 1");
+        ctl.set_active(7);
+        assert_eq!(ctl.active(), 2);
+        ctl.set_envs_per_worker(0);
+        assert_eq!(ctl.envs_per_worker(), 1);
+    }
+}

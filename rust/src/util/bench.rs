@@ -12,6 +12,11 @@ pub struct Bench {
     pub warmup: Duration,
     pub window: Duration,
     pub max_iters: u64,
+    /// When set (e.g. `Some("update")`), every report is also appended as a
+    /// JSON line to the file named by `SPREEZE_BENCH_JSON`, tagged with this
+    /// group — how CI collects machine-readable rows from the bench smoke
+    /// job without parsing the human tables.
+    pub json_group: Option<&'static str>,
 }
 
 impl Default for Bench {
@@ -20,6 +25,7 @@ impl Default for Bench {
             warmup: Duration::from_millis(200),
             window: Duration::from_secs(1),
             max_iters: 1_000_000,
+            json_group: None,
         }
     }
 }
@@ -63,6 +69,7 @@ impl Bench {
             warmup: Duration::from_millis(50),
             window: Duration::from_millis(300),
             max_iters: 100_000,
+            json_group: None,
         }
     }
 
@@ -83,7 +90,7 @@ impl Bench {
             samples_ns.push(s.elapsed().as_nanos() as f64);
             iters += 1;
         }
-        Report {
+        let report = Report {
             name: name.to_string(),
             iters,
             mean_ns: stats::mean(&samples_ns),
@@ -91,7 +98,37 @@ impl Bench {
             p50_ns: stats::percentile(&samples_ns, 50.0),
             p99_ns: stats::percentile(&samples_ns, 99.0),
             items,
+        };
+        if let Some(group) = self.json_group {
+            emit_json(group, &report);
         }
+        report
+    }
+}
+
+/// Append one report as a JSON line to the `SPREEZE_BENCH_JSON` file.
+/// Best-effort: a bench run must never fail on a reporting I/O error.
+fn emit_json(group: &str, r: &Report) {
+    let Ok(path) = std::env::var("SPREEZE_BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    let line = format!(
+        "{{\"bench\":\"{}\",\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.1},\
+         \"p50_ns\":{:.1},\"p99_ns\":{:.1},\"items_per_sec\":{:.1}}}\n",
+        group,
+        r.name.replace('"', "'"),
+        r.iters,
+        r.mean_ns,
+        r.p50_ns,
+        r.p99_ns,
+        r.items_per_sec(),
+    );
+    use std::io::Write;
+    if let Ok(mut f) =
+        std::fs::OpenOptions::new().create(true).append(true).open(&path)
+    {
+        let _ = f.write_all(line.as_bytes());
     }
 }
 
@@ -125,11 +162,39 @@ mod tests {
 
     #[test]
     fn measures_something() {
-        let b = Bench { warmup: Duration::from_millis(5), window: Duration::from_millis(30), max_iters: 10_000 };
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            window: Duration::from_millis(30),
+            max_iters: 10_000,
+            json_group: None,
+        };
         let r = b.run("noop-ish", Some(1.0), || std::hint::black_box(3u64).wrapping_mul(7));
         assert!(r.iters > 0);
         assert!(r.mean_ns >= 0.0);
         assert!(r.items_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn json_rows_append_to_the_env_named_file() {
+        let path = std::env::temp_dir()
+            .join(format!("spreeze-bench-json-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        std::env::set_var("SPREEZE_BENCH_JSON", &path);
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            window: Duration::from_millis(5),
+            max_iters: 100,
+            json_group: Some("unit"),
+        };
+        b.run("row_a", Some(1.0), || std::hint::black_box(1u64 + 1));
+        b.run("row_b", None, || std::hint::black_box(2u64 + 2));
+        std::env::remove_var("SPREEZE_BENCH_JSON");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one JSON line per report: {text}");
+        assert!(lines[0].contains("\"bench\":\"unit\"") && lines[0].contains("\"name\":\"row_a\""));
+        assert!(lines[1].contains("\"items_per_sec\":"));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -4,6 +4,7 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod shm;
 pub mod stats;
 pub mod sysinfo;
 pub mod timer;

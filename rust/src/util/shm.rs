@@ -1,0 +1,169 @@
+//! Raw shared-memory mappings (anonymous or /dev/shm file-backed).
+//!
+//! This is the one place that touches `mmap` directly. Both shm protocols —
+//! the experience ring (`replay::shm_ring`) and the weight bus (`bus`) —
+//! build their headers and seqlock words on top of a [`Mapping`], so the
+//! create/attach/validate rules live here once:
+//!
+//! * `create` owns the /dev/shm file and unlinks it on drop — segment
+//!   lifetime equals creator lifetime, attachers never outlive the data
+//!   (their mapping stays valid until munmap, but re-attach fails).
+//! * `attach` refuses to map a file shorter than the expected layout
+//!   (`fstat` before `mmap`); dereferencing past EOF on a shm file is a
+//!   SIGBUS, not an error return, so this check is load-bearing.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+/// Resolve a segment name to its /dev/shm path.
+pub fn shm_path(name: &str) -> PathBuf {
+    PathBuf::from("/dev/shm").join(name)
+}
+
+/// Raw shared mapping (anonymous or /dev/shm file-backed).
+pub struct Mapping {
+    ptr: *mut u8,
+    len: usize,
+    /// Some(path) if we own a /dev/shm file to unlink on drop.
+    owned_path: Option<PathBuf>,
+}
+
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Anonymous MAP_SHARED region (in-process topologies; inherited across
+    /// fork but not attachable by name).
+    pub fn anon(len: usize) -> Result<Mapping> {
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED | libc::MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            bail!("mmap(anon, {len}) failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Mapping { ptr: ptr as *mut u8, len, owned_path: None })
+    }
+
+    /// Create (or truncate-extend) a file-backed segment; the mapping owns
+    /// the file and unlinks it on drop.
+    pub fn create(path: &Path, len: usize) -> Result<Mapping> {
+        Self::file(path, len, true)
+    }
+
+    /// Attach to an existing file-backed segment. Fails if the file is
+    /// missing or shorter than `len` (never maps past EOF).
+    pub fn attach(path: &Path, len: usize) -> Result<Mapping> {
+        Self::file(path, len, false)
+    }
+
+    fn file(path: &Path, len: usize, create: bool) -> Result<Mapping> {
+        use std::os::unix::ffi::OsStrExt;
+        let cpath = std::ffi::CString::new(path.as_os_str().as_bytes())?;
+        let flags = if create { libc::O_RDWR | libc::O_CREAT } else { libc::O_RDWR };
+        let fd = unsafe { libc::open(cpath.as_ptr(), flags, 0o600) };
+        if fd < 0 {
+            bail!("open {} failed: {}", path.display(), std::io::Error::last_os_error());
+        }
+        if create {
+            let rc = unsafe { libc::ftruncate(fd, len as libc::off_t) };
+            if rc != 0 {
+                unsafe { libc::close(fd) };
+                bail!("ftruncate failed: {}", std::io::Error::last_os_error());
+            }
+        } else {
+            // Refuse to map past EOF: a short file means the creator used a
+            // different layout, and touching the hole would SIGBUS.
+            let mut st: libc::stat = unsafe { std::mem::zeroed() };
+            let rc = unsafe { libc::fstat(fd, &mut st) };
+            if rc != 0 {
+                unsafe { libc::close(fd) };
+                bail!("fstat {} failed: {}", path.display(), std::io::Error::last_os_error());
+            }
+            if (st.st_size as u64) < len as u64 {
+                unsafe { libc::close(fd) };
+                bail!(
+                    "shm segment {} is {} bytes, expected at least {len} \
+                     (layout mismatch between creator and attacher)",
+                    path.display(),
+                    st.st_size
+                );
+            }
+        }
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                fd,
+                0,
+            )
+        };
+        unsafe { libc::close(fd) };
+        if ptr == libc::MAP_FAILED {
+            bail!("mmap({}) failed: {}", path.display(), std::io::Error::last_os_error());
+        }
+        Ok(Mapping {
+            ptr: ptr as *mut u8,
+            len,
+            owned_path: if create { Some(path.to_path_buf()) } else { None },
+        })
+    }
+
+    #[inline]
+    pub fn ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+
+    /// Mapped length in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.len
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        unsafe { libc::munmap(self.ptr as *mut libc::c_void, self.len) };
+        if let Some(p) = &self.owned_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attach_refuses_short_file() {
+        let path = std::env::temp_dir()
+            .join(format!("spreeze-shm-short-{}", std::process::id()));
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        let err = Mapping::attach(&path, 4096).unwrap_err().to_string();
+        assert!(err.contains("64 bytes"), "unexpected error: {err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn create_attach_share_and_unlink_on_creator_drop() {
+        let path = std::env::temp_dir()
+            .join(format!("spreeze-shm-roundtrip-{}", std::process::id()));
+        let a = Mapping::create(&path, 4096).unwrap();
+        unsafe { *a.ptr() = 0xAB };
+        let b = Mapping::attach(&path, 4096).unwrap();
+        assert_eq!(unsafe { *b.ptr() }, 0xAB);
+        assert_eq!(b.byte_len(), 4096);
+        drop(b); // attacher drop must NOT unlink
+        assert!(path.exists());
+        drop(a);
+        assert!(!path.exists());
+    }
+}

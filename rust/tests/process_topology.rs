@@ -1,0 +1,252 @@
+//! Cross-process integration tests for the shm protocols and the
+//! `--topology procs` sampler promotion:
+//!
+//! * the seqlock contracts (experience ring + weight bus) hold across real
+//!   process boundaries — child processes push frames and poll weights
+//!   while the parent publishes, with torn-read and version-monotonicity
+//!   checks on both sides;
+//! * a mismatched `FrameSpec` attach fails loudly instead of corrupting;
+//! * the chaos case: SIGKILL one sampler worker process mid-run and assert
+//!   the supervisor respawns it, the respawned worker produces frames, the
+//!   learner keeps updating off cross-process experience, and the restart
+//!   is visible in the `samplers` service stats row.
+//!
+//! All children exec the real `spreeze` binary (hidden `shm-child` /
+//! `sampler-worker` commands); `SPREEZE_WORKER_BIN` points the supervisor
+//! at it because the test harness binary has no subcommands.
+
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use spreeze::bus::WeightBus;
+use spreeze::config::{TopologyMode, TrainConfig};
+use spreeze::coordinator::topology::TopologyBuilder;
+use spreeze::replay::{FrameSpec, ShmRing, ShmRingOptions};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_spreeze")
+}
+
+fn wait_until(secs: u64, mut f: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while Instant::now() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    false
+}
+
+/// Two child processes hammer the named ring with constant-valued tagged
+/// frames and poll the weight bus, while the parent publishes a fresh
+/// weight version every millisecond and spot-checks ring slots. The
+/// children verify no torn weight reads and strict version monotonicity
+/// (non-zero exit on any violation); the parent verifies push accounting
+/// and frame integrity.
+#[test]
+fn cross_process_ring_and_bus_protocols_hold() {
+    const CAPACITY: usize = 4096;
+    const PARAMS: usize = 257;
+    const FRAMES_PER_CHILD: u64 = 20_000;
+    const CHILDREN: u64 = 2;
+
+    let prefix = format!("spreeze-xproc-{}", std::process::id());
+    let spec = FrameSpec { obs_dim: 3, act_dim: 2 };
+    let ring = Arc::new(
+        ShmRing::create(&ShmRingOptions {
+            capacity: CAPACITY,
+            spec,
+            shm_name: Some(format!("{prefix}-ring")),
+        })
+        .unwrap(),
+    );
+    let bus = WeightBus::create_named(&format!("{prefix}-bus"), PARAMS).unwrap();
+    // version payloads are element-wise constant (= the version), so any
+    // torn mix of two versions breaks the child's constancy check
+    let mut v = bus.publish(&vec![1.0f32; PARAMS]).unwrap();
+    assert_eq!(v, 1);
+
+    let mut kids: Vec<Child> = (0..CHILDREN)
+        .map(|tag| {
+            Command::new(bin())
+                .args([
+                    "shm-child",
+                    "--shm-prefix",
+                    &prefix,
+                    "--capacity",
+                    &CAPACITY.to_string(),
+                    "--obs",
+                    "3",
+                    "--act",
+                    "2",
+                    "--params",
+                    &PARAMS.to_string(),
+                    "--frames",
+                    &FRAMES_PER_CHILD.to_string(),
+                    "--tag",
+                    &(tag + 1).to_string(),
+                ])
+                .stdin(Stdio::null())
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+
+    let mut frame = vec![0.0f32; spec.f32s()];
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let mut running = 0usize;
+        for c in kids.iter_mut() {
+            if c.try_wait().unwrap().is_none() {
+                running += 1;
+            }
+        }
+        if running == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "shm children did not finish in time");
+        v = bus.publish(&vec![(v + 1) as f32; PARAMS]).unwrap();
+        // parent-side torn-read spot check on currently visible slots
+        let visible = ring.visible_now();
+        for slot in [0, visible / 2, visible.saturating_sub(1)] {
+            if slot < visible && ring.read_slot(slot, &mut frame) {
+                let head = frame[0];
+                assert!(
+                    frame.iter().all(|&x| x == head),
+                    "torn ring frame in slot {slot}: {frame:?}"
+                );
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    for c in &mut kids {
+        let st = c.wait().unwrap();
+        assert!(st.success(), "shm child failed its protocol checks: {st}");
+    }
+
+    let stats = ring.ring_stats();
+    assert_eq!(
+        stats.pushed,
+        CHILDREN * FRAMES_PER_CHILD,
+        "cross-process push accounting must be exact"
+    );
+    // every resident frame is a settled, untorn child frame
+    for slot in 0..ring.visible_now() {
+        assert!(ring.read_slot(slot, &mut frame), "unreadable slot {slot} after quiescence");
+        let head = frame[0];
+        assert!(frame.iter().all(|&x| x == head), "torn frame in slot {slot}: {frame:?}");
+        assert!(head >= 1_000_000.0, "slot {slot} holds a value no child wrote: {head}");
+    }
+}
+
+/// A child attaching with the wrong FrameSpec must die with a loud frame-
+/// size error before touching any payload, not silently mis-stride the
+/// shared segment.
+#[test]
+fn mismatched_frame_spec_child_fails_loudly() {
+    let prefix = format!("spreeze-xspec-{}", std::process::id());
+    let spec = FrameSpec { obs_dim: 3, act_dim: 2 };
+    let _ring = ShmRing::create(&ShmRingOptions {
+        capacity: 64,
+        spec,
+        shm_name: Some(format!("{prefix}-ring")),
+    })
+    .unwrap();
+    let out = Command::new(bin())
+        .args([
+            "shm-child",
+            "--shm-prefix",
+            &prefix,
+            "--capacity",
+            "64",
+            "--obs",
+            "2",
+            "--act",
+            "2",
+            "--params",
+            "16",
+            "--frames",
+            "10",
+            "--tag",
+            "1",
+        ])
+        .stdin(Stdio::null())
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "mismatched-spec attach must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("frame size mismatch"), "unexpected child error: {err}");
+}
+
+/// The tentpole chaos case: build a procs topology, SIGKILL one worker
+/// process mid-run, and assert supervision + recovery end-to-end.
+#[test]
+fn chaos_sigkill_worker_is_respawned_and_training_continues() {
+    std::env::set_var("SPREEZE_BACKEND", "native");
+    std::env::set_var("SPREEZE_WORKER_BIN", bin());
+    let mut cfg = TrainConfig::default();
+    cfg.env = "pendulum".into();
+    cfg.topology = TopologyMode::Procs;
+    cfg.shm_prefix = format!("spreeze-chaos-{}", std::process::id());
+    cfg.hardware.cpu_cores = 2;
+    cfg.n_samplers = 2;
+    cfg.envs_per_worker = 2;
+    cfg.batch_size = 64;
+    cfg.start_steps = 0;
+    let run_dir =
+        std::env::temp_dir().join(format!("spreeze-chaos-test-{}", std::process::id()));
+    cfg.run_dir = run_dir.to_string_lossy().into_owned();
+
+    let mut topo = TopologyBuilder::new(cfg).eval(false).viz(false).build().unwrap();
+    {
+        let procs = topo.pool.as_ref().unwrap().as_procs().expect("procs-mode pool");
+        assert_eq!(procs.workers_spawned(), 2);
+
+        // phase 1: the victim worker is alive and producing frames
+        assert!(
+            wait_until(20, || procs.frames_for(0) > 0),
+            "worker 0 never produced frames (pre-kill)"
+        );
+        let pid = procs.worker_pid(0).expect("worker 0 has a live process");
+
+        // phase 2: SIGKILL it — the hardest failure (no cleanup, no unwind)
+        unsafe {
+            assert_eq!(libc::kill(pid as libc::pid_t, libc::SIGKILL), 0);
+        }
+        assert!(
+            wait_until(20, || procs.restarts() >= 1),
+            "supervisor never respawned the killed worker"
+        );
+        let frames_at_restart = procs.frames_for(0);
+        assert!(
+            wait_until(20, || procs.frames_for(0) > frames_at_restart),
+            "respawned worker 0 produced no frames"
+        );
+        let new_pid = procs.worker_pid(0).expect("respawned worker has a process");
+        assert_ne!(new_pid, pid, "slot 0 must hold a fresh process after the kill");
+    }
+
+    // phase 3: training continues — the learner updates off cross-process
+    // experience that spans the crash
+    assert!(
+        wait_until(20, || topo.learner.visible() >= 64),
+        "ring never reached one batch of visible frames"
+    );
+    for _ in 0..3 {
+        assert!(topo.learner.try_update().unwrap(), "update failed post-restart");
+    }
+
+    // phase 4: the restart is visible in the service stats surface that
+    // snapshots and summary.json record
+    let rows = topo.service_stats();
+    let (_, stats) = rows.iter().find(|(name, _)| name == "samplers").unwrap();
+    assert!(
+        stats.iter().any(|(k, v)| *k == "restarts" && *v >= 1.0),
+        "samplers stats must record the restart: {stats:?}"
+    );
+
+    topo.shutdown_services();
+    let _ = std::fs::remove_dir_all(run_dir);
+}
