@@ -105,6 +105,17 @@ pub struct Knob {
     pub cost: ApplyCost,
     pub signal: Signal,
     pub climber: HillClimber,
+    /// Feed period in adaptation windows: the knob is eligible to be fed
+    /// once every `period` non-cooldown windows (1 = every window, 0 is
+    /// treated as 1), so its *effective* adaptation window is `period`
+    /// times the controller's. Structural knobs whose throughput takes
+    /// longer to settle (BS: executor swap + refill) run on a longer
+    /// period than the cheap sampling knobs (SP/K). An eligible knob that
+    /// loses its round-robin or structural-budget turn stays eligible, so
+    /// periods delay turns but never forfeit them. The drift watch for
+    /// locked knobs ignores periods: drift detection needs every window's
+    /// telemetry.
+    pub period: u32,
 }
 
 /// Per-window telemetry, assembled from `Snapshot` by the coordinator.
@@ -149,18 +160,23 @@ pub struct Controller {
     /// Rotates which group is served first, so a structural knob pre-empted
     /// by the one-structural-move budget is first in line next window.
     group_rr: usize,
+    /// Per-knob windows remaining until the knob is feed-eligible again
+    /// (see [`Knob::period`]); parallel to `knobs`.
+    due: Vec<u32>,
     /// Full per-window history (telemetry, decisions, settings).
     pub trace: Vec<WindowRecord>,
 }
 
 impl Controller {
     pub fn new(knobs: Vec<Knob>, cooldown_windows: u32) -> Controller {
+        let due = vec![0; knobs.len()];
         Controller {
             knobs,
             cooldown_windows,
             cooldown_left: 0,
             cursors: [0; N_GROUPS],
             group_rr: 0,
+            due,
             trace: Vec::new(),
         }
     }
@@ -205,6 +221,18 @@ impl Controller {
                 watched.push(i);
             }
         }
+        // Per-knob window periods: a knob with `period` n is fed at most
+        // every n-th non-cooldown window. Count this window off for the
+        // not-yet-due; the due stay at zero until actually fed, so a lost
+        // round-robin or structural-budget turn carries over.
+        let mut eligible = vec![false; self.knobs.len()];
+        for (i, due) in self.due.iter_mut().enumerate() {
+            if *due == 0 {
+                eligible[i] = true;
+            } else {
+                *due -= 1;
+            }
+        }
         let mut cmds: Vec<KnobCommand> = Vec::new();
         let mut structural_used = false;
         let first = self.group_rr;
@@ -216,7 +244,10 @@ impl Controller {
                 .iter()
                 .enumerate()
                 .filter(|(i, kn)| {
-                    kn.signal.group() == g && !kn.climber.locked && !watched.contains(i)
+                    kn.signal.group() == g
+                        && eligible[*i]
+                        && !kn.climber.locked
+                        && !watched.contains(i)
                 })
                 .map(|(i, _)| i)
                 .collect();
@@ -230,6 +261,7 @@ impl Controller {
                 continue;
             }
             self.cursors[g] += 1;
+            self.due[pick] = self.knobs[pick].period.max(1) - 1;
             let kn = &mut self.knobs[pick];
             let window_obs = kn.signal.obs(&tel);
             let before = kn.climber.current();
@@ -288,7 +320,7 @@ mod tests {
         lo: f64,
         hi: f64,
     ) -> Knob {
-        Knob { id, cost, signal, climber: HillClimber::new(ladder, start, lo, hi) }
+        Knob { id, cost, signal, climber: HillClimber::new(ladder, start, lo, hi), period: 1 }
     }
 
     /// Convex update-frame-rate surface, peak at bs=1024.
@@ -559,6 +591,105 @@ mod tests {
              (was locked at {locked_bs})"
         );
         assert_invariants(&ctl, 1);
+    }
+
+    #[test]
+    fn knob_period_stretches_the_feed_cadence() {
+        // BS on a 3-window period, no cooldown: on a permanently underused
+        // signal the climber moves every time it is fed, so commands land
+        // exactly on windows 0, 3, 6, 9 — the knob's effective adaptation
+        // window is three controller windows long.
+        let mut ctl = Controller::new(
+            vec![Knob {
+                id: KnobId::BatchSize,
+                cost: ApplyCost::Structural,
+                signal: Signal::UpdatePath,
+                climber: HillClimber::new(
+                    vec![128, 256, 512, 1024, 2048, 4096, 8192],
+                    128,
+                    0.75,
+                    0.95,
+                ),
+                period: 3,
+            }],
+            0,
+        );
+        // GPU underused and throughput improving >3% per window: the climber
+        // grows every time it is fed and never accumulates lock strikes.
+        for w in 0..12i32 {
+            let tel = Telemetry {
+                gpu_usage: 0.2,
+                update_frame_hz: 100.0 * 1.1f64.powi(w),
+                ..Default::default()
+            };
+            ctl.observe(w as f64, tel);
+        }
+        let cmd_windows: Vec<usize> = ctl
+            .trace
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| !w.commands.is_empty())
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(cmd_windows, vec![0, 3, 6, 9], "period-3 knob must be fed every 3rd window");
+        assert_invariants(&ctl, 0);
+    }
+
+    #[test]
+    fn bs_adapts_on_longer_windows_than_sp() {
+        // ROADMAP satellite: the structural BS knob runs on 3x windows while
+        // the cheap SP knob adapts every window — different cadences on the
+        // same controller, no turn forfeited.
+        let mut ctl = Controller::new(
+            vec![
+                knob(
+                    KnobId::Samplers,
+                    ApplyCost::Cheap,
+                    Signal::Sampling,
+                    (1..=32).collect(),
+                    1,
+                    0.75,
+                    0.95,
+                ),
+                Knob {
+                    id: KnobId::BatchSize,
+                    cost: ApplyCost::Structural,
+                    signal: Signal::UpdatePath,
+                    climber: HillClimber::new(
+                        vec![128, 256, 512, 1024, 2048, 4096, 8192],
+                        128,
+                        0.75,
+                        0.95,
+                    ),
+                    period: 3,
+                },
+            ],
+            0,
+        );
+        for w in 0..12i32 {
+            let tput = 100.0 * 1.1f64.powi(w);
+            let tel = Telemetry {
+                cpu_usage: 0.2,
+                gpu_usage: 0.2,
+                sampling_hz: tput,
+                update_frame_hz: tput,
+                ..Default::default()
+            };
+            ctl.observe(w as f64, tel);
+        }
+        let windows_of = |id: KnobId| -> Vec<usize> {
+            ctl.trace
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.commands.iter().any(|c| c.id == id))
+                .map(|(i, _)| i)
+                .collect()
+        };
+        let sp = windows_of(KnobId::Samplers);
+        let bs = windows_of(KnobId::BatchSize);
+        assert_eq!(sp.len(), 12, "period-1 SP adapts every window: {sp:?}");
+        assert_eq!(bs, vec![0, 3, 6, 9], "period-3 BS cadence: {bs:?}");
+        assert_invariants(&ctl, 0);
     }
 
     #[test]

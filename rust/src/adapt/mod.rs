@@ -13,7 +13,7 @@
 
 pub mod controller;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{AtomicUsize, Ordering};
 
 /// One knob observation.
 #[derive(Clone, Copy, Debug)]

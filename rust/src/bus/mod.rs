@@ -19,7 +19,7 @@
 //!   (polling may legitimately skip intermediate versions).
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use crate::util::sync::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -133,7 +133,9 @@ impl WeightBus {
         let (_, _, total) = wb_layout(size);
         let map = Mapping::anon(total).expect("anonymous weight-bus mapping");
         let bus = Self::over(map, size);
+        // relaxed-ok: single-threaded segment init before the path/fd is shared
         bus.hdr(0).store(WB_MAGIC, Ordering::Relaxed);
+        // relaxed-ok: single-threaded segment init before the path/fd is shared
         bus.hdr(1).store(size as u64, Ordering::Relaxed);
         bus
     }
@@ -144,7 +146,9 @@ impl WeightBus {
         let (_, _, total) = wb_layout(size);
         let map = Mapping::create(&shm_path(name), total)?;
         let bus = Self::over(map, size);
+        // relaxed-ok: single-threaded segment init before the path/fd is shared
         bus.hdr(0).store(WB_MAGIC, Ordering::Relaxed);
+        // relaxed-ok: single-threaded segment init before the path/fd is shared
         bus.hdr(1).store(size as u64, Ordering::Relaxed);
         Ok(bus)
     }
@@ -156,9 +160,11 @@ impl WeightBus {
         let (_, _, total) = wb_layout(size);
         let map = Mapping::attach(&shm_path(name), total)?;
         let bus = Self::over(map, size);
+        // relaxed-ok: attach-side init read; creation happens-before attach (spawn/open)
         if bus.hdr(0).load(Ordering::Relaxed) != WB_MAGIC {
             bail!("weight bus {name:?}: bad magic");
         }
+        // relaxed-ok: attach-side init read; creation happens-before attach (spawn/open)
         let created = bus.hdr(1).load(Ordering::Relaxed);
         if created != size as u64 {
             bail!(
@@ -172,6 +178,8 @@ impl WeightBus {
     #[inline]
     fn hdr(&self, i: usize) -> &AtomicU64 {
         debug_assert!(i < WB_HDR_U64S);
+        // SAFETY: the mapping is >= WB_HDR_U64S*8 bytes and its base is
+        // page-aligned (mmap), so word i is a valid in-bounds aligned AtomicU64.
         unsafe { &*(self.map.ptr().add(i * 8) as *const AtomicU64) }
     }
 
@@ -189,6 +197,8 @@ impl WeightBus {
 
     #[inline]
     fn data(&self, s: usize) -> &[AtomicU32] {
+        // SAFETY: slot_off[s] + size*4 is within the mapping (layout computed at
+        // create/attach) and 4-byte aligned off the page-aligned base.
         unsafe {
             std::slice::from_raw_parts(
                 self.map.ptr().add(self.slot_off[s]) as *const AtomicU32,
@@ -231,17 +241,20 @@ impl WeightBus {
             actor.len()
         );
         let _g = self.pub_lock.lock().unwrap();
+        // relaxed-ok: publisher is the sole writer of head, so it reads its own last store
         let v = self.head().load(Ordering::Relaxed) + 1;
         let slot = (v % 2) as usize;
+        // relaxed-ok: readers discard via the seq recheck; ordered by the Release fence below
         self.seq(slot).store(WRITING, Ordering::Relaxed);
         // Release fence: the WRITING marker must become visible before any
         // of the data writes below, so a reader that observes fresh words
         // cannot still observe the old (stable) seq and accept a torn copy.
-        std::sync::atomic::fence(Ordering::Release);
+        crate::util::sync::fence(Ordering::Release);
         // Seqlock write: subscribers may race this copy element-wise, but
         // they validate seq on both sides of their read and discard torn
         // copies; per-element relaxed atomics keep the race well-defined.
         for (dst, &x) in self.data(slot).iter().zip(actor) {
+            // relaxed-ok: payload words are guarded by the seq Release store + reader recheck
             dst.store(x.to_bits(), Ordering::Relaxed);
         }
         self.seq(slot).store(v, Ordering::Release);
@@ -308,9 +321,10 @@ impl PolicySub for WeightBusSub {
             // into the same slot; the seq re-check rejects any torn result.
             buf.clear();
             buf.extend(
+                // relaxed-ok: payload validated by the Acquire fence + seq recheck that follow
                 self.bus.data(slot).iter().map(|x| f32::from_bits(x.load(Ordering::Relaxed))),
             );
-            std::sync::atomic::fence(Ordering::Acquire);
+            crate::util::sync::fence(Ordering::Acquire);
             if self.bus.seq(slot).load(Ordering::Acquire) == v {
                 self.cursor = v;
                 return Ok(Some(v));
@@ -482,7 +496,8 @@ pub fn make_bus(
     })
 }
 
-#[cfg(test)]
+// not(miri): real mmap segments (see ISSUE 7 Miri gating).
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
 
@@ -538,6 +553,7 @@ mod tests {
                 let mut buf = Vec::new();
                 let mut last = 0u64;
                 let mut observed = 0u64;
+                // relaxed-ok: test-local stop flag; no data is published through it
                 while stop.load(Ordering::Relaxed) == 0 {
                     if let Some(v) = sub.poll(&mut buf).unwrap() {
                         assert!(v > last, "version went backwards: {last} -> {v}");
@@ -554,6 +570,7 @@ mod tests {
         }
         // let subscribers drain the final version before stopping them
         std::thread::sleep(Duration::from_millis(50));
+        // relaxed-ok: test-local stop flag; no data is published through it
         stop.store(1, Ordering::Relaxed);
         for h in handles {
             let observed = h.join().unwrap();

@@ -1,7 +1,7 @@
 //! Metrics hub: the shared counters behind every throughput number the
 //! paper reports (Tables 2–3) plus periodic snapshot rows for analysis.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 

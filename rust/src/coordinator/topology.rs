@@ -10,7 +10,7 @@
 //! harness all build the same topology instead of re-wiring it by hand.
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -603,6 +603,7 @@ fn default_controller(
             signal: Signal::Sampling,
             // CPU band: the paper settles ~75% usage; >95% starves the learner
             climber: HillClimber::new((1..=max_workers.max(1)).collect(), sp0, 0.75, 0.95),
+            period: 1,
         });
     }
     if have_pool && on("k") {
@@ -616,6 +617,7 @@ fn default_controller(
             cost: ApplyCost::Cheap,
             signal: Signal::Sampling,
             climber: HillClimber::new(pow2_ladder(64.max(k0), k0), k0, 0.75, 0.95),
+            period: 1,
         });
     }
     if on("bs") && !bs_ladder.is_empty() {
@@ -629,6 +631,11 @@ fn default_controller(
             // saturation (lo=1.0 -> always "room to grow", hi>1 -> never
             // "too saturated").
             climber: HillClimber::new(bs_ladder.to_vec(), bs0, 1.0, 1.01),
+            // An executor swap pollutes the following window's throughput
+            // and the refilled pipeline needs time to show the new rate:
+            // BS adapts on 3x longer windows than the cheap SP/K knobs
+            // (ROADMAP: per-knob window lengths).
+            period: 3,
         });
     }
     // ops-threads: only when neither SPREEZE_THREADS nor the config pinned
@@ -646,6 +653,7 @@ fn default_controller(
                     0.75,
                     0.95,
                 ),
+                period: 1,
             });
         }
     }

@@ -3,7 +3,7 @@
 //! curve (the y-axis of every training figure), without ever touching the
 //! experience stream.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 

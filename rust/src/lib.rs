@@ -28,6 +28,12 @@
 //!   APE-X-like, synchronous) for Tables 1–2, and [`harness`] regenerates
 //!   every table and figure of the paper's evaluation.
 
+// Correctness hardening (ISSUE 7): unsafe code inside `unsafe fn` still needs
+// explicit blocks, and every unsafe block must carry a `// SAFETY:` comment
+// (also enforced, with the Ordering audit, by `cargo xtask lint`).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 pub mod adapt;
 pub mod baselines;
 pub mod bus;

@@ -166,11 +166,15 @@ fn f32s_as_bytes(v: &[f32]) -> &[u8] {
     // f32 -> LE bytes; x86_64/aarch64 are little-endian, asserted below.
     #[cfg(target_endian = "big")]
     compile_error!("little-endian host required for checkpoint format");
+    // SAFETY: any bit pattern is a valid u8 and align_of::<u8>() == 1; the
+    // byte view covers exactly v's buffer.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
 fn bytes_as_f32s(b: &[u8]) -> Vec<f32> {
     let mut out = vec![0.0f32; b.len() / 4];
+    // SAFETY: out holds b.len()/4 f32s == out.len()*4 bytes; the freshly
+    // allocated dst cannot overlap src.
     unsafe {
         std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr() as *mut u8, out.len() * 4);
     }

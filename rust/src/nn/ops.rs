@@ -39,7 +39,7 @@
 
 use std::cell::RefCell;
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -67,7 +67,10 @@ const MAX_THREADS: usize = 64;
 /// [`ThreadPool::run`] returns — so the erased borrow never dangles.
 #[derive(Clone, Copy)]
 struct Task(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` and `run` blocks until every claimed part
+// has executed, so the erased borrow is live whenever workers call it.
 unsafe impl Send for Task {}
+// SAFETY: same justification as Send — parts only call the Sync closure.
 unsafe impl Sync for Task {}
 
 struct Job {
@@ -403,7 +406,10 @@ fn row_parts(pool: &ThreadPool, rows: usize, flops: usize) -> usize {
 /// every kernel hands each part a disjoint row range, reconstructed with
 /// `from_raw_parts_mut` inside the part.
 struct SendPtr(*mut f32);
+// SAFETY: the pointer is only turned into slices over disjoint per-part
+// ranges (see struct docs), so moving it across threads cannot alias.
 unsafe impl Send for SendPtr {}
+// SAFETY: same justification as Send — disjoint ranges, no shared &mut.
 unsafe impl Sync for SendPtr {}
 
 thread_local! {
@@ -885,7 +891,9 @@ pub mod naive {
     }
 }
 
-#[cfg(test)]
+// not(miri): minutes-long under the interpreter; pool races are covered by
+// the TSan CI job (see ISSUE 7 Miri gating).
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use crate::util::rng::Rng;

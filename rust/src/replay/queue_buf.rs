@@ -9,7 +9,7 @@
 //! land in a learner-local replay pool that batches are drawn from.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -60,11 +60,13 @@ impl QueueBuffer {
 
 impl ExpSink for QueueBuffer {
     fn push(&self, frame: &[f32]) {
+        // relaxed-ok: stats counter, no data guarded by it
         self.pushed.fetch_add(1, Ordering::Relaxed);
         let mut g = self.inner.lock().unwrap();
         if g.q.len() >= self.queue_size {
             // full queue: the frame is dropped — transmission loss
             drop(g);
+            // relaxed-ok: stats counter, no data guarded by it
             self.lost.fetch_add(1, Ordering::Relaxed);
             return;
         }
@@ -79,6 +81,7 @@ impl ExpSink for QueueBuffer {
         }
         let f = self.spec.f32s();
         debug_assert_eq!(frames.len(), n_frames * f);
+        // relaxed-ok: stats counter, no data guarded by it
         self.pushed.fetch_add(n_frames as u64, Ordering::Relaxed);
         let mut lost = 0u64;
         {
@@ -93,13 +96,16 @@ impl ExpSink for QueueBuffer {
             }
         }
         if lost > 0 {
+            // relaxed-ok: stats counter, no data guarded by it
             self.lost.fetch_add(lost, Ordering::Relaxed);
         }
     }
 
     fn stats(&self) -> TransportStats {
         TransportStats {
+            // relaxed-ok: stats read, no synchronization implied
             pushed: self.pushed.load(Ordering::Relaxed),
+            // relaxed-ok: stats read, no synchronization implied
             lost: self.lost.load(Ordering::Relaxed),
             visible: self.len(),
             transfer_cycle_s: 0.0,

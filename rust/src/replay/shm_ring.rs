@@ -21,7 +21,7 @@
 //! Loss accounting: a slot overwritten before it was ever sampled counts as
 //! a lost frame (paper's "experience transmission loss").
 
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use crate::util::sync::{AtomicU32, AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
@@ -31,7 +31,7 @@ use crate::util::rng::Rng;
 use crate::util::shm::{shm_path, Mapping};
 
 const MAGIC: u64 = 0x5350_5245_455A_4531; // "SPREEZE1"
-const HDR_U64S: usize = 8; // magic, capacity, frame, cursor, lost, sampled, 2 spare
+const HDR_U64S: usize = 8; // magic, capacity, frame, cursor, lost, sampled, lap hazards, 1 spare
 
 #[derive(Clone, Debug)]
 pub struct ShmRingOptions {
@@ -81,8 +81,11 @@ impl ShmRing {
             data_off,
         };
         // init header (zeroed by mmap; set magic/capacity/frame)
+        // relaxed-ok: single-threaded segment init before the path/fd is shared
         ring.hdr(0).store(MAGIC, Ordering::Relaxed);
+        // relaxed-ok: single-threaded segment init before the path/fd is shared
         ring.hdr(1).store(opts.capacity as u64, Ordering::Relaxed);
+        // relaxed-ok: single-threaded segment init before the path/fd is shared
         ring.hdr(2).store(frame as u64, Ordering::Relaxed);
         Ok(ring)
     }
@@ -96,12 +99,15 @@ impl ShmRing {
         let (seq_off, flag_off, data_off, total) = Self::layout(capacity, frame);
         let map = Mapping::attach(&shm_path(name), total)?;
         let ring = ShmRing { map, capacity, frame, spec, seq_off, flag_off, data_off };
+        // relaxed-ok: attach-side init read; creation happens-before attach (spawn/open)
         if ring.hdr(0).load(Ordering::Relaxed) != MAGIC {
             bail!("shm ring {name:?}: bad magic");
         }
+        // relaxed-ok: attach-side init read; creation happens-before attach (spawn/open)
         if ring.hdr(1).load(Ordering::Relaxed) != capacity as u64 {
             bail!("shm ring {name:?}: capacity mismatch");
         }
+        // relaxed-ok: attach-side init read; creation happens-before attach (spawn/open)
         let created_frame = ring.hdr(2).load(Ordering::Relaxed);
         if created_frame != frame as u64 {
             bail!(
@@ -115,21 +121,28 @@ impl ShmRing {
     #[inline]
     fn hdr(&self, i: usize) -> &AtomicU64 {
         debug_assert!(i < HDR_U64S);
+        // SAFETY: the mapping is >= HDR_U64S*8 bytes off a page-aligned mmap base,
+        // so word i is a valid in-bounds aligned AtomicU64.
         unsafe { &*(self.map.ptr().add(i * 8) as *const AtomicU64) }
     }
 
     #[inline]
     fn seq(&self, slot: usize) -> &AtomicU64 {
+        // SAFETY: seq_off + capacity*8 is within the mapping (layout computed at
+        // create/attach); 8-byte aligned off the page-aligned base.
         unsafe { &*(self.map.ptr().add(self.seq_off + slot * 8) as *const AtomicU64) }
     }
 
     #[inline]
     fn flag(&self, slot: usize) -> &AtomicU32 {
+        // SAFETY: flag_off + capacity*4 is within the mapping; 4-byte aligned.
         unsafe { &*(self.map.ptr().add(self.flag_off + slot * 4) as *const AtomicU32) }
     }
 
     #[inline]
     fn data(&self, slot: usize) -> *mut f32 {
+        // SAFETY: data_off + capacity*frame*4 is within the mapping; callers only
+        // copy `frame` f32s through it under the slot seqlock protocol.
         unsafe { self.map.ptr().add(self.data_off + slot * self.frame * 4) as *mut f32 }
     }
 
@@ -156,19 +169,48 @@ impl ShmRing {
     fn publish_slot(&self, idx: u64, frame: &[f32]) {
         let slot = (idx % self.capacity as u64) as usize;
         let seq = self.seq(slot);
+        // relaxed-ok: prev epoch feeds only the odd marker + loss stats; slot
+        // ownership comes from the cursor reservation
         let prev = seq.load(Ordering::Relaxed);
         // loss accounting: overwriting a published frame nobody sampled
+        // relaxed-ok: sampled flag is advisory loss accounting, not a data guard
         if prev != 0 && self.flag(slot).swap(0, Ordering::Relaxed) == 0 {
+            // relaxed-ok: stats counter, no data guarded by it
             self.hdr(4).fetch_add(1, Ordering::Relaxed);
         }
         // seqlock write: odd = in progress
         seq.store(prev | 1, Ordering::Release);
+        // SAFETY: data(slot) addresses exactly `self.frame` f32s inside the
+        // mapping and frame.len() == self.frame (asserted by push paths); a
+        // concurrent reader detects this write via the odd seq value.
         unsafe {
             std::ptr::copy_nonoverlapping(frame.as_ptr(), self.data(slot), self.frame);
         }
         // publish with a new even value (epoch = wrap count + 1)
         let epoch = (idx / self.capacity as u64 + 1) << 1;
         seq.store(epoch, Ordering::Release);
+        // Lap-hazard detection (found by the ISSUE 7 model-checking pass):
+        // the per-slot seqlock assumes at most one in-flight writer per slot,
+        // which holds only while reservations stay within one ring lap of the
+        // slowest publisher. If the cursor overtook idx by >= capacity while
+        // this publish was in flight, another writer may have raced this slot
+        // and a reader could accept a frame mixing the two — undetectable
+        // reader-side because stray payload writes don't touch seq. We can't
+        // cheaply exclude it wait-free, so we count it: a nonzero counter
+        // means the ring is badly undersized for its writers. See
+        // docs/CONCURRENCY.md ("lap hazard") for the full argument.
+        if self.cursor() > idx + self.capacity as u64 {
+            // relaxed-ok: hazard telemetry, no data guarded by it
+            self.hdr(6).fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Publishes that may have raced another writer on the same slot because
+    /// the ring wrapped past them mid-write (see [`Self::publish_slot`]).
+    /// Zero in any sanely sized configuration.
+    pub fn lap_hazards(&self) -> u64 {
+        // relaxed-ok: stats read, no synchronization implied
+        self.hdr(6).load(Ordering::Relaxed)
     }
 
     /// Push one frame (multi-writer safe, wait-free for the learner).
@@ -208,16 +250,19 @@ impl ShmRing {
         if s1 == 0 || s1 & 1 == 1 {
             return false;
         }
+        // SAFETY: out.len() == self.frame (caller contract) and data(slot) holds
+        // self.frame f32s; a racing overwrite is rejected by the recheck below.
         unsafe {
             std::ptr::copy_nonoverlapping(self.data(slot), out.as_mut_ptr(), self.frame);
         }
-        std::sync::atomic::fence(Ordering::Acquire);
+        crate::util::sync::fence(Ordering::Acquire);
         seq.load(Ordering::Acquire) == s1
     }
 
     pub fn ring_stats(&self) -> TransportStats {
         TransportStats {
             pushed: self.cursor(),
+            // relaxed-ok: stats read, no synchronization implied
             lost: self.hdr(4).load(Ordering::Relaxed),
             visible: self.visible_now(),
             transfer_cycle_s: 0.0, // shared memory: immediate visibility
@@ -266,6 +311,7 @@ impl ExpSource for ShmSource {
             loop {
                 let slot = rng.below(visible as u64) as usize;
                 if self.ring.try_read(slot, &mut self.scratch) {
+                    // relaxed-ok: advisory sampled mark; protects no data
                     self.ring.flag(slot).store(1, Ordering::Relaxed);
                     spec.unpack_into(&self.scratch, batch, i);
                     sampled += 1;
@@ -278,6 +324,7 @@ impl ExpSource for ShmSource {
                 }
             }
         }
+        // relaxed-ok: stats counter, no data guarded by it
         self.ring.hdr(5).fetch_add(sampled, Ordering::Relaxed);
         true
     }
@@ -291,7 +338,8 @@ impl ExpSource for ShmSource {
     }
 }
 
-#[cfg(test)]
+// not(miri): real mmap segments (see ISSUE 7 Miri gating).
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
     use std::sync::Arc;
@@ -304,6 +352,24 @@ mod tests {
         Arc::new(
             ShmRing::create(&ShmRingOptions { capacity, spec: spec(), shm_name: None }).unwrap(),
         )
+    }
+
+    #[test]
+    fn lap_hazard_counter_flags_reservations_past_one_wrap() {
+        let ring = mk(2);
+        let frame = spec().f32s();
+        // In-budget pushes never trip the detector: the cursor stays within
+        // one lap of every in-flight publish.
+        for i in 0..6 {
+            ring.push_frame(&vec![i as f32; frame]);
+        }
+        assert_eq!(ring.lap_hazards(), 0);
+        // A single reservation of 2x capacity guarantees that slots 0 and 1
+        // are each owned by two indices of the same in-flight batch: the
+        // earlier index of each pair publishes with the cursor already a
+        // full lap ahead, which is exactly the hazard regime.
+        ring.push_frames(&vec![7.0; 4 * frame], 4);
+        assert_eq!(ring.lap_hazards(), 2);
     }
 
     #[test]

@@ -227,5 +227,7 @@ fn run_pjrt(
 }
 
 fn bytes_of(v: &[f32]) -> &[u8] {
+    // SAFETY: any bit pattern is a valid u8 and align_of::<u8>() == 1; the
+    // byte view covers exactly v's buffer.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }

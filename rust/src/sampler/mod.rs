@@ -28,7 +28,7 @@
 
 pub mod proc;
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 

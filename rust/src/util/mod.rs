@@ -6,5 +6,6 @@ pub mod json;
 pub mod rng;
 pub mod shm;
 pub mod stats;
+pub mod sync;
 pub mod sysinfo;
 pub mod timer;

@@ -29,13 +29,19 @@ pub struct Mapping {
     owned_path: Option<PathBuf>,
 }
 
+// SAFETY: Mapping only hands out a raw base pointer; every cross-thread
+// access is synchronized by the protocols layered on top (atomics /
+// seqlocks), and Drop unmaps only when the single owner goes away.
 unsafe impl Send for Mapping {}
+// SAFETY: same justification as Send — the region itself imposes no
+// unsynchronized aliasing; shared access goes through atomics.
 unsafe impl Sync for Mapping {}
 
 impl Mapping {
     /// Anonymous MAP_SHARED region (in-process topologies; inherited across
     /// fork but not attachable by name).
     pub fn anon(len: usize) -> Result<Mapping> {
+        // SAFETY: anonymous mapping of `len` bytes; no fd or pointer preconditions.
         let ptr = unsafe {
             libc::mmap(
                 std::ptr::null_mut(),
@@ -68,26 +74,34 @@ impl Mapping {
         use std::os::unix::ffi::OsStrExt;
         let cpath = std::ffi::CString::new(path.as_os_str().as_bytes())?;
         let flags = if create { libc::O_RDWR | libc::O_CREAT } else { libc::O_RDWR };
+        // SAFETY: cpath is a valid NUL-terminated path; open() has no other
+        // memory-safety preconditions.
         let fd = unsafe { libc::open(cpath.as_ptr(), flags, 0o600) };
         if fd < 0 {
             bail!("open {} failed: {}", path.display(), std::io::Error::last_os_error());
         }
         if create {
+            // SAFETY: fd is a valid descriptor just opened with O_RDWR.
             let rc = unsafe { libc::ftruncate(fd, len as libc::off_t) };
             if rc != 0 {
+                // SAFETY: fd is open and owned; closed exactly once on this error path.
                 unsafe { libc::close(fd) };
                 bail!("ftruncate failed: {}", std::io::Error::last_os_error());
             }
         } else {
             // Refuse to map past EOF: a short file means the creator used a
             // different layout, and touching the hole would SIGBUS.
+            // SAFETY: libc::stat is plain-old-data; all-zeros is a valid value.
             let mut st: libc::stat = unsafe { std::mem::zeroed() };
+            // SAFETY: fd is a valid open descriptor and st is a properly sized out-param.
             let rc = unsafe { libc::fstat(fd, &mut st) };
             if rc != 0 {
+                // SAFETY: fd is open and owned; closed exactly once on this error path.
                 unsafe { libc::close(fd) };
                 bail!("fstat {} failed: {}", path.display(), std::io::Error::last_os_error());
             }
             if (st.st_size as u64) < len as u64 {
+                // SAFETY: fd is open and owned; closed exactly once on this error path.
                 unsafe { libc::close(fd) };
                 bail!(
                     "shm segment {} is {} bytes, expected at least {len} \
@@ -97,6 +111,8 @@ impl Mapping {
                 );
             }
         }
+        // SAFETY: maps `len` bytes of a file verified (create: ftruncated, attach:
+        // fstat-checked) to hold them; MAP_SHARED with a valid fd at offset 0.
         let ptr = unsafe {
             libc::mmap(
                 std::ptr::null_mut(),
@@ -107,6 +123,7 @@ impl Mapping {
                 0,
             )
         };
+        // SAFETY: fd is owned and no longer needed; the mapping outlives close().
         unsafe { libc::close(fd) };
         if ptr == libc::MAP_FAILED {
             bail!("mmap({}) failed: {}", path.display(), std::io::Error::last_os_error());
@@ -131,6 +148,7 @@ impl Mapping {
 
 impl Drop for Mapping {
     fn drop(&mut self) {
+        // SAFETY: ptr/len came from a successful mmap and are unmapped exactly once.
         unsafe { libc::munmap(self.ptr as *mut libc::c_void, self.len) };
         if let Some(p) = &self.owned_path {
             let _ = std::fs::remove_file(p);
@@ -138,7 +156,8 @@ impl Drop for Mapping {
     }
 }
 
-#[cfg(test)]
+// not(miri): real mmap + /dev/shm files (see ISSUE 7 Miri gating).
+#[cfg(all(test, not(miri)))]
 mod tests {
     use super::*;
 
@@ -157,8 +176,10 @@ mod tests {
         let path = std::env::temp_dir()
             .join(format!("spreeze-shm-roundtrip-{}", std::process::id()));
         let a = Mapping::create(&path, 4096).unwrap();
+        // SAFETY: a's mapping is 4096 >= 1 bytes and exclusively owned here.
         unsafe { *a.ptr() = 0xAB };
         let b = Mapping::attach(&path, 4096).unwrap();
+        // SAFETY: b maps the same in-bounds segment; no concurrent writer remains.
         assert_eq!(unsafe { *b.ptr() }, 0xAB);
         assert_eq!(b.byte_len(), 4096);
         drop(b); // attacher drop must NOT unlink

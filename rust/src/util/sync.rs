@@ -1,0 +1,213 @@
+//! Atomics facade + exhaustive protocol model checking.
+//!
+//! Every concurrency-bearing module imports its atomics from here instead of
+//! `std::sync::atomic` directly. Normally the re-exports below are the std
+//! types, so the facade costs nothing. Under `RUSTFLAGS="--cfg loom"` they
+//! become the [loom](https://docs.rs/loom) permutation-testing types instead,
+//! so the same protocol code can be driven by `loom::model` closures (loom is
+//! not vendored in the offline build; the cfg wiring is here so a checkout
+//! with network access only needs to add the dev-dependency).
+//!
+//! Because loom cannot run in the offline build, this module also ships its
+//! own model checker: [`model::explore`] exhaustively enumerates every
+//! interleaving of a miniaturized protocol state machine under sequential
+//! consistency and asserts invariants at every step. The miniaturized
+//! WeightBus / ShmRing / ProcControl models live in `tests/protocol_models.rs`
+//! and also run under Miri. See `docs/CONCURRENCY.md` for the invariants.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{
+    fence, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+};
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{
+    fence, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+};
+
+/// Spin-loop hint; loom requires its own yield so the scheduler can switch.
+#[cfg(not(loom))]
+pub fn spin_hint() {
+    std::hint::spin_loop();
+}
+
+#[cfg(loom)]
+pub fn spin_hint() {
+    loom::thread::yield_now();
+}
+
+pub mod model {
+    //! Exhaustive interleaving explorer for miniaturized protocol models.
+    //!
+    //! A [`Model`] is a cloneable state machine: shared memory plus one
+    //! program counter per logical thread. [`explore`] runs a depth-first
+    //! search over every schedule — at each state it forks one clone per
+    //! runnable thread, advances that thread by a single atomic action, and
+    //! asserts [`Model::check`] — so a violated invariant panics with the
+    //! schedule depth that reached it. The search is exact, not sampled:
+    //! models must keep loops bounded (e.g. cap reader retries).
+    //!
+    //! The memory model is sequential consistency. That exhaustively covers
+    //! interleaving bugs (torn reads, lost updates, stale-version
+    //! acceptance); weak-memory reordering is covered separately by the
+    //! `cfg(loom)` facade above and by the TSan CI job on the real types.
+
+    /// A miniaturized protocol state machine with `threads()` logical threads.
+    pub trait Model: Clone {
+        /// Number of logical threads in the model.
+        fn threads(&self) -> usize;
+        /// Advance thread `tid` by one atomic action. Returns `false` (and
+        /// must leave the state untouched) once the thread has terminated.
+        fn step(&mut self, tid: usize) -> bool;
+        /// Invariants that must hold in every reachable state.
+        fn check(&self);
+        /// Invariants that must hold when every thread has terminated.
+        fn check_final(&self) {}
+    }
+
+    /// Outcome of an exhaustive exploration.
+    #[derive(Debug, Clone, Copy)]
+    pub struct Explored {
+        /// Number of complete schedules (all threads terminated) visited.
+        pub executions: u64,
+        /// Number of states visited (including interior ones).
+        pub states: u64,
+    }
+
+    /// Exhaustively explore every interleaving of `initial`.
+    ///
+    /// Panics if a `check`/`check_final` invariant fails, or if more than
+    /// `max_states` states are visited — a loud bound so an accidentally
+    /// unbounded model fails instead of silently spinning or truncating.
+    pub fn explore<M: Model>(initial: &M, max_states: u64) -> Explored {
+        let mut out = Explored { executions: 0, states: 0 };
+        initial.check();
+        dfs(initial, max_states, &mut out);
+        assert!(out.executions > 0, "model has no complete schedules");
+        out
+    }
+
+    fn dfs<M: Model>(m: &M, max_states: u64, out: &mut Explored) {
+        out.states += 1;
+        assert!(
+            out.states <= max_states,
+            "exploration exceeded {} states — model is not miniaturized \
+             enough (or a loop is unbounded); raise the bound explicitly \
+             if the state count is intentional",
+            max_states
+        );
+        let mut any_ran = false;
+        for tid in 0..m.threads() {
+            let mut next = m.clone();
+            if !next.step(tid) {
+                continue;
+            }
+            any_ran = true;
+            next.check();
+            dfs(&next, max_states, out);
+        }
+        if !any_ran {
+            m.check_final();
+            out.executions += 1;
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        /// Two threads each do INC-via-read-modify-write with a data race:
+        /// the classic lost update. The explorer must find the schedule
+        /// where both reads happen before either write.
+        #[derive(Clone)]
+        struct LostUpdate {
+            mem: u64,
+            reg: [u64; 2],
+            pc: [u8; 2],
+            lost_seen: bool,
+        }
+
+        impl Model for LostUpdate {
+            fn threads(&self) -> usize {
+                2
+            }
+            fn step(&mut self, tid: usize) -> bool {
+                match self.pc[tid] {
+                    0 => self.reg[tid] = self.mem,
+                    1 => self.mem = self.reg[tid] + 1,
+                    _ => return false,
+                }
+                self.pc[tid] += 1;
+                true
+            }
+            fn check(&self) {}
+            fn check_final(&self) {
+                // Record (via panic-free interior mutability emulation:
+                // the caller inspects executions instead) — here we only
+                // assert the final value is one of the two legal outcomes.
+                assert!(self.mem == 1 || self.mem == 2);
+            }
+        }
+
+        #[test]
+        fn finds_all_interleavings_of_racy_increment() {
+            let m = LostUpdate { mem: 0, reg: [0; 2], pc: [0; 2], lost_seen: false };
+            let _ = m.lost_seen;
+            let r = explore(&m, 10_000);
+            // 2 threads x 2 steps each => C(4,2) = 6 schedules.
+            assert_eq!(r.executions, 6);
+        }
+
+        /// An invariant violation must panic.
+        #[derive(Clone)]
+        struct AlwaysBad {
+            pc: u8,
+        }
+        impl Model for AlwaysBad {
+            fn threads(&self) -> usize {
+                1
+            }
+            fn step(&mut self, _tid: usize) -> bool {
+                if self.pc > 0 {
+                    return false;
+                }
+                self.pc = 1;
+                true
+            }
+            fn check(&self) {
+                assert!(self.pc == 0, "invariant violated as expected");
+            }
+        }
+
+        #[test]
+        #[should_panic(expected = "invariant violated as expected")]
+        fn invariant_violations_panic() {
+            explore(&AlwaysBad { pc: 0 }, 100);
+        }
+
+        /// The state bound must fail loudly, never truncate silently.
+        #[derive(Clone)]
+        struct Wide {
+            pc: [u8; 4],
+        }
+        impl Model for Wide {
+            fn threads(&self) -> usize {
+                4
+            }
+            fn step(&mut self, tid: usize) -> bool {
+                if self.pc[tid] >= 3 {
+                    return false;
+                }
+                self.pc[tid] += 1;
+                true
+            }
+            fn check(&self) {}
+        }
+
+        #[test]
+        #[should_panic(expected = "exploration exceeded")]
+        fn state_bound_is_loud() {
+            explore(&Wide { pc: [0; 4] }, 50);
+        }
+    }
+}

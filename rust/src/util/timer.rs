@@ -3,7 +3,7 @@
 //! These back every column of the paper's Tables 2–3 (sampling frame rate,
 //! network update frame rate / frequency, CPU/"GPU" usage, transfer cycle).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Monotonic event counter + wall-clock rate, shared across threads.

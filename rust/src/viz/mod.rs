@@ -5,7 +5,7 @@
 //! the two as separate processes).
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 

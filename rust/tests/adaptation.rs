@@ -5,6 +5,9 @@
 //! `RunSummary` and `summary.json`, while K changes apply without ever
 //! respawning a sampler worker.
 
+
+// Miri cannot run this suite: drives full training topologies (mmap rings, threads).
+#![cfg(not(miri))]
 use spreeze::adapt::controller::KnobId;
 use spreeze::config::presets;
 use spreeze::coordinator::Coordinator;

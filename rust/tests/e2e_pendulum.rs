@@ -8,6 +8,9 @@
 //! `examples/quickstart.rs` and recorded in EXPERIMENTS.md; this test keeps
 //! a short budget and asserts the machinery, not the learning curve.
 
+
+// Miri cannot run this suite: full end-to-end training runs.
+#![cfg(not(miri))]
 use spreeze::config::presets;
 use spreeze::coordinator::Coordinator;
 

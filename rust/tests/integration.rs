@@ -6,6 +6,9 @@
 //! All tests require `make artifacts` to have run; they are skipped (with a
 //! note) when the manifest is missing so `cargo test` stays green pre-build.
 
+
+// Miri cannot run this suite: mmap ring transports.
+#![cfg(not(miri))]
 use std::sync::Arc;
 
 use spreeze::config::{presets, TrainConfig};

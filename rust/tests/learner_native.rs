@@ -3,6 +3,9 @@
 //! real SAC and TD3 updates through `Learner::try_update`, policy-delay
 //! gating, batch-size switching, and the dual-executor model-parallel round.
 
+
+// Miri cannot run this suite: mmap ring + heavy native update steps.
+#![cfg(not(miri))]
 use std::sync::Arc;
 
 use spreeze::config::{presets, Algo, TrainConfig};

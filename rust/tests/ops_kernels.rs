@@ -8,6 +8,9 @@
 //! under `SPREEZE_THREADS=1` and `SPREEZE_THREADS=4`, so both the serial
 //! and the pooled global-pool paths are exercised.
 
+
+// Miri cannot run this suite: heavyweight kernel sweeps; far too slow interpreted.
+#![cfg(not(miri))]
 use spreeze::nn::layout::Segment;
 use spreeze::nn::{ops, MlpGrad, ThreadPool};
 use spreeze::runtime::{native_manifest, NativeStep};

@@ -5,6 +5,9 @@
 //! behavior. The torn-read / version-monotonicity / sequence-equivalence
 //! contracts are unit-tested in `spreeze::bus`; this exercises the wiring.
 
+
+// Miri cannot run this suite: mmap-backed weight bus segments.
+#![cfg(not(miri))]
 use spreeze::config::{presets, WeightTransport};
 use spreeze::coordinator::{Coordinator, RunSummary};
 

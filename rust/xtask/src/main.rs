@@ -1,0 +1,236 @@
+//! Repo automation. `cargo xtask lint` enforces the concurrency hygiene
+//! contract from ISSUE 7 on `src/`:
+//!
+//! 1. every `unsafe` site (block, impl, fn) must be annotated with a
+//!    `// SAFETY:` comment — on the same line or in the contiguous comment
+//!    block directly above it;
+//! 2. every `Ordering::Relaxed` inside a *protocol module* (`bus`, `replay`,
+//!    `sampler/proc.rs`, `util/shm.rs`) must carry a `// relaxed-ok:`
+//!    rationale the same way. Relaxed is where cross-process seqlock bugs
+//!    hide; anything unexplained there is treated as a defect.
+//!
+//! The scanner is a line-based tokenizer (std-only; no syn in the offline
+//! build): it strips `//` comments outside string literals before matching,
+//! so prose mentioning `unsafe` never trips it. Exit code 1 on violations.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let src = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("src");
+            match lint_tree(&src) {
+                Ok(()) => println!("xtask lint: OK ({})", src.display()),
+                Err(report) => {
+                    eprint!("{report}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn lint_tree(src: &Path) -> Result<(), String> {
+    let mut files = Vec::new();
+    collect_rs(src, &mut files);
+    files.sort();
+    assert!(!files.is_empty(), "no .rs files under {}", src.display());
+    let mut violations = Vec::new();
+    for f in &files {
+        let text = std::fs::read_to_string(f)
+            .unwrap_or_else(|e| panic!("read {}: {e}", f.display()));
+        let rel = f.strip_prefix(src.parent().unwrap()).unwrap_or(f);
+        lint_file(rel, &text, &mut violations);
+    }
+    if violations.is_empty() {
+        return Ok(());
+    }
+    let mut out = String::new();
+    for v in &violations {
+        let _ = writeln!(out, "{v}");
+    }
+    let _ = writeln!(out, "xtask lint: {} violation(s)", violations.len());
+    Err(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).unwrap_or_else(|e| panic!("{}: {e}", dir.display())) {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Modules whose Relaxed orderings require an explicit rationale: the
+/// cross-process seqlock/reservation protocols and the raw mmap layer.
+fn is_protocol_module(rel: &Path) -> bool {
+    let p = rel.to_string_lossy().replace('\\', "/");
+    p.contains("src/bus/")
+        || p.contains("src/replay/")
+        || p.ends_with("src/sampler/proc.rs")
+        || p.ends_with("src/util/shm.rs")
+}
+
+fn lint_file(rel: &Path, text: &str, violations: &mut Vec<String>) {
+    let lines: Vec<&str> = text.lines().collect();
+    let protocol = is_protocol_module(rel);
+    for (i, raw) in lines.iter().enumerate() {
+        let code = strip_line_comment(raw);
+        if has_word(&code, "unsafe") && !annotated(&lines, i, "SAFETY:") {
+            violations.push(format!(
+                "{}:{}: `unsafe` without a `// SAFETY:` comment (same line or \
+                 the comment block directly above)",
+                rel.display(),
+                i + 1
+            ));
+        }
+        if protocol && code.contains("Ordering::Relaxed") && !annotated(&lines, i, "relaxed-ok:")
+        {
+            violations.push(format!(
+                "{}:{}: `Ordering::Relaxed` in a protocol module without a \
+                 `// relaxed-ok:` rationale",
+                rel.display(),
+                i + 1
+            ));
+        }
+    }
+}
+
+/// Is `marker` present on line `i`'s comment or in the contiguous block of
+/// comment-only lines directly above it?
+fn annotated(lines: &[&str], i: usize, marker: &str) -> bool {
+    let raw = lines[i];
+    let code = strip_line_comment(raw);
+    // trailing comment on the same line
+    if raw[code.len()..].contains(marker) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = lines[j].trim_start();
+        if !(t.starts_with("//") || t.starts_with("#[")) {
+            return false;
+        }
+        if t.contains(marker) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Byte prefix of `line` before any `//` comment that starts outside a
+/// string literal. Good enough for this codebase (no raw strings containing
+/// `//`, no char literals containing `"`).
+fn strip_line_comment(line: &str) -> String {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    let mut k = 0;
+    while k < bytes.len() {
+        match bytes[k] {
+            b'\\' if in_str => k += 1, // skip escaped char
+            b'"' => in_str = !in_str,
+            b'/' if !in_str && k + 1 < bytes.len() && bytes[k + 1] == b'/' => {
+                return line[..k].to_string();
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    line.to_string()
+}
+
+/// Does `code` contain `word` as a standalone identifier token?
+fn has_word(code: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code.as_bytes()[at - 1].is_ascii_alphanumeric() && code.as_bytes()[at - 1] != b'_';
+        let end = at + word.len();
+        let after_ok = end >= code.len()
+            || !code.as_bytes()[end].is_ascii_alphanumeric() && code.as_bytes()[end] != b'_';
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_but_not_strings() {
+        assert_eq!(strip_line_comment("let x = 1; // unsafe"), "let x = 1; ");
+        assert_eq!(strip_line_comment(r#"let s = "a // b";"#), r#"let s = "a // b";"#);
+        assert_eq!(strip_line_comment("// all comment"), "");
+    }
+
+    #[test]
+    fn word_matching_ignores_identifiers() {
+        assert!(has_word("unsafe {", "unsafe"));
+        assert!(has_word("x = unsafe { y }", "unsafe"));
+        assert!(!has_word("unsafe_op_in_unsafe_fn", "unsafe"));
+        assert!(!has_word("deny(unsafe_code)", "unsafe"));
+    }
+
+    #[test]
+    fn annotation_lookup_walks_comment_blocks_and_attrs() {
+        let lines = vec![
+            "// SAFETY: one",
+            "// two",
+            "#[inline]",
+            "unsafe { x() }",
+            "unsafe { y() } // SAFETY: trailing",
+            "let z = 1;",
+            "unsafe { z() }",
+        ];
+        assert!(annotated(&lines, 3, "SAFETY:"));
+        assert!(annotated(&lines, 4, "SAFETY:"));
+        assert!(!annotated(&lines, 6, "SAFETY:"));
+    }
+
+    #[test]
+    fn lints_catch_both_rules() {
+        let mut v = Vec::new();
+        lint_file(
+            Path::new("src/bus/mod.rs"),
+            "unsafe { a() }\nx.load(Ordering::Relaxed);\n",
+            &mut v,
+        );
+        assert_eq!(v.len(), 2, "{v:?}");
+        v.clear();
+        lint_file(
+            Path::new("src/bus/mod.rs"),
+            "// SAFETY: fine\nunsafe { a() }\n// relaxed-ok: stats\nx.load(Ordering::Relaxed);\n",
+            &mut v,
+        );
+        assert!(v.is_empty(), "{v:?}");
+        // Relaxed outside protocol modules needs no rationale.
+        v.clear();
+        lint_file(Path::new("src/nn/ops.rs"), "x.load(Ordering::Relaxed);\n", &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    /// The real tree must be clean — this mirrors `cargo xtask lint` so the
+    /// gate also runs under plain `cargo test`.
+    #[test]
+    fn repo_src_is_clean() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("src");
+        if let Err(report) = lint_tree(&src) {
+            panic!("{report}");
+        }
+    }
+}
