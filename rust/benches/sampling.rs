@@ -204,6 +204,73 @@ fn weight_poll_cost(b: &Bench) {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Remote-actor transport rows (EXPERIMENTS.md E5): what a sampler batch
+/// costs through the loopback-TCP wire path (serialize + FNV checksum +
+/// socket round into the server's session pump) vs the same `push_many`
+/// straight into the shm ring. Backpressure is part of the number: when the
+/// server's decode thread falls behind, the kernel socket buffer fills and
+/// the writer blocks (sustained ingest, not a buffered burst); past the
+/// decoder, the session queue sheds oldest — printed as `session drops`.
+fn net_throughput(outer: &Bench) {
+    use spreeze::net::protocol::{self, Hello, HelloAck, Inbound, Msg};
+    use spreeze::net::NetServer;
+
+    // Same window as the sampling rows but a separate JSON group, so CI can
+    // assert the net rows landed independently.
+    let b = Bench { window: outer.window, json_group: Some("net"), ..Default::default() };
+    println!("\n-- remote actor wire path: shm push_many vs loopback TCP (pendulum frames)");
+    let fspec = FrameSpec { obs_dim: 3, act_dim: 1 };
+    let flen = fspec.f32s();
+    const ACTOR_PARAMS: usize = 4547;
+    for k in [64usize, 512] {
+        let frames: Vec<f32> = (0..k * flen).map(|i| i as f32).collect();
+
+        // baseline: one shared-memory reservation for the whole batch
+        let ring = mk_ring(fspec);
+        let shm = b.run(&format!("net_push/shm_ring K={k}"), Some(k as f64), || {
+            ring.push_many(&frames, k);
+        });
+        shm.print();
+
+        // loopback TCP into a NetServer session draining into its own ring
+        let srv_ring = mk_ring(fspec);
+        let sink: Arc<dyn ExpSink> = srv_ring.clone();
+        let bus: Arc<dyn PolicyPub> =
+            Arc::new(SharedWeightBus(Arc::new(WeightBus::new(ACTOR_PARAMS))));
+        let srv = NetServer::bind("127.0.0.1:0", fspec, ACTOR_PARAMS, sink, bus, None).unwrap();
+        let stream = std::net::TcpStream::connect(srv.local_addr()).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream.set_read_timeout(Some(std::time::Duration::from_millis(100))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut scratch = Vec::new();
+        protocol::write_msg(
+            &mut writer,
+            &Msg::Hello(Hello { obs_dim: 3, act_dim: 1, actor_params: ACTOR_PARAMS as u64 }),
+            &mut scratch,
+        )
+        .unwrap();
+        let mut reader = stream.try_clone().unwrap();
+        loop {
+            match protocol::read_inbound(&mut reader).unwrap() {
+                Inbound::Msg(Msg::HelloAck(HelloAck { .. })) => break,
+                Inbound::Idle => {}
+                other => panic!("expected hello-ack, got {other:?}"),
+            }
+        }
+        let tcp = b.run(&format!("net_push/tcp_loopback K={k}"), Some(k as f64), || {
+            protocol::write_experience(&mut writer, &frames, k, flen, &mut scratch).unwrap();
+        });
+        tcp.print();
+        println!(
+            "   K={k}: tcp/shm frames-per-second: {:.3}x  (session drops: {})",
+            tcp.items_per_sec() / shm.items_per_sec(),
+            srv.stats_rows().iter().find(|(n, _)| *n == "drops").map(|(_, v)| *v).unwrap_or(0.0)
+        );
+        drop((writer, reader, stream));
+        srv.shutdown();
+    }
+}
+
 fn main() {
     // SPREEZE_BENCH_SMOKE=1 shrinks the window so CI can exercise the whole
     // bench in seconds (matching the update bench's smoke mode)
@@ -234,6 +301,7 @@ fn main() {
     scalar_vs_batched(&b);
     forward_kernels(&b);
     weight_poll_cost(&b);
+    net_throughput(&b);
 
     let manifest = Manifest::load_or_native(&default_artifacts_dir()).unwrap();
 

@@ -132,7 +132,7 @@ impl Framework for SyncFramework {
             }
 
             // ---- phase 2: synchronous updates (samplers idle)
-            if topo.learner.visible() >= cfg.effective_update_after() {
+            if topo.learner.visible() >= topo.update_gate() {
                 for _ in 0..self.updates_per_phase {
                     let t0 = Instant::now();
                     if topo.learner.try_update()? {
@@ -161,6 +161,7 @@ impl Framework for SyncFramework {
                     update_hz: interval_rate(prev_updates, now_updates),
                     transfer_cycle_s: 0.0,
                     loss_fraction: 0.0,
+                    lap_hazards: 0,
                     weight_cycle_s,
                     // the driver thread samples with the params in hand:
                     // a synchronous framework is never stale
@@ -213,6 +214,7 @@ impl Framework for SyncFramework {
             gpu_usage: mean(&|s| s.gpu_usage),
             transfer_cycle_s: 0.0,
             loss_fraction: 0.0,
+            lap_hazards: 0,
             weight_cycle_s: mean(&|s| s.weight_cycle_s),
             policy_staleness: 0.0,
             batch_size: topo.learner.batch_size(),

@@ -143,6 +143,10 @@ pub struct TrainConfig {
     /// per-run unique prefix). Segments are `<prefix>-ring`, `<prefix>-bus`,
     /// `<prefix>-ctl`.
     pub shm_prefix: String,
+    /// TCP listen address (`HOST:PORT`, port 0 = auto) for the remote actor
+    /// service: remote `remote-actor` clients stream experience into the
+    /// replay transport and receive versioned weight broadcasts. "" = off.
+    pub serve_addr: String,
     /// Replay capacity in frames.
     pub capacity: usize,
     pub seed: u64,
@@ -217,6 +221,7 @@ impl Default for TrainConfig {
             weight_transport: WeightTransport::Shm,
             topology: TopologyMode::Threads,
             shm_prefix: String::new(),
+            serve_addr: String::new(),
             capacity: 1_000_000,
             seed: 0,
             lr: 3e-4,
@@ -270,6 +275,7 @@ impl TrainConfig {
             self.topology = TopologyMode::parse(&t)?;
         }
         self.shm_prefix = a.str_or("shm-prefix", &self.shm_prefix);
+        self.serve_addr = a.str_or("serve-addr", &self.serve_addr);
         self.capacity = a.usize_or("capacity", self.capacity)?;
         self.seed = a.u64_or("seed", self.seed)?;
         self.lr = a.f64_or("lr", self.lr)?;
@@ -354,6 +360,7 @@ impl TrainConfig {
             ),
             ("weight_transport", s(self.weight_transport.name())),
             ("topology", s(self.topology.name())),
+            ("serve_addr", s(&self.serve_addr)),
             ("capacity", num(self.capacity as f64)),
             ("seed", num(self.seed as f64)),
             ("lr", num(self.lr)),

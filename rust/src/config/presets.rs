@@ -27,12 +27,21 @@ pub const TABLE1_ENVS: &[&str] =
     &["pendulum", "cheetah", "walker", "ant", "humanoid", "humanoid_flagrun"];
 
 /// Default config for an environment.
+///
+/// Presets pin **both** schedules explicitly: `start_steps` (uniform-random
+/// warmup actions) and `update_after` (buffer frames gating the first
+/// learner update). They start equal — updates begin when warmup ends —
+/// but are independent knobs: retuning one in a preset or on the CLI never
+/// silently moves the other (the PR-2 conflation, resolved). Both the
+/// coordinator and the sync baseline gate on `effective_update_after()`,
+/// so the two paths cannot disagree.
 pub fn preset(env: &str) -> TrainConfig {
     let mut c = TrainConfig { env: env.to_string(), ..TrainConfig::default() };
     c.target_return = target_return(env);
     match env {
         "pendulum" => {
             c.start_steps = 1_000;
+            c.update_after = 1_000;
             c.capacity = 200_000;
             c.reward_scale = 0.1; // rewards in [-16, 0]
             // tiny task: update *frequency* dominates; fix a small batch
@@ -44,14 +53,17 @@ pub fn preset(env: &str) -> TrainConfig {
         }
         "walker" | "cheetah" => {
             c.start_steps = 4_000;
+            c.update_after = 4_000;
             c.envs_per_worker = 8;
         }
         "ant" => {
             c.start_steps = 6_000;
+            c.update_after = 6_000;
             c.envs_per_worker = 8;
         }
         "humanoid" | "humanoid_flagrun" => {
             c.start_steps = 8_000;
+            c.update_after = 8_000;
             c.reward_scale = 0.5;
             c.envs_per_worker = 8;
         }
@@ -70,10 +82,15 @@ mod tests {
             let c = preset(env);
             assert_eq!(&c.env, env);
             assert!(c.capacity > 0);
-            // presets pin only the warmup schedule; the first-update gate
-            // auto-follows it and stays independently overridable
-            assert_eq!(c.update_after, 0, "{env}: preset must not pin update_after");
+            // both schedules are explicit per preset: equal by default
+            // (updates begin when warmup ends) but decoupled knobs
+            assert!(c.update_after > 0, "{env}: preset must pin update_after explicitly");
+            assert_eq!(c.effective_update_after(), c.update_after);
             assert_eq!(c.effective_update_after() as u64, c.start_steps);
+            // decoupling: retuning warmup never moves the update gate
+            let mut warm = c.clone();
+            warm.start_steps *= 2;
+            assert_eq!(warm.effective_update_after(), c.update_after);
             // every preset opts into the batched sampler hot path
             assert!(
                 (8..=16).contains(&c.envs_per_worker),

@@ -100,6 +100,10 @@ pub struct Snapshot {
     pub update_hz: f64,
     pub transfer_cycle_s: f64,
     pub loss_fraction: f64,
+    /// Cumulative ring writer laps that raced a straggling reader
+    /// (`ShmRing::lap_hazards`; 0 for other transports and on a correctly
+    /// sized ring).
+    pub lap_hazards: u64,
     /// Seconds between weight-bus publishes in this interval (the paper's
     /// weight-transfer cycle; 0 when nothing was published).
     pub weight_cycle_s: f64,
@@ -122,13 +126,13 @@ pub struct Snapshot {
 impl Snapshot {
     pub fn csv_header() -> &'static str {
         "t_s,cpu_usage,sampling_hz,gpu_usage,update_frame_hz,update_hz,\
-         transfer_cycle_s,loss_fraction,weight_cycle_s,staleness,visible,\
-         latest_return,batch_size,n_samplers,envs_per_worker,ops_threads"
+         transfer_cycle_s,loss_fraction,lap_hazards,weight_cycle_s,staleness,\
+         visible,latest_return,batch_size,n_samplers,envs_per_worker,ops_threads"
     }
 
     pub fn csv_row(&self) -> String {
         format!(
-            "{:.2},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4},{:.3},{:.4},{},{:.2},{},{},{},{}",
+            "{:.2},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4},{},{:.3},{:.4},{},{:.2},{},{},{},{}",
             self.t_s,
             self.cpu_usage,
             self.sampling_hz,
@@ -137,6 +141,7 @@ impl Snapshot {
             self.update_hz,
             self.transfer_cycle_s,
             self.loss_fraction,
+            self.lap_hazards,
             self.weight_cycle_s,
             self.staleness,
             self.visible,

@@ -47,6 +47,9 @@ pub struct RunSummary {
     pub gpu_usage: f64,
     pub transfer_cycle_s: f64,
     pub loss_fraction: f64,
+    /// Ring writer laps that raced a straggling reader (undersized-ring
+    /// hazard; see docs/CONCURRENCY.md). 0 on a correctly sized ring.
+    pub lap_hazards: u64,
     /// Mean seconds between weight-bus publishes (weight-transfer cycle).
     pub weight_cycle_s: f64,
     /// Mean fraction of frames sampled on stale weights.
@@ -119,7 +122,7 @@ impl Coordinator {
             }
 
             // learner update (skipped until warmup data is in)
-            let did = if topo.learner.visible() >= cfg.effective_update_after() {
+            let did = if topo.learner.visible() >= topo.update_gate() {
                 let t0 = Instant::now();
                 let did = topo.learner.try_update()?;
                 if did && !use_mp {
@@ -175,6 +178,7 @@ impl Coordinator {
                     update_hz: interval_rate(prev_updates, now_updates),
                     transfer_cycle_s: tstats.transfer_cycle_s,
                     loss_fraction: tstats.loss_fraction(),
+                    lap_hazards: tstats.lap_hazards,
                     weight_cycle_s,
                     staleness,
                     visible: tstats.visible,
@@ -287,6 +291,7 @@ impl Coordinator {
             gpu_usage: mean(&|s| s.gpu_usage),
             transfer_cycle_s: mean(&|s| s.transfer_cycle_s),
             loss_fraction: tstats.loss_fraction(),
+            lap_hazards: tstats.lap_hazards,
             weight_cycle_s: mean(&|s| s.weight_cycle_s),
             policy_staleness: mean(&|s| s.staleness),
             batch_size: topo.learner.batch_size(),
@@ -337,6 +342,7 @@ impl Coordinator {
             ("gpu_usage", num(s.gpu_usage)),
             ("transfer_cycle_s", num(s.transfer_cycle_s)),
             ("loss_fraction", num(s.loss_fraction)),
+            ("lap_hazards", num(s.lap_hazards as f64)),
             ("weight_cycle_s", num(s.weight_cycle_s)),
             ("policy_staleness", num(s.policy_staleness)),
             ("batch_size", num(s.batch_size as f64)),

@@ -27,6 +27,7 @@ use crate::env::registry::make_env;
 use crate::eval::{EvalCurve, EvalWorker};
 use crate::learner::model_parallel::ModelParallelLearner;
 use crate::learner::Learner;
+use crate::net::NetServer;
 use crate::nn::Layout;
 use crate::replay::shm_ring::ShmSource;
 use crate::replay::{
@@ -529,6 +530,25 @@ impl TopologyBuilder {
         } else {
             None
         };
+        // --- remote actor service (`--serve-addr`): TCP sessions feed the
+        // same sink the local pool uses and mirror the weight bus, so the
+        // learner cannot tell local from remote experience
+        let net = if cfg.serve_addr.is_empty() {
+            None
+        } else {
+            let srv = NetServer::bind(
+                &cfg.serve_addr,
+                fspec,
+                layout.actor_size,
+                sink.clone(),
+                bus.clone(),
+                Some(hub.clone()),
+            )?;
+            if cfg.verbose {
+                println!("topology: remote actor service on {}", srv.local_addr());
+            }
+            Some(srv)
+        };
         let eval = if self.spawn_eval {
             Some(EvalWorker::spawn(&cfg, &layout, hub.clone(), &bus)?)
         } else {
@@ -568,6 +588,7 @@ impl TopologyBuilder {
             sink,
             learner,
             pool,
+            net,
             eval,
             viz,
             controller,
@@ -671,6 +692,8 @@ pub struct Topology {
     pub sink: Arc<dyn ExpSink>,
     pub learner: LearnerKind,
     pub pool: Option<SamplerService>,
+    /// Remote actor listener (`--serve-addr`), None when not serving.
+    pub net: Option<NetServer>,
     pub eval: Option<EvalWorker>,
     pub viz: Option<VizWorker>,
     /// Multi-knob adaptation controller (None when adaptation is off or
@@ -691,6 +714,13 @@ impl Topology {
         let v = self.bus.publish(self.learner.actor_params())?;
         self.hub.weight_pubs.add(1);
         Ok(v)
+    }
+
+    /// First-update gate in frames — the *single* source of truth for both
+    /// the coordinator and the sync baseline (`cfg.effective_update_after`),
+    /// so the two drive loops cannot disagree on when updates may begin.
+    pub fn update_gate(&self) -> usize {
+        self.cfg.effective_update_after()
     }
 
     /// Active sampler workers (0 when the pool was not spawned).
@@ -738,6 +768,9 @@ impl Topology {
         if let Some(p) = &self.pool {
             push(p);
         }
+        if let Some(n) = &self.net {
+            push(n);
+        }
         if let Some(e) = &self.eval {
             push(e);
         }
@@ -753,6 +786,9 @@ impl Topology {
         let mut services: Vec<Box<dyn Service>> = Vec::new();
         if let Some(p) = self.pool.take() {
             services.push(Box::new(p));
+        }
+        if let Some(n) = self.net.take() {
+            services.push(Box::new(n));
         }
         if let Some(v) = self.viz.take() {
             services.push(Box::new(v));

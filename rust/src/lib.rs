@@ -24,6 +24,10 @@
 //!   (SP), envs per worker (K), batch size (BS), and the kernel-pool width
 //!   (ops-threads) — generalizing paper §3.4's two-knob scheme into a knob
 //!   registry whose commands act through `Service::reconfigure`.
+//! * Remote actor machines stream experience into the same transport over
+//!   TCP ([`net`]: checksummed length-prefixed frames, `--serve-addr`
+//!   listener service, hidden `remote-actor` client subcommand) and
+//!   receive the versioned weight broadcasts — the learner is untouched.
 //! * [`baselines`] implements the comparison architectures (queue transport,
 //!   APE-X-like, synchronous) for Tables 1–2, and [`harness`] regenerates
 //!   every table and figure of the paper's evaluation.
@@ -43,6 +47,7 @@ pub mod env;
 pub mod eval;
 pub mod harness;
 pub mod learner;
+pub mod net;
 pub mod nn;
 pub mod replay;
 pub mod runtime;

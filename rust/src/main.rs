@@ -134,6 +134,11 @@ fn run() -> Result<()> {
         "shm-child" => {
             spreeze::sampler::proc::shm_stress_entry(&a)?;
         }
+        // hidden: remote actor process — runs a local SamplerPool and streams
+        // experience to a `--serve-addr` leader over TCP (net::client)
+        "remote-actor" => {
+            spreeze::net::remote_actor_entry(&a)?;
+        }
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
         }
@@ -158,6 +163,8 @@ COMMANDS
              --topology threads|procs (sampler workers as threads or
                supervised OS processes over named /dev/shm segments)
              --shm-prefix NAME (procs mode segment prefix; default auto)
+             --serve-addr HOST:PORT (accept remote actors over TCP; port 0
+               picks a free port; empty = off)
              --model-parallel true  --gpus N  --gpu-throttle F
              --cpu-cores N  --seed N  --max-seconds S  --max-updates N
              --target-return R  --adapt true|false  --verbose true

@@ -1,0 +1,328 @@
+//! Remote actor client: the hidden `remote-actor` subcommand.
+//!
+//! Runs a standard [`SamplerPool`] on this machine, but instead of a local
+//! ring the workers push into a [`RemoteSink`] that serializes each batch
+//! as a checksummed `Experience` frame over TCP. Weight broadcasts arrive
+//! from the server as versioned `Weights` frames and are re-published into
+//! a process-local [`WeightBus`], so the sampler workers' normal
+//! `PolicySub` reload path works unchanged — the pool cannot tell it is
+//! running against a remote learner.
+//!
+//! Disconnect handling mirrors the transport's drop-oldest philosophy:
+//! while the link is down, worker pushes are counted as lost instead of
+//! blocking the samplers, and the client re-handshakes with bounded
+//! retry/backoff. The server's `HelloAck` (and the first `Weights` frame a
+//! fresh subscription triggers) bring the client back to the *current*
+//! weight version — there is no replay of missed versions.
+
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::bus::{PolicyPub, SharedWeightBus, WeightBus};
+use crate::config::{Algo, TrainConfig};
+use crate::coordinator::metrics::MetricsHub;
+use crate::net::protocol::{self, Hello, Inbound, Msg, READ_TIMEOUT};
+use crate::replay::{ExpSink, FrameSpec, TransportStats};
+use crate::runtime::{default_artifacts_dir, Manifest};
+use crate::sampler::SamplerPool;
+use crate::util::cli::Args;
+use crate::util::sync::{AtomicU64, Ordering};
+
+/// Connect timeout per attempt (the retry loop bounds total wait).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(3);
+/// Backoff growth cap between reconnect attempts.
+const BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+struct WriteHalf {
+    stream: Option<TcpStream>,
+    scratch: Vec<u8>,
+}
+
+/// Shared connection state between the sampler workers (writers) and the
+/// main thread (reader + reconnector).
+pub struct RemoteConn {
+    write: Mutex<WriteHalf>,
+    pushed: AtomicU64,
+    lost: AtomicU64,
+    reconnects: AtomicU64,
+    weight_version: AtomicU64,
+    frame_f32s: usize,
+}
+
+impl RemoteConn {
+    fn new(frame_f32s: usize) -> Self {
+        RemoteConn {
+            write: Mutex::new(WriteHalf { stream: None, scratch: Vec::new() }),
+            pushed: AtomicU64::new(0),
+            lost: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            weight_version: AtomicU64::new(0),
+            frame_f32s,
+        }
+    }
+
+    fn install(&self, stream: TcpStream) {
+        self.write.lock().unwrap().stream = Some(stream);
+    }
+
+    fn clear(&self) {
+        self.write.lock().unwrap().stream = None;
+    }
+}
+
+/// `ExpSink` over the TCP link: each `push_many` is one wire frame.
+pub struct RemoteSink {
+    conn: Arc<RemoteConn>,
+}
+
+impl ExpSink for RemoteSink {
+    fn push(&self, frame: &[f32]) {
+        self.push_many(frame, 1);
+    }
+
+    fn push_many(&self, frames: &[f32], n_frames: usize) {
+        if n_frames == 0 {
+            return;
+        }
+        // relaxed-ok: counter increment, no synchronization implied
+        self.conn.pushed.fetch_add(n_frames as u64, Ordering::Relaxed);
+        let mut g = self.conn.write.lock().unwrap();
+        let WriteHalf { stream, scratch } = &mut *g;
+        let ok = match stream.as_mut() {
+            Some(w) => protocol::write_experience(
+                w,
+                frames,
+                n_frames,
+                self.conn.frame_f32s,
+                scratch,
+            )
+            .is_ok(),
+            None => false,
+        };
+        if !ok {
+            // drop-oldest at the source: never block the samplers on a
+            // dead link; the main thread will re-handshake
+            g.stream = None;
+            // relaxed-ok: counter increment, no synchronization implied
+            self.conn.lost.fetch_add(n_frames as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            // relaxed-ok: stats read, no synchronization implied
+            pushed: self.conn.pushed.load(Ordering::Relaxed),
+            // relaxed-ok: stats read, no synchronization implied
+            lost: self.conn.lost.load(Ordering::Relaxed),
+            visible: 0,
+            transfer_cycle_s: 0.0,
+            lap_hazards: 0,
+        }
+    }
+}
+
+/// One connect + handshake. On success the write half is installed into
+/// `conn` and the buffered read half is returned with the server's current
+/// weight version.
+fn connect_once(
+    addr: &str,
+    spec: &FrameSpec,
+    actor_params: usize,
+    conn: &RemoteConn,
+) -> Result<(BufReader<TcpStream>, u64)> {
+    let sockaddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("net: resolve {addr}"))?
+        .next()
+        .with_context(|| format!("net: {addr} resolves to no address"))?;
+    let stream = TcpStream::connect_timeout(&sockaddr, CONNECT_TIMEOUT)
+        .with_context(|| format!("net: connect {addr}"))?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let mut writer = stream.try_clone()?;
+    let mut scratch = Vec::new();
+    protocol::write_msg(
+        &mut writer,
+        &Msg::Hello(Hello {
+            obs_dim: spec.obs_dim as u32,
+            act_dim: spec.act_dim as u32,
+            actor_params: actor_params as u64,
+        }),
+        &mut scratch,
+    )
+    .context("net: send hello")?;
+    let mut reader = BufReader::new(stream);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let ack = loop {
+        match protocol::read_inbound(&mut reader)? {
+            Inbound::Msg(Msg::HelloAck(a)) => break a,
+            Inbound::Msg(m) => bail!("net: expected hello-ack, got {m:?}"),
+            Inbound::Idle => {
+                ensure!(Instant::now() < deadline, "net: handshake timeout (no hello-ack)")
+            }
+            Inbound::Closed => bail!(
+                "net: server closed the connection during handshake \
+                 (frame spec mismatch? check env/algo on both sides)"
+            ),
+        }
+    };
+    conn.install(writer);
+    Ok((reader, ack.weight_version))
+}
+
+/// Bounded-retry connect with exponential backoff.
+fn connect_retry(
+    addr: &str,
+    spec: &FrameSpec,
+    actor_params: usize,
+    conn: &RemoteConn,
+    attempts: usize,
+    backoff: Duration,
+    verbose: bool,
+) -> Result<(BufReader<TcpStream>, u64)> {
+    let mut last = None;
+    for k in 0..attempts.max(1) {
+        match connect_once(addr, spec, actor_params, conn) {
+            Ok(r) => return Ok(r),
+            Err(e) => {
+                if verbose {
+                    eprintln!("remote-actor: connect attempt {}/{attempts}: {e:#}", k + 1);
+                }
+                last = Some(e);
+                std::thread::sleep((backoff * (1 << k.min(4)) as u32).min(BACKOFF_CAP));
+            }
+        }
+    }
+    Err(last.unwrap()).with_context(|| format!("net: {addr} unreachable after {attempts} attempts"))
+}
+
+/// Entry point for the hidden `remote-actor` subcommand: run a sampler
+/// pool against a remote coordinator's `--serve-addr` listener.
+pub fn remote_actor_entry(a: &Args) -> Result<()> {
+    let addr = a.str_or("addr", "");
+    ensure!(!addr.is_empty(), "remote-actor requires --addr HOST:PORT (the server's --serve-addr)");
+    let mut cfg = TrainConfig::default();
+    cfg.env = a.str_or("env", &cfg.env);
+    cfg.algo = Algo::parse(&a.str_or("algo", cfg.algo.name()))?;
+    cfg.seed = a.u64_or("seed", 0)?;
+    cfg.n_samplers = a.usize_or("sp", 1)?.max(1);
+    cfg.envs_per_worker = a.usize_or("envs-per-worker", cfg.envs_per_worker.max(1))?.max(1);
+    cfg.start_steps = a.u64_or("start-steps", cfg.start_steps)?;
+    cfg.reload_every = a.u64_or("reload-every", cfg.reload_every)?;
+    cfg.expl_noise = a.f64_or("expl-noise", cfg.expl_noise)?;
+    cfg.artifacts_dir = a.str_or("artifacts", &cfg.artifacts_dir);
+    let max_seconds = a.f64_or("max-seconds", f64::INFINITY)?;
+    let attempts = a.usize_or("retry", 10)?;
+    let backoff = Duration::from_millis(a.u64_or("retry-backoff-ms", 200)?);
+    let verbose = a.bool_or("verbose", false)?;
+    a.finish()?;
+
+    let artifacts_dir = if cfg.artifacts_dir == "artifacts" {
+        default_artifacts_dir()
+    } else {
+        PathBuf::from(&cfg.artifacts_dir)
+    };
+    let manifest = Manifest::load_or_native(&artifacts_dir)?;
+    let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();
+    let spec = FrameSpec { obs_dim: layout.obs_dim, act_dim: layout.act_dim };
+
+    let conn = Arc::new(RemoteConn::new(spec.f32s()));
+    let (mut reader, ack_version) =
+        connect_retry(&addr, &spec, layout.actor_size, &conn, attempts, backoff, verbose)?;
+    if verbose {
+        println!("remote-actor: connected to {addr}, server weight version {ack_version}");
+    }
+
+    // local re-publish bus: server Weights frames land here, the pool's
+    // workers subscribe to it exactly as they would to the learner's bus
+    let wb = Arc::new(WeightBus::new(layout.actor_size));
+    let bus: Arc<dyn PolicyPub> = Arc::new(SharedWeightBus(wb));
+    let hub = Arc::new(MetricsHub::new());
+    let sink: Arc<dyn ExpSink> = Arc::new(RemoteSink { conn: conn.clone() });
+    let sp = cfg.n_samplers;
+    let pool = SamplerPool::spawn(&cfg, &layout, sink, hub.clone(), &bus, sp, sp)?;
+
+    let start = Instant::now();
+    let mut last_report = Instant::now();
+    let result: Result<()> = loop {
+        if start.elapsed().as_secs_f64() >= max_seconds {
+            break Ok(());
+        }
+        if verbose && last_report.elapsed() >= Duration::from_secs(5) {
+            last_report = Instant::now();
+            println!(
+                "remote-actor: pushed={} lost={} weight_version={} reconnects={}",
+                // relaxed-ok: stats read, no synchronization implied
+                conn.pushed.load(Ordering::Relaxed),
+                // relaxed-ok: stats read, no synchronization implied
+                conn.lost.load(Ordering::Relaxed),
+                // relaxed-ok: stats read, no synchronization implied
+                conn.weight_version.load(Ordering::Relaxed),
+                // relaxed-ok: stats read, no synchronization implied
+                conn.reconnects.load(Ordering::Relaxed),
+            );
+        }
+        let disconnect = match protocol::read_inbound(&mut reader) {
+            Ok(Inbound::Msg(Msg::Weights(wt))) => {
+                ensure!(
+                    wt.params.len() == layout.actor_size,
+                    "net: weight blob has {} params, layout needs {} — server layout drifted \
+                     mid-session",
+                    wt.params.len(),
+                    layout.actor_size
+                );
+                bus.publish(&wt.params)?;
+                // relaxed-ok: stats write, no synchronization implied
+                conn.weight_version.store(wt.version, Ordering::Relaxed);
+                None
+            }
+            Ok(Inbound::Msg(m)) => break Err(anyhow::anyhow!(
+                "net: unexpected message from server: {m:?}"
+            )),
+            Ok(Inbound::Idle) => None,
+            Ok(Inbound::Closed) => Some(anyhow::anyhow!("server closed the connection")),
+            Err(e) => Some(e),
+        };
+        if let Some(why) = disconnect {
+            conn.clear();
+            if verbose {
+                eprintln!("remote-actor: link down ({why:#}), reconnecting");
+            }
+            match connect_retry(&addr, &spec, layout.actor_size, &conn, attempts, backoff, verbose)
+            {
+                Ok((r, v)) => {
+                    reader = r;
+                    // relaxed-ok: counter increment, no synchronization implied
+                    conn.reconnects.fetch_add(1, Ordering::Relaxed);
+                    if verbose {
+                        println!("remote-actor: reconnected, server weight version {v}");
+                    }
+                }
+                Err(e) => {
+                    // retries exhausted: the run is most likely over on the
+                    // server side — exit cleanly with what we streamed
+                    eprintln!("remote-actor: giving up: {e:#}");
+                    break Ok(());
+                }
+            }
+        }
+    };
+    pool.shutdown();
+    println!(
+        "remote-actor: done pushed={} lost={} weight_version={} reconnects={}",
+        // relaxed-ok: stats read, no synchronization implied
+        conn.pushed.load(Ordering::Relaxed),
+        // relaxed-ok: stats read, no synchronization implied
+        conn.lost.load(Ordering::Relaxed),
+        // relaxed-ok: stats read, no synchronization implied
+        conn.weight_version.load(Ordering::Relaxed),
+        // relaxed-ok: stats read, no synchronization implied
+        conn.reconnects.load(Ordering::Relaxed),
+    );
+    result
+}

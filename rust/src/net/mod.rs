@@ -1,0 +1,20 @@
+//! Remote actor service: experience over the network.
+//!
+//! Turns the single-desktop topology into a server a fleet of sampler
+//! machines can hit (ROADMAP "Remote actor service"): remote clients
+//! handshake against the coordinator's `--serve-addr` TCP listener,
+//! stream `FrameSpec`-packed experience batches into the replay transport,
+//! and receive versioned weight broadcasts — the learner is untouched.
+//!
+//! - [`protocol`] — the length-prefixed, FNV-checksummed wire format.
+//! - [`server`] — the [`server::NetServer`] listener `Service`, one
+//!   session per connection with drop-oldest backpressure.
+//! - [`client`] — [`client::RemoteSink`] + the hidden `remote-actor`
+//!   subcommand that runs a `SamplerPool` against a remote sink.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::{remote_actor_entry, RemoteSink};
+pub use server::NetServer;

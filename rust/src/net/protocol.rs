@@ -1,0 +1,568 @@
+//! Length-prefixed binary frame protocol for remote actors.
+//!
+//! Wire format (all integers little-endian):
+//!
+//! ```text
+//! [kind: u8][len: u32][payload: len bytes][crc: u64]
+//! ```
+//!
+//! `crc` is FNV-1a over `kind || len || payload`; every frame is
+//! independently checksummed so corruption is caught at the message
+//! boundary rather than as garbage experience. The first frame in each
+//! direction is a handshake (`Hello` from the client, `HelloAck` from the
+//! server) carrying the protocol magic + version and the `FrameSpec`
+//! experience layout (obs/act dims) plus the actor parameter count, so a
+//! mismatched client is rejected loudly before any data flows.
+//!
+//! Message kinds:
+//! - `Hello` (client → server): magic, proto version, obs_dim, act_dim,
+//!   actor param count.
+//! - `HelloAck` (server → client): magic, proto version, current weight
+//!   version (what the client will be brought up to).
+//! - `Experience` (client → server): `n_frames` packed `FrameSpec` frames
+//!   of `frame_f32s` floats each — the same flat layout `ShmRing` stores.
+//! - `Weights` (server → client): versioned flat actor parameter blob,
+//!   re-published into the client's local `WeightBus`.
+//!
+//! Decoding is strict: unknown kinds, oversized payloads, truncation,
+//! checksum mismatches, and internal length inconsistencies are all hard
+//! errors — the session is dropped, never silently resynchronized.
+
+use std::io::{self, Read, Write};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Frame protocol magic: ASCII "SPREEZNT" (net), following the repo's
+/// ring ("SPREEZE1") / bus ("SPREEZEW") / ctl ("SPREEZCT") convention.
+pub const NET_MAGIC: u64 = 0x5350_5245_455A_4E54;
+/// Bumped on any wire-format change; both sides must agree exactly.
+pub const PROTO_VERSION: u32 = 1;
+/// Hard bound on a single frame payload — anything larger is corruption
+/// (a full 64-env humanoid batch is ~100 KiB; weights are a few MiB).
+pub const MAX_PAYLOAD: usize = 64 << 20;
+
+/// Socket read timeout both sides use between frames: long enough that a
+/// mid-message stall is unambiguous corruption/wedging, short enough that
+/// stop flags are observed promptly.
+pub const READ_TIMEOUT: Duration = Duration::from_millis(250);
+
+pub const KIND_HELLO: u8 = 1;
+pub const KIND_HELLO_ACK: u8 = 2;
+pub const KIND_EXPERIENCE: u8 = 3;
+pub const KIND_WEIGHTS: u8 = 4;
+
+/// FNV-1a (64-bit) — tiny, dependency-free, good enough to catch wire
+/// corruption and desync; this is an integrity check, not cryptography.
+#[derive(Clone)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    pub obs_dim: u32,
+    pub act_dim: u32,
+    pub actor_params: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HelloAck {
+    pub weight_version: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Experience {
+    pub frame_f32s: u32,
+    pub n_frames: u32,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Weights {
+    pub version: u64,
+    pub params: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    Hello(Hello),
+    HelloAck(HelloAck),
+    Experience(Experience),
+    Weights(Weights),
+}
+
+/// One poll of the inbound stream.
+#[derive(Debug)]
+pub enum Inbound {
+    /// A complete, checksum-verified message.
+    Msg(Msg),
+    /// The read timed out before a frame started — no data lost.
+    Idle,
+    /// The peer closed the connection at a frame boundary.
+    Closed,
+}
+
+fn put_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f32s(v: &mut Vec<u8>, xs: &[f32]) {
+    v.reserve(xs.len() * 4);
+    for &x in xs {
+        v.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Write one raw frame: header, payload, trailing FNV-1a checksum.
+/// Public so adversarial tests can craft correctly-checksummed frames
+/// with hostile contents.
+pub fn write_raw_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> io::Result<()> {
+    let len = (payload.len() as u32).to_le_bytes();
+    let mut h = Fnv64::new();
+    h.update(&[kind]);
+    h.update(&len);
+    h.update(payload);
+    w.write_all(&[kind])?;
+    w.write_all(&len)?;
+    w.write_all(payload)?;
+    w.write_all(&h.finish().to_le_bytes())
+}
+
+/// Encode `msg` into `scratch` and write it as one frame. `scratch` is
+/// caller-owned so the hot path never reallocates.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg, scratch: &mut Vec<u8>) -> io::Result<()> {
+    scratch.clear();
+    let kind = match msg {
+        Msg::Hello(h) => {
+            put_u64(scratch, NET_MAGIC);
+            put_u32(scratch, PROTO_VERSION);
+            put_u32(scratch, h.obs_dim);
+            put_u32(scratch, h.act_dim);
+            put_u64(scratch, h.actor_params);
+            KIND_HELLO
+        }
+        Msg::HelloAck(a) => {
+            put_u64(scratch, NET_MAGIC);
+            put_u32(scratch, PROTO_VERSION);
+            put_u64(scratch, a.weight_version);
+            KIND_HELLO_ACK
+        }
+        Msg::Experience(e) => {
+            put_u32(scratch, e.frame_f32s);
+            put_u32(scratch, e.n_frames);
+            put_f32s(scratch, &e.data);
+            KIND_EXPERIENCE
+        }
+        Msg::Weights(wt) => {
+            put_u64(scratch, wt.version);
+            put_u32(scratch, wt.params.len() as u32);
+            put_f32s(scratch, &wt.params);
+            KIND_WEIGHTS
+        }
+    };
+    write_raw_frame(w, kind, scratch)
+}
+
+/// Hot-path experience write without building a `Msg` (no frame copy).
+pub fn write_experience<W: Write>(
+    w: &mut W,
+    frames: &[f32],
+    n_frames: usize,
+    frame_f32s: usize,
+    scratch: &mut Vec<u8>,
+) -> io::Result<()> {
+    scratch.clear();
+    put_u32(scratch, frame_f32s as u32);
+    put_u32(scratch, n_frames as u32);
+    put_f32s(scratch, &frames[..n_frames * frame_f32s]);
+    write_raw_frame(w, KIND_EXPERIENCE, scratch)
+}
+
+/// Hot-path weights write without cloning the parameter blob.
+pub fn write_weights<W: Write>(
+    w: &mut W,
+    version: u64,
+    params: &[f32],
+    scratch: &mut Vec<u8>,
+) -> io::Result<()> {
+    scratch.clear();
+    put_u64(scratch, version);
+    put_u32(scratch, params.len() as u32);
+    put_f32s(scratch, params);
+    write_raw_frame(w, KIND_WEIGHTS, scratch)
+}
+
+/// Byte cursor over a verified payload; every read is bounds-checked so a
+/// lying `len` can never read out of the payload.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Rd { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.b.len(),
+            "net: payload truncated (need {} bytes at offset {}, have {})",
+            n,
+            self.pos,
+            self.b.len()
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    fn finish(self, kind: u8) -> Result<()> {
+        ensure!(
+            self.pos == self.b.len(),
+            "net: {} trailing bytes after kind-{kind} payload",
+            self.b.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+fn check_handshake_prefix(rd: &mut Rd, what: &str) -> Result<()> {
+    let magic = rd.u64()?;
+    ensure!(
+        magic == NET_MAGIC,
+        "net: bad {what} magic {magic:#018x} (want {NET_MAGIC:#018x}) — not a spreeze peer"
+    );
+    let proto = rd.u32()?;
+    ensure!(
+        proto == PROTO_VERSION,
+        "net: {what} protocol version {proto} != {PROTO_VERSION} — upgrade the older side"
+    );
+    Ok(())
+}
+
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<Msg> {
+    let mut rd = Rd::new(payload);
+    let msg = match kind {
+        KIND_HELLO => {
+            check_handshake_prefix(&mut rd, "hello")?;
+            let obs_dim = rd.u32()?;
+            let act_dim = rd.u32()?;
+            let actor_params = rd.u64()?;
+            Msg::Hello(Hello { obs_dim, act_dim, actor_params })
+        }
+        KIND_HELLO_ACK => {
+            check_handshake_prefix(&mut rd, "hello-ack")?;
+            Msg::HelloAck(HelloAck { weight_version: rd.u64()? })
+        }
+        KIND_EXPERIENCE => {
+            let frame_f32s = rd.u32()?;
+            let n_frames = rd.u32()?;
+            let want = (frame_f32s as usize).checked_mul(n_frames as usize);
+            ensure!(
+                want.is_some_and(|n| 8 + n * 4 == payload.len()),
+                "net: experience payload length {} inconsistent with {n_frames} frames x \
+                 {frame_f32s} f32s",
+                payload.len()
+            );
+            let data = rd.f32s(frame_f32s as usize * n_frames as usize)?;
+            Msg::Experience(Experience { frame_f32s, n_frames, data })
+        }
+        KIND_WEIGHTS => {
+            let version = rd.u64()?;
+            let n = rd.u32()? as usize;
+            ensure!(
+                12 + n * 4 == payload.len(),
+                "net: weights payload length {} inconsistent with {n} params",
+                payload.len()
+            );
+            Msg::Weights(Weights { version, params: rd.f32s(n)? })
+        }
+        _ => bail!("net: bad message kind {kind:#04x} (stream desync or corruption)"),
+    };
+    rd.finish(kind)?;
+    Ok(msg)
+}
+
+/// Read the remainder of a frame whose kind byte has been consumed, verify
+/// the checksum, and decode. Any failure here is a protocol error: the
+/// stream can no longer be trusted and the session must be dropped.
+fn read_rest<R: Read>(r: &mut R, kind: u8) -> Result<Msg> {
+    ensure!(
+        (KIND_HELLO..=KIND_WEIGHTS).contains(&kind),
+        "net: bad message kind {kind:#04x} (stream desync or corruption)"
+    );
+    let mut lenb = [0u8; 4];
+    r.read_exact(&mut lenb).context("net: truncated frame header")?;
+    let len = u32::from_le_bytes(lenb) as usize;
+    ensure!(len <= MAX_PAYLOAD, "net: frame payload {len} bytes exceeds {MAX_PAYLOAD} cap");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("net: truncated frame payload")?;
+    let mut crcb = [0u8; 8];
+    r.read_exact(&mut crcb).context("net: truncated frame checksum")?;
+    let got = u64::from_le_bytes(crcb);
+    let mut h = Fnv64::new();
+    h.update(&[kind]);
+    h.update(&lenb);
+    h.update(&payload);
+    let want = h.finish();
+    ensure!(
+        got == want,
+        "net: checksum mismatch on kind-{kind} frame ({len} bytes): got {got:#018x}, want \
+         {want:#018x}"
+    );
+    decode_payload(kind, &payload)
+}
+
+/// Poll the stream for one message. A read timeout *before* a frame starts
+/// is `Idle` (normal when the peer is quiet); EOF at a frame boundary is
+/// `Closed` (clean disconnect). Once a frame has started, timeouts and EOF
+/// are hard errors — a half-written frame means the stream is desynced.
+pub fn read_inbound<R: Read>(r: &mut R) -> Result<Inbound> {
+    let mut kind = [0u8; 1];
+    loop {
+        match r.read(&mut kind) {
+            Ok(0) => return Ok(Inbound::Closed),
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                return Ok(Inbound::Idle)
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::ConnectionReset
+                    || e.kind() == io::ErrorKind::ConnectionAborted =>
+            {
+                return Ok(Inbound::Closed)
+            }
+            Err(e) => return Err(e).context("net: read message kind"),
+        }
+    }
+    Ok(Inbound::Msg(read_rest(r, kind[0])?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        write_msg(&mut buf, msg, &mut scratch).unwrap();
+        match read_inbound(&mut Cursor::new(buf)).unwrap() {
+            Inbound::Msg(m) => m,
+            other => panic!("expected message, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn all_kinds_roundtrip() {
+        let msgs = [
+            Msg::Hello(Hello { obs_dim: 3, act_dim: 1, actor_params: 4547 }),
+            Msg::HelloAck(HelloAck { weight_version: 42 }),
+            Msg::Experience(Experience {
+                frame_f32s: 3,
+                n_frames: 2,
+                data: vec![1.0, -2.5, 0.0, 3.25, f32::MIN_POSITIVE, -0.125],
+            }),
+            Msg::Weights(Weights { version: 7, params: vec![0.5; 17] }),
+        ];
+        for m in &msgs {
+            assert_eq!(&roundtrip(m), m);
+        }
+    }
+
+    #[test]
+    fn experience_fast_path_matches_msg_encoding() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let mut scratch = Vec::new();
+        let mut fast = Vec::new();
+        write_experience(&mut fast, &data, 2, 4, &mut scratch).unwrap();
+        let mut viamsg = Vec::new();
+        let msg =
+            Msg::Experience(Experience { frame_f32s: 4, n_frames: 2, data: data.clone() });
+        write_msg(&mut viamsg, &msg, &mut scratch).unwrap();
+        assert_eq!(fast, viamsg);
+    }
+
+    #[test]
+    fn weights_fast_path_matches_msg_encoding() {
+        let params = vec![0.25f32; 9];
+        let mut scratch = Vec::new();
+        let mut fast = Vec::new();
+        write_weights(&mut fast, 3, &params, &mut scratch).unwrap();
+        let mut viamsg = Vec::new();
+        write_msg(
+            &mut viamsg,
+            &Msg::Weights(Weights { version: 3, params: params.clone() }),
+            &mut scratch,
+        )
+        .unwrap();
+        assert_eq!(fast, viamsg);
+    }
+
+    #[test]
+    fn eof_at_boundary_is_closed_eof_midframe_is_error() {
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        write_msg(&mut buf, &Msg::HelloAck(HelloAck { weight_version: 1 }), &mut scratch)
+            .unwrap();
+        // boundary EOF: empty stream
+        assert!(matches!(read_inbound(&mut Cursor::new(&[][..])).unwrap(), Inbound::Closed));
+        // every strict prefix that has started a frame must error
+        for cut in 1..buf.len() {
+            let err = read_inbound(&mut Cursor::new(&buf[..cut])).unwrap_err();
+            assert!(err.to_string().contains("net:"), "cut={cut}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn corrupted_byte_fails_checksum() {
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        let msg = Msg::Experience(Experience {
+            frame_f32s: 2,
+            n_frames: 1,
+            data: vec![1.0, 2.0],
+        });
+        write_msg(&mut buf, &msg, &mut scratch).unwrap();
+        // flip one payload byte (past the 5-byte header, before the crc)
+        for at in [6, buf.len() - 9, buf.len() - 1] {
+            let mut bad = buf.clone();
+            bad[at] ^= 0x40;
+            let err = read_inbound(&mut Cursor::new(bad)).unwrap_err();
+            let s = format!("{err:#}");
+            assert!(
+                s.contains("checksum") || s.contains("bad message kind"),
+                "at={at}: {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        // valid checksum, hostile contents: magic from the shm ring
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 0x5350_5245_455A_4531);
+        put_u32(&mut payload, PROTO_VERSION);
+        put_u32(&mut payload, 3);
+        put_u32(&mut payload, 1);
+        put_u64(&mut payload, 10);
+        let mut buf = Vec::new();
+        write_raw_frame(&mut buf, KIND_HELLO, &payload).unwrap();
+        let err = read_inbound(&mut Cursor::new(buf)).unwrap_err();
+        assert!(format!("{err:#}").contains("bad hello magic"), "{err:#}");
+
+        let mut payload = Vec::new();
+        put_u64(&mut payload, NET_MAGIC);
+        put_u32(&mut payload, PROTO_VERSION + 1);
+        put_u64(&mut payload, 0);
+        let mut buf = Vec::new();
+        write_raw_frame(&mut buf, KIND_HELLO_ACK, &payload).unwrap();
+        let err = read_inbound(&mut Cursor::new(buf)).unwrap_err();
+        assert!(format!("{err:#}").contains("protocol version"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_kind_and_oversized_len_rejected() {
+        let mut buf = Vec::new();
+        write_raw_frame(&mut buf, 9, &[1, 2, 3]).unwrap();
+        let err = read_inbound(&mut Cursor::new(buf)).unwrap_err();
+        assert!(format!("{err:#}").contains("bad message kind"), "{err:#}");
+
+        let mut buf = vec![KIND_EXPERIENCE];
+        buf.extend_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        let err = read_inbound(&mut Cursor::new(buf)).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+    }
+
+    #[test]
+    fn inconsistent_experience_length_rejected() {
+        // header says 3 frames x 2 f32s but carries only 4 floats
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 2);
+        put_u32(&mut payload, 3);
+        put_f32s(&mut payload, &[1.0, 2.0, 3.0, 4.0]);
+        let mut buf = Vec::new();
+        write_raw_frame(&mut buf, KIND_EXPERIENCE, &payload).unwrap();
+        let err = read_inbound(&mut Cursor::new(buf)).unwrap_err();
+        assert!(format!("{err:#}").contains("inconsistent"), "{err:#}");
+    }
+
+    #[test]
+    fn would_block_before_frame_is_idle() {
+        struct Blocky;
+        impl Read for Blocky {
+            fn read(&mut self, _b: &mut [u8]) -> io::Result<usize> {
+                Err(io::Error::from(io::ErrorKind::WouldBlock))
+            }
+        }
+        assert!(matches!(read_inbound(&mut Blocky).unwrap(), Inbound::Idle));
+    }
+
+    #[test]
+    fn back_to_back_frames_decode_in_order() {
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        for v in 1..=5u64 {
+            write_weights(&mut buf, v, &[v as f32], &mut scratch).unwrap();
+        }
+        let mut cur = Cursor::new(buf);
+        for v in 1..=5u64 {
+            match read_inbound(&mut cur).unwrap() {
+                Inbound::Msg(Msg::Weights(w)) => {
+                    assert_eq!(w.version, v);
+                    assert_eq!(w.params, vec![v as f32]);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(matches!(read_inbound(&mut cur).unwrap(), Inbound::Closed));
+    }
+}

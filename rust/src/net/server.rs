@@ -1,0 +1,537 @@
+//! TCP listener service for remote actors (`--serve-addr`).
+//!
+//! One session per connection, two threads per session: a **reader** that
+//! validates the handshake against this topology's `FrameSpec`/actor
+//! layout and decodes checksummed experience frames into a bounded
+//! per-session queue, and a **pump** that drains the queue into the
+//! replay transport (`ExpSink::push_many`) and pushes versioned weight
+//! broadcasts (`bus::PolicySub`) back to the client. Splitting the halves
+//! means a client that stops reading weights can never stall experience
+//! ingestion, and vice versa.
+//!
+//! Backpressure is drop-oldest, exactly like the ring: when a session's
+//! queue is full the oldest queued batch is evicted and counted, never
+//! blocking the socket reader. Per-session counters (frames, drops,
+//! weight version, reconnects) aggregate into the `Service::stats()` rows
+//! that land in `Snapshot.services` and summary.json under `"net"`.
+//!
+//! Protocol violations are loud and fatal *to the session only*: the
+//! offending connection is dropped (and `proto_errors` counted), the
+//! listener keeps accepting.
+
+use std::collections::VecDeque;
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::bus::PolicyPub;
+use crate::coordinator::metrics::MetricsHub;
+use crate::coordinator::topology::Service;
+use crate::net::protocol::{
+    self, HelloAck, Inbound, Msg, READ_TIMEOUT,
+};
+use crate::replay::{ExpSink, FrameSpec};
+use crate::util::sync::{AtomicBool, AtomicU64, Ordering};
+
+/// Per-session experience queue bound, in frames. At pendulum scale
+/// (frame = 9 f32s) this is ~300 KiB per session; the pump drains it in
+/// one `push_many` pass per tick, so it only fills when the sink itself
+/// is the bottleneck — at which point oldest-first drops mirror the
+/// ring's own overwrite policy.
+pub const SESSION_QUEUE_FRAMES: usize = 8192;
+
+/// How long a freshly accepted connection gets to produce a valid Hello.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Pump idle sleep between queue drains / weight polls.
+const PUMP_IDLE: Duration = Duration::from_millis(2);
+
+/// Lifetime counters for one accepted connection. Kept (in the server's
+/// session registry) after the connection dies so aggregate rows never go
+/// backwards across reconnects.
+struct SessionStats {
+    /// Frames forwarded into the sink.
+    frames: AtomicU64,
+    /// Frames evicted by drop-oldest backpressure (or oversized batches).
+    dropped: AtomicU64,
+    /// Last weight version written to this client (0 = none yet).
+    weight_version: AtomicU64,
+    /// False once the reader has exited.
+    open: AtomicBool,
+    /// Write half kept for stop-time shutdown; dropped when the session
+    /// closes so dead sessions hold no file descriptors.
+    conn: Mutex<Option<TcpStream>>,
+}
+
+impl SessionStats {
+    fn new(conn: TcpStream) -> Self {
+        SessionStats {
+            frames: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            weight_version: AtomicU64::new(0),
+            open: AtomicBool::new(true),
+            conn: Mutex::new(Some(conn)),
+        }
+    }
+}
+
+/// Bounded drop-oldest batch queue between a session's reader and pump.
+struct SessionQueue {
+    inner: Mutex<QueueInner>,
+}
+
+struct QueueInner {
+    batches: VecDeque<(Vec<f32>, usize)>,
+    frames: usize,
+}
+
+impl SessionQueue {
+    fn new() -> Self {
+        SessionQueue {
+            inner: Mutex::new(QueueInner { batches: VecDeque::new(), frames: 0 }),
+        }
+    }
+
+    /// Enqueue one decoded batch, evicting oldest batches to stay under
+    /// the bound. Returns the number of frames dropped.
+    fn push(&self, data: Vec<f32>, n: usize) -> usize {
+        let mut dropped = 0;
+        let mut g = self.inner.lock().unwrap();
+        if n > SESSION_QUEUE_FRAMES {
+            // a single batch larger than the whole queue: drop it outright
+            // (decode already bounds payloads, so this is pathological)
+            return n;
+        }
+        while g.frames + n > SESSION_QUEUE_FRAMES {
+            match g.batches.pop_front() {
+                Some((_, m)) => {
+                    g.frames -= m;
+                    dropped += m;
+                }
+                None => break,
+            }
+        }
+        g.frames += n;
+        g.batches.push_back((data, n));
+        dropped
+    }
+
+    fn pop(&self) -> Option<(Vec<f32>, usize)> {
+        let mut g = self.inner.lock().unwrap();
+        let item = g.batches.pop_front();
+        if let Some((_, n)) = &item {
+            g.frames -= n;
+        }
+        item
+    }
+
+    fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().batches.is_empty()
+    }
+}
+
+/// State shared by the accept loop and every session thread.
+struct ServerShared {
+    stop: AtomicBool,
+    sink: Arc<dyn ExpSink>,
+    bus: Arc<dyn PolicyPub>,
+    /// Remote frames count toward the coordinator's sampling rate; None in
+    /// bare-server tests.
+    hub: Option<Arc<MetricsHub>>,
+    spec: FrameSpec,
+    actor_params: usize,
+    accepted: AtomicU64,
+    closed: AtomicU64,
+    proto_errors: AtomicU64,
+    sessions: Mutex<Vec<Arc<SessionStats>>>,
+}
+
+/// The remote-actor listener, registered in the topology as the `"net"`
+/// service.
+pub struct NetServer {
+    shared: Arc<ServerShared>,
+    local_addr: SocketAddr,
+    accept: Mutex<Option<JoinHandle<()>>>,
+    session_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7979`; port 0 picks a free port) and
+    /// start accepting remote-actor sessions that feed `sink` and mirror
+    /// `bus` weight versions.
+    pub fn bind(
+        addr: &str,
+        spec: FrameSpec,
+        actor_params: usize,
+        sink: Arc<dyn ExpSink>,
+        bus: Arc<dyn PolicyPub>,
+        hub: Option<Arc<MetricsHub>>,
+    ) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("net: bind --serve-addr {addr}"))?;
+        listener.set_nonblocking(true).context("net: listener nonblocking")?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(ServerShared {
+            stop: AtomicBool::new(false),
+            sink,
+            bus,
+            hub,
+            spec,
+            actor_params,
+            accepted: AtomicU64::new(0),
+            closed: AtomicU64::new(0),
+            proto_errors: AtomicU64::new(0),
+            sessions: Mutex::new(Vec::new()),
+        });
+        let session_threads = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = shared.clone();
+            let threads = session_threads.clone();
+            std::thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || accept_loop(listener, shared, threads))?
+        };
+        Ok(NetServer {
+            shared,
+            local_addr,
+            accept: Mutex::new(Some(accept)),
+            session_threads,
+        })
+    }
+
+    /// The bound address (tests bind port 0 and read the real port here).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Aggregate per-session counters, as surfaced in `Snapshot.services`.
+    pub fn stats_rows(&self) -> Vec<(&'static str, f64)> {
+        // relaxed-ok: stats read, no synchronization implied
+        let accepted = self.shared.accepted.load(Ordering::Relaxed);
+        // relaxed-ok: stats read, no synchronization implied
+        let closed = self.shared.closed.load(Ordering::Relaxed);
+        // relaxed-ok: stats read, no synchronization implied
+        let proto_errors = self.shared.proto_errors.load(Ordering::Relaxed);
+        let head = self.shared.bus.version();
+        let (mut frames, mut dropped, mut live, mut lag) = (0u64, 0u64, 0u64, 0u64);
+        for s in self.shared.sessions.lock().unwrap().iter() {
+            // relaxed-ok: stats read, no synchronization implied
+            frames += s.frames.load(Ordering::Relaxed);
+            // relaxed-ok: stats read, no synchronization implied
+            dropped += s.dropped.load(Ordering::Relaxed);
+            // relaxed-ok: stats read, no synchronization implied
+            if s.open.load(Ordering::Relaxed) {
+                live += 1;
+                // relaxed-ok: stats read, no synchronization implied
+                let v = s.weight_version.load(Ordering::Relaxed);
+                lag = lag.max(head.saturating_sub(v));
+            }
+        }
+        vec![
+            ("sessions", accepted as f64),
+            ("live", live as f64),
+            // every ended session is a (re)connect cycle a client went
+            // through; the chaos test asserts this moves on SIGKILL
+            ("reconnects", closed as f64),
+            ("frames", frames as f64),
+            ("drops", dropped as f64),
+            ("weight_lag", lag as f64),
+            ("proto_errors", proto_errors as f64),
+        ]
+    }
+
+    fn signal_stop(&self) {
+        // relaxed-ok: stop flag polled in loops; no data rides on it
+        self.shared.stop.store(true, Ordering::Relaxed);
+        // unblock session reader/pump threads parked in socket I/O
+        for s in self.shared.sessions.lock().unwrap().iter() {
+            if let Some(conn) = s.conn.lock().unwrap().as_ref() {
+                let _ = conn.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    /// Stop accepting, drop every live session, and join all threads.
+    pub fn shutdown(self) {
+        self.signal_stop();
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let threads = std::mem::take(&mut *self.session_threads.lock().unwrap());
+        for h in threads {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Service for NetServer {
+    fn service_name(&self) -> &'static str {
+        "net"
+    }
+
+    fn stop_signal(&self) {
+        self.signal_stop();
+    }
+
+    fn join(self: Box<Self>) {
+        (*self).shutdown();
+    }
+
+    fn stats(&self) -> Vec<(&'static str, f64)> {
+        self.stats_rows()
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<ServerShared>,
+    threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    // relaxed-ok: stop flag polled in a loop; no data rides on it
+    while !shared.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if let Err(e) = start_session(stream, peer, &shared, &threads) {
+                    eprintln!("net: session setup for {peer} failed: {e:#}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                reap_finished(&threads);
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                eprintln!("net: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Join (and drop) session threads that have already exited, so a
+/// long-running server with many reconnects does not accumulate handles.
+fn reap_finished(threads: &Arc<Mutex<Vec<JoinHandle<()>>>>) {
+    let mut g = threads.lock().unwrap();
+    let mut live = Vec::with_capacity(g.len());
+    for h in g.drain(..) {
+        if h.is_finished() {
+            let _ = h.join();
+        } else {
+            live.push(h);
+        }
+    }
+    *g = live;
+}
+
+fn start_session(
+    stream: TcpStream,
+    peer: SocketAddr,
+    shared: &Arc<ServerShared>,
+    threads: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    // relaxed-ok: counter increment, no synchronization implied
+    let n = shared.accepted.fetch_add(1, Ordering::Relaxed);
+    let stats = Arc::new(SessionStats::new(stream.try_clone()?));
+    shared.sessions.lock().unwrap().push(stats.clone());
+    let shared2 = shared.clone();
+    let threads2 = threads.clone();
+    let h = std::thread::Builder::new()
+        .name(format!("net-session-{n}"))
+        .spawn(move || {
+            if let Err(e) = run_session(stream, &shared2, &stats, &threads2) {
+                // relaxed-ok: stop flag read for log suppression only
+                if !shared2.stop.load(Ordering::Relaxed) {
+                    eprintln!("net: session {peer} dropped: {e:#}");
+                }
+            }
+            // relaxed-ok: the pump rechecks queue emptiness after seeing
+            // closed; no data is published through this flag
+            stats.open.store(false, Ordering::Relaxed);
+            // relaxed-ok: counter increment, no synchronization implied
+            shared2.closed.fetch_add(1, Ordering::Relaxed);
+            let _ = stream_of(&stats).map(|s| s.shutdown(Shutdown::Both));
+            *stats.conn.lock().unwrap() = None;
+        })?;
+    threads.lock().unwrap().push(h);
+    Ok(())
+}
+
+fn stream_of(stats: &SessionStats) -> Option<TcpStream> {
+    stats.conn.lock().unwrap().as_ref().and_then(|s| s.try_clone().ok())
+}
+
+/// The session reader: handshake, then decode experience into the bounded
+/// queue until the client disconnects, the server stops, or the stream
+/// violates the protocol (any `Err` return drops the session).
+fn run_session(
+    stream: TcpStream,
+    shared: &Arc<ServerShared>,
+    stats: &Arc<SessionStats>,
+    threads: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+
+    // --- handshake: one valid Hello within the deadline, spec must match
+    let hello = {
+        let start = Instant::now();
+        loop {
+            // relaxed-ok: stop flag polled in a loop; no data rides on it
+            if shared.stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match protocol::read_inbound(&mut reader) {
+                Ok(Inbound::Msg(Msg::Hello(h))) => break h,
+                Ok(Inbound::Msg(m)) => {
+                    // relaxed-ok: counter increment, no synchronization implied
+                    shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                    bail!("expected hello, got {m:?}");
+                }
+                Ok(Inbound::Idle) => {
+                    ensure!(start.elapsed() < HANDSHAKE_TIMEOUT, "handshake timeout");
+                }
+                Ok(Inbound::Closed) => bail!("closed during handshake"),
+                Err(e) => {
+                    // relaxed-ok: counter increment, no synchronization implied
+                    shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+            }
+        }
+    };
+    if hello.obs_dim as usize != shared.spec.obs_dim
+        || hello.act_dim as usize != shared.spec.act_dim
+        || hello.actor_params as usize != shared.actor_params
+    {
+        // relaxed-ok: counter increment, no synchronization implied
+        shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+        bail!(
+            "frame spec mismatch: client obs={} act={} actor_params={}, server obs={} act={} \
+             actor_params={} — client built against a different env/layout",
+            hello.obs_dim,
+            hello.act_dim,
+            hello.actor_params,
+            shared.spec.obs_dim,
+            shared.spec.act_dim,
+            shared.actor_params
+        );
+    }
+    let mut writer = stream.try_clone().context("clone session write half")?;
+    let mut scratch = Vec::new();
+    protocol::write_msg(
+        &mut writer,
+        &Msg::HelloAck(HelloAck { weight_version: shared.bus.version() }),
+        &mut scratch,
+    )
+    .context("write hello-ack")?;
+
+    // --- pump: queue → sink, bus → client. A fresh subscription's first
+    // poll returns the *current* head version, so a reconnecting client is
+    // brought up to date immediately.
+    let queue = Arc::new(SessionQueue::new());
+    let pump = {
+        let shared = shared.clone();
+        let stats = stats.clone();
+        let queue = queue.clone();
+        let sub = shared.bus.subscribe();
+        std::thread::Builder::new()
+            .name("net-pump".into())
+            .spawn(move || session_pump(writer, sub, &shared, &stats, &queue))?
+    };
+    threads.lock().unwrap().push(pump);
+
+    // --- experience ingest
+    let frame_f32s = shared.spec.f32s();
+    loop {
+        // relaxed-ok: stop flag polled in a loop; no data rides on it
+        if shared.stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        match protocol::read_inbound(&mut reader) {
+            Ok(Inbound::Msg(Msg::Experience(e))) => {
+                if e.frame_f32s as usize != frame_f32s {
+                    // relaxed-ok: counter increment, no synchronization implied
+                    shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                    bail!(
+                        "experience frame is {} f32s, this topology's FrameSpec needs {}",
+                        e.frame_f32s,
+                        frame_f32s
+                    );
+                }
+                let dropped = queue.push(e.data, e.n_frames as usize);
+                if dropped > 0 {
+                    // relaxed-ok: counter increment, no synchronization implied
+                    stats.dropped.fetch_add(dropped as u64, Ordering::Relaxed);
+                }
+            }
+            Ok(Inbound::Msg(m)) => {
+                // relaxed-ok: counter increment, no synchronization implied
+                shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                bail!("unexpected message after handshake: {m:?}");
+            }
+            Ok(Inbound::Idle) => {}
+            Ok(Inbound::Closed) => return Ok(()),
+            Err(e) => {
+                // relaxed-ok: counter increment, no synchronization implied
+                shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// The session pump thread: drains queued experience into the sink and
+/// forwards bus weight publishes to the client until the session closes
+/// (it finishes draining whatever the reader queued first).
+fn session_pump(
+    mut writer: TcpStream,
+    mut sub: Box<dyn crate::bus::PolicySub>,
+    shared: &Arc<ServerShared>,
+    stats: &Arc<SessionStats>,
+    queue: &Arc<SessionQueue>,
+) {
+    let mut params = Vec::new();
+    let mut scratch = Vec::new();
+    let mut writable = true;
+    loop {
+        let mut worked = false;
+        while let Some((data, n)) = queue.pop() {
+            shared.sink.push_many(&data, n);
+            if let Some(hub) = &shared.hub {
+                hub.sampled.add(n as u64);
+            }
+            // relaxed-ok: counter increment, no synchronization implied
+            stats.frames.fetch_add(n as u64, Ordering::Relaxed);
+            worked = true;
+        }
+        // relaxed-ok: stop flag polled in a loop; no data rides on it
+        let stop = shared.stop.load(Ordering::Relaxed);
+        if writable && !stop {
+            if let Ok(Some(v)) = sub.poll(&mut params) {
+                match protocol::write_weights(&mut writer, v, &params, &mut scratch) {
+                    Ok(()) => {
+                        // relaxed-ok: stats write, no synchronization implied
+                        stats.weight_version.store(v, Ordering::Relaxed);
+                        worked = true;
+                    }
+                    // the reader notices the dead socket and closes the
+                    // session; keep draining experience until then
+                    Err(_) => writable = false,
+                }
+            }
+        }
+        // relaxed-ok: open flag polled in a loop; queue contents are
+        // published by the queue's own mutex
+        let open = stats.open.load(Ordering::Relaxed);
+        if (stop || !open) && queue.is_empty() {
+            return;
+        }
+        if !worked {
+            std::thread::sleep(PUMP_IDLE);
+        }
+    }
+}

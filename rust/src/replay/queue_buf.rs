@@ -109,6 +109,7 @@ impl ExpSink for QueueBuffer {
             lost: self.lost.load(Ordering::Relaxed),
             visible: self.len(),
             transfer_cycle_s: 0.0,
+            lap_hazards: 0, // no wrapping writer cursor in the queue
         }
     }
 }

@@ -266,6 +266,7 @@ impl ShmRing {
             lost: self.hdr(4).load(Ordering::Relaxed),
             visible: self.visible_now(),
             transfer_cycle_s: 0.0, // shared memory: immediate visibility
+            lap_hazards: self.lap_hazards(),
         }
     }
 }

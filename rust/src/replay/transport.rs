@@ -48,6 +48,11 @@ pub struct TransportStats {
     /// (data is visible immediately) — the paper's "experience transfer
     /// cycle".
     pub transfer_cycle_s: f64,
+    /// Writer laps that raced a straggling reader on an undersized ring
+    /// (the PR-7 lap hazard; see docs/CONCURRENCY.md). Always 0 for
+    /// transports without a wrapping writer cursor; a nonzero value means
+    /// the ring is too small for the push rate and torn reads were risked.
+    pub lap_hazards: u64,
 }
 
 impl TransportStats {

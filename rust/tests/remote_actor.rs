@@ -1,0 +1,410 @@
+//! Remote actor service integration tests (`net::{protocol,server,client}`):
+//!
+//! * loopback session: a raw protocol client handshakes against a bare
+//!   `NetServer`, streams checksummed experience into the sink, and receives
+//!   monotonically-versioned weight broadcasts;
+//! * adversarial peers: bad magic, mismatched `FrameSpec`, truncated frames,
+//!   and corrupted checksums each drop *that session only* (counted in
+//!   `proto_errors`) while the listener keeps serving good clients;
+//! * the chaos case: SIGKILL a real `remote-actor` client process mid-run,
+//!   assert the server reaps the session, training continues, and a
+//!   reconnecting client resumes at the current weight version — with the
+//!   session counters visible in the `net` service stats row;
+//! * coordinator end-to-end: `--serve-addr` inside a full `Coordinator::run`
+//!   lands remote frames in `RunSummary::service_stats` and summary.json.
+
+// Miri cannot run this suite: real sockets and child processes.
+#![cfg(not(miri))]
+use std::io::Write;
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use spreeze::bus::{PolicyPub, SharedWeightBus, WeightBus};
+use spreeze::config::TrainConfig;
+use spreeze::coordinator::topology::TopologyBuilder;
+use spreeze::coordinator::Coordinator;
+use spreeze::net::protocol::{
+    self, Hello, HelloAck, Inbound, Msg, KIND_HELLO, NET_MAGIC, PROTO_VERSION,
+};
+use spreeze::net::NetServer;
+use spreeze::replay::{ExpSink, FrameSpec, QueueBuffer};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_spreeze")
+}
+
+fn wait_until(secs: u64, mut f: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while Instant::now() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    false
+}
+
+fn stat(rows: &[(&'static str, f64)], key: &str) -> f64 {
+    rows.iter().find(|(k, _)| *k == key).map(|(_, v)| *v).unwrap_or(f64::NAN)
+}
+
+const SPEC: FrameSpec = FrameSpec { obs_dim: 3, act_dim: 1 };
+const ACTOR_PARAMS: usize = 64;
+
+/// A bare server over a queue sink + in-memory weight bus (no learner).
+fn bare_server() -> (NetServer, Arc<QueueBuffer>, Arc<dyn PolicyPub>) {
+    let queue = QueueBuffer::new(100_000, SPEC);
+    let bus: Arc<dyn PolicyPub> =
+        Arc::new(SharedWeightBus(Arc::new(WeightBus::new(ACTOR_PARAMS))));
+    let sink: Arc<dyn ExpSink> = queue.clone();
+    let srv =
+        NetServer::bind("127.0.0.1:0", SPEC, ACTOR_PARAMS, sink, bus.clone(), None).unwrap();
+    (srv, queue, bus)
+}
+
+/// Raw protocol client: connect + valid handshake, return the stream and
+/// the server's advertised weight version.
+fn handshake(srv: &NetServer) -> (TcpStream, u64) {
+    let stream = TcpStream::connect(srv.local_addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let mut scratch = Vec::new();
+    let hello = Hello {
+        obs_dim: SPEC.obs_dim as u32,
+        act_dim: SPEC.act_dim as u32,
+        actor_params: ACTOR_PARAMS as u64,
+    };
+    let mut w = stream.try_clone().unwrap();
+    protocol::write_msg(&mut w, &Msg::Hello(hello), &mut scratch).unwrap();
+    let mut r = stream.try_clone().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match protocol::read_inbound(&mut r).unwrap() {
+            Inbound::Msg(Msg::HelloAck(HelloAck { weight_version })) => {
+                return (stream, weight_version)
+            }
+            Inbound::Idle => assert!(Instant::now() < deadline, "no hello-ack"),
+            other => panic!("expected hello-ack, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn loopback_session_streams_experience_and_weights() {
+    let (srv, queue, bus) = bare_server();
+    bus.publish(&vec![1.0; ACTOR_PARAMS]).unwrap();
+
+    let (stream, ack_version) = handshake(&srv);
+    assert_eq!(ack_version, 1, "hello-ack must carry the current bus version");
+
+    // stream 50 batches of 4 frames each through the session queue
+    let f = SPEC.f32s();
+    let mut scratch = Vec::new();
+    let mut w = stream.try_clone().unwrap();
+    for b in 0..50u32 {
+        let frames: Vec<f32> = (0..4 * f).map(|i| (b * 1000 + i as u32) as f32).collect();
+        protocol::write_experience(&mut w, &frames, 4, f, &mut scratch).unwrap();
+    }
+    assert!(
+        wait_until(20, || queue.stats().pushed >= 200),
+        "pump never forwarded experience into the sink: {:?}",
+        queue.stats()
+    );
+    // no backpressure at this volume: everything queued reached the sink
+    assert_eq!(queue.stats().pushed, 200);
+
+    // weight broadcasts: publish twice, client must observe increasing
+    // versions with intact payloads, ending at the head
+    bus.publish(&vec![2.0; ACTOR_PARAMS]).unwrap();
+    let mut r = stream.try_clone().unwrap();
+    let mut seen = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while seen.last() != Some(&2) {
+        assert!(Instant::now() < deadline, "head weight version never arrived: {seen:?}");
+        match protocol::read_inbound(&mut r).unwrap() {
+            Inbound::Msg(Msg::Weights(wt)) => {
+                assert_eq!(wt.params.len(), ACTOR_PARAMS);
+                assert!(wt.params.iter().all(|&x| x == wt.version as f32), "torn weights");
+                seen.push(wt.version);
+            }
+            Inbound::Idle => {}
+            other => panic!("expected weights, got {other:?}"),
+        }
+    }
+    // a fresh subscription jumps to the head version — depending on publish
+    // timing the client sees [1, 2] or just [2]; versions never regress
+    assert!(seen.windows(2).all(|w| w[0] < w[1]), "versions regressed: {seen:?}");
+
+    let rows = srv.stats_rows();
+    assert_eq!(stat(&rows, "sessions"), 1.0);
+    assert_eq!(stat(&rows, "live"), 1.0);
+    assert_eq!(stat(&rows, "frames"), 200.0);
+    assert_eq!(stat(&rows, "drops"), 0.0);
+    assert_eq!(stat(&rows, "proto_errors"), 0.0);
+    assert!(
+        wait_until(10, || stat(&srv.stats_rows(), "weight_lag") == 0.0),
+        "client never recorded at the head version: {:?}",
+        srv.stats_rows()
+    );
+
+    // clean disconnect: the server reaps the session
+    drop((stream, w, r));
+    assert!(
+        wait_until(10, || stat(&srv.stats_rows(), "reconnects") >= 1.0
+            && stat(&srv.stats_rows(), "live") == 0.0),
+        "session never reaped after disconnect: {:?}",
+        srv.stats_rows()
+    );
+    srv.shutdown();
+}
+
+#[test]
+fn adversarial_peers_drop_their_session_only() {
+    let (srv, queue, _bus) = bare_server();
+    let mut expect_errors = 0.0;
+
+    // (a) wrong magic in the hello: decoded loudly, session dropped
+    {
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(NET_MAGIC ^ 0xFF).to_le_bytes());
+        payload.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+        payload.extend_from_slice(&(SPEC.obs_dim as u32).to_le_bytes());
+        payload.extend_from_slice(&(SPEC.act_dim as u32).to_le_bytes());
+        payload.extend_from_slice(&(ACTOR_PARAMS as u64).to_le_bytes());
+        protocol::write_raw_frame(&mut s, KIND_HELLO, &payload).unwrap();
+        expect_errors += 1.0;
+        assert!(
+            wait_until(10, || stat(&srv.stats_rows(), "proto_errors") >= expect_errors),
+            "bad magic not counted: {:?}",
+            srv.stats_rows()
+        );
+    }
+
+    // (b) well-formed hello with a mismatched FrameSpec: rejected before
+    // any experience flows
+    {
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        let mut scratch = Vec::new();
+        let hostile = Hello { obs_dim: 17, act_dim: 6, actor_params: 999 };
+        protocol::write_msg(&mut s, &Msg::Hello(hostile), &mut scratch).unwrap();
+        expect_errors += 1.0;
+        assert!(
+            wait_until(10, || stat(&srv.stats_rows(), "proto_errors") >= expect_errors),
+            "spec mismatch not counted: {:?}",
+            srv.stats_rows()
+        );
+    }
+
+    // (c) good handshake, then a truncated frame (half a header, then EOF)
+    {
+        let (s, _) = handshake(&srv);
+        let mut w = s.try_clone().unwrap();
+        w.write_all(&[spreeze::net::protocol::KIND_EXPERIENCE, 0xAA, 0xBB]).unwrap();
+        drop((w, s));
+        expect_errors += 1.0;
+        assert!(
+            wait_until(10, || stat(&srv.stats_rows(), "proto_errors") >= expect_errors),
+            "truncated frame not counted: {:?}",
+            srv.stats_rows()
+        );
+    }
+
+    // (d) good handshake, then a checksum-corrupted experience frame
+    {
+        let (s, _) = handshake(&srv);
+        let mut buf = Vec::new();
+        let f = SPEC.f32s();
+        let mut scratch = Vec::new();
+        protocol::write_experience(&mut buf, &vec![1.0; f], 1, f, &mut scratch).unwrap();
+        let at = buf.len() - 2; // inside the trailing crc
+        buf[at] ^= 0x01;
+        let mut w = s.try_clone().unwrap();
+        w.write_all(&buf).unwrap();
+        expect_errors += 1.0;
+        assert!(
+            wait_until(10, || stat(&srv.stats_rows(), "proto_errors") >= expect_errors),
+            "checksum corruption not counted: {:?}",
+            srv.stats_rows()
+        );
+        drop((w, s));
+    }
+
+    // every hostile session is gone, none of its frames reached the sink
+    assert!(
+        wait_until(10, || stat(&srv.stats_rows(), "live") == 0.0),
+        "hostile sessions not reaped: {:?}",
+        srv.stats_rows()
+    );
+    assert_eq!(queue.stats().pushed, 0, "hostile experience must never reach the sink");
+
+    // ...and the listener still serves a well-behaved client
+    let (s, _) = handshake(&srv);
+    let f = SPEC.f32s();
+    let mut scratch = Vec::new();
+    let mut w = s.try_clone().unwrap();
+    protocol::write_experience(&mut w, &vec![0.5; 3 * f], 3, f, &mut scratch).unwrap();
+    assert!(
+        wait_until(20, || queue.stats().pushed == 3),
+        "server stopped serving good clients after hostile peers: {:?}",
+        srv.stats_rows()
+    );
+    drop((w, s));
+    srv.shutdown();
+}
+
+fn spawn_client(port: u16, seed: u64) -> Child {
+    Command::new(bin())
+        .args([
+            "remote-actor",
+            "--addr",
+            &format!("127.0.0.1:{port}"),
+            "--env",
+            "pendulum",
+            "--sp",
+            "1",
+            "--envs-per-worker",
+            "2",
+            "--start-steps",
+            "0",
+            "--seed",
+            &seed.to_string(),
+            "--retry",
+            "40",
+            "--retry-backoff-ms",
+            "50",
+            // safety bound: a leaked child exits on its own
+            "--max-seconds",
+            "120",
+        ])
+        .env("SPREEZE_BACKEND", "native")
+        .stdin(Stdio::null())
+        .spawn()
+        .unwrap()
+}
+
+/// The chaos case: SIGKILL the remote actor process mid-stream. The server
+/// must reap the session, keep training off buffered experience, and bring
+/// a reconnecting client straight to the current weight version.
+#[test]
+fn chaos_sigkill_remote_client_server_reaps_and_training_continues() {
+    std::env::set_var("SPREEZE_BACKEND", "native");
+    let mut cfg = TrainConfig::default();
+    cfg.env = "pendulum".into();
+    cfg.serve_addr = "127.0.0.1:0".into();
+    cfg.batch_size = 64;
+    cfg.start_steps = 0;
+    cfg.capacity = 100_000;
+    let run_dir =
+        std::env::temp_dir().join(format!("spreeze-net-chaos-{}", std::process::id()));
+    cfg.run_dir = run_dir.to_string_lossy().into_owned();
+
+    // no local samplers: every frame the learner sees arrived over TCP
+    let mut topo =
+        TopologyBuilder::new(cfg).samplers(false).eval(false).viz(false).build().unwrap();
+    let port = topo.net.as_ref().unwrap().local_addr().port();
+    topo.publish_policy().unwrap();
+
+    let net_stat = |topo: &spreeze::coordinator::topology::Topology, key: &str| {
+        let rows = topo.service_stats();
+        let (_, stats) = rows.iter().find(|(n, _)| n == "net").expect("net service row");
+        stat(stats, key)
+    };
+
+    // phase 1: client streams remote experience into the replay transport
+    let mut kid = spawn_client(port, 0);
+    assert!(
+        wait_until(30, || topo.learner.visible() >= 64),
+        "remote experience never reached the learner (visible {})",
+        topo.learner.visible()
+    );
+    assert_eq!(net_stat(&topo, "live"), 1.0);
+    assert_eq!(net_stat(&topo, "weight_lag"), 0.0, "client not at head version");
+
+    // phase 2: SIGKILL the client — no FIN handshake from the process
+    let pid = kid.id();
+    // SAFETY: kill() has no memory-safety preconditions; pid is the child
+    // we just spawned (a stale pid would only make kill fail, asserted).
+    unsafe {
+        assert_eq!(libc::kill(pid as libc::pid_t, libc::SIGKILL), 0);
+    }
+    kid.wait().unwrap();
+    assert!(
+        wait_until(20, || net_stat(&topo, "live") == 0.0),
+        "server never reaped the killed client's session"
+    );
+    assert!(net_stat(&topo, "reconnects") >= 1.0);
+    let frames_at_kill = net_stat(&topo, "frames");
+    assert!(frames_at_kill > 0.0);
+
+    // phase 3: training continues off the buffered remote experience
+    for _ in 0..3 {
+        assert!(topo.learner.try_update().unwrap(), "update failed post-kill");
+    }
+    topo.publish_policy().unwrap();
+
+    // phase 4: a fresh client reconnects and resumes at the current
+    // weight version (its frames keep counting in the same aggregate)
+    let mut kid2 = spawn_client(port, 7);
+    assert!(
+        wait_until(30, || net_stat(&topo, "frames") > frames_at_kill),
+        "reconnected client produced no frames"
+    );
+    assert!(
+        wait_until(20, || net_stat(&topo, "weight_lag") == 0.0),
+        "reconnected client never caught up to the head weight version"
+    );
+    assert!(net_stat(&topo, "sessions") >= 2.0);
+
+    topo.shutdown_services();
+    let _ = kid2.kill();
+    let _ = kid2.wait();
+    let _ = std::fs::remove_dir_all(run_dir);
+}
+
+/// Full-coordinator smoke: `--serve-addr` inside `Coordinator::run`, with a
+/// real `remote-actor` child feeding it. Remote frames must land in the
+/// `net` service row of the summary, and summary.json must carry both the
+/// `net` session counters and the `lap_hazards` transport column.
+#[test]
+fn coordinator_serves_remote_actor_end_to_end() {
+    std::env::set_var("SPREEZE_BACKEND", "native");
+    // reserve a port for the rendezvous: bind :0, read it back, release it
+    let port = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let mut kid = spawn_client(port, 3);
+
+    let mut cfg = TrainConfig::default();
+    cfg.env = "pendulum".into();
+    cfg.serve_addr = format!("127.0.0.1:{port}");
+    cfg.batch_size = 64;
+    // short warmup so the 8s budget spends most of its time updating
+    cfg.start_steps = 200;
+    cfg.max_seconds = 8.0;
+    cfg.target_return = None;
+    let run_dir =
+        std::env::temp_dir().join(format!("spreeze-net-e2e-{}", std::process::id()));
+    cfg.run_dir = run_dir.to_string_lossy().into_owned();
+    let s = Coordinator::new(cfg).run().unwrap();
+    let _ = kid.kill();
+    let _ = kid.wait();
+
+    assert!(s.updates > 0, "no updates with a remote actor attached");
+    let (_, net) = s
+        .service_stats
+        .iter()
+        .find(|(n, _)| n == "net")
+        .expect("summary must carry the net service row");
+    assert!(stat(net, "sessions") >= 1.0, "client never connected: {net:?}");
+    assert!(stat(net, "frames") > 0.0, "no remote frames reached the sink: {net:?}");
+
+    let json = std::fs::read_to_string(run_dir.join("summary.json")).unwrap();
+    assert!(json.contains("\"net\""), "summary.json missing the net service row");
+    assert!(json.contains("\"frames\""), "summary.json missing net session counters");
+    assert!(json.contains("\"lap_hazards\""), "summary.json missing lap_hazards");
+    let _ = std::fs::remove_dir_all(run_dir);
+}

@@ -75,6 +75,7 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
 fn is_protocol_module(rel: &Path) -> bool {
     let p = rel.to_string_lossy().replace('\\', "/");
     p.contains("src/bus/")
+        || p.contains("src/net/")
         || p.contains("src/replay/")
         || p.ends_with("src/sampler/proc.rs")
         || p.ends_with("src/util/shm.rs")
