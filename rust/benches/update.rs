@@ -15,24 +15,36 @@ use spreeze::coordinator::metrics::MetricsHub;
 use spreeze::learner::model_parallel::ModelParallelLearner;
 use spreeze::learner::Learner;
 use spreeze::nn::ops;
+use spreeze::nn::ops::dispatch;
 use spreeze::replay::shm_ring::ShmSource;
 use spreeze::replay::{FrameSpec, ShmRing, ShmRingOptions};
 use spreeze::runtime::{default_artifacts_dir, Manifest};
 use spreeze::util::bench::Bench;
 use spreeze::util::rng::Rng;
 
-/// The before/after rows for the `nn::ops` kernel layer: the seed's naive
-/// triple-loop gemm vs the tiled kernel at 1 thread vs the tiled kernel on
-/// the shared pool, at walker-critic-like shapes (k = n = 256) across small
-/// and large batch sizes. `items` = flops, so items/s reads as FLOP/s.
-fn gemm_kernels(b: &Bench, max_bs: usize) {
+/// Kernel-tier rows for the `nn::ops` layer (the `kernels` JSON group):
+/// the seed's naive triple-loop gemm vs the scalar tiled tier vs the AVX2
+/// SIMD tier, forced per row via the `_sel` entry points, at
+/// walker-critic-like shapes (k = n = 256) across manifest BS-ladder rungs.
+/// `items` = flops, so items/s reads as FLOP/s. On hosts without AVX2+FMA
+/// the simd rows downgrade to scalar (`Kernel::use_simd` re-checks).
+fn gemm_kernels(window: std::time::Duration, max_bs: usize) {
+    let b = Bench { window, json_group: Some("kernels"), ..Default::default() };
     let pool1 = ops::ThreadPool::new(1);
     let pooled = ops::global();
+    let sc = dispatch::Kernel::scalar();
     println!(
-        "\n-- nn::ops gemm kernels: naive (seed) vs tiled(1t) vs pooled({}t), k=n=256",
+        "\n-- nn::ops gemm kernels: naive (seed) vs scalar tiled vs simd \
+         (avx2+fma: {}), pool {}t, k=n=256",
+        dispatch::hw_simd(),
         pooled.threads()
     );
     let (k, n) = (256usize, 256usize);
+    // forced SIMD kernels with the same blocking select() would pick
+    let nn_sk = dispatch::Kernel {
+        tier: dispatch::Tier::Simd,
+        blk: if k > dispatch::KC { dispatch::KC } else { 0 },
+    };
     let mut rng = Rng::new(23);
     for m in [64usize, 256, 2048, 8192] {
         if m > max_bs {
@@ -51,31 +63,49 @@ fn gemm_kernels(b: &Bench, max_bs: usize) {
         });
         naive.print();
         let tiled = b.run(&format!("gemm_nn/tiled1/bs{m}"), flops, || {
-            ops::gemm_nn_bias_act(&pool1, &a, &w, Some(&bias), m, k, n, &mut y, true)
+            ops::gemm_nn_bias_act_sel(&pool1, &a, &w, Some(&bias), m, k, n, &mut y, true, sc)
         });
         tiled.print();
+        let simd1 = b.run(&format!("gemm_nn/simd1/bs{m}"), flops, || {
+            ops::gemm_nn_bias_act_sel(&pool1, &a, &w, Some(&bias), m, k, n, &mut y, true, nn_sk)
+        });
+        simd1.print();
         let par = b.run(&format!("gemm_nn/pooled/bs{m}"), flops, || {
-            ops::gemm_nn_bias_act(pooled, &a, &w, Some(&bias), m, k, n, &mut y, true)
+            ops::gemm_nn_bias_act_sel(pooled, &a, &w, Some(&bias), m, k, n, &mut y, true, sc)
         });
         par.print();
+        let par_simd = b.run(&format!("gemm_nn/simd/bs{m}"), flops, || {
+            ops::gemm_nn_bias_act_sel(pooled, &a, &w, Some(&bias), m, k, n, &mut y, true, nn_sk)
+        });
+        par_simd.print();
         println!(
-            "   bs{m}: tiled/naive {:.2}x, pooled/naive {:.2}x",
+            "   bs{m}: tiled/naive {:.2}x, simd/tiled {:.2}x (1t) {:.2}x (pooled)",
             naive.mean_ns / tiled.mean_ns,
-            naive.mean_ns / par.mean_ns
+            tiled.mean_ns / simd1.mean_ns,
+            par.mean_ns / par_simd.mean_ns
         );
         // the weight-gradient shape (xᵀ dY): reduction over the batch
+        let tn_sk = dispatch::Kernel {
+            tier: dispatch::Tier::Simd,
+            blk: if m > dispatch::RC { dispatch::RC } else { 0 },
+        };
         let mut g = vec![0.0f32; k * n];
         let naive_tn = b.run(&format!("gemm_tn/naive/bs{m}"), flops, || {
             ops::naive::gemm_tn_acc(&a, &y, m, k, n, &mut g)
         });
         naive_tn.print();
         let par_tn = b.run(&format!("gemm_tn/pooled/bs{m}"), flops, || {
-            ops::gemm_tn_acc(pooled, &a, &y, m, k, n, &mut g)
+            ops::gemm_tn_acc_sel(pooled, &a, &y, m, k, n, &mut g, sc)
         });
         par_tn.print();
+        let simd_tn = b.run(&format!("gemm_tn/simd/bs{m}"), flops, || {
+            ops::gemm_tn_acc_sel(pooled, &a, &y, m, k, n, &mut g, tn_sk)
+        });
+        simd_tn.print();
         println!(
-            "   bs{m}: tn pooled/naive {:.2}x",
-            naive_tn.mean_ns / par_tn.mean_ns
+            "   bs{m}: tn pooled/naive {:.2}x, tn simd/pooled {:.2}x",
+            naive_tn.mean_ns / par_tn.mean_ns,
+            par_tn.mean_ns / simd_tn.mean_ns
         );
     }
 }
@@ -107,7 +137,7 @@ fn main() {
     let b = Bench { window, json_group: Some("update"), ..Default::default() };
 
     println!("== network update bench ({backend} backend) ==");
-    gemm_kernels(&b, max_bs);
+    gemm_kernels(window, max_bs);
     println!();
     println!(
         "{:<30} {:>12} {:>14} {:>16}",

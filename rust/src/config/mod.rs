@@ -133,6 +133,11 @@ pub struct TrainConfig {
     /// backprop, Adam). 0 = auto (`SPREEZE_THREADS` env, else all cores).
     /// Effective at topology build, before the first kernel runs.
     pub ops_threads: usize,
+    /// `nn::ops` kernel tier: "auto" (AVX2+FMA when the CPU reports it),
+    /// "on" (force the SIMD tier), or "off" (scalar tier — reproduces the
+    /// pre-SIMD bitwise-vs-naive behavior). `SPREEZE_SIMD` wins over this.
+    /// Effective at topology build, before the first kernel runs.
+    pub simd: String,
     pub transport: Transport,
     /// Weight path from the learner to sampler/eval/viz workers.
     pub weight_transport: WeightTransport,
@@ -217,6 +222,7 @@ impl Default for TrainConfig {
             n_samplers: 0,
             envs_per_worker: 1,
             ops_threads: 0,
+            simd: "auto".into(),
             transport: Transport::Shm,
             weight_transport: WeightTransport::Shm,
             topology: TopologyMode::Threads,
@@ -265,6 +271,10 @@ impl TrainConfig {
         self.n_samplers = a.usize_or("sp", self.n_samplers)?;
         self.envs_per_worker = a.usize_or("envs-per-worker", self.envs_per_worker)?.max(1);
         self.ops_threads = a.usize_or("ops-threads", self.ops_threads)?;
+        self.simd = a.str_or("simd", &self.simd);
+        // fail fast on typos — a bad value would otherwise only warn at
+        // tier resolution and silently fall back to auto
+        crate::nn::SimdMode::parse(&self.simd)?;
         if let Some(qs) = a.str_opt("queue-size") {
             self.transport = Transport::Queue(qs.parse()?);
         }
@@ -351,6 +361,7 @@ impl TrainConfig {
             ("n_samplers", num(self.n_samplers as f64)),
             ("envs_per_worker", num(self.envs_per_worker as f64)),
             ("ops_threads", num(self.ops_threads as f64)),
+            ("simd", s(&self.simd)),
             (
                 "transport",
                 match self.transport {
@@ -394,6 +405,8 @@ mod tests {
             "8",
             "--weight-transport",
             "file",
+            "--simd",
+            "off",
         ]
         .iter()
         .map(|x| x.to_string())
@@ -407,6 +420,15 @@ mod tests {
         assert_eq!(c.algo, Algo::Td3);
         assert_eq!(c.envs_per_worker, 8);
         assert_eq!(c.weight_transport, WeightTransport::File);
+        assert_eq!(c.simd, "off");
+    }
+
+    #[test]
+    fn bad_simd_mode_fails_fast() {
+        let argv: Vec<String> = ["--simd", "fast"].iter().map(|x| x.to_string()).collect();
+        let a = Args::parse(&argv).unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&a).is_err(), "typoed --simd must not silently fall back");
     }
 
     #[test]

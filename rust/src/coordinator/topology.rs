@@ -327,11 +327,13 @@ impl TopologyBuilder {
 
     pub fn build(self) -> Result<Topology> {
         let cfg = self.cfg;
-        // size the shared kernel pool before anything runs a kernel
-        // (SPREEZE_THREADS in the environment still wins over the config)
+        // size the shared kernel pool and pick the kernel tier before
+        // anything runs a kernel (SPREEZE_THREADS / SPREEZE_SIMD in the
+        // environment still win over the config)
         if cfg.ops_threads > 0 {
             crate::nn::ops::configure_threads(cfg.ops_threads);
         }
+        crate::nn::ops::dispatch::configure_simd(crate::nn::SimdMode::parse(&cfg.simd)?);
         let artifacts_dir = if cfg.artifacts_dir == "artifacts" {
             default_artifacts_dir()
         } else {
@@ -341,8 +343,9 @@ impl TopologyBuilder {
         if cfg.verbose && manifest.native {
             println!(
                 "backend: native CPU executor (no artifacts manifest), \
-                 nn::ops pool: {} threads",
-                crate::nn::ops::global().threads()
+                 nn::ops pool: {} threads, kernels: {}",
+                crate::nn::ops::global().threads(),
+                crate::nn::ops::dispatch::tier_label()
             );
         }
         let layout = manifest.layout(&cfg.env, cfg.algo.name())?.clone();

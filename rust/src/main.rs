@@ -158,6 +158,7 @@ COMMANDS
              --algo sac|td3  --bs N (0=adapt)  --sp N (0=adapt)
              --envs-per-worker K (batched sampler: K envs per worker)
              --ops-threads N (nn::ops kernel pool width; 0 = auto)
+             --simd auto|on|off (nn::ops AVX2+FMA kernel tier; default auto)
              --queue-size N (queue transport instead of shared memory)
              --weight-transport shm|file (policy weight path; default shm)
              --topology threads|procs (sampler workers as threads or

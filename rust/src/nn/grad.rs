@@ -17,8 +17,27 @@ use anyhow::{Context, Result};
 
 use crate::nn::layout::Segment;
 use crate::nn::ops;
+use crate::nn::ops::dispatch::{self, DispatchTable, GemmOp, Kernel, Shape};
 
 pub use crate::nn::ops::{adam_step, polyak, ADAM_BETA1, ADAM_BETA2, ADAM_EPS};
+
+/// One tower's kernel plan for a fixed batch size: every gemm shape the
+/// forward and backward passes emit, resolved to a [`Kernel`] once (via a
+/// planned [`DispatchTable`] at `Engine` build, or lazily on first use at
+/// an off-plan batch size) so the hot loop never re-selects per call.
+#[derive(Clone, Copy, Debug)]
+pub struct TowerKernels {
+    /// Batch size this plan was resolved for.
+    pub n: usize,
+    /// Forward `gemm_nn_bias_act` kernel per layer.
+    pub fwd: [Kernel; 3],
+    /// Backward `gemm_tn_acc` (weight-grad) kernel per layer.
+    pub tn: [Kernel; 3],
+    /// Backward `colsum_acc` (bias-grad) kernel per layer.
+    pub colsum: [Kernel; 3],
+    /// Backward `gemm_nt` (input-grad) kernel per layer.
+    pub nt: [Kernel; 3],
+}
 
 /// One dense layer's placement inside a flat parameter slice.
 #[derive(Clone, Copy, Debug)]
@@ -43,6 +62,8 @@ pub struct MlpGrad {
     // backward scratch
     d1: Vec<f32>,
     d0: Vec<f32>,
+    // per-batch-size kernel plan (see TowerKernels)
+    plan: Option<TowerKernels>,
 }
 
 impl MlpGrad {
@@ -73,7 +94,57 @@ impl MlpGrad {
             out: Vec::new(),
             d1: Vec::new(),
             d0: Vec::new(),
+            plan: None,
         })
+    }
+
+    /// Append every gemm call shape this tower emits at batch size `n` —
+    /// the native engine feeds these into [`DispatchTable::plan`] so the
+    /// whole BS ladder is resolved once at build.
+    pub fn collect_shapes(&self, n: usize, out: &mut Vec<Shape>) {
+        for l in &self.layers {
+            out.push(Shape { op: GemmOp::Nn, dims: [n, l.in_dim, l.out_dim] });
+            out.push(Shape { op: GemmOp::Tn, dims: [n, l.in_dim, l.out_dim] });
+            out.push(Shape { op: GemmOp::Colsum, dims: [n, l.out_dim, 0] });
+            out.push(Shape { op: GemmOp::Nt, dims: [n, l.out_dim, l.in_dim] });
+        }
+    }
+
+    /// Cache this tower's kernel plan for batch size `n` from a planned
+    /// table. `switch_batch_size` re-prepares; anything off-plan falls back
+    /// to a lazy [`dispatch::select`] in [`MlpGrad::plan_for`].
+    pub fn prepare(&mut self, n: usize, table: &DispatchTable) {
+        self.plan = Some(self.resolve(n, &|op, dims| table.lookup(op, dims)));
+    }
+
+    fn resolve(&self, n: usize, look: &dyn Fn(GemmOp, [usize; 3]) -> Kernel) -> TowerKernels {
+        let mut tk = TowerKernels {
+            n,
+            fwd: [Kernel::scalar(); 3],
+            tn: [Kernel::scalar(); 3],
+            colsum: [Kernel::scalar(); 3],
+            nt: [Kernel::scalar(); 3],
+        };
+        for (i, l) in self.layers.iter().enumerate() {
+            tk.fwd[i] = look(GemmOp::Nn, [n, l.in_dim, l.out_dim]);
+            tk.tn[i] = look(GemmOp::Tn, [n, l.in_dim, l.out_dim]);
+            tk.colsum[i] = look(GemmOp::Colsum, [n, l.out_dim, 0]);
+            tk.nt[i] = look(GemmOp::Nt, [n, l.out_dim, l.in_dim]);
+        }
+        tk
+    }
+
+    /// The cached plan if it matches `n`, else a fresh selection (cached
+    /// for subsequent calls at the same batch size).
+    fn plan_for(&mut self, n: usize) -> TowerKernels {
+        match self.plan {
+            Some(p) if p.n == n => p,
+            _ => {
+                let p = self.resolve(n, &dispatch::select);
+                self.plan = Some(p);
+                p
+            }
+        }
     }
 
     pub fn in_dim(&self) -> usize {
@@ -92,18 +163,19 @@ impl MlpGrad {
         let (ind, h) = (l0.in_dim, l0.out_dim);
         let outd = l2.out_dim;
         debug_assert_eq!(xs.len(), n * ind);
+        let kr = self.plan_for(n);
         let pool = ops::global();
         self.x.clear();
         self.x.extend_from_slice(xs);
         let h0 = ops::grown(&mut self.h0, n * h);
         let (w, b) = (wslice(flat, &l0), bslice(flat, &l0));
-        ops::gemm_nn_bias_act(pool, xs, w, Some(b), n, ind, h, h0, true);
+        ops::gemm_nn_bias_act_sel(pool, xs, w, Some(b), n, ind, h, h0, true, kr.fwd[0]);
         let h1 = ops::grown(&mut self.h1, n * h);
         let (w, b) = (wslice(flat, &l1), bslice(flat, &l1));
-        ops::gemm_nn_bias_act(pool, h0, w, Some(b), n, h, h, h1, true);
+        ops::gemm_nn_bias_act_sel(pool, h0, w, Some(b), n, h, h, h1, true, kr.fwd[1]);
         let out = ops::grown(&mut self.out, n * outd);
         let (w, b) = (wslice(flat, &l2), bslice(flat, &l2));
-        ops::gemm_nn_bias_act(pool, h1, w, Some(b), n, h, outd, out, false);
+        ops::gemm_nn_bias_act_sel(pool, h1, w, Some(b), n, h, outd, out, false, kr.fwd[2]);
         &self.out[..n * outd]
     }
 
@@ -123,13 +195,14 @@ impl MlpGrad {
         let [l0, l1, l2] = self.layers;
         let h = l0.out_dim;
         debug_assert_eq!(dy.len(), n * l2.out_dim);
+        let kr = self.plan_for(n);
         let pool = ops::global();
         ops::grown(&mut self.d1, n * h);
         ops::grown(&mut self.d0, n * h);
 
         // layer 2 (linear head)
         if let Some(g) = gflat.as_deref_mut() {
-            ops::gemm_tn_acc(
+            ops::gemm_tn_acc_sel(
                 pool,
                 &self.h1[..n * h],
                 dy,
@@ -137,10 +210,17 @@ impl MlpGrad {
                 l2.in_dim,
                 l2.out_dim,
                 &mut g[l2.w_off..l2.w_off + l2.in_dim * l2.out_dim],
+                kr.tn[2],
             );
-            ops::colsum_acc(dy, n, l2.out_dim, &mut g[l2.b_off..l2.b_off + l2.out_dim]);
+            ops::colsum_acc_sel(
+                dy,
+                n,
+                l2.out_dim,
+                &mut g[l2.b_off..l2.b_off + l2.out_dim],
+                kr.colsum[2],
+            );
         }
-        ops::gemm_nt(
+        ops::gemm_nt_sel(
             pool,
             dy,
             wslice(flat, &l2),
@@ -149,11 +229,12 @@ impl MlpGrad {
             l2.in_dim,
             &mut self.d1[..n * h],
             Some(&self.h1[..n * h]),
+            kr.nt[2],
         );
 
         // layer 1
         if let Some(g) = gflat.as_deref_mut() {
-            ops::gemm_tn_acc(
+            ops::gemm_tn_acc_sel(
                 pool,
                 &self.h0[..n * h],
                 &self.d1[..n * h],
@@ -161,15 +242,17 @@ impl MlpGrad {
                 l1.in_dim,
                 l1.out_dim,
                 &mut g[l1.w_off..l1.w_off + l1.in_dim * l1.out_dim],
+                kr.tn[1],
             );
-            ops::colsum_acc(
+            ops::colsum_acc_sel(
                 &self.d1[..n * h],
                 n,
                 l1.out_dim,
                 &mut g[l1.b_off..l1.b_off + l1.out_dim],
+                kr.colsum[1],
             );
         }
-        ops::gemm_nt(
+        ops::gemm_nt_sel(
             pool,
             &self.d1[..n * h],
             wslice(flat, &l1),
@@ -178,11 +261,12 @@ impl MlpGrad {
             l1.in_dim,
             &mut self.d0[..n * h],
             Some(&self.h0[..n * h]),
+            kr.nt[1],
         );
 
         // layer 0
         if let Some(g) = gflat.as_deref_mut() {
-            ops::gemm_tn_acc(
+            ops::gemm_tn_acc_sel(
                 pool,
                 &self.x,
                 &self.d0[..n * h],
@@ -190,16 +274,18 @@ impl MlpGrad {
                 l0.in_dim,
                 l0.out_dim,
                 &mut g[l0.w_off..l0.w_off + l0.in_dim * l0.out_dim],
+                kr.tn[0],
             );
-            ops::colsum_acc(
+            ops::colsum_acc_sel(
                 &self.d0[..n * h],
                 n,
                 l0.out_dim,
                 &mut g[l0.b_off..l0.b_off + l0.out_dim],
+                kr.colsum[0],
             );
         }
         if let Some(dx) = dx {
-            ops::gemm_nt(
+            ops::gemm_nt_sel(
                 pool,
                 &self.d0[..n * h],
                 wslice(flat, &l0),
@@ -208,6 +294,7 @@ impl MlpGrad {
                 l0.in_dim,
                 dx,
                 None,
+                kr.nt[0],
             );
         }
     }

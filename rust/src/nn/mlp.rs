@@ -17,6 +17,7 @@
 
 use crate::nn::layout::Layout;
 use crate::nn::ops;
+use crate::nn::ops::dispatch::{self, GemmOp, Kernel};
 use crate::util::rng::Rng;
 
 pub const LOG_STD_MIN: f32 = -5.0;
@@ -39,6 +40,9 @@ struct Dense {
 pub struct Mlp {
     layers: [Dense; 3],
     scr: ops::Scratch,
+    /// Cached per-layer kernel choice for the last batch size seen — the
+    /// sampler calls at a steady `n`, so selection is effectively one-time.
+    plan: Option<(usize, [Kernel; 3])>,
 }
 
 /// (weights, bias) views of one layer inside the flat parameter slice.
@@ -64,7 +68,23 @@ impl Mlp {
         }
         let layers: [Dense; 3] =
             layers.try_into().map_err(|_| anyhow::anyhow!("actor MLP must have 3 layers"))?;
-        Ok(Mlp { layers, scr: ops::Scratch::new() })
+        Ok(Mlp { layers, scr: ops::Scratch::new(), plan: None })
+    }
+
+    /// The cached forward kernel plan if it matches `n`, else a fresh
+    /// per-layer [`dispatch::select`] (cached for subsequent calls).
+    fn plan_for(&mut self, n: usize) -> [Kernel; 3] {
+        match self.plan {
+            Some((pn, ks)) if pn == n => ks,
+            _ => {
+                let mut ks = [Kernel::scalar(); 3];
+                for (k, l) in ks.iter_mut().zip(&self.layers) {
+                    *k = dispatch::select(GemmOp::Nn, [n, l.in_dim, l.out_dim]);
+                }
+                self.plan = Some((n, ks));
+                ks
+            }
+        }
     }
 
     /// Forward pass; returns the output slice (valid until next call).
@@ -80,6 +100,7 @@ impl Mlp {
     /// kernels accumulate each output element in a fixed order regardless
     /// of batch tiling or pool width.
     pub fn forward_batch(&mut self, flat: &[f32], xs: &[f32], n: usize) -> &[f32] {
+        let ks = self.plan_for(n);
         let [l0, l1, l2] = &self.layers;
         debug_assert_eq!(xs.len(), n * l0.in_dim);
         let pool = ops::global();
@@ -87,13 +108,13 @@ impl Mlp {
         let out_dim = l2.out_dim;
         let h0 = ops::grown(&mut self.scr.a, n * h);
         let (w, b) = wb(flat, l0);
-        ops::gemm_nn_bias_act(pool, xs, w, Some(b), n, l0.in_dim, h, h0, true);
+        ops::gemm_nn_bias_act_sel(pool, xs, w, Some(b), n, l0.in_dim, h, h0, true, ks[0]);
         let h1 = ops::grown(&mut self.scr.b, n * h);
         let (w, b) = wb(flat, l1);
-        ops::gemm_nn_bias_act(pool, h0, w, Some(b), n, l1.in_dim, h, h1, true);
+        ops::gemm_nn_bias_act_sel(pool, h0, w, Some(b), n, l1.in_dim, h, h1, true, ks[1]);
         let out = ops::grown(&mut self.scr.c, n * out_dim);
         let (w, b) = wb(flat, l2);
-        ops::gemm_nn_bias_act(pool, h1, w, Some(b), n, l2.in_dim, out_dim, out, false);
+        ops::gemm_nn_bias_act_sel(pool, h1, w, Some(b), n, l2.in_dim, out_dim, out, false, ks[2]);
         &self.scr.c[..n * out_dim]
     }
 }

@@ -11,7 +11,8 @@ pub mod mlp;
 pub mod ops;
 
 pub use checkpoint::{load_policy, save_policy, CheckpointStore};
-pub use grad::{adam_step, polyak, MlpGrad};
+pub use grad::{adam_step, polyak, MlpGrad, TowerKernels};
 pub use layout::{Layout, Segment};
 pub use mlp::{GaussianPolicy, Mlp};
+pub use ops::dispatch::{DispatchTable, SimdMode};
 pub use ops::ThreadPool;

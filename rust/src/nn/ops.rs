@@ -34,14 +34,37 @@
 //! `SPREEZE_THREADS`, else [`configure_threads`] (wired to
 //! `TrainConfig::ops_threads`), else `std::thread::available_parallelism`.
 //!
+//! **SIMD tier.** On x86_64 hosts with AVX2+FMA, [`dispatch`] routes the
+//! gemm entry points and the optimizer kernels to the `avx2` microkernels —
+//! resolved per shape, once at `Engine` build, via
+//! [`dispatch::DispatchTable`], and overridable with `SPREEZE_SIMD=on|off`
+//! (or `--simd`). The scalar tiled tier stays bitwise-equal to [`naive`];
+//! the SIMD gemms keep a *fixed* accumulation order (bitwise rerun- and
+//! thread-count-deterministic) but differ from naive by FMA's single
+//! rounding, ULP-bounded in `tests/ops_kernels.rs`. The SIMD
+//! `colsum`/`adam`/`polyak` paths replicate the scalar op sequence exactly
+//! and are bitwise-equal to it. See `docs/KERNELS.md` for the full revised
+//! contract.
+//!
 //! Scratch is thread-local ([`with_pack`]) or caller-owned ([`Scratch`]):
-//! the hot path performs no per-call allocation at steady state.
+//! the hot path performs no per-call allocation at steady state, and packed
+//! panels are unconditionally 32-byte aligned ([`AlignedBuf`]) so panel
+//! layout is identical across kernel tiers.
+
+// The AVX2+FMA microkernel tier. Compiled only where it can run: Miri has no
+// model for vendor intrinsics (PR 7 convention: cfg out, state why), and
+// non-x86_64 targets reach only the scalar tier through `dispatch`.
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+mod avx2;
+pub mod dispatch;
 
 use std::cell::RefCell;
 use std::ops::Range;
 use crate::util::sync::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+use dispatch::{GemmOp, Kernel};
 
 pub const ADAM_BETA1: f32 = 0.9;
 pub const ADAM_BETA2: f32 = 0.999;
@@ -412,20 +435,112 @@ unsafe impl Send for SendPtr {}
 // SAFETY: same justification as Send — disjoint ranges, no shared &mut.
 unsafe impl Sync for SendPtr {}
 
-thread_local! {
-    /// Per-thread packing panel (grow-only; no per-call allocation).
-    static PACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+/// Grow-only `f32` buffer whose allocation is always 32-byte aligned
+/// (`Vec<f32>` only guarantees 4). Packed panels must be alignment-stable
+/// so panel layout is identical across kernel tiers — the scalar path packs
+/// into the same aligned panels the AVX2 tier reads.
+pub struct AlignedBuf {
+    ptr: std::ptr::NonNull<f32>,
+    cap: usize,
 }
 
-/// Borrow this thread's packing panel at `len` elements.
-fn with_pack<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
-    PACK.with(|c| {
-        let mut v = c.borrow_mut();
-        if v.len() < len {
-            v.resize(len, 0.0);
+// SAFETY: AlignedBuf exclusively owns its allocation (no shared interior
+// state), exactly like Vec<f32>, so moving it across threads cannot alias.
+unsafe impl Send for AlignedBuf {}
+// SAFETY: same justification as Send — &AlignedBuf exposes no mutation.
+unsafe impl Sync for AlignedBuf {}
+
+impl AlignedBuf {
+    /// One AVX2 vector (8 f32s) — the panel alignment guarantee.
+    pub const ALIGN: usize = 32;
+
+    pub const fn new() -> AlignedBuf {
+        AlignedBuf { ptr: std::ptr::NonNull::dangling(), cap: 0 }
+    }
+
+    /// Resize to at least `len` elements (zero-filled on growth, existing
+    /// prefix preserved — the [`grown`] contract) and return the `len`
+    /// prefix, 32-byte aligned.
+    pub fn grown(&mut self, len: usize) -> &mut [f32] {
+        if len > self.cap {
+            self.grow(len);
         }
-        f(&mut v[..len])
-    })
+        // SAFETY: ptr holds cap >= len initialized f32s (grow zero-fills;
+        // len = 0 never reads through the dangling initial pointer).
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), len) }
+    }
+
+    fn layout_for(cap: usize) -> std::alloc::Layout {
+        std::alloc::Layout::array::<f32>(cap)
+            .and_then(|l| l.align_to(Self::ALIGN))
+            .expect("AlignedBuf layout overflow")
+    }
+
+    fn grow(&mut self, len: usize) {
+        let cap = len.next_power_of_two().max(64);
+        let layout = Self::layout_for(cap);
+        // SAFETY: layout has non-zero size (cap >= 64).
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) } as *mut f32;
+        let Some(ptr) = std::ptr::NonNull::new(raw) else {
+            std::alloc::handle_alloc_error(layout);
+        };
+        if self.cap > 0 {
+            // SAFETY: both allocations hold at least self.cap initialized
+            // f32s and cannot overlap; the old one uses its original layout.
+            unsafe {
+                std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), ptr.as_ptr(), self.cap);
+                std::alloc::dealloc(self.ptr.as_ptr() as *mut u8, Self::layout_for(self.cap));
+            }
+        }
+        self.ptr = ptr;
+        self.cap = cap;
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.cap > 0 {
+            // SAFETY: ptr was allocated with exactly this layout (cap is
+            // only ever set by grow alongside its allocation).
+            unsafe { std::alloc::dealloc(self.ptr.as_ptr() as *mut u8, Self::layout_for(self.cap)) }
+        }
+    }
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> AlignedBuf {
+        let mut c = AlignedBuf::new();
+        if self.cap > 0 {
+            c.grow(self.cap);
+            // SAFETY: disjoint allocations, both hold cap initialized f32s.
+            unsafe { std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), c.ptr.as_ptr(), self.cap) }
+        }
+        c
+    }
+}
+
+impl Default for AlignedBuf {
+    fn default() -> AlignedBuf {
+        AlignedBuf::new()
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlignedBuf").field("cap", &self.cap).finish()
+    }
+}
+
+thread_local! {
+    /// Per-thread packing panel (grow-only; 32-byte aligned; no per-call
+    /// allocation at steady state).
+    static PACK: RefCell<AlignedBuf> = const { RefCell::new(AlignedBuf::new()) };
+}
+
+/// Borrow this thread's packing panel at `len` elements (32-byte aligned
+/// unconditionally — scalar path included).
+fn with_pack<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    PACK.with(|c| f(c.borrow_mut().grown(len)))
 }
 
 /// Grow-only reusable buffer: resize `v` to at least `len` and return the
@@ -472,12 +587,38 @@ pub fn gemm_nn_bias_act(
     out: &mut [f32],
     relu: bool,
 ) {
+    let kr = dispatch::select(GemmOp::Nn, [m, k, n]);
+    gemm_nn_bias_act_sel(pool, a, b, bias, m, k, n, out, relu, kr);
+}
+
+/// [`gemm_nn_bias_act`] with a pre-resolved [`Kernel`] — the planned-
+/// dispatch path (see [`dispatch::DispatchTable`]); the tower drivers cache
+/// the selection per batch size so steady-state steps never re-select.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_bias_act_sel(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    relu: bool,
+    kr: Kernel,
+) {
     debug_assert!(a.len() >= m * k, "gemm_nn a too short");
     debug_assert!(b.len() >= k * n, "gemm_nn b too short");
     debug_assert!(out.len() >= m * n, "gemm_nn out too short");
+    let simd = kr.use_simd();
+    let blk = kr.blk;
     let nparts = row_parts(pool, m, 2 * m * k * n);
     if nparts <= 1 {
-        nn_rows(&a[..m * k], b, bias, k, n, relu, &mut out[..m * n]);
+        if simd {
+            nn_rows_simd(blk, &a[..m * k], b, bias, k, n, relu, &mut out[..m * n]);
+        } else {
+            nn_rows(&a[..m * k], b, bias, k, n, relu, &mut out[..m * n]);
+        }
         return;
     }
     let optr = SendPtr(out.as_mut_ptr());
@@ -487,8 +628,51 @@ pub fn gemm_nn_bias_act(
         let part = unsafe {
             std::slice::from_raw_parts_mut(optr.0.add(rows.start * n), rows.len() * n)
         };
-        nn_rows(&a[rows.start * k..rows.end * k], b, bias, k, n, relu, part);
+        let arows = &a[rows.start * k..rows.end * k];
+        if simd {
+            nn_rows_simd(blk, arows, b, bias, k, n, relu, part);
+        } else {
+            nn_rows(arows, b, bias, k, n, relu, part);
+        }
     });
+}
+
+/// SIMD-tier row kernel behind [`gemm_nn_bias_act_sel`]. Only reached when
+/// [`Kernel::use_simd`] confirmed AVX2+FMA at runtime.
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+#[allow(clippy::too_many_arguments)]
+fn nn_rows_simd(
+    blk: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    k: usize,
+    n: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    // SAFETY: callers gate on Kernel::use_simd(), which re-checks
+    // is_x86_feature_detected!("avx2") + ("fma") before taking this path.
+    unsafe { avx2::nn_rows(blk, a, b, bias, k, n, relu, out) }
+}
+
+/// Scalar stand-in where the SIMD tier is compiled out (non-x86_64, Miri:
+/// no vendor-intrinsic model). Unreachable in practice — `use_simd()` is
+/// always false there — but keeps every call site compiling on one path.
+#[cfg(not(all(target_arch = "x86_64", not(miri))))]
+#[allow(clippy::too_many_arguments)]
+fn nn_rows_simd(
+    blk: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    k: usize,
+    n: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    let _ = blk;
+    nn_rows(a, b, bias, k, n, relu, out);
 }
 
 /// Serial row kernel behind [`gemm_nn_bias_act`]: 4-row register tiles over
@@ -585,15 +769,38 @@ pub fn gemm_nt(
     out: &mut [f32],
     mask: Option<&[f32]>,
 ) {
+    let kr = dispatch::select(GemmOp::Nt, [m, n, kk]);
+    gemm_nt_sel(pool, a, b, m, n, kk, out, mask, kr);
+}
+
+/// [`gemm_nt`] with a pre-resolved [`Kernel`] (planned-dispatch path).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_sel(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    kk: usize,
+    out: &mut [f32],
+    mask: Option<&[f32]>,
+    kr: Kernel,
+) {
     debug_assert!(a.len() >= m * n, "gemm_nt a too short");
     debug_assert!(b.len() >= kk * n, "gemm_nt b too short");
     debug_assert!(out.len() >= m * kk, "gemm_nt out too short");
     if let Some(mask) = mask {
         debug_assert!(mask.len() >= m * kk, "gemm_nt mask too short");
     }
+    let simd = kr.use_simd();
     let nparts = row_parts(pool, m, 2 * m * n * kk);
     if nparts <= 1 {
-        nt_rows(&a[..m * n], b, n, kk, &mut out[..m * kk], mask.map(|h| &h[..m * kk]));
+        let mpart = mask.map(|h| &h[..m * kk]);
+        if simd {
+            nt_rows_simd(&a[..m * n], b, n, kk, &mut out[..m * kk], mpart);
+        } else {
+            nt_rows(&a[..m * n], b, n, kk, &mut out[..m * kk], mpart);
+        }
         return;
     }
     let optr = SendPtr(out.as_mut_ptr());
@@ -603,15 +810,28 @@ pub fn gemm_nt(
         let part = unsafe {
             std::slice::from_raw_parts_mut(optr.0.add(rows.start * kk), rows.len() * kk)
         };
-        nt_rows(
-            &a[rows.start * n..rows.end * n],
-            b,
-            n,
-            kk,
-            part,
-            mask.map(|h| &h[rows.start * kk..rows.end * kk]),
-        );
+        let arows = &a[rows.start * n..rows.end * n];
+        let mpart = mask.map(|h| &h[rows.start * kk..rows.end * kk]);
+        if simd {
+            nt_rows_simd(arows, b, n, kk, part, mpart);
+        } else {
+            nt_rows(arows, b, n, kk, part, mpart);
+        }
     });
+}
+
+/// SIMD-tier row kernel behind [`gemm_nt_sel`]; see [`nn_rows_simd`].
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+fn nt_rows_simd(a: &[f32], b: &[f32], n: usize, kk: usize, out: &mut [f32], mask: Option<&[f32]>) {
+    // SAFETY: callers gate on Kernel::use_simd(), which re-checks
+    // is_x86_feature_detected!("avx2") + ("fma") before taking this path.
+    unsafe { avx2::nt_rows(a, b, n, kk, out, mask) }
+}
+
+/// Scalar stand-in where the SIMD tier is compiled out; see [`nn_rows_simd`].
+#[cfg(not(all(target_arch = "x86_64", not(miri))))]
+fn nt_rows_simd(a: &[f32], b: &[f32], n: usize, kk: usize, out: &mut [f32], mask: Option<&[f32]>) {
+    nt_rows(a, b, n, kk, out, mask);
 }
 
 fn nt_rows(a: &[f32], b: &[f32], n: usize, kk: usize, out: &mut [f32], mask: Option<&[f32]>) {
@@ -677,12 +897,34 @@ pub fn gemm_tn_acc(
     n: usize,
     out: &mut [f32],
 ) {
+    let kr = dispatch::select(GemmOp::Tn, [bdim, m, n]);
+    gemm_tn_acc_sel(pool, a, b, bdim, m, n, out, kr);
+}
+
+/// [`gemm_tn_acc`] with a pre-resolved [`Kernel`] (planned-dispatch path).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_acc_sel(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    bdim: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+    kr: Kernel,
+) {
     debug_assert!(a.len() >= bdim * m, "gemm_tn a too short");
     debug_assert!(b.len() >= bdim * n, "gemm_tn b too short");
     debug_assert!(out.len() >= m * n, "gemm_tn out too short");
+    let simd = kr.use_simd();
+    let blk = kr.blk;
     let nparts = row_parts(pool, m, 2 * bdim * m * n);
     if nparts <= 1 {
-        tn_cols(a, b, bdim, m, n, 0..m, &mut out[..m * n]);
+        if simd {
+            tn_cols_simd(blk, a, b, bdim, m, n, 0..m, &mut out[..m * n]);
+        } else {
+            tn_cols(a, b, bdim, m, n, 0..m, &mut out[..m * n]);
+        }
         return;
     }
     let optr = SendPtr(out.as_mut_ptr());
@@ -692,8 +934,47 @@ pub fn gemm_tn_acc(
         let part = unsafe {
             std::slice::from_raw_parts_mut(optr.0.add(cols.start * n), cols.len() * n)
         };
-        tn_cols(a, b, bdim, m, n, cols, part);
+        if simd {
+            tn_cols_simd(blk, a, b, bdim, m, n, cols, part);
+        } else {
+            tn_cols(a, b, bdim, m, n, cols, part);
+        }
     });
+}
+
+/// SIMD-tier column kernel behind [`gemm_tn_acc_sel`]; see [`nn_rows_simd`].
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+#[allow(clippy::too_many_arguments)]
+fn tn_cols_simd(
+    blk: usize,
+    a: &[f32],
+    b: &[f32],
+    bdim: usize,
+    m: usize,
+    n: usize,
+    cols: Range<usize>,
+    out_part: &mut [f32],
+) {
+    // SAFETY: callers gate on Kernel::use_simd(), which re-checks
+    // is_x86_feature_detected!("avx2") + ("fma") before taking this path.
+    unsafe { avx2::tn_cols(blk, a, b, bdim, m, n, cols, out_part) }
+}
+
+/// Scalar stand-in where the SIMD tier is compiled out; see [`nn_rows_simd`].
+#[cfg(not(all(target_arch = "x86_64", not(miri))))]
+#[allow(clippy::too_many_arguments)]
+fn tn_cols_simd(
+    blk: usize,
+    a: &[f32],
+    b: &[f32],
+    bdim: usize,
+    m: usize,
+    n: usize,
+    cols: Range<usize>,
+    out_part: &mut [f32],
+) {
+    let _ = blk;
+    tn_cols(a, b, bdim, m, n, cols, out_part);
 }
 
 /// `out_part` covers output rows `cols` (i.e. columns `cols` of `a`).
@@ -722,14 +1003,44 @@ fn tn_cols(
 }
 
 /// `out[n] += column sums of a[bdim,n]` — the bias gradient. Cheap next to
-/// the gemms (1/m of the flops), so it stays serial and deterministic.
+/// the gemms (1/m of the flops), so it stays serial and deterministic. The
+/// SIMD path adds lanewise in the same ascending-`bdim` order and is
+/// bitwise-equal to the scalar loop.
 pub fn colsum_acc(a: &[f32], bdim: usize, n: usize, out: &mut [f32]) {
+    let kr = dispatch::select(GemmOp::Colsum, [bdim, n, 0]);
+    colsum_acc_sel(a, bdim, n, out, kr);
+}
+
+/// [`colsum_acc`] with a pre-resolved [`Kernel`] (planned-dispatch path).
+pub fn colsum_acc_sel(a: &[f32], bdim: usize, n: usize, out: &mut [f32], kr: Kernel) {
+    if kr.use_simd() {
+        colsum_rows_simd(a, bdim, n, out);
+    } else {
+        colsum_rows(a, bdim, n, out);
+    }
+}
+
+fn colsum_rows(a: &[f32], bdim: usize, n: usize, out: &mut [f32]) {
     for r in 0..bdim {
         let arow = &a[r * n..(r + 1) * n];
         for (o, &av) in out.iter_mut().zip(arow) {
             *o += av;
         }
     }
+}
+
+/// SIMD-tier column-sum kernel; see [`nn_rows_simd`].
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+fn colsum_rows_simd(a: &[f32], bdim: usize, n: usize, out: &mut [f32]) {
+    // SAFETY: callers gate on Kernel::use_simd(), which re-checks
+    // is_x86_feature_detected!("avx2") + ("fma") before taking this path.
+    unsafe { avx2::colsum(a, bdim, n, out) }
+}
+
+/// Scalar stand-in where the SIMD tier is compiled out; see [`nn_rows_simd`].
+#[cfg(not(all(target_arch = "x86_64", not(miri))))]
+fn colsum_rows_simd(a: &[f32], bdim: usize, n: usize, out: &mut [f32]) {
+    colsum_rows(a, bdim, n, out);
 }
 
 // --------------------------------------------------------- optimizer kernels
@@ -743,8 +1054,13 @@ pub fn adam_step(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32
     let len = p.len();
     debug_assert!(g.len() >= len && m.len() >= len && v.len() >= len);
     let pool = global();
+    let simd = elementwise_simd();
     if pool.threads() <= 1 || len < PAR_ELEMS_MIN {
-        adam_chunk(p, &g[..len], m, v, lr, c1, c2);
+        if simd {
+            adam_chunk_simd(p, &g[..len], m, v, lr, c1, c2);
+        } else {
+            adam_chunk(p, &g[..len], m, v, lr, c1, c2);
+        }
         return;
     }
     let nparts = pool.threads();
@@ -761,8 +1077,49 @@ pub fn adam_step(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32
                 std::slice::from_raw_parts_mut(vv.0.add(r.start), r.len()),
             )
         };
-        adam_chunk(ps, &g[r], ms, vs, lr, c1, c2);
+        if simd {
+            adam_chunk_simd(ps, &g[r], ms, vs, lr, c1, c2);
+        } else {
+            adam_chunk(ps, &g[r], ms, vs, lr, c1, c2);
+        }
     });
+}
+
+/// Do the elementwise optimizer kernels take the SIMD path? Tier gate plus
+/// the hardware re-check — no per-shape table needed for elementwise ops,
+/// and the SIMD paths are bitwise-equal to scalar anyway.
+fn elementwise_simd() -> bool {
+    dispatch::tier() == dispatch::Tier::Simd && dispatch::hw_simd()
+}
+
+/// SIMD-tier Adam chunk; see [`nn_rows_simd`] for the gating convention.
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+fn adam_chunk_simd(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    c1: f32,
+    c2: f32,
+) {
+    // SAFETY: callers gate on elementwise_simd(), which re-checks
+    // is_x86_feature_detected!("avx2") + ("fma") before taking this path.
+    unsafe { avx2::adam_chunk(p, g, m, v, lr, c1, c2) }
+}
+
+/// Scalar stand-in where the SIMD tier is compiled out; see [`nn_rows_simd`].
+#[cfg(not(all(target_arch = "x86_64", not(miri))))]
+fn adam_chunk_simd(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    c1: f32,
+    c2: f32,
+) {
+    adam_chunk(p, g, m, v, lr, c1, c2);
 }
 
 fn adam_chunk(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32, c1: f32, c2: f32) {
@@ -781,8 +1138,13 @@ pub fn polyak(p: &[f32], t: &mut [f32], tau: f32) {
     let len = t.len();
     debug_assert!(p.len() >= len);
     let pool = global();
+    let simd = elementwise_simd();
     if pool.threads() <= 1 || len < PAR_ELEMS_MIN {
-        polyak_chunk(&p[..len], t, tau);
+        if simd {
+            polyak_chunk_simd(&p[..len], t, tau);
+        } else {
+            polyak_chunk(&p[..len], t, tau);
+        }
         return;
     }
     let nparts = pool.threads();
@@ -791,8 +1153,26 @@ pub fn polyak(p: &[f32], t: &mut [f32], tau: f32) {
         let r = part_range(len, nparts, part);
         // SAFETY: parts cover disjoint element ranges of `t`.
         let ts = unsafe { std::slice::from_raw_parts_mut(tp.0.add(r.start), r.len()) };
-        polyak_chunk(&p[r], ts, tau);
+        if simd {
+            polyak_chunk_simd(&p[r], ts, tau);
+        } else {
+            polyak_chunk(&p[r], ts, tau);
+        }
     });
+}
+
+/// SIMD-tier Polyak chunk; see [`nn_rows_simd`] for the gating convention.
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+fn polyak_chunk_simd(p: &[f32], t: &mut [f32], tau: f32) {
+    // SAFETY: callers gate on elementwise_simd(), which re-checks
+    // is_x86_feature_detected!("avx2") + ("fma") before taking this path.
+    unsafe { avx2::polyak_chunk(p, t, tau) }
+}
+
+/// Scalar stand-in where the SIMD tier is compiled out; see [`nn_rows_simd`].
+#[cfg(not(all(target_arch = "x86_64", not(miri))))]
+fn polyak_chunk_simd(p: &[f32], t: &mut [f32], tau: f32) {
+    polyak_chunk(p, t, tau);
 }
 
 fn polyak_chunk(p: &[f32], t: &mut [f32], tau: f32) {
@@ -990,6 +1370,10 @@ mod tests {
 
     #[test]
     fn tiled_gemms_match_naive_bitwise_on_ragged_shapes() {
+        // the scalar tier is pinned explicitly (`_sel` + Kernel::scalar()):
+        // this bitwise contract must hold regardless of SPREEZE_SIMD —
+        // SIMD-vs-naive closeness is a ULP bound, tested in ops_kernels.rs
+        let sc = Kernel::scalar();
         let mut rng = Rng::new(41);
         let pool = ThreadPool::new(1);
         for &(m, k, n) in
@@ -1000,7 +1384,7 @@ mod tests {
             let bias = fill(&mut rng, n);
             let mut y1 = vec![0.0f32; m * n];
             let mut y2 = vec![7.0f32; m * n];
-            gemm_nn_bias_act(&pool, &a, &b, Some(&bias), m, k, n, &mut y1, true);
+            gemm_nn_bias_act_sel(&pool, &a, &b, Some(&bias), m, k, n, &mut y1, true, sc);
             naive::gemm_nn_bias_act(&a, &b, Some(&bias), m, k, n, &mut y2, true);
             assert_eq!(y1, y2, "nn ({m},{k},{n})");
 
@@ -1008,14 +1392,14 @@ mod tests {
             let mask = fill(&mut rng, m * k);
             let mut d1 = vec![0.0f32; m * k];
             let mut d2 = vec![-1.0f32; m * k];
-            gemm_nt(&pool, &g, &b, m, n, k, &mut d1, Some(&mask));
+            gemm_nt_sel(&pool, &g, &b, m, n, k, &mut d1, Some(&mask), sc);
             naive::gemm_nt(&g, &b, m, n, k, &mut d2, Some(&mask));
             assert_eq!(d1, d2, "nt ({m},{k},{n})");
 
             // weight-grad shape: bdim = m, out (k, n)
             let mut w1 = fill(&mut rng, k * n);
             let mut w2 = w1.clone();
-            gemm_tn_acc(&pool, &mask, &g, m, k, n, &mut w1);
+            gemm_tn_acc_sel(&pool, &mask, &g, m, k, n, &mut w1, sc);
             naive::gemm_tn_acc(&mask, &g, m, k, n, &mut w2);
             assert_eq!(w1, w2, "tn ({m},{k},{n})");
         }
@@ -1081,5 +1465,72 @@ mod tests {
         assert_eq!(grown(&mut s.a, 5).len(), 5);
         assert_eq!(s.a.len(), 10, "grow-only");
         assert_eq!(s.a[9], 3.0);
+    }
+
+    #[test]
+    fn pack_panels_are_32_byte_aligned_everywhere() {
+        // the SIMD tier assumes every with_pack panel sits on a 32-byte
+        // boundary; the guarantee must hold on the main thread, on pool
+        // workers, and across grows (which also preserve the prefix).
+        fn aligned(p: &mut [f32]) -> bool {
+            (p.as_ptr() as usize) % AlignedBuf::ALIGN == 0
+        }
+        for len in [1usize, 7, 64, 65, 1000] {
+            assert!(with_pack(len, aligned), "main thread, len {len}");
+        }
+        let pool = ThreadPool::new(2);
+        let ok = AtomicBool::new(true);
+        pool.run(4, &|_p| {
+            if !with_pack(333, aligned) {
+                ok.store(false, Ordering::SeqCst);
+            }
+        });
+        assert!(ok.load(Ordering::SeqCst), "pool workers");
+
+        let mut buf = AlignedBuf::new();
+        buf.grown(8).copy_from_slice(&[1.0; 8]);
+        let grown = buf.grown(4096);
+        assert!((grown.as_ptr() as usize) % AlignedBuf::ALIGN == 0, "after grow");
+        assert_eq!(&grown[..8], &[1.0; 8], "grow preserves prefix");
+        assert_eq!(grown[8], 0.0, "fresh tail is zeroed");
+    }
+
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    #[test]
+    fn simd_elementwise_kernels_are_bitwise_scalar() {
+        // colsum / adam / polyak SIMD paths are designed bitwise-equal to
+        // their scalar counterparts (lanewise, fixed order, no FMA in the
+        // reassociation-sensitive spots); pin that here on AVX2 hosts.
+        if !dispatch::hw_simd() {
+            return; // nothing to compare against on this host
+        }
+        let mut rng = Rng::new(43);
+        for len in [1usize, 7, 8, 33, 1000] {
+            let a = fill(&mut rng, 5 * len);
+            let mut o1 = fill(&mut rng, len);
+            let mut o2 = o1.clone();
+            colsum_rows(&a, 5, len, &mut o1);
+            colsum_rows_simd(&a, 5, len, &mut o2);
+            assert_eq!(o1, o2, "colsum len {len}");
+
+            let g = fill(&mut rng, len);
+            let mut p1 = fill(&mut rng, len);
+            let mut p2 = p1.clone();
+            let (mut m1, mut v1) = (fill(&mut rng, len), fill(&mut rng, len));
+            let (mut m2, mut v2) = (m1.clone(), v1.clone());
+            let c1 = 1.0 / (1.0 - ADAM_BETA1.powf(5.0));
+            let c2 = 1.0 / (1.0 - ADAM_BETA2.powf(5.0));
+            adam_chunk(&mut p1, &g, &mut m1, &mut v1, 1e-2, c1, c2);
+            adam_chunk_simd(&mut p2, &g, &mut m2, &mut v2, 1e-2, c1, c2);
+            assert_eq!(p1, p2, "adam p len {len}");
+            assert_eq!(m1, m2, "adam m len {len}");
+            assert_eq!(v1, v2, "adam v len {len}");
+
+            let mut t1 = fill(&mut rng, len);
+            let mut t2 = t1.clone();
+            polyak_chunk(&p1, &mut t1, 0.01);
+            polyak_chunk_simd(&p2, &mut t2, 0.01);
+            assert_eq!(t1, t2, "polyak len {len}");
+        }
     }
 }

@@ -1,0 +1,609 @@
+//! AVX2+FMA microkernels behind the [`super::dispatch`] SIMD tier.
+//!
+//! Every function here is a safe `#[target_feature(enable = "avx2", fma)]`
+//! function (target_feature 1.1): the *call* from non-feature code is the
+//! unsafe operation, and `ops` only performs it after
+//! [`super::dispatch::Kernel::use_simd`] has confirmed runtime AVX2+FMA
+//! support via `is_x86_feature_detected!`. The module is compiled only on
+//! `x86_64` and never under Miri (Miri does not model vendor intrinsics);
+//! `ops` falls back to the scalar tier everywhere else.
+//!
+//! Determinism contract (see `docs/KERNELS.md`):
+//! - per-output-element accumulation order is *fixed*: ascending reduction
+//!   index, independent of cache-block size (`kc`/`rc`), strip decomposition,
+//!   and thread-pool row partitioning — SIMD lanes are element-independent;
+//! - `nn`/`nt`/`tn` differ from [`super::naive`] only by FMA's single
+//!   rounding (and the `nt` 8-lane tree reduction), bounded by the ULP sweep
+//!   in `tests/ops_kernels.rs`;
+//! - `colsum`/`adam`/`polyak` replicate the scalar op sequence exactly
+//!   (mul/add/sqrt/div only, no FMA) and are bitwise-equal to the scalar
+//!   tier.
+//!
+//! Tails narrower than a lane use `_mm256_maskload_ps`/`_mm256_maskstore_ps`:
+//! masked lanes read as `+0.0`, contribute exact zeros, and are never stored,
+//! so ragged shapes never touch memory out of bounds.
+
+use core::arch::x86_64::{
+    __m256, __m256i, _mm256_add_ps, _mm256_castps256_ps128, _mm256_div_ps,
+    _mm256_extractf128_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_loadu_si256,
+    _mm256_maskload_ps, _mm256_maskstore_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
+    _mm256_sqrt_ps, _mm256_storeu_ps, _mm256_sub_ps, _mm_add_ps, _mm_add_ss, _mm_cvtss_f32,
+    _mm_movehl_ps, _mm_shuffle_ps,
+};
+use std::ops::Range;
+
+/// Lane masks for ragged tails: row `r` enables the first `r` of 8 lanes
+/// (sign bit set = lane active for maskload/maskstore).
+const TAIL_MASKS: [[i32; 8]; 8] = [
+    [0, 0, 0, 0, 0, 0, 0, 0],
+    [-1, 0, 0, 0, 0, 0, 0, 0],
+    [-1, -1, 0, 0, 0, 0, 0, 0],
+    [-1, -1, -1, 0, 0, 0, 0, 0],
+    [-1, -1, -1, -1, 0, 0, 0, 0],
+    [-1, -1, -1, -1, -1, 0, 0, 0],
+    [-1, -1, -1, -1, -1, -1, 0, 0],
+    [-1, -1, -1, -1, -1, -1, -1, 0],
+];
+
+/// Mask enabling the first `rem` (< 8) lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+fn tail_mask(rem: usize) -> __m256i {
+    // SAFETY: TAIL_MASKS[rem] is 8 contiguous i32s and loadu_si256 has no
+    // alignment requirement.
+    unsafe { _mm256_loadu_si256(TAIL_MASKS[rem].as_ptr() as *const __m256i) }
+}
+
+/// Horizontal sum with a *fixed* reduction tree:
+/// `(l0+l4)+(l2+l6) + (l1+l5)+(l3+l7)` — deterministic across runs.
+#[inline]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+fn hsum(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<0x55>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+/// `out[m x n] (+)= a[m x k_block] . b[k_block x n]` for one K cache block,
+/// with bias seeding and the relu epilogue handled by the caller-facing
+/// [`nn_rows`]. Row tiles of 4 share a packed, 32-byte-aligned column-
+/// interleaved panel (`super::with_pack`); remainder rows run unpacked.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub(super) fn nn_rows(
+    kc: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    k: usize,
+    n: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    if n == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    for r in 0..m {
+        let row = &mut out[r * n..(r + 1) * n];
+        match bias {
+            Some(bs) => row.copy_from_slice(&bs[..n]),
+            None => row.fill(0.0),
+        }
+    }
+    let kc = if kc == 0 { k.max(1) } else { kc };
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = kc.min(k - k0);
+        let bblk = &b[k0 * n..(k0 + kb) * n];
+        let mut r0 = 0;
+        while r0 + 4 <= m {
+            super::with_pack(4 * kb, |p| {
+                for l in 0..kb {
+                    let col = k0 + l;
+                    p[4 * l] = a[r0 * k + col];
+                    p[4 * l + 1] = a[(r0 + 1) * k + col];
+                    p[4 * l + 2] = a[(r0 + 2) * k + col];
+                    p[4 * l + 3] = a[(r0 + 3) * k + col];
+                }
+                nn_tile4(p, kb, bblk, n, &mut out[r0 * n..(r0 + 4) * n]);
+            });
+            r0 += 4;
+        }
+        while r0 < m {
+            nn_row1(&a[r0 * k + k0..r0 * k + k0 + kb], bblk, n, &mut out[r0 * n..(r0 + 1) * n]);
+            r0 += 1;
+        }
+        k0 += kb;
+    }
+    if relu {
+        for v in out.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+}
+
+/// 4-row x NR=16 register tile over one packed K block: 8 accumulators,
+/// 2 `b` loads + 4 broadcasts + 8 FMAs per reduction step. Strips narrower
+/// than 16 fall to an 8-wide strip and a masked tail; lanes are independent,
+/// so per-element accumulation order is unchanged by the decomposition.
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+fn nn_tile4(pack: &[f32], kb: usize, b: &[f32], n: usize, out4: &mut [f32]) {
+    debug_assert!(pack.len() >= 4 * kb && b.len() >= kb * n && out4.len() == 4 * n);
+    let bp = b.as_ptr();
+    let op = out4.as_mut_ptr();
+    let mut j = 0;
+    while j + 16 <= n {
+        // SAFETY: for rows r < 4 and steps l < kb, out4[r*n + j..+16] and
+        // b[l*n + j..+16] are in bounds per the debug_assert'd slice lengths.
+        unsafe {
+            let mut c00 = _mm256_loadu_ps(op.add(j));
+            let mut c01 = _mm256_loadu_ps(op.add(j + 8));
+            let mut c10 = _mm256_loadu_ps(op.add(n + j));
+            let mut c11 = _mm256_loadu_ps(op.add(n + j + 8));
+            let mut c20 = _mm256_loadu_ps(op.add(2 * n + j));
+            let mut c21 = _mm256_loadu_ps(op.add(2 * n + j + 8));
+            let mut c30 = _mm256_loadu_ps(op.add(3 * n + j));
+            let mut c31 = _mm256_loadu_ps(op.add(3 * n + j + 8));
+            for l in 0..kb {
+                let x = &pack[4 * l..4 * l + 4];
+                if x[0] == 0.0 && x[1] == 0.0 && x[2] == 0.0 && x[3] == 0.0 {
+                    continue;
+                }
+                let b0 = _mm256_loadu_ps(bp.add(l * n + j));
+                let b1 = _mm256_loadu_ps(bp.add(l * n + j + 8));
+                let x0 = _mm256_set1_ps(x[0]);
+                c00 = _mm256_fmadd_ps(x0, b0, c00);
+                c01 = _mm256_fmadd_ps(x0, b1, c01);
+                let x1 = _mm256_set1_ps(x[1]);
+                c10 = _mm256_fmadd_ps(x1, b0, c10);
+                c11 = _mm256_fmadd_ps(x1, b1, c11);
+                let x2 = _mm256_set1_ps(x[2]);
+                c20 = _mm256_fmadd_ps(x2, b0, c20);
+                c21 = _mm256_fmadd_ps(x2, b1, c21);
+                let x3 = _mm256_set1_ps(x[3]);
+                c30 = _mm256_fmadd_ps(x3, b0, c30);
+                c31 = _mm256_fmadd_ps(x3, b1, c31);
+            }
+            _mm256_storeu_ps(op.add(j), c00);
+            _mm256_storeu_ps(op.add(j + 8), c01);
+            _mm256_storeu_ps(op.add(n + j), c10);
+            _mm256_storeu_ps(op.add(n + j + 8), c11);
+            _mm256_storeu_ps(op.add(2 * n + j), c20);
+            _mm256_storeu_ps(op.add(2 * n + j + 8), c21);
+            _mm256_storeu_ps(op.add(3 * n + j), c30);
+            _mm256_storeu_ps(op.add(3 * n + j + 8), c31);
+        }
+        j += 16;
+    }
+    if j + 8 <= n {
+        // SAFETY: same bounds argument as above for an 8-wide strip at j.
+        unsafe {
+            let mut c0 = _mm256_loadu_ps(op.add(j));
+            let mut c1 = _mm256_loadu_ps(op.add(n + j));
+            let mut c2 = _mm256_loadu_ps(op.add(2 * n + j));
+            let mut c3 = _mm256_loadu_ps(op.add(3 * n + j));
+            for l in 0..kb {
+                let x = &pack[4 * l..4 * l + 4];
+                if x[0] == 0.0 && x[1] == 0.0 && x[2] == 0.0 && x[3] == 0.0 {
+                    continue;
+                }
+                let b0 = _mm256_loadu_ps(bp.add(l * n + j));
+                c0 = _mm256_fmadd_ps(_mm256_set1_ps(x[0]), b0, c0);
+                c1 = _mm256_fmadd_ps(_mm256_set1_ps(x[1]), b0, c1);
+                c2 = _mm256_fmadd_ps(_mm256_set1_ps(x[2]), b0, c2);
+                c3 = _mm256_fmadd_ps(_mm256_set1_ps(x[3]), b0, c3);
+            }
+            _mm256_storeu_ps(op.add(j), c0);
+            _mm256_storeu_ps(op.add(n + j), c1);
+            _mm256_storeu_ps(op.add(2 * n + j), c2);
+            _mm256_storeu_ps(op.add(3 * n + j), c3);
+        }
+        j += 8;
+    }
+    if j < n {
+        let mm = tail_mask(n - j);
+        // SAFETY: maskload/maskstore touch only the first n - j (< 8) lanes,
+        // which are in bounds; masked lanes read as +0.0 and are not stored.
+        unsafe {
+            let mut c0 = _mm256_maskload_ps(op.add(j), mm);
+            let mut c1 = _mm256_maskload_ps(op.add(n + j), mm);
+            let mut c2 = _mm256_maskload_ps(op.add(2 * n + j), mm);
+            let mut c3 = _mm256_maskload_ps(op.add(3 * n + j), mm);
+            for l in 0..kb {
+                let x = &pack[4 * l..4 * l + 4];
+                if x[0] == 0.0 && x[1] == 0.0 && x[2] == 0.0 && x[3] == 0.0 {
+                    continue;
+                }
+                let b0 = _mm256_maskload_ps(bp.add(l * n + j), mm);
+                c0 = _mm256_fmadd_ps(_mm256_set1_ps(x[0]), b0, c0);
+                c1 = _mm256_fmadd_ps(_mm256_set1_ps(x[1]), b0, c1);
+                c2 = _mm256_fmadd_ps(_mm256_set1_ps(x[2]), b0, c2);
+                c3 = _mm256_fmadd_ps(_mm256_set1_ps(x[3]), b0, c3);
+            }
+            _mm256_maskstore_ps(op.add(j), mm, c0);
+            _mm256_maskstore_ps(op.add(n + j), mm, c1);
+            _mm256_maskstore_ps(op.add(2 * n + j), mm, c2);
+            _mm256_maskstore_ps(op.add(3 * n + j), mm, c3);
+        }
+    }
+}
+
+/// Single-row variant of [`nn_tile4`] for the `m % 4` remainder, with the
+/// same strip decomposition (a pure function of `n`) so per-element bits do
+/// not depend on how the thread pool partitions rows.
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+fn nn_row1(arow: &[f32], b: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert!(b.len() >= arow.len() * n && out.len() == n);
+    let bp = b.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0;
+    while j + 16 <= n {
+        // SAFETY: out[j..j+16] and b[l*n + j..+16] are in bounds per the
+        // debug_assert'd slice lengths.
+        unsafe {
+            let mut c0 = _mm256_loadu_ps(op.add(j));
+            let mut c1 = _mm256_loadu_ps(op.add(j + 8));
+            for (l, &x) in arow.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let xv = _mm256_set1_ps(x);
+                c0 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(bp.add(l * n + j)), c0);
+                c1 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(bp.add(l * n + j + 8)), c1);
+            }
+            _mm256_storeu_ps(op.add(j), c0);
+            _mm256_storeu_ps(op.add(j + 8), c1);
+        }
+        j += 16;
+    }
+    if j + 8 <= n {
+        // SAFETY: same bounds argument for an 8-wide strip at j.
+        unsafe {
+            let mut c0 = _mm256_loadu_ps(op.add(j));
+            for (l, &x) in arow.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                c0 = _mm256_fmadd_ps(_mm256_set1_ps(x), _mm256_loadu_ps(bp.add(l * n + j)), c0);
+            }
+            _mm256_storeu_ps(op.add(j), c0);
+        }
+        j += 8;
+    }
+    if j < n {
+        let mm = tail_mask(n - j);
+        // SAFETY: masked ops touch only the first n - j (< 8) in-bounds lanes.
+        unsafe {
+            let mut c0 = _mm256_maskload_ps(op.add(j), mm);
+            for (l, &x) in arow.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let b0 = _mm256_maskload_ps(bp.add(l * n + j), mm);
+                c0 = _mm256_fmadd_ps(_mm256_set1_ps(x), b0, c0);
+            }
+            _mm256_maskstore_ps(op.add(j), mm, c0);
+        }
+    }
+}
+
+/// `out[m x kk] = a[m x n] . b[kk x n]^T` — dots reduce over `n` with
+/// 8-lane FMA accumulators and the fixed [`hsum`] tree, 4 `a` rows sharing
+/// each `b` row load. The optional relu mask epilogue is scalar and exact
+/// (bitwise-equal to the scalar tier's).
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub(super) fn nt_rows(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    kk: usize,
+    out: &mut [f32],
+    mask: Option<&[f32]>,
+) {
+    let m = if kk == 0 { 0 } else { out.len() / kk };
+    let mut i = 0;
+    while i + 4 <= m {
+        nt_rows4(&a[i * n..(i + 4) * n], b, n, kk, &mut out[i * kk..(i + 4) * kk]);
+        i += 4;
+    }
+    while i < m {
+        nt_row1(&a[i * n..(i + 1) * n], b, n, kk, &mut out[i * kk..(i + 1) * kk]);
+        i += 1;
+    }
+    if let Some(ms) = mask {
+        for (o, &h) in out[..m * kk].iter_mut().zip(ms.iter()) {
+            if h <= 0.0 {
+                *o = 0.0;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+fn nt_rows4(a4: &[f32], b: &[f32], n: usize, kk: usize, out4: &mut [f32]) {
+    debug_assert!(a4.len() == 4 * n && b.len() >= kk * n && out4.len() == 4 * kk);
+    let ap = a4.as_ptr();
+    for l in 0..kk {
+        let bp = b[l * n..(l + 1) * n].as_ptr();
+        // SAFETY: a4 row r starts at r*n and b row l at l*n; every 8-wide
+        // load below stays under n per the loop bounds, and the masked tail
+        // touches only the first n - j lanes.
+        unsafe {
+            let mut s0 = _mm256_setzero_ps();
+            let mut s1 = _mm256_setzero_ps();
+            let mut s2 = _mm256_setzero_ps();
+            let mut s3 = _mm256_setzero_ps();
+            let mut j = 0;
+            while j + 8 <= n {
+                let bv = _mm256_loadu_ps(bp.add(j));
+                s0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(j)), bv, s0);
+                s1 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(n + j)), bv, s1);
+                s2 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(2 * n + j)), bv, s2);
+                s3 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(3 * n + j)), bv, s3);
+                j += 8;
+            }
+            if j < n {
+                let mm = tail_mask(n - j);
+                let bv = _mm256_maskload_ps(bp.add(j), mm);
+                s0 = _mm256_fmadd_ps(_mm256_maskload_ps(ap.add(j), mm), bv, s0);
+                s1 = _mm256_fmadd_ps(_mm256_maskload_ps(ap.add(n + j), mm), bv, s1);
+                s2 = _mm256_fmadd_ps(_mm256_maskload_ps(ap.add(2 * n + j), mm), bv, s2);
+                s3 = _mm256_fmadd_ps(_mm256_maskload_ps(ap.add(3 * n + j), mm), bv, s3);
+            }
+            out4[l] = hsum(s0);
+            out4[kk + l] = hsum(s1);
+            out4[2 * kk + l] = hsum(s2);
+            out4[3 * kk + l] = hsum(s3);
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+fn nt_row1(arow: &[f32], b: &[f32], n: usize, kk: usize, out: &mut [f32]) {
+    debug_assert!(arow.len() == n && b.len() >= kk * n && out.len() == kk);
+    let ap = arow.as_ptr();
+    for (l, o) in out.iter_mut().enumerate() {
+        let bp = b[l * n..(l + 1) * n].as_ptr();
+        // SAFETY: every 8-wide load stays under n per the loop bounds; the
+        // masked tail touches only the first n - j lanes.
+        unsafe {
+            let mut s0 = _mm256_setzero_ps();
+            let mut j = 0;
+            while j + 8 <= n {
+                s0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)), s0);
+                j += 8;
+            }
+            if j < n {
+                let mm = tail_mask(n - j);
+                let av = _mm256_maskload_ps(ap.add(j), mm);
+                s0 = _mm256_fmadd_ps(av, _mm256_maskload_ps(bp.add(j), mm), s0);
+            }
+            *o = hsum(s0);
+        }
+    }
+}
+
+/// `out[cols x n] += a[bdim x m]^T . b[bdim x n]` for the column range
+/// `cols` of `a` (= row range of `out`): R cache blocks ascending, and within
+/// each block a broadcast-FMA axpy per reduction row. The per-element
+/// accumulation order is strictly ascending `r`, exactly like the scalar and
+/// naive paths (cache blocks round-trip through `out` bit-exactly), and the
+/// `a == 0` skip matches naive's.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub(super) fn tn_cols(
+    rc: usize,
+    a: &[f32],
+    b: &[f32],
+    bdim: usize,
+    m: usize,
+    n: usize,
+    cols: Range<usize>,
+    out: &mut [f32],
+) {
+    debug_assert!(out.len() == cols.len() * n && a.len() >= bdim * m && b.len() >= bdim * n);
+    let rc = if rc == 0 { bdim.max(1) } else { rc };
+    let bp = b.as_ptr();
+    let mut r0 = 0;
+    while r0 < bdim {
+        let rb = rc.min(bdim - r0);
+        for (ii, i) in cols.clone().enumerate() {
+            let orow = &mut out[ii * n..(ii + 1) * n];
+            let op = orow.as_mut_ptr();
+            let mut j = 0;
+            while j + 8 <= n {
+                // SAFETY: out row ii and b rows r < bdim have n columns, so
+                // 8-wide ops at j with j + 8 <= n are in bounds.
+                unsafe {
+                    let mut acc = _mm256_loadu_ps(op.add(j));
+                    for r in r0..r0 + rb {
+                        let av = a[r * m + i];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let bv = _mm256_loadu_ps(bp.add(r * n + j));
+                        acc = _mm256_fmadd_ps(_mm256_set1_ps(av), bv, acc);
+                    }
+                    _mm256_storeu_ps(op.add(j), acc);
+                }
+                j += 8;
+            }
+            if j < n {
+                let mm = tail_mask(n - j);
+                // SAFETY: masked ops touch only the first n - j (< 8)
+                // in-bounds lanes of each row.
+                unsafe {
+                    let mut acc = _mm256_maskload_ps(op.add(j), mm);
+                    for r in r0..r0 + rb {
+                        let av = a[r * m + i];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let bv = _mm256_maskload_ps(bp.add(r * n + j), mm);
+                        acc = _mm256_fmadd_ps(_mm256_set1_ps(av), bv, acc);
+                    }
+                    _mm256_maskstore_ps(op.add(j), mm, acc);
+                }
+            }
+        }
+        r0 += rb;
+    }
+}
+
+/// `out[n] += sum_r a[r, :]` — lanewise adds in ascending `r`, bitwise-equal
+/// to the scalar loop.
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub(super) fn colsum(a: &[f32], bdim: usize, n: usize, out: &mut [f32]) {
+    debug_assert!(a.len() >= bdim * n && out.len() >= n);
+    let ap = a.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut j = 0;
+    while j + 8 <= n {
+        // SAFETY: every row r < bdim has n columns, so 8-wide ops at j with
+        // j + 8 <= n are in bounds.
+        unsafe {
+            let mut acc = _mm256_loadu_ps(op.add(j));
+            for r in 0..bdim {
+                acc = _mm256_add_ps(acc, _mm256_loadu_ps(ap.add(r * n + j)));
+            }
+            _mm256_storeu_ps(op.add(j), acc);
+        }
+        j += 8;
+    }
+    if j < n {
+        let mm = tail_mask(n - j);
+        // SAFETY: masked ops touch only the first n - j (< 8) in-bounds
+        // lanes; masked lanes add exact +0.0 and are never stored.
+        unsafe {
+            let mut acc = _mm256_maskload_ps(op.add(j), mm);
+            for r in 0..bdim {
+                acc = _mm256_add_ps(acc, _mm256_maskload_ps(ap.add(r * n + j), mm));
+            }
+            _mm256_maskstore_ps(op.add(j), mm, acc);
+        }
+    }
+}
+
+/// Vectorized Adam update, replicating the scalar op sequence exactly
+/// (mul/add left-associated, correctly-rounded sqrt/div, no FMA) so the
+/// result is bitwise-equal to [`super::adam_chunk`].
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub(super) fn adam_chunk(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    c1: f32,
+    c2: f32,
+) {
+    let len = p.len();
+    debug_assert!(g.len() == len && m.len() == len && v.len() == len);
+    let b1 = _mm256_set1_ps(super::ADAM_BETA1);
+    let b1c = _mm256_set1_ps(1.0 - super::ADAM_BETA1);
+    let b2 = _mm256_set1_ps(super::ADAM_BETA2);
+    let b2c = _mm256_set1_ps(1.0 - super::ADAM_BETA2);
+    let eps = _mm256_set1_ps(super::ADAM_EPS);
+    let lrv = _mm256_set1_ps(lr);
+    let c1v = _mm256_set1_ps(c1);
+    let c2v = _mm256_set1_ps(c2);
+    let (pp, gp, mp, vp) = (p.as_mut_ptr(), g.as_ptr(), m.as_mut_ptr(), v.as_mut_ptr());
+    let mut i = 0;
+    while i + 8 <= len {
+        // SAFETY: all four slices have len elements and i + 8 <= len.
+        unsafe {
+            let gv = _mm256_loadu_ps(gp.add(i));
+            let m2 = _mm256_add_ps(
+                _mm256_mul_ps(b1, _mm256_loadu_ps(mp.add(i))),
+                _mm256_mul_ps(b1c, gv),
+            );
+            let v2 = _mm256_add_ps(
+                _mm256_mul_ps(b2, _mm256_loadu_ps(vp.add(i))),
+                _mm256_mul_ps(_mm256_mul_ps(b2c, gv), gv),
+            );
+            _mm256_storeu_ps(mp.add(i), m2);
+            _mm256_storeu_ps(vp.add(i), v2);
+            let num = _mm256_mul_ps(lrv, _mm256_mul_ps(m2, c1v));
+            let den = _mm256_add_ps(_mm256_sqrt_ps(_mm256_mul_ps(v2, c2v)), eps);
+            let pv = _mm256_sub_ps(_mm256_loadu_ps(pp.add(i)), _mm256_div_ps(num, den));
+            _mm256_storeu_ps(pp.add(i), pv);
+        }
+        i += 8;
+    }
+    if i < len {
+        let mm = tail_mask(len - i);
+        // SAFETY: masked ops touch only the first len - i (< 8) in-bounds
+        // lanes; masked lanes compute 0/(sqrt(0)+eps) = 0 (no fault) and are
+        // never stored.
+        unsafe {
+            let gv = _mm256_maskload_ps(gp.add(i), mm);
+            let m2 = _mm256_add_ps(
+                _mm256_mul_ps(b1, _mm256_maskload_ps(mp.add(i), mm)),
+                _mm256_mul_ps(b1c, gv),
+            );
+            let v2 = _mm256_add_ps(
+                _mm256_mul_ps(b2, _mm256_maskload_ps(vp.add(i), mm)),
+                _mm256_mul_ps(_mm256_mul_ps(b2c, gv), gv),
+            );
+            _mm256_maskstore_ps(mp.add(i), mm, m2);
+            _mm256_maskstore_ps(vp.add(i), mm, v2);
+            let num = _mm256_mul_ps(lrv, _mm256_mul_ps(m2, c1v));
+            let den = _mm256_add_ps(_mm256_sqrt_ps(_mm256_mul_ps(v2, c2v)), eps);
+            let pv = _mm256_sub_ps(_mm256_maskload_ps(pp.add(i), mm), _mm256_div_ps(num, den));
+            _mm256_maskstore_ps(pp.add(i), mm, pv);
+        }
+    }
+}
+
+/// Vectorized Polyak averaging `t = tau*p + (1-tau)*t`, same op sequence as
+/// the scalar chunk (mul/add, no FMA) — bitwise-equal to
+/// [`super::polyak_chunk`].
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub(super) fn polyak_chunk(p: &[f32], t: &mut [f32], tau: f32) {
+    let len = t.len();
+    debug_assert!(p.len() == len);
+    let tauv = _mm256_set1_ps(tau);
+    let tauc = _mm256_set1_ps(1.0 - tau);
+    let (pp, tp) = (p.as_ptr(), t.as_mut_ptr());
+    let mut i = 0;
+    while i + 8 <= len {
+        // SAFETY: both slices have len elements and i + 8 <= len.
+        unsafe {
+            let tv = _mm256_add_ps(
+                _mm256_mul_ps(tauv, _mm256_loadu_ps(pp.add(i))),
+                _mm256_mul_ps(tauc, _mm256_loadu_ps(tp.add(i))),
+            );
+            _mm256_storeu_ps(tp.add(i), tv);
+        }
+        i += 8;
+    }
+    if i < len {
+        let mm = tail_mask(len - i);
+        // SAFETY: masked ops touch only the first len - i (< 8) in-bounds
+        // lanes.
+        unsafe {
+            let tv = _mm256_add_ps(
+                _mm256_mul_ps(tauv, _mm256_maskload_ps(pp.add(i), mm)),
+                _mm256_mul_ps(tauc, _mm256_maskload_ps(tp.add(i), mm)),
+            );
+            _mm256_maskstore_ps(tp.add(i), mm, tv);
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! Per-shape kernel-tier dispatch for the `nn::ops` entry points.
+//!
+//! Two tiers exist: the portable scalar register-tiled kernels (PR 4,
+//! bitwise-equal to [`super::naive`]) and the AVX2+FMA microkernels in
+//! [`super::avx2`]. Which tier runs is resolved *once per process* by
+//! [`tier`] — `SPREEZE_SIMD=on|off|auto` in the environment wins over
+//! [`configure_simd`] (the `--simd` flag), which wins over auto-detection
+//! via `is_x86_feature_detected!("avx2")` + `"fma"` — and *per shape* by
+//! [`select`], which keeps sub-lane-width shapes (e.g. the critic head,
+//! `n = 1`) on the scalar tier where the SIMD kernels have nothing to
+//! vectorize.
+//!
+//! The learner's `switch_batch_size` path never pays selection per call: a
+//! [`DispatchTable`] is planned once at `Engine` build from the BS-ladder x
+//! layer shapes the native manifest enumerates, and the tower drivers cache
+//! the resolved [`Kernel`]s per batch size (see `nn::grad`).
+//!
+//! Under Miri the tier is pinned to scalar: Miri does not model vendor
+//! intrinsics, and the scalar tier is the semantics oracle anyway.
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use crate::util::sync::{AtomicUsize, Ordering};
+
+/// K cache-block length for `nn` (a `kb x n` slab of `b` per block stays
+/// L2-resident at the manifest's widest layers).
+pub const KC: usize = 128;
+/// Reduction-row cache-block length for `tn` (a `rb x n` slab of `b` per
+/// block). Blocking is bitwise-neutral: per-element order stays ascending.
+pub const RC: usize = 128;
+
+/// Kernel tier: portable scalar register tiles, or AVX2+FMA microkernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    /// PR 4 scalar tiled kernels — bitwise-equal to [`super::naive`].
+    Scalar,
+    /// [`super::avx2`] microkernels — ULP-bounded against naive, fixed
+    /// accumulation order (see `docs/KERNELS.md`).
+    Simd,
+}
+
+/// `--simd` / `SPREEZE_SIMD` override for the SIMD tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Use AVX2+FMA when the CPU reports it (the default).
+    Auto,
+    /// Select the SIMD tier unconditionally; execution still falls back to
+    /// scalar if the CPU lacks AVX2+FMA ([`Kernel::use_simd`] re-checks).
+    On,
+    /// Scalar tier only — reproduces the pre-SIMD bitwise behavior.
+    Off,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> anyhow::Result<SimdMode> {
+        match s {
+            "auto" => Ok(SimdMode::Auto),
+            "on" => Ok(SimdMode::On),
+            "off" => Ok(SimdMode::Off),
+            _ => anyhow::bail!("unknown simd mode {s:?} (expected auto|on|off)"),
+        }
+    }
+}
+
+/// The four gemm-shaped entry points of `nn::ops`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum GemmOp {
+    /// `gemm_nn_bias_act` — dims `[m, k, n]` (vector dim `n`).
+    Nn,
+    /// `gemm_nt` — dims `[m, n, kk]` (vector dim `n`, the reduction).
+    Nt,
+    /// `gemm_tn_acc` — dims `[bdim, m, n]` (vector dim `n`).
+    Tn,
+    /// `colsum_acc` — dims `[bdim, n, 0]` (vector dim `n`).
+    Colsum,
+}
+
+/// A gemm call shape in call-site parameter order (see [`GemmOp`] docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub op: GemmOp,
+    pub dims: [usize; 3],
+}
+
+/// A resolved kernel choice: tier plus cache-block length (`0` = unblocked;
+/// the block length is `KC` reduction steps for `Nn`, `RC` reduction rows
+/// for `Tn`, and unused for `Nt`/`Colsum`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Kernel {
+    pub tier: Tier,
+    pub blk: usize,
+}
+
+impl Kernel {
+    /// The scalar kernel — also the fallback when SIMD is selected but the
+    /// CPU lacks AVX2+FMA (possible under a forced `SPREEZE_SIMD=on`).
+    pub fn scalar() -> Kernel {
+        Kernel { tier: Tier::Scalar, blk: 0 }
+    }
+
+    /// Should this call actually run the AVX2 path? Tier selection plus the
+    /// hardware re-check, so a forced `on` downgrades safely at run time.
+    pub fn use_simd(self) -> bool {
+        self.tier == Tier::Simd && hw_simd()
+    }
+}
+
+/// Pick the kernel for one call shape under the session [`tier`]. Shapes
+/// whose vector dimension is narrower than one 8-lane AVX2 vector stay
+/// scalar regardless of tier.
+pub fn select(op: GemmOp, dims: [usize; 3]) -> Kernel {
+    if tier() == Tier::Scalar {
+        return Kernel::scalar();
+    }
+    let vec_dim = match op {
+        GemmOp::Nn | GemmOp::Tn => dims[2],
+        GemmOp::Nt | GemmOp::Colsum => dims[1],
+    };
+    if vec_dim < 8 {
+        return Kernel::scalar();
+    }
+    let blk = match op {
+        GemmOp::Nn => {
+            if dims[1] > KC {
+                KC
+            } else {
+                0
+            }
+        }
+        GemmOp::Tn => {
+            if dims[0] > RC {
+                RC
+            } else {
+                0
+            }
+        }
+        GemmOp::Nt | GemmOp::Colsum => 0,
+    };
+    Kernel { tier: Tier::Simd, blk }
+}
+
+/// Shape -> kernel map planned once at `Engine` build (one entry per
+/// BS-ladder x layer shape), so steady-state steps never re-select.
+#[derive(Debug, Clone, Default)]
+pub struct DispatchTable {
+    entries: BTreeMap<(GemmOp, [usize; 3]), Kernel>,
+}
+
+impl DispatchTable {
+    /// Resolve every shape through [`select`] under the session tier.
+    pub fn plan<I: IntoIterator<Item = Shape>>(shapes: I) -> DispatchTable {
+        let mut entries = BTreeMap::new();
+        for s in shapes {
+            entries.insert((s.op, s.dims), select(s.op, s.dims));
+        }
+        DispatchTable { entries }
+    }
+
+    /// The planned kernel for an exact shape, if it was enumerated.
+    pub fn get(&self, op: GemmOp, dims: [usize; 3]) -> Option<Kernel> {
+        self.entries.get(&(op, dims)).copied()
+    }
+
+    /// Planned kernel, or a fresh [`select`] for shapes outside the plan
+    /// (e.g. eval batches that are not on the BS ladder).
+    pub fn lookup(&self, op: GemmOp, dims: [usize; 3]) -> Kernel {
+        self.get(op, dims).unwrap_or_else(|| select(op, dims))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// `--simd` wiring (mirrors `configure_threads`): must run before the first
+/// kernel resolves the tier; later calls are ignored with the same
+/// first-resolution-wins semantics. `SPREEZE_SIMD` in the environment still
+/// wins over the configured mode.
+pub fn configure_simd(mode: SimdMode) {
+    let v = match mode {
+        SimdMode::Auto => 1,
+        SimdMode::On => 2,
+        SimdMode::Off => 3,
+    };
+    CONFIGURED_SIMD.store(v, Ordering::SeqCst);
+}
+
+static CONFIGURED_SIMD: AtomicUsize = AtomicUsize::new(0);
+static TIER: OnceLock<Tier> = OnceLock::new();
+
+/// The session kernel tier, resolved once per process.
+pub fn tier() -> Tier {
+    *TIER.get_or_init(resolve_tier)
+}
+
+#[cfg(miri)]
+fn resolve_tier() -> Tier {
+    // Miri cannot interpret vendor intrinsics; the scalar tier is the
+    // oracle the SIMD tier is tested against, so nothing is lost.
+    Tier::Scalar
+}
+
+#[cfg(not(miri))]
+fn resolve_tier() -> Tier {
+    let mode = match std::env::var("SPREEZE_SIMD") {
+        Ok(s) => match SimdMode::parse(&s) {
+            Ok(m) => Some(m),
+            Err(_) => {
+                eprintln!("spreeze: ignoring SPREEZE_SIMD={s:?} (expected auto|on|off)");
+                None
+            }
+        },
+        Err(_) => None,
+    };
+    let mode = mode.unwrap_or(match CONFIGURED_SIMD.load(Ordering::SeqCst) {
+        2 => SimdMode::On,
+        3 => SimdMode::Off,
+        _ => SimdMode::Auto,
+    });
+    match mode {
+        SimdMode::On => Tier::Simd,
+        SimdMode::Off => Tier::Scalar,
+        SimdMode::Auto => {
+            if hw_simd() {
+                Tier::Simd
+            } else {
+                Tier::Scalar
+            }
+        }
+    }
+}
+
+/// Does this CPU have AVX2+FMA? (Always `false` off x86_64 and under Miri.)
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+pub fn hw_simd() -> bool {
+    static HW: OnceLock<bool> = OnceLock::new();
+    *HW.get_or_init(|| is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"))
+}
+
+/// Does this CPU have AVX2+FMA? (Always `false` off x86_64 and under Miri.)
+#[cfg(not(all(target_arch = "x86_64", not(miri))))]
+pub fn hw_simd() -> bool {
+    false
+}
+
+/// Human label for the resolved tier (verbose startup line).
+pub fn tier_label() -> &'static str {
+    match tier() {
+        Tier::Scalar => "scalar",
+        Tier::Simd => "simd",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simd_mode_parses_and_rejects() {
+        assert_eq!(SimdMode::parse("auto").unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse("on").unwrap(), SimdMode::On);
+        assert_eq!(SimdMode::parse("off").unwrap(), SimdMode::Off);
+        assert!(SimdMode::parse("fast").is_err());
+    }
+
+    #[test]
+    fn table_keys_on_op_and_exact_dims() {
+        let shapes = [
+            Shape { op: GemmOp::Nn, dims: [256, 64, 64] },
+            Shape { op: GemmOp::Nt, dims: [256, 64, 64] },
+        ];
+        let t = DispatchTable::plan(shapes);
+        assert_eq!(t.len(), 2);
+        assert!(t.get(GemmOp::Nn, [256, 64, 64]).is_some());
+        assert!(t.get(GemmOp::Tn, [256, 64, 64]).is_none());
+        assert!(t.get(GemmOp::Nn, [256, 64, 63]).is_none());
+        // lookup falls back to a fresh selection off the plan
+        let k = t.lookup(GemmOp::Nn, [31, 7, 1]);
+        assert_eq!(k.tier, Tier::Scalar, "n = 1 has nothing to vectorize");
+    }
+
+    #[test]
+    fn narrow_vector_dims_stay_scalar() {
+        // critic head shapes: forward n = 1, backward tn n = 1, colsum n = 1
+        assert_eq!(select(GemmOp::Nn, [512, 256, 1]).tier, Tier::Scalar);
+        assert_eq!(select(GemmOp::Tn, [512, 256, 1]).tier, Tier::Scalar);
+        assert_eq!(select(GemmOp::Colsum, [512, 1, 0]).tier, Tier::Scalar);
+    }
+
+    #[test]
+    fn forced_simd_kernel_downgrades_without_hardware() {
+        let k = Kernel { tier: Tier::Simd, blk: KC };
+        // on an AVX2+FMA host this is true; everywhere else (incl. Miri)
+        // use_simd() must re-check and deny.
+        assert_eq!(k.use_simd(), hw_simd());
+        assert!(!Kernel::scalar().use_simd());
+    }
+
+    #[test]
+    fn blocking_engages_only_past_the_block_size() {
+        if tier() == Tier::Scalar {
+            return; // forced off (SPREEZE_SIMD=off) or no AVX2: nothing to check
+        }
+        assert_eq!(select(GemmOp::Nn, [256, 64, 64]).blk, 0);
+        assert_eq!(select(GemmOp::Nn, [256, 257, 64]).blk, KC);
+        assert_eq!(select(GemmOp::Tn, [8192, 64, 64]).blk, RC);
+        assert_eq!(select(GemmOp::Nt, [8192, 256, 256]).blk, 0);
+    }
+}

@@ -16,4 +16,4 @@ pub mod xla_stub;
 
 pub use artifacts::{ArtifactMeta, Manifest};
 pub use engine::{default_artifacts_dir, BackendChoice, Engine, StepExe};
-pub use native::{native_manifest, NativeStep, NATIVE_BS_LADDER};
+pub use native::{native_manifest, step_dispatch_table, NativeStep, NATIVE_BS_LADDER};

@@ -28,6 +28,7 @@ use anyhow::{bail, Context, Result};
 use crate::nn::grad::{adam_step, polyak, MlpGrad};
 use crate::nn::mlp::{LOG_STD_MAX, LOG_STD_MIN};
 use crate::nn::ops;
+use crate::nn::ops::dispatch::DispatchTable;
 use crate::nn::Layout;
 
 use super::artifacts::{ArtifactMeta, Manifest};
@@ -123,6 +124,21 @@ pub struct NativeStep {
     scr: Scratch,
 }
 
+/// The planned kernel table for one native step shape: every gemm the five
+/// towers (actor, q1, q2, and the frozen-critic policy passes, which share
+/// the critic shapes) emit at batch size `bs`, resolved under the session
+/// tier. Duplicate shapes collapse — the table stays a handful of entries.
+pub fn step_dispatch_table(layout: &Layout, bs: usize) -> Result<DispatchTable> {
+    let actor = MlpGrad::from_segments(&layout.actor_segments, "actor/")?;
+    let q1 = MlpGrad::from_segments(&layout.critic_segments, "q1/")?;
+    let q2 = MlpGrad::from_segments(&layout.critic_segments, "q2/")?;
+    let mut shapes = Vec::new();
+    for t in [&actor, &q1, &q2] {
+        t.collect_shapes(bs, &mut shapes);
+    }
+    Ok(DispatchTable::plan(shapes))
+}
+
 impl NativeStep {
     pub fn new(layout: Layout, func: &str, bs: usize) -> Result<NativeStep> {
         let func = match (func, layout.algo.as_str()) {
@@ -132,11 +148,18 @@ impl NativeStep {
             ("critic", "sac") => StepFunc::SacCritic,
             (f, a) => bail!("native backend: unsupported step {a}/{f}"),
         };
-        let actor = MlpGrad::from_segments(&layout.actor_segments, "actor/")?;
-        let q1 = MlpGrad::from_segments(&layout.critic_segments, "q1/")?;
-        let q2 = MlpGrad::from_segments(&layout.critic_segments, "q2/")?;
-        let q1_pi = MlpGrad::from_segments(&layout.critic_segments, "q1/")?;
-        let q2_pi = MlpGrad::from_segments(&layout.critic_segments, "q2/")?;
+        let mut actor = MlpGrad::from_segments(&layout.actor_segments, "actor/")?;
+        let mut q1 = MlpGrad::from_segments(&layout.critic_segments, "q1/")?;
+        let mut q2 = MlpGrad::from_segments(&layout.critic_segments, "q2/")?;
+        let mut q1_pi = MlpGrad::from_segments(&layout.critic_segments, "q1/")?;
+        let mut q2_pi = MlpGrad::from_segments(&layout.critic_segments, "q2/")?;
+        // Resolve the kernel plan for every gemm shape this step emits, once
+        // — `switch_batch_size` builds a fresh NativeStep per rung, so the
+        // steady-state towers never re-select kernels per call.
+        let table = step_dispatch_table(&layout, bs)?;
+        for t in [&mut actor, &mut q1, &mut q2, &mut q1_pi, &mut q2_pi] {
+            t.prepare(bs, &table);
+        }
         Ok(NativeStep { layout, func, bs, actor, q1, q2, q1_pi, q2_pi, scr: Scratch::default() })
     }
 

@@ -1,19 +1,21 @@
 //! Integration coverage for the shared `nn::ops` kernel layer:
 //! tiled-vs-naive equivalence on ragged shapes at pool-engaging sizes,
-//! single-thread-vs-pooled bitwise determinism, FD gradient checks on a
-//! batch large enough that the pooled gemm path actually runs, and
-//! run-to-run determinism of the tower-parallel native full step.
+//! single-thread-vs-pooled bitwise determinism, a SIMD-vs-naive ULP sweep
+//! over ragged shapes with forced dispatch kernels, FD gradient checks on a
+//! batch large enough that the pooled gemm path actually runs, dispatch
+//! coverage of the manifest BS ladder, and run-to-run / cross-pool-width
+//! determinism of the tower-parallel native full step.
 //!
 //! The CI matrix re-runs this whole suite (and the in-module FD tests)
-//! under `SPREEZE_THREADS=1` and `SPREEZE_THREADS=4`, so both the serial
-//! and the pooled global-pool paths are exercised.
-
+//! under `SPREEZE_THREADS={1,4}` × `SPREEZE_SIMD={on,off}`, so the serial
+//! and pooled paths are each exercised under both kernel tiers.
 
 // Miri cannot run this suite: heavyweight kernel sweeps; far too slow interpreted.
 #![cfg(not(miri))]
 use spreeze::nn::layout::Segment;
-use spreeze::nn::{ops, MlpGrad, ThreadPool};
-use spreeze::runtime::{native_manifest, NativeStep};
+use spreeze::nn::ops::dispatch::{self, GemmOp, Kernel, Tier};
+use spreeze::nn::{ops, Layout, MlpGrad, ThreadPool};
+use spreeze::runtime::{native_manifest, step_dispatch_table, ArtifactMeta, NativeStep};
 use spreeze::util::rng::Rng;
 
 fn filled(rng: &mut Rng, len: usize) -> Vec<f32> {
@@ -26,9 +28,12 @@ fn filled(rng: &mut Rng, len: usize) -> Vec<f32> {
 }
 
 /// Large + ragged shapes (not multiples of the 4-row tile or the part
-/// size), compared bitwise against the naive reference on a wide pool.
+/// size), compared bitwise against the naive reference on a wide pool. The
+/// scalar tier is pinned via `_sel` — this is the contract `SPREEZE_SIMD=off`
+/// restores in full, and the scalar path must keep it under any tier.
 #[test]
 fn pooled_tiled_kernels_match_naive_on_large_ragged_shapes() {
+    let sc = Kernel::scalar();
     let pool = ThreadPool::new(4);
     let mut rng = Rng::new(91);
     for &(m, k, n) in &[(1021usize, 37usize, 63usize), (513, 127, 33), (2048, 64, 64)] {
@@ -37,21 +42,115 @@ fn pooled_tiled_kernels_match_naive_on_large_ragged_shapes() {
         let bias = filled(&mut rng, n);
         let mut y1 = vec![0.0f32; m * n];
         let mut y2 = vec![0.0f32; m * n];
-        ops::gemm_nn_bias_act(&pool, &a, &w, Some(&bias), m, k, n, &mut y1, true);
+        ops::gemm_nn_bias_act_sel(&pool, &a, &w, Some(&bias), m, k, n, &mut y1, true, sc);
         ops::naive::gemm_nn_bias_act(&a, &w, Some(&bias), m, k, n, &mut y2, true);
         assert_eq!(y1, y2, "nn ({m},{k},{n})");
 
         let mut d1 = vec![0.0f32; m * k];
         let mut d2 = vec![0.0f32; m * k];
-        ops::gemm_nt(&pool, &y1, &w, m, n, k, &mut d1, Some(&a));
+        ops::gemm_nt_sel(&pool, &y1, &w, m, n, k, &mut d1, Some(&a), sc);
         ops::naive::gemm_nt(&y1, &w, m, n, k, &mut d2, Some(&a));
         assert_eq!(d1, d2, "nt ({m},{k},{n})");
 
         let mut w1 = vec![0.0f32; k * n];
         let mut w2 = vec![0.0f32; k * n];
-        ops::gemm_tn_acc(&pool, &a, &y1, m, k, n, &mut w1);
+        ops::gemm_tn_acc_sel(&pool, &a, &y1, m, k, n, &mut w1, sc);
         ops::naive::gemm_tn_acc(&a, &y1, m, k, n, &mut w2);
         assert_eq!(w1, w2, "tn ({m},{k},{n})");
+    }
+}
+
+/// Monotonic integer map of an f32 (IEEE total-order trick): the ULP
+/// distance between two floats is the difference of their keys; ±0 map to
+/// the same key.
+fn ulp_key(x: f32) -> i64 {
+    let b = x.to_bits() as i32 as i64;
+    if b < 0 {
+        (i32::MIN as i64) - b
+    } else {
+        b
+    }
+}
+
+fn ulp_dist(a: f32, b: f32) -> i64 {
+    (ulp_key(a) - ulp_key(b)).abs()
+}
+
+/// Per-element check: SIMD within `2·(red+4)` ULPs of naive, OR within the
+/// cancellation-aware absolute tolerance `absref·red·ε` (a third naive pass
+/// over |inputs| — near-zero outputs of a large-magnitude accumulation are
+/// legitimately many relative ULPs apart).
+fn assert_ulp_close(tag: &str, simd: &[f32], naive: &[f32], absref: &[f32], red: usize) {
+    let max_ulps = 2 * (red as i64 + 4);
+    for (i, ((&s, &r), &ab)) in simd.iter().zip(naive).zip(absref).enumerate() {
+        let abs_tol = ab * red as f32 * f32::EPSILON;
+        assert!(
+            ulp_dist(s, r) <= max_ulps || (s - r).abs() <= abs_tol,
+            "{tag}[{i}]: simd {s} vs naive {r} ({} ulps, abs scale {ab})",
+            ulp_dist(s, r)
+        );
+    }
+}
+
+/// The tentpole numerics contract: the AVX2 tier (forced via `_sel`, so the
+/// sweep is independent of `SPREEZE_SIMD`) stays ULP-close to `ops::naive`
+/// on ragged shapes covering sub-lane widths, 16/8-wide strips with masked
+/// tails, and reductions that spill the KC/RC cache blocks.
+#[test]
+fn simd_kernels_match_naive_within_ulp_bound() {
+    if !dispatch::hw_simd() {
+        return; // no AVX2+FMA host: forced kernels downgrade to the
+                // (bitwise-tested) scalar tier — nothing to sweep
+    }
+    let pool = ThreadPool::new(4);
+    let mut rng = Rng::new(17);
+    for &(m, k, n) in &[
+        (33usize, 17usize, 9usize), // one 8-strip + 1-wide tail
+        (50, 300, 24),              // k > KC: the blocked nn path
+        (257, 64, 63),              // 16-strips + 8-strip + 7-wide tail
+        (129, 129, 200),            // m > RC: the blocked tn path
+        (7, 5, 8),                  // exactly one lane, no tail
+    ] {
+        let nn_k = Kernel {
+            tier: Tier::Simd,
+            blk: if k > dispatch::KC { dispatch::KC } else { 0 },
+        };
+        let tn_k = Kernel {
+            tier: Tier::Simd,
+            blk: if m > dispatch::RC { dispatch::RC } else { 0 },
+        };
+        let nt_k = Kernel { tier: Tier::Simd, blk: 0 };
+        let abs = |v: &[f32]| v.iter().map(|x| x.abs()).collect::<Vec<f32>>();
+        let a = filled(&mut rng, m * k);
+        let w = filled(&mut rng, k * n);
+        let bias = filled(&mut rng, n);
+
+        let mut ys = vec![0.0f32; m * n];
+        let mut yr = vec![0.0f32; m * n];
+        let mut ya = vec![0.0f32; m * n];
+        ops::gemm_nn_bias_act_sel(&pool, &a, &w, Some(&bias), m, k, n, &mut ys, true, nn_k);
+        ops::naive::gemm_nn_bias_act(&a, &w, Some(&bias), m, k, n, &mut yr, true);
+        let (aa, aw, ab) = (abs(&a), abs(&w), abs(&bias));
+        ops::naive::gemm_nn_bias_act(&aa, &aw, Some(&ab), m, k, n, &mut ya, false);
+        assert_ulp_close(&format!("nn ({m},{k},{n})"), &ys, &yr, &ya, k);
+
+        // input-grad shape: out (m,k), reduction over n, ReLU mask fused
+        let mut ds = vec![0.0f32; m * k];
+        let mut dr = vec![0.0f32; m * k];
+        let mut da = vec![0.0f32; m * k];
+        ops::gemm_nt_sel(&pool, &yr, &w, m, n, k, &mut ds, Some(&a), nt_k);
+        ops::naive::gemm_nt(&yr, &w, m, n, k, &mut dr, Some(&a));
+        ops::naive::gemm_nt(&abs(&yr), &abs(&w), m, n, k, &mut da, None);
+        assert_ulp_close(&format!("nt ({m},{k},{n})"), &ds, &dr, &da, n);
+
+        // weight-grad shape: out (k,n), reduction over the batch m
+        let mut gs = vec![0.0f32; k * n];
+        let mut gr = vec![0.0f32; k * n];
+        let mut ga = vec![0.0f32; k * n];
+        ops::gemm_tn_acc_sel(&pool, &a, &yr, m, k, n, &mut gs, tn_k);
+        ops::naive::gemm_tn_acc(&a, &yr, m, k, n, &mut gr);
+        ops::naive::gemm_tn_acc(&abs(&a), &abs(&yr), m, k, n, &mut ga);
+        assert_ulp_close(&format!("tn ({m},{k},{n})"), &gs, &gr, &ga, m);
     }
 }
 
@@ -169,17 +268,10 @@ fn fd_gradients_hold_on_pool_engaging_shapes() {
     assert!(checked > 300, "sampled too few parameters: {checked}");
 }
 
-/// The tower-parallel native full step must be bitwise reproducible: same
-/// inputs → same outputs, across repeated runs of one step instance and
-/// across freshly-built instances (the q1/q2/actor towers race on wall
-/// clock, never on data).
-#[test]
-fn native_full_step_is_bitwise_deterministic() {
-    let manifest = native_manifest();
-    let bs = 256;
-    let meta = manifest.find("pendulum", "sac", "full", bs).unwrap();
-    let layout = manifest.layout("pendulum", "sac").unwrap().clone();
-    let mut rng = Rng::new(3);
+/// Deterministic full-step input set for `meta` (params/targets from the
+/// layout init, optimizer state zeroed, batch tensors from `seed`).
+fn full_step_inputs(meta: &ArtifactMeta, layout: &Layout, seed: u64) -> Vec<(String, Vec<f32>)> {
+    let mut rng = Rng::new(seed);
     let (params, targets) = layout.init_params(&mut rng);
     let step_in = [1.0f32];
     let hyper = [3e-4f32, 0.99, 0.005, -1.0, 1.0, 0.2];
@@ -200,6 +292,21 @@ fn native_full_step_is_bitwise_deterministic() {
         };
         named.push((name.clone(), buf));
     }
+    named
+}
+
+/// The tower-parallel native full step must be bitwise reproducible: same
+/// inputs → same outputs, across repeated runs of one step instance and
+/// across freshly-built instances (the q1/q2/actor towers race on wall
+/// clock, never on data). Runs under whatever kernel tier the session
+/// resolved — the `SPREEZE_SIMD` CI matrix covers both.
+#[test]
+fn native_full_step_is_bitwise_deterministic() {
+    let manifest = native_manifest();
+    let bs = 256;
+    let meta = manifest.find("pendulum", "sac", "full", bs).unwrap();
+    let layout = manifest.layout("pendulum", "sac").unwrap().clone();
+    let named = full_step_inputs(meta, &layout, 3);
     let inputs: Vec<&[f32]> = named.iter().map(|(_, b)| b.as_slice()).collect();
 
     let mut step = NativeStep::new(layout.clone(), "full", bs).unwrap();
@@ -213,5 +320,72 @@ fn native_full_step_is_bitwise_deterministic() {
     assert_eq!(first, other, "fresh instance diverged");
     for (i, out) in first.iter().enumerate() {
         assert!(out.iter().all(|x| x.is_finite()), "output {i} not finite");
+    }
+}
+
+/// The full SAC step is bitwise identical at any ops pool width — the
+/// row-only partitioning contract, which the SIMD tier must preserve (each
+/// dispatched path has a fixed per-element accumulation order regardless of
+/// how rows are split across lanes). Resizes the process-global pool in
+/// place and restores it.
+#[test]
+fn native_full_step_bits_hold_across_pool_widths() {
+    let manifest = native_manifest();
+    let bs = 256;
+    let meta = manifest.find("pendulum", "sac", "full", bs).unwrap();
+    let layout = manifest.layout("pendulum", "sac").unwrap().clone();
+    let named = full_step_inputs(meta, &layout, 29);
+    let inputs: Vec<&[f32]> = named.iter().map(|(_, b)| b.as_slice()).collect();
+
+    let pool = ops::global();
+    let prev = pool.threads();
+    pool.set_threads(1);
+    let mut narrow = NativeStep::new(layout.clone(), "full", bs).unwrap();
+    let serial = narrow.run(meta, &inputs).unwrap();
+    pool.set_threads(pool.max_threads());
+    let mut wide = NativeStep::new(layout, "full", bs).unwrap();
+    let pooled = wide.run(meta, &inputs).unwrap();
+    pool.set_threads(prev);
+    assert_eq!(serial, pooled, "pool width changed full-step bits");
+}
+
+/// Every gemm shape the five towers emit, for every env × algo × BS-ladder
+/// rung the native manifest enumerates, must resolve to a planned kernel —
+/// and narrow vector dims must never be planned onto the SIMD tier.
+#[test]
+fn dispatch_table_covers_every_manifest_ladder_shape() {
+    let manifest = native_manifest();
+    for env in ["pendulum", "walker", "cheetah", "ant", "humanoid", "humanoid_flagrun"] {
+        for algo in ["sac", "td3"] {
+            let Ok(layout) = manifest.layout(env, algo) else { continue };
+            let layout = layout.clone();
+            let actor = MlpGrad::from_segments(&layout.actor_segments, "actor/").unwrap();
+            let q1 = MlpGrad::from_segments(&layout.critic_segments, "q1/").unwrap();
+            let q2 = MlpGrad::from_segments(&layout.critic_segments, "q2/").unwrap();
+            for bs in manifest.batch_sizes(env, algo, "full") {
+                let table = step_dispatch_table(&layout, bs).unwrap();
+                assert!(!table.is_empty(), "{env}/{algo} bs {bs}: empty table");
+                let mut shapes = Vec::new();
+                for t in [&actor, &q1, &q2] {
+                    t.collect_shapes(bs, &mut shapes);
+                }
+                for s in &shapes {
+                    let k = table.get(s.op, s.dims).unwrap_or_else(|| {
+                        panic!("{env}/{algo} bs {bs}: shape {s:?} not in the table")
+                    });
+                    let vec_dim = match s.op {
+                        GemmOp::Nn | GemmOp::Tn => s.dims[2],
+                        GemmOp::Nt | GemmOp::Colsum => s.dims[1],
+                    };
+                    if vec_dim < 8 {
+                        assert_eq!(
+                            k.tier,
+                            Tier::Scalar,
+                            "{env}/{algo} bs {bs}: {s:?} too narrow for simd"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -7,7 +7,11 @@
 //! 2. every `Ordering::Relaxed` inside a *protocol module* (`bus`, `replay`,
 //!    `sampler/proc.rs`, `util/shm.rs`) must carry a `// relaxed-ok:`
 //!    rationale the same way. Relaxed is where cross-process seqlock bugs
-//!    hide; anything unexplained there is treated as a defect.
+//!    hide; anything unexplained there is treated as a defect;
+//! 3. vendor intrinsics (`std::arch` / `core::arch` paths, `_mm256_*` /
+//!    `_mm_*` names) may only appear in `src/nn/ops/avx2.rs`, and every
+//!    function in that file must be `#[target_feature]`-gated — intrinsics
+//!    reached from an ungated function are UB on CPUs without the feature.
 //!
 //! The scanner is a line-based tokenizer (std-only; no syn in the offline
 //! build): it strips `//` comments outside string literals before matching,
@@ -81,9 +85,25 @@ fn is_protocol_module(rel: &Path) -> bool {
         || p.ends_with("src/util/shm.rs")
 }
 
+/// The one file allowed to name vendor intrinsics (and in exchange, every
+/// `fn` in it must be `#[target_feature]`-gated).
+fn is_simd_module(rel: &Path) -> bool {
+    rel.to_string_lossy().replace('\\', "/").ends_with("src/nn/ops/avx2.rs")
+}
+
+/// Does this (comment-stripped) line mention a vendor intrinsic or the
+/// module paths that reach one?
+fn mentions_intrinsic(code: &str) -> bool {
+    code.contains("std::arch")
+        || code.contains("core::arch")
+        || code.contains("_mm256_")
+        || code.contains("_mm_")
+}
+
 fn lint_file(rel: &Path, text: &str, violations: &mut Vec<String>) {
     let lines: Vec<&str> = text.lines().collect();
     let protocol = is_protocol_module(rel);
+    let simd = is_simd_module(rel);
     for (i, raw) in lines.iter().enumerate() {
         let code = strip_line_comment(raw);
         if has_word(&code, "unsafe") && !annotated(&lines, i, "SAFETY:") {
@@ -99,6 +119,22 @@ fn lint_file(rel: &Path, text: &str, violations: &mut Vec<String>) {
             violations.push(format!(
                 "{}:{}: `Ordering::Relaxed` in a protocol module without a \
                  `// relaxed-ok:` rationale",
+                rel.display(),
+                i + 1
+            ));
+        }
+        if !simd && mentions_intrinsic(&code) {
+            violations.push(format!(
+                "{}:{}: vendor intrinsic outside src/nn/ops/avx2.rs (the only \
+                 `#[target_feature]`-gated module)",
+                rel.display(),
+                i + 1
+            ));
+        }
+        if simd && has_word(&code, "fn") && !annotated(&lines, i, "#[target_feature") {
+            violations.push(format!(
+                "{}:{}: function in src/nn/ops/avx2.rs without `#[target_feature]` \
+                 directly above — intrinsics in an ungated fn are UB off-AVX2",
                 rel.display(),
                 i + 1
             ));
@@ -222,6 +258,47 @@ mod tests {
         // Relaxed outside protocol modules needs no rationale.
         v.clear();
         lint_file(Path::new("src/nn/ops.rs"), "x.load(Ordering::Relaxed);\n", &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn intrinsics_are_confined_to_the_simd_module() {
+        let mut v = Vec::new();
+        lint_file(
+            Path::new("src/nn/ops.rs"),
+            "let x = _mm256_setzero_ps();\nuse core::arch::x86_64::__m256;\n",
+            &mut v,
+        );
+        assert_eq!(v.len(), 2, "{v:?}");
+        // prose and avx2.rs itself are fine
+        v.clear();
+        lint_file(Path::new("src/nn/ops.rs"), "// docs may say _mm256_fmadd_ps\n", &mut v);
+        assert!(v.is_empty(), "{v:?}");
+        v.clear();
+        lint_file(
+            Path::new("src/nn/ops/avx2.rs"),
+            "use core::arch::x86_64::__m256;\n",
+            &mut v,
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn simd_module_fns_must_be_feature_gated() {
+        let mut v = Vec::new();
+        lint_file(Path::new("src/nn/ops/avx2.rs"), "fn naked() {}\n", &mut v);
+        assert_eq!(v.len(), 1, "{v:?}");
+        v.clear();
+        lint_file(
+            Path::new("src/nn/ops/avx2.rs"),
+            "#[target_feature(enable = \"avx2\")]\n#[target_feature(enable = \"fma\")]\n\
+             pub(super) fn gated() {}\n",
+            &mut v,
+        );
+        assert!(v.is_empty(), "{v:?}");
+        // the same ungated fn outside avx2.rs is not this rule's business
+        v.clear();
+        lint_file(Path::new("src/nn/ops.rs"), "fn naked() {}\n", &mut v);
         assert!(v.is_empty(), "{v:?}");
     }
 
