@@ -13,11 +13,12 @@ use spreeze::config::presets;
 use spreeze::config::Algo;
 use spreeze::coordinator::metrics::MetricsHub;
 use spreeze::learner::model_parallel::ModelParallelLearner;
+use spreeze::learner::prefetch::PrefetchSource;
 use spreeze::learner::Learner;
 use spreeze::nn::ops;
 use spreeze::nn::ops::dispatch;
 use spreeze::replay::shm_ring::ShmSource;
-use spreeze::replay::{FrameSpec, ShmRing, ShmRingOptions};
+use spreeze::replay::{Batch, ExpSource, FrameSpec, ShmRing, ShmRingOptions};
 use spreeze::runtime::{default_artifacts_dir, Manifest};
 use spreeze::util::bench::Bench;
 use spreeze::util::rng::Rng;
@@ -110,6 +111,79 @@ fn gemm_kernels(window: std::time::Duration, max_bs: usize) {
     }
 }
 
+/// Update-pipeline rows (the `pipeline` JSON group): the replay gather in
+/// isolation (naive random-walk vs sorted/coalesced fast path) and the full
+/// learner step with the prefetch pipeline off vs on. `items` = batch rows,
+/// so items/s reads as gathered (or updated) frames per second.
+fn pipeline_rows(window: std::time::Duration, max_bs: usize, manifest: &Manifest) {
+    let b = Bench { window, json_group: Some("pipeline"), ..Default::default() };
+    println!("\n-- update pipeline: gather fast path + prefetch overlap --");
+
+    // gather-only: same RNG schedule, naive vs sorted order
+    let lay = manifest.layout("walker", "sac").unwrap().clone();
+    for bs in [256usize, 4096] {
+        if bs > max_bs {
+            continue;
+        }
+        let ring = filled_ring(lay.obs_dim, lay.act_dim, 64 * 1024);
+        let mut src = ShmSource::new(ring);
+        let mut batch = Batch::new(bs, lay.obs_dim, lay.act_dim);
+        let mut rng = Rng::new(41);
+        let naive = b.run(&format!("gather/naive/bs{bs}"), Some(bs as f64), || {
+            assert!(src.sample_batch(&mut rng, &mut batch))
+        });
+        naive.print();
+        let sorted = b.run(&format!("gather/sorted/bs{bs}"), Some(bs as f64), || {
+            assert!(src.sample_batch_sorted(&mut rng, &mut batch))
+        });
+        sorted.print();
+        println!("   bs{bs}: sorted/naive {:.2}x", naive.mean_ns / sorted.mean_ns);
+    }
+
+    // full step: serial inline gather vs the double-buffered prefetch lane
+    let cfg = presets::preset("walker");
+    let ladder = manifest.batch_sizes("walker", "sac", "full");
+    let max_ladder = ladder.iter().copied().max().unwrap_or(256);
+    for bs in ladder {
+        if bs > max_bs {
+            continue;
+        }
+        let mut results = Vec::new();
+        for on in [false, true] {
+            let ring = filled_ring(lay.obs_dim, lay.act_dim, 64 * 1024);
+            let source: Box<dyn ExpSource> = if on {
+                Box::new(
+                    PrefetchSource::spawn(
+                        Box::new(ShmSource::new(ring)),
+                        bs,
+                        max_ladder,
+                        lay.obs_dim,
+                        lay.act_dim,
+                        0,
+                    )
+                    .unwrap(),
+                )
+            } else {
+                Box::new(ShmSource::new(ring))
+            };
+            let mut learner = Learner::new(&cfg, manifest, bs, source).unwrap();
+            // drain warmup: the prefetch lane needs one pass to stage a batch
+            while !learner.try_update().unwrap() {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            let tag = if on { "prefetch_on" } else { "prefetch_off" };
+            let r = b.run(&format!("step/{tag}/bs{bs}"), Some(bs as f64), || {
+                // retry-loop instead of assert: a (rare) prefetch stall past
+                // the cap returns false and must not abort the bench
+                while !learner.try_update().unwrap() {}
+            });
+            r.print();
+            results.push(r.mean_ns);
+        }
+        println!("   bs{bs}: prefetch off/on {:.2}x", results[0] / results[1]);
+    }
+}
+
 fn filled_ring(obs_dim: usize, act_dim: usize, n: usize) -> Arc<ShmRing> {
     let spec = FrameSpec { obs_dim, act_dim };
     let ring =
@@ -138,6 +212,7 @@ fn main() {
 
     println!("== network update bench ({backend} backend) ==");
     gemm_kernels(window, max_bs);
+    pipeline_rows(window, max_bs, &manifest);
     println!();
     println!(
         "{:<30} {:>12} {:>14} {:>16}",

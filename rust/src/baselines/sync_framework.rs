@@ -172,6 +172,10 @@ impl Framework for SyncFramework {
                     n_samplers: self.n_envs,
                     envs_per_worker: 1,
                     ops_threads: crate::nn::ops::global().threads(),
+                    gather_s: 0.0,
+                    step_s: 0.0,
+                    prefetch_hits: 0,
+                    prefetch_stalls: 0,
                     services: topo.service_stats(),
                 });
                 prev_sampled = now_sampled;
@@ -221,6 +225,10 @@ impl Framework for SyncFramework {
             n_samplers: self.n_envs,
             envs_per_worker: 1,
             ops_threads: crate::nn::ops::global().threads(),
+            gather_s: 0.0,
+            step_s: 0.0,
+            prefetch_hits: 0,
+            prefetch_stalls: 0,
             service_stats,
             knob_trace: Vec::new(),
             curve,

@@ -118,6 +118,16 @@ pub struct Snapshot {
     pub envs_per_worker: usize,
     /// Effective `nn::ops` kernel-pool width (the ops-threads knob).
     pub ops_threads: usize,
+    /// Learner seconds spent in the batch gather this interval (with
+    /// prefetch on: just the buffer swap + stalls).
+    pub gather_s: f64,
+    /// Learner seconds spent in the network step this interval.
+    pub step_s: f64,
+    /// Cumulative prefetch swaps served without waiting (0 with the
+    /// pipeline off).
+    pub prefetch_hits: u64,
+    /// Cumulative prefetch swaps that found the gather still in flight.
+    pub prefetch_stalls: u64,
     /// Per-service `stats()` rows at snapshot time (`Service` lifecycle);
     /// not in the CSV — read them from `RunSummary::snapshots`.
     pub services: Vec<ServiceStats>,
@@ -127,12 +137,14 @@ impl Snapshot {
     pub fn csv_header() -> &'static str {
         "t_s,cpu_usage,sampling_hz,gpu_usage,update_frame_hz,update_hz,\
          transfer_cycle_s,loss_fraction,lap_hazards,weight_cycle_s,staleness,\
-         visible,latest_return,batch_size,n_samplers,envs_per_worker,ops_threads"
+         visible,latest_return,batch_size,n_samplers,envs_per_worker,ops_threads,\
+         gather_s,step_s,prefetch_hits,prefetch_stalls"
     }
 
     pub fn csv_row(&self) -> String {
         format!(
-            "{:.2},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4},{},{:.3},{:.4},{},{:.2},{},{},{},{}",
+            "{:.2},{:.3},{:.1},{:.3},{:.1},{:.2},{:.3},{:.4},{},{:.3},{:.4},{},{:.2},{},{},{},{},\
+             {:.4},{:.4},{},{}",
             self.t_s,
             self.cpu_usage,
             self.sampling_hz,
@@ -149,7 +161,11 @@ impl Snapshot {
             self.batch_size,
             self.n_samplers,
             self.envs_per_worker,
-            self.ops_threads
+            self.ops_threads,
+            self.gather_s,
+            self.step_s,
+            self.prefetch_hits,
+            self.prefetch_stalls
         )
     }
 }

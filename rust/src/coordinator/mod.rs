@@ -60,6 +60,17 @@ pub struct RunSummary {
     pub envs_per_worker: usize,
     /// Final effective `nn::ops` kernel-pool width (the ops-threads knob).
     pub ops_threads: usize,
+    /// Steady-state learner seconds per snapshot interval spent gathering
+    /// batches (with prefetch on: just the buffer swap + stalls).
+    pub gather_s: f64,
+    /// Steady-state learner seconds per snapshot interval in the network
+    /// step.
+    pub step_s: f64,
+    /// Total prefetch swaps served without waiting (0 with the pipeline
+    /// off).
+    pub prefetch_hits: u64,
+    /// Total prefetch swaps that found the gather still in flight.
+    pub prefetch_stalls: u64,
     /// Final per-service `Service::stats()` rows (sampled before shutdown).
     pub service_stats: Vec<ServiceStats>,
     /// Full adaptation trace: one record per window (telemetry, commands,
@@ -109,6 +120,8 @@ impl Coordinator {
         let mut prev_busy1 = topo.hub.exec_busy[1].snapshot();
         let mut prev_wpubs = topo.hub.weight_pubs.snapshot();
         let mut prev_stale = topo.hub.stale_frames.snapshot();
+        let mut prev_gather_ns = topo.learner.gather_ns();
+        let mut prev_step_ns = topo.learner.step_ns();
 
         loop {
             // stop conditions
@@ -169,6 +182,8 @@ impl Coordinator {
                 } else {
                     0.0
                 };
+                let now_gather_ns = topo.learner.gather_ns();
+                let now_step_ns = topo.learner.step_ns();
                 let snap = Snapshot {
                     t_s: wall,
                     cpu_usage: cpu_mon.sample(),
@@ -187,8 +202,18 @@ impl Coordinator {
                     n_samplers: topo.active_samplers(),
                     envs_per_worker: topo.envs_per_worker(),
                     ops_threads: crate::nn::ops::global().threads(),
+                    gather_s: (now_gather_ns - prev_gather_ns) as f64 / 1e9,
+                    step_s: (now_step_ns - prev_step_ns) as f64 / 1e9,
+                    prefetch_hits: topo.prefetch.as_ref().map(|p| p.shared.hits()).unwrap_or(0),
+                    prefetch_stalls: topo
+                        .prefetch
+                        .as_ref()
+                        .map(|p| p.shared.stalls())
+                        .unwrap_or(0),
                     services: topo.service_stats(),
                 };
+                prev_gather_ns = now_gather_ns;
+                prev_step_ns = now_step_ns;
                 prev_sampled = now_sampled;
                 prev_updates = now_updates;
                 prev_upframes = now_upframes;
@@ -262,6 +287,11 @@ impl Coordinator {
             .map(|p| p.active())
             .unwrap_or_else(|| pool_active_final(&snapshots));
         let knob_trace = topo.controller.as_ref().map(|c| c.trace.clone()).unwrap_or_default();
+        let (prefetch_hits, prefetch_stalls) = topo
+            .prefetch
+            .as_ref()
+            .map(|p| (p.shared.hits(), p.shared.stalls()))
+            .unwrap_or((0, 0));
         topo.shutdown_services();
         let curve = topo.curve.points.lock().unwrap().clone();
 
@@ -298,6 +328,10 @@ impl Coordinator {
             n_samplers: n_samplers_final,
             envs_per_worker,
             ops_threads: crate::nn::ops::global().threads(),
+            gather_s: mean(&|s| s.gather_s),
+            step_s: mean(&|s| s.step_s),
+            prefetch_hits,
+            prefetch_stalls,
             service_stats,
             knob_trace,
             curve,
@@ -349,6 +383,10 @@ impl Coordinator {
             ("n_samplers", num(s.n_samplers as f64)),
             ("envs_per_worker", num(s.envs_per_worker as f64)),
             ("ops_threads", num(s.ops_threads as f64)),
+            ("gather_s", num(s.gather_s)),
+            ("step_s", num(s.step_s)),
+            ("prefetch_hits", num(s.prefetch_hits as f64)),
+            ("prefetch_stalls", num(s.prefetch_stalls as f64)),
             ("knob_trace", knob_trace_json(&s.knob_trace)),
             (
                 "services",

@@ -26,6 +26,7 @@ use crate::coordinator::metrics::{MetricsHub, ServiceStats};
 use crate::env::registry::make_env;
 use crate::eval::{EvalCurve, EvalWorker};
 use crate::learner::model_parallel::ModelParallelLearner;
+use crate::learner::prefetch::{PrefetchHandle, PrefetchSource};
 use crate::learner::Learner;
 use crate::net::NetServer;
 use crate::nn::Layout;
@@ -210,6 +211,25 @@ impl Service for VizWorker {
     }
 }
 
+impl Service for PrefetchHandle {
+    fn service_name(&self) -> &'static str {
+        "prefetch"
+    }
+
+    fn stop_signal(&self) {
+        self.shared.stop();
+    }
+
+    /// The lane's thread is owned (and joined) by the learner's
+    /// `PrefetchSource`, which outlives service teardown — nothing to join
+    /// through the handle.
+    fn join(self: Box<Self>) {}
+
+    fn stats(&self) -> Vec<(&'static str, f64)> {
+        self.shared.stats_rows()
+    }
+}
+
 /// The learner variant behind one dispatch surface (single executor or the
 /// paper's dual-executor actor/critic split).
 pub enum LearnerKind {
@@ -257,6 +277,23 @@ impl LearnerKind {
         match self {
             LearnerKind::Single(l) => l.step,
             LearnerKind::ModelParallel(l) => l.step,
+        }
+    }
+
+    /// Cumulative nanoseconds the learner spent in `sample_batch` (the
+    /// gather, or just the buffer swap with prefetch on).
+    pub fn gather_ns(&self) -> u64 {
+        match self {
+            LearnerKind::Single(l) => l.gather_ns,
+            LearnerKind::ModelParallel(l) => l.gather_ns,
+        }
+    }
+
+    /// Cumulative nanoseconds the learner spent in the network step.
+    pub fn step_ns(&self) -> u64 {
+        match self {
+            LearnerKind::Single(l) => l.step_ns,
+            LearnerKind::ModelParallel(l) => l.step_ns,
         }
     }
 
@@ -463,6 +500,26 @@ impl TopologyBuilder {
             *ladder.iter().find(|&&b| b >= 2048).unwrap_or(ladder.last().context("no artifacts")?)
         };
 
+        // --- prefetch pipeline: wrap the experience source so the next
+        // minibatch gathers on a dedicated lane while the update step runs
+        // (`--prefetch off` / SPREEZE_PREFETCH=off keeps the serial inline
+        // gather — the deterministic-replay path)
+        let (source, prefetch) = if cfg.prefetch_enabled() {
+            let max_bs = ladder.iter().copied().max().unwrap_or(bs0).max(bs0);
+            let pf = PrefetchSource::spawn(
+                source,
+                bs0,
+                max_bs,
+                layout.obs_dim,
+                layout.act_dim,
+                cfg.seed,
+            )?;
+            let h = pf.handle();
+            (Box::new(pf) as Box<dyn ExpSource>, Some(h))
+        } else {
+            (source, None)
+        };
+
         // --- learner
         let learner = if use_mp {
             LearnerKind::ModelParallel(ModelParallelLearner::new(
@@ -590,6 +647,7 @@ impl TopologyBuilder {
             bus,
             sink,
             learner,
+            prefetch,
             pool,
             net,
             eval,
@@ -694,6 +752,10 @@ pub struct Topology {
     pub bus: Arc<dyn PolicyPub>,
     pub sink: Arc<dyn ExpSink>,
     pub learner: LearnerKind,
+    /// Stats handle for the prefetch lane (None with `--prefetch off`). The
+    /// lane's thread is owned by the learner's `PrefetchSource` and joins
+    /// when the learner drops.
+    pub prefetch: Option<PrefetchHandle>,
     pub pool: Option<SamplerService>,
     /// Remote actor listener (`--serve-addr`), None when not serving.
     pub net: Option<NetServer>,
@@ -771,6 +833,9 @@ impl Topology {
         if let Some(p) = &self.pool {
             push(p);
         }
+        if let Some(p) = &self.prefetch {
+            push(p);
+        }
         if let Some(n) = &self.net {
             push(n);
         }
@@ -787,6 +852,9 @@ impl Topology {
     /// first, then the joins, so teardown is one pass, not serialized waits.
     pub fn shutdown_services(&mut self) {
         let mut services: Vec<Box<dyn Service>> = Vec::new();
+        if let Some(p) = self.prefetch.take() {
+            services.push(Box::new(p));
+        }
         if let Some(p) = self.pool.take() {
             services.push(Box::new(p));
         }

@@ -8,6 +8,7 @@
 //! `actor`/`critic` modules on either backend without per-algorithm glue.
 
 pub mod model_parallel;
+pub mod prefetch;
 
 use anyhow::{bail, Result};
 
@@ -57,6 +58,12 @@ pub struct Learner {
     algo: Algo,
     policy_delay: u64,
     pub last_metrics: [f32; 8],
+    /// Cumulative nanoseconds spent gathering batches (`sample_batch`).
+    /// With prefetch on this is just the buffer-swap cost; the real gather
+    /// time moves to the prefetch lane's own counter.
+    pub gather_ns: u64,
+    /// Cumulative nanoseconds spent in the network step after the gather.
+    pub step_ns: u64,
 }
 
 impl Learner {
@@ -73,10 +80,24 @@ impl Learner {
         let mut rng = Rng::for_worker(cfg.seed, 0xC0FFEE);
         let (params, targets) = layout.init_params(&mut rng);
         let hyper = hyper_vec(cfg, layout.act_dim);
+        // Pre-size the staging batch (and noise) for the largest artifact on
+        // the BS ladder: switch_batch_size then resizes logically, never
+        // reallocating on the adaptation path.
+        let max_bs = manifest
+            .batch_sizes(&cfg.env, cfg.algo.name(), "full")
+            .into_iter()
+            .max()
+            .unwrap_or(bs)
+            .max(bs);
+        let noise = || {
+            let mut n = Vec::with_capacity(max_bs * layout.act_dim);
+            n.resize(bs * layout.act_dim, 0.0);
+            n
+        };
         Ok(Learner {
-            batch: Batch::new(bs, layout.obs_dim, layout.act_dim),
-            noise1: vec![0.0; bs * layout.act_dim],
-            noise2: vec![0.0; bs * layout.act_dim],
+            batch: Batch::with_max(bs, max_bs, layout.obs_dim, layout.act_dim),
+            noise1: noise(),
+            noise2: noise(),
             m: vec![0.0; layout.param_size],
             v: vec![0.0; layout.param_size],
             params,
@@ -87,6 +108,8 @@ impl Learner {
             algo: cfg.algo,
             policy_delay: cfg.policy_delay.max(1),
             last_metrics: [0.0; 8],
+            gather_ns: 0,
+            step_ns: 0,
             engine,
             exe,
             layout,
@@ -121,9 +144,11 @@ impl Learner {
         }
         let meta = manifest.find(&self.layout.env, self.algo.name(), "full", bs)?;
         self.exe = self.engine.load(manifest, meta)?;
-        self.batch = Batch::new(bs, self.layout.obs_dim, self.layout.act_dim);
-        self.noise1 = vec![0.0; bs * self.layout.act_dim];
-        self.noise2 = vec![0.0; bs * self.layout.act_dim];
+        // logical resize only — both buffers were pre-sized for the ladder max
+        self.batch.set_bs(bs);
+        self.noise1.resize(bs * self.layout.act_dim, 0.0);
+        self.noise2.resize(bs * self.layout.act_dim, 0.0);
+        self.source.notify_batch_size(bs);
         Ok(())
     }
 
@@ -135,9 +160,13 @@ impl Learner {
     /// One update if a batch is available. Returns false when the source
     /// has no data yet (the learner never blocks on samplers — paper Fig 4b).
     pub fn try_update(&mut self) -> Result<bool> {
-        if !self.source.sample_batch(&mut self.rng, &mut self.batch) {
+        let t0 = std::time::Instant::now();
+        let got = self.source.sample_batch(&mut self.rng, &mut self.batch);
+        self.gather_ns += t0.elapsed().as_nanos() as u64;
+        if !got {
             return Ok(false);
         }
+        let t1 = std::time::Instant::now();
         self.rng.fill_normal(&mut self.noise1);
         self.rng.fill_normal(&mut self.noise2);
         self.step += 1;
@@ -183,6 +212,7 @@ impl Learner {
                 other => bail!("unknown artifact output {other:?}"),
             }
         }
+        self.step_ns += t1.elapsed().as_nanos() as u64;
         Ok(true)
     }
 

@@ -128,6 +128,10 @@ pub struct ModelParallelLearner {
     /// Kept to respawn executors on a batch-size switch.
     hub: Arc<MetricsHub>,
     throttle: f64,
+    /// Cumulative nanoseconds spent gathering batches (`sample_batch`).
+    pub gather_ns: u64,
+    /// Cumulative nanoseconds spent in the dual-executor round after the gather.
+    pub step_ns: u64,
 }
 
 impl ModelParallelLearner {
@@ -150,10 +154,23 @@ impl ModelParallelLearner {
         let mut rng = Rng::for_worker(cfg.seed, 0xC0FFEE);
         let (params, targets) = layout.init_params(&mut rng);
         let (pa, pc) = (layout.actor_size, layout.critic_size);
+        // Pre-size staging buffers for the largest split-step artifact so
+        // switch_batch_size resizes logically without reallocating.
+        let max_bs = ["actor", "critic"]
+            .iter()
+            .flat_map(|f| manifest.batch_sizes(&cfg.env, "sac", f))
+            .max()
+            .unwrap_or(bs)
+            .max(bs);
+        let noise = || {
+            let mut n = Vec::with_capacity(max_bs * layout.act_dim);
+            n.resize(bs * layout.act_dim, 0.0);
+            n
+        };
         Ok(ModelParallelLearner {
-            batch: Batch::new(bs, layout.obs_dim, layout.act_dim),
-            noise1: vec![0.0; bs * layout.act_dim],
-            noise2: vec![0.0; bs * layout.act_dim],
+            batch: Batch::with_max(bs, max_bs, layout.obs_dim, layout.act_dim),
+            noise1: noise(),
+            noise2: noise(),
             actor_params: params[..pa].to_vec(),
             critic_params: params[pa..].to_vec(),
             targets,
@@ -171,6 +188,8 @@ impl ModelParallelLearner {
             critic_exec,
             hub,
             throttle,
+            gather_ns: 0,
+            step_ns: 0,
         })
     }
 
@@ -222,9 +241,11 @@ impl ModelParallelLearner {
         // old handles drop here → their executor threads exit and join
         self.actor_exec = new_actor;
         self.critic_exec = new_critic;
-        self.batch = Batch::new(bs, self.layout.obs_dim, self.layout.act_dim);
-        self.noise1 = vec![0.0; bs * self.layout.act_dim];
-        self.noise2 = vec![0.0; bs * self.layout.act_dim];
+        // logical resize only — buffers were pre-sized for the ladder max
+        self.batch.set_bs(bs);
+        self.noise1.resize(bs * self.layout.act_dim, 0.0);
+        self.noise2.resize(bs * self.layout.act_dim, 0.0);
+        self.source.notify_batch_size(bs);
         Ok(())
     }
 
@@ -250,9 +271,13 @@ impl ModelParallelLearner {
     /// One concurrent round: actor and critic artifacts run in parallel on
     /// their executors; halves are exchanged afterwards.
     pub fn try_update(&mut self) -> Result<bool> {
-        if !self.source.sample_batch(&mut self.rng, &mut self.batch) {
+        let t0 = std::time::Instant::now();
+        let got = self.source.sample_batch(&mut self.rng, &mut self.batch);
+        self.gather_ns += t0.elapsed().as_nanos() as u64;
+        if !got {
             return Ok(false);
         }
+        let t1 = std::time::Instant::now();
         self.rng.fill_normal(&mut self.noise1);
         self.rng.fill_normal(&mut self.noise2);
         self.step += 1;
@@ -331,6 +356,7 @@ impl ModelParallelLearner {
                 other => bail!("unexpected critic output {other:?}"),
             }
         }
+        self.step_ns += t1.elapsed().as_nanos() as u64;
         Ok(true)
     }
 }

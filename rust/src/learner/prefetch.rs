@@ -1,0 +1,341 @@
+//! Async minibatch prefetch pipeline: overlap the replay gather with the
+//! network update step.
+//!
+//! The learner's hot loop used to be serial — every `try_update` paid a
+//! memory-bound, RNG-scattered gather from the replay transport before the
+//! compute-bound network step could start. [`PrefetchSource`] hides that
+//! latency with a double buffer: a dedicated prefetch thread gathers the
+//! *next* minibatch (via the transport's sorted-gather fast path, from its
+//! own seeded RNG stream) into the idle buffer while the learner steps on
+//! the current one; the learner-side `sample_batch` then just swaps
+//! buffers — stalling, and counting the stall, only when the gather hasn't
+//! finished.
+//!
+//! Buffer-handoff protocol (two [`Batch`] buffers circulate, never copied —
+//! the learner's own staging batch is one half of the double buffer):
+//!
+//! ```text
+//!  learner thread                      prefetch thread
+//!  sample_batch():                     loop:
+//!    lock; swap batch <-> `ready` <──    wait for `free`; take it
+//!    old batch becomes `free` ──────>    set_bs; gather into it (own RNG)
+//!    (miss -> count stall, wait)         lock; publish as `ready` unless a
+//!                                          BS switch bumped the epoch
+//!                                          (then discard back to `free`)
+//! ```
+//!
+//! A `switch_batch_size` routes through [`ExpSource::notify_batch_size`]:
+//! it bumps the epoch so an in-flight gather at the old shape is discarded
+//! instead of published, and recycles any staged batch. Both buffers are
+//! ladder-max sized ([`Batch::with_max`]), so the resize is logical — no
+//! allocation on the adaptation path.
+//!
+//! Determinism contract: with prefetch ON the gather runs on the pipeline's
+//! own RNG stream ([`PREFETCH_RNG_STREAM`]), so batch composition follows a
+//! different (still deterministic per seed, but timing-interleaved)
+//! schedule than the serial loop. `--prefetch off` / `SPREEZE_PREFETCH=off`
+//! keeps the learner's inline gather, bitwise-identical to the pre-pipeline
+//! behavior — the path pinned for deterministic replay and Miri. See
+//! `docs/PIPELINE.md`.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::replay::{Batch, ExpSource, TransportStats};
+use crate::util::rng::Rng;
+use crate::util::sync::{AtomicBool, AtomicU64, Ordering};
+
+/// Dedicated RNG stream id for the prefetch lane — disjoint from the
+/// sampler worker ids and the learner's own `0xC0FFEE` stream.
+pub const PREFETCH_RNG_STREAM: u64 = 0x5052_4546; // "PREF"
+
+/// Longest time `sample_batch` blocks on an unfinished gather before
+/// reporting "no batch yet" back to the learner loop (which sleeps and
+/// retries). Keeps the coordinator responsive to stop conditions even if
+/// the underlying source starves mid-run.
+const STALL_CAP: Duration = Duration::from_millis(100);
+
+/// Prefetch-thread poll period while the underlying source cannot serve a
+/// batch yet (replay warmup).
+const WARMUP_POLL: Duration = Duration::from_micros(500);
+
+/// Mutex-guarded half of the handoff state. The two `Option<Batch>` slots
+/// plus the batch held by the learner and the one held mid-gather by the
+/// prefetch thread always sum to exactly two buffers.
+struct State {
+    /// Gathered batch staged for the learner's next swap.
+    ready: Option<Batch>,
+    /// Idle buffer the prefetch thread may gather into.
+    free: Option<Batch>,
+    /// Current logical batch size (BS-ladder switches update this).
+    bs: usize,
+    /// Bumped by every BS switch: a gather started under an older epoch is
+    /// discarded instead of published (its shape is stale).
+    epoch: u64,
+}
+
+/// State shared between the learner-facing source, the prefetch thread,
+/// and the topology's stats handle.
+pub struct PrefetchShared {
+    state: Mutex<State>,
+    cv: Condvar,
+    stop: AtomicBool,
+    /// Underlying source's `visible()` as last observed by the prefetch
+    /// thread — the learner-side warmup gate reads this without blocking.
+    visible: AtomicU64,
+    /// Swaps served from an already-staged batch (no waiting).
+    hits: AtomicU64,
+    /// Swaps that found data available but no staged batch (pipeline
+    /// stall: the gather was still in flight).
+    stalls: AtomicU64,
+    /// Completed prefetch gathers (published batches).
+    gathers: AtomicU64,
+    /// In-flight or staged batches discarded by a BS switch.
+    invalidated: AtomicU64,
+    /// Prefetch-lane nanoseconds spent inside the transport gather.
+    gather_ns: AtomicU64,
+    /// Learner-side nanoseconds spent stalled waiting for a batch.
+    stall_ns: AtomicU64,
+    /// Underlying transport stats as last refreshed by the prefetch thread.
+    tstats: Mutex<TransportStats>,
+}
+
+impl PrefetchShared {
+    pub fn hits(&self) -> u64 {
+        // relaxed-ok: stats read, no synchronization implied
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn stalls(&self) -> u64 {
+        // relaxed-ok: stats read, no synchronization implied
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    pub fn invalidated(&self) -> u64 {
+        // relaxed-ok: stats read, no synchronization implied
+        self.invalidated.load(Ordering::Relaxed)
+    }
+
+    /// `Service::stats`-shaped rows for `Snapshot.services` / summary.json.
+    pub fn stats_rows(&self) -> Vec<(&'static str, f64)> {
+        // relaxed-ok: stats reads, no synchronization implied
+        let hits = self.hits.load(Ordering::Relaxed) as f64;
+        // relaxed-ok: stats read, no synchronization implied
+        let stalls = self.stalls.load(Ordering::Relaxed) as f64;
+        let served = hits + stalls;
+        vec![
+            ("hits", hits),
+            ("stalls", stalls),
+            // relaxed-ok: stats read, no synchronization implied
+            ("gathers", self.gathers.load(Ordering::Relaxed) as f64),
+            // relaxed-ok: stats read, no synchronization implied
+            ("invalidated", self.invalidated.load(Ordering::Relaxed) as f64),
+            // relaxed-ok: stats read, no synchronization implied
+            ("gather_s", self.gather_ns.load(Ordering::Relaxed) as f64 / 1e9),
+            // relaxed-ok: stats read, no synchronization implied
+            ("stall_s", self.stall_ns.load(Ordering::Relaxed) as f64 / 1e9),
+            ("hit_rate", if served > 0.0 { hits / served } else { 0.0 }),
+        ]
+    }
+
+    /// Ask the prefetch thread to exit (idempotent; the owning
+    /// [`PrefetchSource`]'s drop joins it).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+/// Topology-facing handle: the prefetch lane's stats surface, shaped like
+/// every other `Service`. Holds no thread — the learner's
+/// [`PrefetchSource`] owns the thread and joins it on drop.
+#[derive(Clone)]
+pub struct PrefetchHandle {
+    pub shared: Arc<PrefetchShared>,
+}
+
+/// Learner-facing half of the pipeline: implements [`ExpSource`] by
+/// swapping staged buffers with the prefetch thread. Owns the thread
+/// (signalled and joined on drop). The wrapped transport moves into the
+/// thread; its `visible()`/`stats()` are mirrored through [`PrefetchShared`]
+/// so the learner-side trait surface never blocks on the gather.
+pub struct PrefetchSource {
+    shared: Arc<PrefetchShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl PrefetchSource {
+    /// Wrap `source` in the prefetch pipeline. `bs` is the starting batch
+    /// size, `max_bs` the BS-ladder max both circulating buffers are sized
+    /// for, and `seed` the run seed (the lane derives its own RNG stream).
+    pub fn spawn(
+        source: Box<dyn ExpSource>,
+        bs: usize,
+        max_bs: usize,
+        obs_dim: usize,
+        act_dim: usize,
+        seed: u64,
+    ) -> Result<PrefetchSource> {
+        let shared = Arc::new(PrefetchShared {
+            state: Mutex::new(State {
+                ready: None,
+                free: Some(Batch::with_max(bs, max_bs, obs_dim, act_dim)),
+                bs,
+                epoch: 0,
+            }),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            visible: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            gathers: AtomicU64::new(0),
+            invalidated: AtomicU64::new(0),
+            gather_ns: AtomicU64::new(0),
+            stall_ns: AtomicU64::new(0),
+            tstats: Mutex::new(TransportStats::default()),
+        });
+        let sh = shared.clone();
+        let mut src = source;
+        let handle = std::thread::Builder::new()
+            .name("prefetch".into())
+            .spawn(move || prefetch_loop(src.as_mut(), &sh, seed))?;
+        Ok(PrefetchSource { shared, handle: Some(handle) })
+    }
+
+    pub fn handle(&self) -> PrefetchHandle {
+        PrefetchHandle { shared: self.shared.clone() }
+    }
+}
+
+/// The prefetch thread: wait for an idle buffer, gather into it via the
+/// transport's sorted fast path, publish it as `ready` — unless a BS
+/// switch bumped the epoch mid-gather, in which case the stale-shaped
+/// batch is recycled and the gather retried at the new size.
+fn prefetch_loop(source: &mut dyn ExpSource, sh: &PrefetchShared, seed: u64) {
+    let mut rng = Rng::for_worker(seed, PREFETCH_RNG_STREAM);
+    loop {
+        // wait for an idle buffer (or the stop signal)
+        let (mut buf, epoch, bs) = {
+            let mut g = sh.state.lock().unwrap();
+            loop {
+                if sh.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                if let Some(b) = g.free.take() {
+                    break (b, g.epoch, g.bs);
+                }
+                // timeout-bounded so a lost wakeup can never hang the lane
+                let (gg, _) = sh.cv.wait_timeout(g, Duration::from_millis(5)).unwrap();
+                g = gg;
+            }
+        };
+        buf.set_bs(bs);
+        let t0 = Instant::now();
+        let ok = source.sample_batch_sorted(&mut rng, &mut buf);
+        // relaxed-ok: timing telemetry, no data guarded by it
+        sh.gather_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        // relaxed-ok: published count is advisory (warmup gate + snapshot
+        // stat); batch handoff itself synchronizes through the mutex
+        sh.visible.store(source.visible() as u64, Ordering::Relaxed);
+        *sh.tstats.lock().unwrap() = source.stats();
+        let mut g = sh.state.lock().unwrap();
+        if g.epoch != epoch {
+            // a BS switch landed mid-gather: the shape is stale, recycle
+            // relaxed-ok: stats counter, no data guarded by it
+            sh.invalidated.fetch_add(1, Ordering::Relaxed);
+            g.free = Some(buf);
+        } else if ok {
+            // relaxed-ok: stats counter, no data guarded by it
+            sh.gathers.fetch_add(1, Ordering::Relaxed);
+            g.ready = Some(buf);
+            sh.cv.notify_all();
+        } else {
+            // source can't serve yet (replay warmup): hand the buffer back
+            // and poll instead of spinning on an empty transport
+            g.free = Some(buf);
+            drop(g);
+            std::thread::sleep(WARMUP_POLL);
+        }
+    }
+}
+
+impl ExpSource for PrefetchSource {
+    /// Swap the learner's batch with the staged one. The learner's own RNG
+    /// is untouched — batch composition comes from the prefetch lane's
+    /// stream. Returns false during replay warmup (nothing visible yet) or
+    /// when a stall outlasts [`STALL_CAP`].
+    fn sample_batch(&mut self, _rng: &mut Rng, batch: &mut Batch) -> bool {
+        let sh = &self.shared;
+        let mut g = sh.state.lock().unwrap();
+        if g.ready.is_none() {
+            // relaxed-ok: warmup gate on an advisory counter; a stale read
+            // only delays the first batch by one poll
+            if sh.visible.load(Ordering::Relaxed) == 0 {
+                return false; // warmup: the transport has nothing yet
+            }
+            // data exists but the gather hasn't finished: a pipeline stall
+            // relaxed-ok: stats counter, no data guarded by it
+            sh.stalls.fetch_add(1, Ordering::Relaxed);
+            let t0 = Instant::now();
+            while g.ready.is_none() {
+                if sh.stop.load(Ordering::Acquire) || t0.elapsed() > STALL_CAP {
+                    // relaxed-ok: timing telemetry, no data guarded by it
+                    sh.stall_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    return false;
+                }
+                let (gg, _) = sh.cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+                g = gg;
+            }
+            // relaxed-ok: timing telemetry, no data guarded by it
+            sh.stall_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        } else {
+            // relaxed-ok: stats counter, no data guarded by it
+            sh.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut staged = g.ready.take().expect("ready checked above");
+        std::mem::swap(batch, &mut staged);
+        g.free = Some(staged);
+        sh.cv.notify_all();
+        true
+    }
+
+    fn notify_batch_size(&mut self, bs: usize) {
+        let sh = &self.shared;
+        let mut g = sh.state.lock().unwrap();
+        if g.bs == bs {
+            return;
+        }
+        g.bs = bs;
+        g.epoch += 1;
+        // a batch already staged at the old size is stale: recycle it
+        if let Some(b) = g.ready.take() {
+            // relaxed-ok: stats counter, no data guarded by it
+            sh.invalidated.fetch_add(1, Ordering::Relaxed);
+            g.free = Some(b);
+        }
+        sh.cv.notify_all();
+    }
+
+    fn visible(&self) -> usize {
+        // relaxed-ok: advisory mirror of the wrapped source's visible(),
+        // refreshed each prefetch iteration; staleness only shifts the
+        // coordinator's warmup gate by one poll
+        self.shared.visible.load(Ordering::Relaxed) as usize
+    }
+
+    fn stats(&self) -> TransportStats {
+        *self.shared.tstats.lock().unwrap()
+    }
+}
+
+impl Drop for PrefetchSource {
+    fn drop(&mut self) {
+        self.shared.stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

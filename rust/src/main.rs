@@ -159,6 +159,8 @@ COMMANDS
              --envs-per-worker K (batched sampler: K envs per worker)
              --ops-threads N (nn::ops kernel pool width; 0 = auto)
              --simd auto|on|off (nn::ops AVX2+FMA kernel tier; default auto)
+             --prefetch auto|on|off (async minibatch prefetch pipeline;
+               off = serial deterministic gather; SPREEZE_PREFETCH wins)
              --queue-size N (queue transport instead of shared memory)
              --weight-transport shm|file (policy weight path; default shm)
              --topology threads|procs (sampler workers as threads or

@@ -10,7 +10,7 @@ pub mod transport;
 
 pub use queue_buf::QueueBuffer;
 pub use shm_ring::{ShmRing, ShmRingOptions};
-pub use transport::{Batch, ExpSink, ExpSource, TransportStats};
+pub use transport::{gather_uniform, Batch, ExpSink, ExpSource, GatherIdx, TransportStats};
 
 /// Frame layout in every transport: [s (obs), a (act), r, done, s2 (obs)].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,6 +44,36 @@ impl FrameSpec {
         batch.r[i] = frame[o + k];
         batch.d[i] = frame[o + k + 1];
         batch.s2[i * o..(i + 1) * o].copy_from_slice(&frame[o + k + 2..]);
+    }
+
+    /// Unpack a frame addressed by raw pointer — a seqlock-guarded ring slot
+    /// read *without* staging through a scratch buffer (the sorted-gather
+    /// single-copy path). No `&[f32]` is materialized over the slot: a
+    /// concurrent writer may be overwriting it, and the caller only keeps
+    /// the copied row after its sequence-word recheck passes.
+    ///
+    /// # Safety
+    /// `frame` must point at `self.f32s()` readable f32s, `i < batch.bs`,
+    /// and the batch dims must match this spec. The copied values are
+    /// garbage until the caller revalidates the slot's sequence word.
+    #[inline]
+    pub unsafe fn unpack_raw(&self, frame: *const f32, batch: &mut Batch, i: usize) {
+        let (o, k) = (self.obs_dim, self.act_dim);
+        debug_assert!(i < batch.bs && batch.obs_dim == o && batch.act_dim == k);
+        // SAFETY: caller contract above — frame spans f32s() readable f32s
+        // and row i is in bounds of every column, so each copy stays inside
+        // both the slot and the destination vectors.
+        unsafe {
+            std::ptr::copy_nonoverlapping(frame, batch.s.as_mut_ptr().add(i * o), o);
+            std::ptr::copy_nonoverlapping(frame.add(o), batch.a.as_mut_ptr().add(i * k), k);
+            batch.r[i] = frame.add(o + k).read();
+            batch.d[i] = frame.add(o + k + 1).read();
+            std::ptr::copy_nonoverlapping(
+                frame.add(o + k + 2),
+                batch.s2.as_mut_ptr().add(i * o),
+                o,
+            );
+        }
     }
 }
 

@@ -13,7 +13,7 @@ use crate::util::sync::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::transport::{Batch, ExpSink, ExpSource, TransportStats};
+use super::transport::{gather_uniform, Batch, ExpSink, ExpSource, GatherIdx, TransportStats};
 use super::FrameSpec;
 use crate::util::rng::Rng;
 
@@ -125,6 +125,7 @@ pub struct QueueSource {
     last_drain: Instant,
     cycle_ewma: f64,
     drains: u64,
+    idx: GatherIdx,
 }
 
 impl QueueSource {
@@ -138,6 +139,7 @@ impl QueueSource {
             last_drain: Instant::now(),
             cycle_ewma: 0.0,
             drains: 0,
+            idx: GatherIdx::default(),
         }
     }
 
@@ -183,9 +185,26 @@ impl ExpSource for QueueSource {
             return false;
         }
         let spec = self.queue.spec;
-        for i in 0..batch.bs {
-            let idx = rng.below(self.filled as u64) as usize;
-            spec.unpack_into(&self.pool[idx], batch, i);
+        let pool = &self.pool;
+        // pool reads never tear (learner-local), so the driver never retries
+        gather_uniform(rng, self.filled, batch.bs, |slot, row| {
+            spec.unpack_into(&pool[slot], batch, row);
+            true
+        })
+    }
+
+    /// Sorted gather over the local pool: same draws as the naive path
+    /// (bitwise-identical batch from the same RNG state), visited in pool
+    /// order so the frame `Vec` headers — and usually their payloads —
+    /// stream through cache instead of thrashing it.
+    fn sample_batch_sorted(&mut self, rng: &mut Rng, batch: &mut Batch) -> bool {
+        self.drain(self.filled < batch.bs);
+        if self.filled == 0 {
+            return false;
+        }
+        let spec = self.queue.spec;
+        for &(slot, row) in self.idx.draw_sorted(rng, self.filled, batch.bs) {
+            spec.unpack_into(&self.pool[slot as usize], batch, row as usize);
         }
         true
     }

@@ -25,7 +25,7 @@ use crate::util::sync::{AtomicU32, AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
-use super::transport::{Batch, ExpSink, ExpSource, TransportStats};
+use super::transport::{gather_uniform, Batch, ExpSink, ExpSource, GatherIdx, TransportStats};
 use super::FrameSpec;
 use crate::util::rng::Rng;
 use crate::util::shm::{shm_path, Mapping};
@@ -259,6 +259,51 @@ impl ShmRing {
         seq.load(Ordering::Acquire) == s1
     }
 
+    /// Amortized seqlock read of one sorted run of adjacent slots
+    /// (`pairs` = `(slot, batch_row)` with slots ascending, gaps ≤ 1):
+    /// capture every slot's sequence word, copy all rows straight from the
+    /// contiguous data region into the batch columns (single copy — no
+    /// scratch staging), then revalidate the whole run behind one fence.
+    /// One validation pass per run instead of one per row. Returns false —
+    /// the run's batch rows are garbage and must be re-read — when any slot
+    /// was empty, mid-write, or overwritten during the copy.
+    fn read_run_sorted(
+        &self,
+        pairs: &[(u32, u32)],
+        seqs: &mut Vec<u64>,
+        batch: &mut Batch,
+    ) -> bool {
+        seqs.clear();
+        for &(slot, _) in pairs {
+            let s = self.seq(slot as usize).load(Ordering::Acquire);
+            if s == 0 || s & 1 == 1 {
+                return false;
+            }
+            seqs.push(s);
+        }
+        for &(slot, row) in pairs {
+            // SAFETY: data(slot) addresses `self.frame` f32s inside the
+            // mapping and row < batch.bs (drawn by GatherIdx over this
+            // batch); a concurrent overwrite may race these copies, which
+            // the sequence recheck below rejects — the try_read contract,
+            // amortized over the run.
+            unsafe {
+                self.spec.unpack_raw(self.data(slot as usize), batch, row as usize);
+            }
+        }
+        crate::util::sync::fence(Ordering::Acquire);
+        for (&(slot, _), &s1) in pairs.iter().zip(seqs.iter()) {
+            if self.seq(slot as usize).load(Ordering::Acquire) != s1 {
+                return false;
+            }
+        }
+        for &(slot, _) in pairs {
+            // relaxed-ok: advisory sampled mark; protects no data
+            self.flag(slot as usize).store(1, Ordering::Relaxed);
+        }
+        true
+    }
+
     pub fn ring_stats(&self) -> TransportStats {
         TransportStats {
             pushed: self.cursor(),
@@ -285,45 +330,103 @@ impl ExpSink for ShmRing {
     }
 }
 
-/// Learner-side sampler over a shared ring (owns its scratch frame).
+/// Longest run of adjacent slots validated as one unit by the sorted
+/// gather: bounds the window a concurrent writer can tear (a torn run
+/// falls back to per-row reads) while keeping the per-run fence amortized.
+const MAX_RUN: usize = 64;
+
+/// Learner-side sampler over a shared ring (owns its scratch frame and the
+/// sorted-gather index/sequence scratch).
 pub struct ShmSource {
     pub ring: std::sync::Arc<ShmRing>,
     scratch: Vec<f32>,
+    idx: GatherIdx,
+    seqs: Vec<u64>,
 }
 
 impl ShmSource {
     pub fn new(ring: std::sync::Arc<ShmRing>) -> Self {
         let scratch = vec![0.0; ring.frame];
-        ShmSource { ring, scratch }
+        ShmSource { ring, scratch, idx: GatherIdx::default(), seqs: Vec::new() }
     }
 }
 
 impl ExpSource for ShmSource {
     fn sample_batch(&mut self, rng: &mut Rng, batch: &mut Batch) -> bool {
         let visible = self.ring.visible_now();
-        if visible < batch.bs.min(1) || visible == 0 {
+        if visible == 0 {
             return false;
         }
         let spec = self.ring.spec;
+        let ring = &self.ring;
+        let scratch = &mut self.scratch;
         let mut sampled = 0u64;
-        for i in 0..batch.bs {
-            // retry torn/in-progress slots with fresh indices
-            let mut tries = 0;
-            loop {
-                let slot = rng.below(visible as u64) as usize;
-                if self.ring.try_read(slot, &mut self.scratch) {
-                    // relaxed-ok: advisory sampled mark; protects no data
-                    self.ring.flag(slot).store(1, Ordering::Relaxed);
-                    spec.unpack_into(&self.scratch, batch, i);
-                    sampled += 1;
-                    break;
-                }
-                tries += 1;
-                if tries > 64 {
-                    // pathological contention: give up on this batch
-                    return false;
+        // retry torn/in-progress slots with fresh indices (shared driver)
+        if !gather_uniform(rng, visible, batch.bs, |slot, row| {
+            if ring.try_read(slot, scratch) {
+                // relaxed-ok: advisory sampled mark; protects no data
+                ring.flag(slot).store(1, Ordering::Relaxed);
+                spec.unpack_into(scratch, batch, row);
+                sampled += 1;
+                true
+            } else {
+                false
+            }
+        }) {
+            return false;
+        }
+        // relaxed-ok: stats counter, no data guarded by it
+        self.ring.hdr(5).fetch_add(sampled, Ordering::Relaxed);
+        true
+    }
+
+    /// Sorted gather: draw all indices up front, sort them, then read runs
+    /// of adjacent slots with one seqlock validation pass per run and a
+    /// single copy per row (ring → batch, no scratch staging). On a
+    /// quiescent ring this fills a batch bitwise-identical to
+    /// [`ExpSource::sample_batch`] from the same RNG state — the sorted
+    /// pairs keep each draw's destination row.
+    fn sample_batch_sorted(&mut self, rng: &mut Rng, batch: &mut Batch) -> bool {
+        let visible = self.ring.visible_now();
+        if visible == 0 {
+            return false;
+        }
+        let spec = self.ring.spec;
+        let pairs = self.idx.draw_sorted(rng, visible, batch.bs);
+        let mut sampled = 0u64;
+        let mut i = 0;
+        while i < pairs.len() {
+            // maximal run: ascending slots with gaps ≤ 1 (duplicates ok)
+            let mut j = i + 1;
+            while j < pairs.len() && pairs[j].0 - pairs[j - 1].0 <= 1 && j - i < MAX_RUN {
+                j += 1;
+            }
+            let run = &pairs[i..j];
+            if self.ring.read_run_sorted(run, &mut self.seqs, batch) {
+                sampled += run.len() as u64;
+            } else {
+                // torn run: per-row fallback, fresh index on repeated misses
+                for &(slot0, row) in run {
+                    let mut slot = slot0 as usize;
+                    let mut tries = 0;
+                    loop {
+                        if self.ring.try_read(slot, &mut self.scratch) {
+                            // relaxed-ok: advisory sampled mark; protects no data
+                            self.ring.flag(slot).store(1, Ordering::Relaxed);
+                            spec.unpack_into(&self.scratch, batch, row as usize);
+                            sampled += 1;
+                            break;
+                        }
+                        tries += 1;
+                        if tries > 64 {
+                            // pathological contention: give up on this batch
+                            return false;
+                        }
+                        slot = rng.below(visible as u64) as usize;
+                    }
                 }
             }
+            i = j;
         }
         // relaxed-ok: stats counter, no data guarded by it
         self.ring.hdr(5).fetch_add(sampled, Ordering::Relaxed);

@@ -21,16 +21,37 @@ pub struct Batch {
 
 impl Batch {
     pub fn new(bs: usize, obs_dim: usize, act_dim: usize) -> Self {
-        Batch {
-            bs,
+        Self::with_max(bs, bs, obs_dim, act_dim)
+    }
+
+    /// Like [`Batch::new`], but with row capacity reserved for `max_bs`:
+    /// later [`Batch::set_bs`] calls up to `max_bs` never reallocate, so
+    /// BS-ladder switches reuse one allocation for the life of the learner.
+    pub fn with_max(bs: usize, max_bs: usize, obs_dim: usize, act_dim: usize) -> Self {
+        let max = max_bs.max(bs);
+        let mut b = Batch {
+            bs: 0,
             obs_dim,
             act_dim,
-            s: vec![0.0; bs * obs_dim],
-            a: vec![0.0; bs * act_dim],
-            r: vec![0.0; bs],
-            d: vec![0.0; bs],
-            s2: vec![0.0; bs * obs_dim],
-        }
+            s: Vec::with_capacity(max * obs_dim),
+            a: Vec::with_capacity(max * act_dim),
+            r: Vec::with_capacity(max),
+            d: Vec::with_capacity(max),
+            s2: Vec::with_capacity(max * obs_dim),
+        };
+        b.set_bs(bs);
+        b
+    }
+
+    /// Logically resize to `bs` rows (grown rows are zero-filled). Within
+    /// the capacity reserved by [`Batch::with_max`] this never allocates.
+    pub fn set_bs(&mut self, bs: usize) {
+        self.bs = bs;
+        self.s.resize(bs * self.obs_dim, 0.0);
+        self.a.resize(bs * self.act_dim, 0.0);
+        self.r.resize(bs, 0.0);
+        self.d.resize(bs, 0.0);
+        self.s2.resize(bs * self.obs_dim, 0.0);
     }
 }
 
@@ -92,6 +113,149 @@ pub trait ExpSink: Send + Sync {
 pub trait ExpSource: Send {
     /// Returns false if there is not yet enough visible experience.
     fn sample_batch(&mut self, rng: &mut Rng, batch: &mut Batch) -> bool;
+
+    /// Sorted-index gather fast path: same uniform distribution (and, on a
+    /// quiescent transport, the same RNG consumption) as [`sample_batch`],
+    /// but the drawn indices are visited in ascending storage order so the
+    /// transport walks memory sequentially and may coalesce runs of
+    /// adjacent slots into single validated copies. Transports without a
+    /// locality story fall back to the naive gather.
+    ///
+    /// [`sample_batch`]: ExpSource::sample_batch
+    fn sample_batch_sorted(&mut self, rng: &mut Rng, batch: &mut Batch) -> bool {
+        self.sample_batch(rng, batch)
+    }
+
+    /// The learner's batch size changed (a BS-ladder switch). Sources that
+    /// stage batches ahead of time (the prefetch pipeline) must invalidate
+    /// in-flight work; plain transports have nothing staged and ignore it.
+    fn notify_batch_size(&mut self, _bs: usize) {}
+
     fn visible(&self) -> usize;
     fn stats(&self) -> TransportStats;
+}
+
+/// Shared uniform-gather driver for every transport's naive path: draw one
+/// index per batch row over `visible`, delegating the (possibly fallible)
+/// row read to `read_row(slot, row)`. A failed read — a torn seqlock slot —
+/// retries with a fresh index, giving up on the whole batch after 64
+/// consecutive misses on one row (pathological contention). RNG consumption
+/// is exactly one draw per attempted read, so transports that never fail a
+/// read consume exactly `bs` draws.
+pub fn gather_uniform(
+    rng: &mut Rng,
+    visible: usize,
+    bs: usize,
+    mut read_row: impl FnMut(usize, usize) -> bool,
+) -> bool {
+    for row in 0..bs {
+        let mut tries = 0;
+        loop {
+            let slot = rng.below(visible as u64) as usize;
+            if read_row(slot, row) {
+                break;
+            }
+            tries += 1;
+            if tries > 64 {
+                // pathological contention: give up on this batch
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Reusable index scratch for the sorted-gather fast path: `(slot, row)`
+/// pairs drawn uniformly and then sorted by slot, so the transport walks
+/// its storage in address order and can coalesce runs of adjacent slots.
+#[derive(Debug, Default)]
+pub struct GatherIdx {
+    pairs: Vec<(u32, u32)>,
+}
+
+impl GatherIdx {
+    /// Draw `bs` uniform slots over `visible` — identical RNG consumption
+    /// to the naive gather — and sort by slot, keeping each draw's
+    /// destination batch row. The sorted gather therefore writes the exact
+    /// rows the naive gather would have, just in storage order.
+    pub fn draw_sorted(&mut self, rng: &mut Rng, visible: usize, bs: usize) -> &[(u32, u32)] {
+        debug_assert!(visible as u64 <= u32::MAX as u64);
+        self.pairs.clear();
+        self.pairs.reserve(bs);
+        for row in 0..bs {
+            self.pairs.push((rng.below(visible as u64) as u32, row as u32));
+        }
+        self.pairs.sort_unstable();
+        &self.pairs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_max_reserves_and_set_bs_never_reallocates() {
+        let mut b = Batch::with_max(64, 4096, 17, 6);
+        assert_eq!(b.bs, 64);
+        assert_eq!(b.s.len(), 64 * 17);
+        let caps =
+            (b.s.capacity(), b.a.capacity(), b.r.capacity(), b.d.capacity(), b.s2.capacity());
+        let ptrs = (b.s.as_ptr(), b.a.as_ptr(), b.r.as_ptr(), b.d.as_ptr(), b.s2.as_ptr());
+        // walk the whole ladder up and down: no column may move or regrow
+        for bs in [256usize, 4096, 64, 1024, 4096, 64] {
+            b.set_bs(bs);
+            assert_eq!(b.bs, bs);
+            assert_eq!(b.s.len(), bs * 17);
+            assert_eq!(b.a.len(), bs * 6);
+            assert_eq!(b.r.len(), bs);
+            assert_eq!(b.s2.len(), bs * 17);
+            let now =
+                (b.s.capacity(), b.a.capacity(), b.r.capacity(), b.d.capacity(), b.s2.capacity());
+            assert_eq!(now, caps, "capacity changed at bs={bs}");
+            let p = (b.s.as_ptr(), b.a.as_ptr(), b.r.as_ptr(), b.d.as_ptr(), b.s2.as_ptr());
+            assert_eq!(p, ptrs, "allocation moved at bs={bs}");
+        }
+        // Batch::new keeps its exact-fit meaning for non-ladder callers
+        let exact = Batch::new(8, 3, 2);
+        assert_eq!((exact.bs, exact.s.len()), (8, 24));
+    }
+
+    #[test]
+    fn draw_sorted_matches_naive_draws_and_is_sorted() {
+        let mut idx = GatherIdx::default();
+        let mut a = Rng::for_worker(3, 7);
+        let mut b = Rng::for_worker(3, 7);
+        let naive: Vec<u32> = (0..257).map(|_| a.below(1000) as u32).collect();
+        let pairs = idx.draw_sorted(&mut b, 1000, 257);
+        assert!(pairs.windows(2).all(|w| w[0] <= w[1]), "pairs not sorted");
+        // same draws land on the same destination rows as the naive order
+        for (slot, row) in pairs {
+            assert_eq!(naive[*row as usize], *slot);
+        }
+        // both rngs consumed the same stream
+        assert_eq!(a.below(u64::MAX), b.below(u64::MAX));
+    }
+
+    #[test]
+    fn gather_uniform_retries_torn_rows_with_fresh_indices() {
+        let mut rng = Rng::for_worker(0, 1);
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        let mut failures = 3;
+        let ok = gather_uniform(&mut rng, 100, 8, |slot, row| {
+            // fail the first 3 attempts regardless of slot: the driver must
+            // redraw a fresh index and still fill every row
+            if failures > 0 {
+                failures -= 1;
+                return false;
+            }
+            seen.push((slot, row));
+            true
+        });
+        assert!(ok);
+        assert_eq!(seen.len(), 8);
+        assert_eq!(seen.iter().map(|&(_, r)| r).collect::<Vec<_>>(), (0..8).collect::<Vec<_>>());
+        // a row that never reads successfully aborts the whole batch
+        assert!(!gather_uniform(&mut rng, 100, 1, |_, _| false));
+    }
 }

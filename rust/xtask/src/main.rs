@@ -5,7 +5,7 @@
 //!    `// SAFETY:` comment — on the same line or in the contiguous comment
 //!    block directly above it;
 //! 2. every `Ordering::Relaxed` inside a *protocol module* (`bus`, `replay`,
-//!    `sampler/proc.rs`, `util/shm.rs`) must carry a `// relaxed-ok:`
+//!    `sampler/proc.rs`, `util/shm.rs`, `learner/prefetch.rs`) must carry a `// relaxed-ok:`
 //!    rationale the same way. Relaxed is where cross-process seqlock bugs
 //!    hide; anything unexplained there is treated as a defect;
 //! 3. vendor intrinsics (`std::arch` / `core::arch` paths, `_mm256_*` /
@@ -75,7 +75,8 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
 }
 
 /// Modules whose Relaxed orderings require an explicit rationale: the
-/// cross-process seqlock/reservation protocols and the raw mmap layer.
+/// cross-process seqlock/reservation protocols, the raw mmap layer, and
+/// the prefetch double-buffer handoff.
 fn is_protocol_module(rel: &Path) -> bool {
     let p = rel.to_string_lossy().replace('\\', "/");
     p.contains("src/bus/")
@@ -83,6 +84,7 @@ fn is_protocol_module(rel: &Path) -> bool {
         || p.contains("src/replay/")
         || p.ends_with("src/sampler/proc.rs")
         || p.ends_with("src/util/shm.rs")
+        || p.ends_with("src/learner/prefetch.rs")
 }
 
 /// The one file allowed to name vendor intrinsics (and in exchange, every
@@ -259,6 +261,14 @@ mod tests {
         v.clear();
         lint_file(Path::new("src/nn/ops.rs"), "x.load(Ordering::Relaxed);\n", &mut v);
         assert!(v.is_empty(), "{v:?}");
+        // the prefetch buffer-handoff module is a protocol module too
+        v.clear();
+        lint_file(
+            Path::new("src/learner/prefetch.rs"),
+            "x.load(Ordering::Relaxed);\n",
+            &mut v,
+        );
+        assert_eq!(v.len(), 1, "{v:?}");
     }
 
     #[test]
